@@ -1,0 +1,30 @@
+// Debug helper: run one golden artifact by name and print per-output diffs.
+use padst::runtime::Runtime;
+use padst::tensor::read_tnz;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or("vit_tiny_eval".into());
+    let dir = std::path::Path::new("artifacts");
+    let mut rt = Runtime::open(dir)?;
+    let t0 = std::time::Instant::now();
+    let prog = rt.program(&name)?;
+    println!("compile {:?}: {:.1}s", name, t0.elapsed().as_secs_f64());
+    let bundle = read_tnz(&rt.golden_path(&name))?;
+    let inputs: Vec<_> = prog.spec.inputs.iter()
+        .map(|s| bundle[&format!("in.{}", s.name)].clone()).collect();
+    let t1 = std::time::Instant::now();
+    let outputs = prog.run(&inputs)?;
+    println!("run: {:.3}s", t1.elapsed().as_secs_f64());
+    for (out, spec) in outputs.iter().zip(&prog.spec.outputs) {
+        let want = &bundle[&format!("out.{}", spec.name)];
+        let err = out.max_abs_diff(want);
+        if err > 1e-4 { println!("  DIFF {} = {err}", spec.name); }
+        if spec.name.starts_with("mask.") {
+            let got: f32 = out.f32s().iter().sum();
+            let exp: f32 = want.f32s().iter().sum();
+            if got != exp { println!("  NNZ {} got {got} want {exp}", spec.name); }
+        }
+    }
+    println!("done");
+    Ok(())
+}

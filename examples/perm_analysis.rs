@@ -1,0 +1,106 @@
+//! Fig. 4 + Fig. 5 + Fig. 6 regenerator: train a ViT-tiny with DynaDiag at
+//! 90 % sparsity and PA-DST, then report
+//!
+//!   Fig. 4 — delta(P) identity distance of each learned permutation, by
+//!            depth and site type (A: attention out-proj, F: FFN linears);
+//!   Fig. 5 — the per-layer AutoShuffle penalty trajectory (knee curves);
+//!   Fig. 6 — the step at which each layer crossed the hardening
+//!            threshold delta and switched to re-indexing.
+//!
+//! Run: `cargo run --release --example perm_analysis -- [steps] [threshold]`
+//! CSVs land in artifacts/analysis/ for plotting.
+
+use padst::coordinator::{RunConfig, Trainer};
+use padst::runtime::Runtime;
+use padst::sparsity::patterns::Structure;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let threshold: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.22);
+
+    let dir = std::path::Path::new("artifacts");
+    let mut rt = Runtime::open(dir)?;
+    let cfg = RunConfig {
+        model: "vit_tiny".into(),
+        structure: Structure::Diag,
+        density: 0.10,
+        perm_mode: "learned".into(),
+        steps,
+        harden_threshold: threshold,
+        eval_every: 0,
+        verbose: true,
+        ..Default::default()
+    };
+    let entry = rt.manifest.models["vit_tiny"].clone();
+    let mut trainer = Trainer::new(&mut rt, cfg);
+    let res = trainer.run()?;
+
+    // ---- Fig. 4: identity distance by layer -----------------------------
+    println!("\n[Fig. 4] delta(P) = 1 - ||P-I||_F / sqrt(2N)  (1 = identity)");
+    for (i, name) in res.site_names.iter().enumerate() {
+        let tag = if name.contains("attn") { "A" } else if name.contains("fc") { "F" } else { "P" };
+        println!(
+            "  {tag} {:<18} delta={:.3} {}",
+            name,
+            res.identity_distance[i],
+            bar(res.identity_distance[i], 40)
+        );
+    }
+
+    // ---- Fig. 5: penalty trajectories -----------------------------------
+    println!("\n[Fig. 5] normalised penalty P(M)/N every {} steps:", steps.max(10) / 10);
+    print!("  {:<18}", "site");
+    for t in (0..steps).step_by(steps.max(10) / 10) {
+        print!("{:>8}", t);
+    }
+    println!();
+    for (i, name) in res.site_names.iter().enumerate() {
+        let n = entry.sites[i].cols as f32;
+        print!("  {:<18}", name);
+        for t in (0..steps).step_by(steps.max(10) / 10) {
+            let p = res.penalties[i].get(t).copied().unwrap_or(0.0) / n;
+            print!("{:>8.3}", p);
+        }
+        println!();
+    }
+
+    // ---- Fig. 6: hardening steps -----------------------------------------
+    println!("\n[Fig. 6] hardening step per site (threshold delta={threshold}):");
+    for (i, name) in res.site_names.iter().enumerate() {
+        println!(
+            "  {:<18} -> {}",
+            name,
+            res.harden_step[i]
+                .map(|s| format!("step {s}"))
+                .unwrap_or_else(|| "never".into())
+        );
+    }
+
+    // ---- CSV dumps --------------------------------------------------------
+    let out = dir.join("analysis");
+    std::fs::create_dir_all(&out)?;
+    let mut fig5 = String::from("site,step,penalty\n");
+    for (i, name) in res.site_names.iter().enumerate() {
+        for (t, p) in res.penalties[i].iter().enumerate() {
+            fig5.push_str(&format!("{name},{t},{p}\n"));
+        }
+    }
+    std::fs::write(out.join("fig5_penalties.csv"), fig5)?;
+    let mut fig46 = String::from("site,identity_distance,harden_step\n");
+    for (i, name) in res.site_names.iter().enumerate() {
+        fig46.push_str(&format!(
+            "{name},{},{}\n",
+            res.identity_distance[i],
+            res.harden_step[i].map(|s| s as i64).unwrap_or(-1)
+        ));
+    }
+    std::fs::write(out.join("fig4_fig6_permutations.csv"), fig46)?;
+    println!("\nwrote artifacts/analysis/fig5_penalties.csv, fig4_fig6_permutations.csv");
+    Ok(())
+}
+
+fn bar(v: f64, width: usize) -> String {
+    let n = (v.clamp(0.0, 1.0) * width as f64) as usize;
+    format!("|{}{}|", "#".repeat(n), " ".repeat(width - n))
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path for PA-DST: L1 Pallas kernels + L2 JAX model.
+
+Never imported at runtime; `aot.py` lowers everything to HLO text under
+artifacts/ once, and the Rust coordinator takes over.
+"""

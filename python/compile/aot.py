@@ -1,0 +1,224 @@
+"""AOT exporter: lower every L2 program to HLO *text* + write the manifest.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under artifacts/:
+
+    <artifact>.hlo.txt      one per program variant (see ARTIFACTS below)
+    manifest.json           program input/output layouts + model configs
+    golden/<name>.tnz       input/output dumps for Rust integration tests
+
+The artifact matrix exploits the fact that masks are *runtime inputs*:
+train/eval graphs are independent of the structure family and density, so
+only dst_update (structure-specific update rule) and infer (compressed
+shapes) fan out per structure.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--only NAME] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import programs as P
+
+BATCH = 8
+
+# (artifact_name, model, structure, density, perm_mode, program)
+# Structure/density only matter where noted above; they are recorded in the
+# manifest so the Rust side builds matching masks / compressed buffers.
+def artifact_matrix() -> list[dict]:
+    arts = []
+    for mk in ["vit_tiny", "gpt_tiny", "mixer_tiny"]:
+        arts.append(dict(name=f"{mk}_train", model=mk, program="train_step",
+                         perm_mode="learned"))
+        arts.append(dict(name=f"{mk}_train_noperm", model=mk,
+                         program="train_step", perm_mode="none"))
+        arts.append(dict(name=f"{mk}_eval", model=mk, program="eval_step",
+                         perm_mode="learned"))
+        arts.append(dict(name=f"{mk}_infer_diag90", model=mk, program="infer",
+                         structure="diag", density=0.1, perm_mode="learned"))
+        for st in ["diag", "block", "nm", "unstructured"]:
+            arts.append(dict(name=f"{mk}_dst_{st}", model=mk,
+                             program="dst_update", structure=st,
+                             perm_mode="learned"))
+    # Kaleidoscope overhead comparators (Tbl. 2–5)
+    for mk in ["vit_tiny", "gpt_tiny"]:
+        arts.append(dict(name=f"{mk}_train_kperm", model=mk,
+                         program="train_step", perm_mode="kaleidoscope"))
+    # Scaled GPT for the end-to-end example
+    arts.append(dict(name="gpt_small_train", model="gpt_small",
+                     program="train_step", perm_mode="learned"))
+    arts.append(dict(name="gpt_small_eval", model="gpt_small",
+                     program="eval_step", perm_mode="learned"))
+    arts.append(dict(name="gpt_small_dst_diag", model="gpt_small",
+                     program="dst_update", structure="diag",
+                     perm_mode="learned"))
+    return arts
+
+
+def build_cfg(art: dict) -> M.ModelConfig:
+    return M.CONFIGS[art["model"]](
+        structure=art.get("structure", "diag"),
+        density=art.get("density", 0.1),
+        perm_mode=art.get("perm_mode", "learned"),
+    )
+
+
+def make_program(art: dict, cfg: M.ModelConfig):
+    prog = art["program"]
+    if prog == "train_step":
+        return P.make_train_step(cfg, BATCH)
+    if prog == "dst_update":
+        return P.make_dst_update(cfg, BATCH)
+    if prog == "eval_step":
+        return P.make_eval_step(cfg, BATCH)
+    if prog == "infer":
+        return P.make_infer(cfg, BATCH)
+    raise ValueError(prog)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# .tnz tensor bundles (goldens / init dumps): header-length u64 LE, JSON
+# header [{name, shape, dtype, offset}], raw LE payload.  Reader lives in
+# rust/src/runtime/tnz.rs.
+# ---------------------------------------------------------------------------
+
+
+def write_tnz(path: str, tensors: list[tuple[str, np.ndarray]]):
+    metas, payload = [], bytearray()
+    for name, arr in tensors:
+        shape = list(np.asarray(arr).shape)  # before ascontiguousarray: it
+        arr = np.ascontiguousarray(arr)      # promotes 0-d to 1-d
+        dt = {"float32": "f32", "int32": "i32"}[str(arr.dtype)]
+        metas.append({"name": name, "shape": shape, "dtype": dt,
+                      "offset": len(payload), "nbytes": arr.nbytes})
+        payload += arr.tobytes()
+    header = json.dumps(metas).encode()
+    with open(path, "wb") as f:
+        f.write(len(header).to_bytes(8, "little"))
+        f.write(header)
+        f.write(bytes(payload))
+
+
+def dump_golden(art: dict, cfg, fn, args, spec, out_dir: str):
+    """Run the program eagerly on a deterministic batch and dump
+    inputs+outputs for the Rust integration test."""
+    rng = np.random.default_rng(42)
+    names = [n for n, _, _ in spec.inputs]
+    args = list(args)
+    if "batch_x" in names:
+        i = names.index("batch_x")
+        if cfg.kind == "gpt":
+            args[i] = jnp.asarray(rng.integers(0, cfg.vocab, (BATCH, cfg.seq_len)),
+                                  jnp.int32)
+        else:
+            args[i] = jnp.asarray(
+                rng.standard_normal((BATCH, cfg.image, cfg.image, 3)), jnp.float32)
+    if "batch_y" in names:
+        i = names.index("batch_y")
+        if cfg.kind == "gpt":
+            args[i] = jnp.asarray(rng.integers(0, cfg.vocab, (BATCH, cfg.seq_len)),
+                                  jnp.int32)
+        else:
+            args[i] = jnp.asarray(rng.integers(0, max(cfg.n_classes, 1), (BATCH,)),
+                                  jnp.int32)
+    outs = jax.jit(fn)(*args)
+    tensors = [(f"in.{n}", np.asarray(a)) for n, a in zip(names, args)]
+    tensors += [(f"out.{n}", np.asarray(o))
+                for (n, _, _), o in zip(spec.outputs, outs)]
+    write_tnz(os.path.join(out_dir, "golden", f"{art['name']}.tnz"), tensors)
+    return args
+
+
+GOLDEN_FOR = {"vit_tiny_train", "vit_tiny_eval", "vit_tiny_infer_diag90",
+              "gpt_tiny_train", "vit_tiny_dst_diag"}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--force", action="store_true")
+    ns = ap.parse_args()
+    out_dir = ns.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    manifest = {"batch": BATCH, "programs": {}, "models": {}}
+    t_all = time.time()
+    for art in artifact_matrix():
+        if ns.only and ns.only not in art["name"]:
+            continue
+        cfg = build_cfg(art)
+        path = os.path.join(out_dir, f"{art['name']}.hlo.txt")
+        t0 = time.time()
+        fn, args, spec = make_program(art, cfg)
+        if art["name"] in GOLDEN_FOR:
+            args = dump_golden(art, cfg, fn, args, spec, out_dir)
+        if ns.force or not os.path.exists(path):
+            lowered = jax.jit(fn, keep_unused=True).lower(*args)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            status = "lowered"
+        else:
+            status = "cached"
+        manifest["programs"][art["name"]] = {
+            "file": f"{art['name']}.hlo.txt",
+            "model": art["model"],
+            "program": art["program"],
+            "structure": art.get("structure", "diag"),
+            "density": art.get("density", 0.1),
+            "perm_mode": art.get("perm_mode", "learned"),
+            "batch": BATCH,
+            "golden": art["name"] in GOLDEN_FOR,
+            "spec": spec.to_json(),
+        }
+        if art["model"] not in manifest["models"]:
+            p0 = M.init_params(cfg)
+            manifest["models"][art["model"]] = {
+                "kind": cfg.kind,
+                "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+                "seq_len": cfg.seq_len, "vocab": cfg.vocab,
+                "n_classes": cfg.n_classes, "image": cfg.image,
+                "patch": cfg.patch, "tok_hidden": cfg.tok_hidden,
+                "params": [{"name": k, "shape": list(v.shape)}
+                           for k, v in p0.items()],
+                "sites": [{"name": n, "rows": r, "cols": c}
+                          for n, r, c in M.sparse_sites(cfg)],
+            }
+        print(f"[aot] {art['name']:<28} {status:>7}  {time.time()-t0:6.1f}s",
+              flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] total {time.time()-t_all:.1f}s -> {out_dir}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,76 @@
+"""Shared helpers for the PA-DST compile path (L1 + L2).
+
+Everything in ``python/compile`` runs at *build time only*: it authors the
+JAX/Pallas programs, checks them against pure-jnp oracles, and AOT-lowers
+them to HLO text for the Rust coordinator.  Nothing here is imported on the
+request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DTYPE = jnp.float32
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division."""
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    """Round ``a`` up to the next multiple of ``b``."""
+    return cdiv(a, b) * b
+
+
+def density_to_pattern_params(density: float, n_in: int, m: int = 16) -> dict:
+    """Apdx A: map a per-layer density to structural parameters.
+
+    Returns the diagonal count K, block per-row budget B, band half-width b
+    (2b+1 nearest odd), and the tied N:M pair with N/M ~= density.
+    """
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density must be in (0, 1], got {density}")
+    k = max(1, round(density * n_in))
+    band = max(1, round(density * n_in))
+    if band % 2 == 0:  # 2b+1 must be odd
+        band = band + 1 if band + 1 <= n_in else band - 1
+    n = max(1, round(density * m))
+    return {"K": k, "B": k, "band": band, "N": n, "M": m}
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerShape:
+    """Shape of one sparsified linear layer: y = W @ (P x), W in R^{rows x cols}."""
+
+    name: str
+    rows: int
+    cols: int
+
+    @property
+    def perm_dim(self) -> int:
+        # One column permutation per layer permutes the layer *input*.
+        return self.cols
+
+
+def tree_size(tree) -> int:
+    """Total number of scalars in a pytree of arrays."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def flatten_names(prefix: str, names: Sequence[str]) -> list[str]:
+    return [f"{prefix}.{n}" for n in names]
+
+
+def uniform_init(key, shape, scale=None):
+    """LeCun-uniform style init matching what the paper's baselines use."""
+    fan_in = shape[-1] if len(shape) > 1 else shape[0]
+    if scale is None:
+        scale = 1.0 / math.sqrt(fan_in)
+    return jax.random.uniform(key, shape, DTYPE, -scale, scale)

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles (ref.py)."""
+from .gather_spmm import gather_spmm, gather_spmm_ad
+from .block_spmm import block_spmm
+from .softperm_matmul import softperm_matmul
+from . import ref
+
+__all__ = ["gather_spmm", "gather_spmm_ad", "block_spmm", "softperm_matmul", "ref"]

@@ -1,0 +1,68 @@
+"""L1 Pallas kernel: block-sparse matmul (DSB / Pixelated-Butterfly layout).
+
+W is stored as per-block-row panels of active bs x bs blocks:
+
+    blocks:     (br, nab, bs, bs) f32
+    block_cols: (br, nab) i32   — column-block of each active block, -1 pad
+
+TPU mapping: grid over (block-row); each program instance keeps its ``nab``
+weight blocks resident in VMEM (nab * bs^2 * 4 bytes — at the paper's
+ViT-B/16 geometry, 90 % sparsity, bs=16 that is ~20 KiB, far under the
+~16 MiB VMEM budget) and streams the needed activation column panels.
+The inner 2D dot hits the MXU with (batch x bs) @ (bs x bs) tiles; bs is
+chosen as a multiple of 8 so tiles align with the 8x128 vector registers.
+interpret=True for CPU-PJRT numerics (see gather_spmm.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, blocks_ref, cols_ref, o_ref):
+    x = x_ref[...]              # (batch, C)
+    blocks = blocks_ref[...]    # (1, nab, bs, bs) — this block-row's panel
+    bcols = cols_ref[...]       # (1, nab)
+    nab, bs = blocks.shape[1], blocks.shape[2]
+    batch = x.shape[0]
+    acc = jnp.zeros((batch, bs), jnp.float32)
+    for a in range(nab):  # static unroll: nab is a compile-time constant
+        j = bcols[0, a]
+        valid = (j >= 0).astype(jnp.float32)
+        start = jnp.clip(j, 0) * bs
+        xj = jax.lax.dynamic_slice(x, (0, start), (batch, bs))
+        acc = acc + valid * jnp.dot(
+            xj, blocks[0, a].T, preferred_element_type=jnp.float32
+        )
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_spmm(
+    x: jnp.ndarray,
+    blocks: jnp.ndarray,
+    block_cols: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y = x @ W^T for block-sparse W.  Shapes:
+    x (B, C), blocks (br, nab, bs, bs), block_cols (br, nab) -> y (B, br*bs).
+    """
+    batch, c = x.shape
+    br, nab, bs, _ = blocks.shape
+    return pl.pallas_call(
+        _kernel,
+        grid=(br,),
+        in_specs=[
+            pl.BlockSpec((batch, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, nab, bs, bs), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, nab), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, bs), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((batch, br * bs), jnp.float32),
+        interpret=interpret,
+    )(x, blocks, block_cols)

@@ -1,0 +1,98 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in this package has an oracle here with the same signature;
+``python/tests/test_kernels.py`` sweeps shapes/densities/permutations with
+hypothesis and asserts allclose.  The oracles are also what the L2 training
+graph uses directly (masked-dense math), so kernel == oracle means the
+AOT'd inference graph computes exactly what training optimised.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_from_gather(vals: jnp.ndarray, idx: jnp.ndarray, cols: int) -> jnp.ndarray:
+    """Reconstruct the dense R x C weight from the compressed row-gather form
+    (vals[i,k] at column idx[i,k]).  Duplicate indices accumulate, matching
+    the kernel's sum semantics."""
+    rows, k = vals.shape
+    w = jnp.zeros((rows, cols), vals.dtype)
+    return w.at[jnp.repeat(jnp.arange(rows), k), idx.reshape(-1)].add(vals.reshape(-1))
+
+
+def gather_spmm_ref(x: jnp.ndarray, vals: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """y[b, i] = sum_k vals[i, k] * x[b, idx[i, k]].
+
+    The compressed form covers Diagonal-K, N:M and fixed-nnz unstructured
+    rows; a learned permutation is *fused* by composing it into ``idx``
+    (Eqn. 16/18 — re-indexing instead of a permutation matmul).
+    """
+    return jnp.einsum("ik,bik->bi", vals, x[:, idx])
+
+
+def block_spmm_ref(
+    x: jnp.ndarray, blocks: jnp.ndarray, block_cols: jnp.ndarray, bs: int, rows: int
+) -> jnp.ndarray:
+    """Block-sparse y = x @ W^T with W stored as active blocks.
+
+    blocks:      (br, nab, bs, bs)  — per block-row, ``nab`` active blocks
+    block_cols:  (br, nab) int32    — column-block index of each (-1 = pad)
+    """
+    br, nab = block_cols.shape
+    batch = x.shape[0]
+    y = jnp.zeros((batch, br * bs), x.dtype)
+    for i in range(br):
+        acc = jnp.zeros((batch, bs), x.dtype)
+        for a in range(nab):
+            j = block_cols[i, a]
+            valid = (j >= 0).astype(x.dtype)
+            xj = jnp.take(
+                x, (jnp.clip(j, 0) * bs + jnp.arange(bs)) % x.shape[1], axis=1
+            )
+            acc = acc + valid * (xj @ blocks[i, a].T)
+        y = y.at[:, i * bs : (i + 1) * bs].set(acc)
+    return y[:, :rows]
+
+
+def masked_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """The L2 training form: y = x @ (W * mask)^T."""
+    return x @ (w * mask).T
+
+
+def softperm_matmul_ref(x: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """Training-time soft permutation: (M x) along the feature axis."""
+    return x @ m.T
+
+
+def compress_mask(w: np.ndarray, mask: np.ndarray, k: int):
+    """Convert a dense (W, mask) pair with <=k-nnz rows to the compressed
+    row-gather form.  Rows with fewer nnz are padded with zero-valued
+    entries pointing at column 0."""
+    rows, cols = w.shape
+    vals = np.zeros((rows, k), dtype=np.float32)
+    idx = np.zeros((rows, k), dtype=np.int32)
+    for i in range(rows):
+        nz = np.nonzero(mask[i])[0][:k]
+        vals[i, : len(nz)] = w[i, nz]
+        idx[i, : len(nz)] = nz
+    return vals, idx
+
+
+def compress_blocks(w: np.ndarray, mask: np.ndarray, bs: int):
+    """Convert a dense block-masked (W, mask) to the block compressed form
+    used by block_spmm: (blocks, block_cols).  Pads ragged block-rows."""
+    rows, cols = w.shape
+    br, bc = rows // bs, cols // bs
+    active = [
+        [j for j in range(bc) if mask[i * bs, j * bs] > 0.5] for i in range(br)
+    ]
+    nab = max(1, max(len(a) for a in active))
+    blocks = np.zeros((br, nab, bs, bs), dtype=np.float32)
+    block_cols = np.full((br, nab), -1, dtype=np.int32)
+    for i, cols_i in enumerate(active):
+        for a, j in enumerate(cols_i):
+            blocks[i, a] = w[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs]
+            block_cols[i, a] = j
+    return blocks, block_cols

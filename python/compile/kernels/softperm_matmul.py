@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: tiled dense matmul for the training-time soft
+permutation apply, a = M x (Sec. 4.2) with doubly-stochastic M.
+
+During training the permutation is a dense N x N doubly-stochastic matrix,
+so the apply is a plain GEMM — but it is *the* extra cost PA-DST pays over
+its no-permutation baseline (Fig. 3 / Tbl. 5 overhead rows), so it gets a
+properly tiled kernel rather than riding on XLA's default.
+
+TPU mapping: classic (TM, TK) x (TK, TN) MXU tiling with a float32
+accumulator revisited across the K grid axis; tiles default to 128 to match
+the 128x128 systolic array.  interpret=True for CPU-PJRT numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, m_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], m_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk", "interpret"))
+def softperm_matmul(
+    x: jnp.ndarray,
+    m: jnp.ndarray,
+    *,
+    tm: int = 8,
+    tn: int = 128,
+    tk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(M x) along the feature axis: x (B, N), m (N, N) -> (B, N),
+    out[b, i] = sum_j m[i, j] x[b, j]."""
+    b, n = x.shape
+    tm = min(tm, b)
+    tn = min(tn, n)
+    tk = min(tk, n)
+    if b % tm or n % tn or n % tk:  # odd test shapes: single tile
+        tm, tn, tk = b, n, n
+    grid = (b // tm, n // tn, n // tk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, tk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(x, m)

@@ -1,0 +1,446 @@
+"""L2: PA-DST transformer family (ViT / GPT-2 / MLP-Mixer) in JAX.
+
+Implements the paper's layer formulation (Sec. 4.1/4.3): every sparsified
+linear is
+
+    y = (W * mask) @ (P x) + b          (column permutation, default)
+    y = P @ ((W * mask) x) + b          (row permutation, Tbl. 10 ablation)
+
+where ``mask`` obeys a structure family (sparsity.py) and P is either
+absent, a fixed random permutation, a learned soft permutation
+M = sinkhorn(softplus(logits)) with the AutoShuffle penalty (perm.py), or a
+hardened permutation applied by *re-indexing* (a gather — Eqn. 16/18).
+
+Hardening is a per-layer runtime decision made by the Rust coordinator
+(Apdx C.2): the training graph takes a ``hard_flags`` vector and uses
+``lax.cond`` per sparse site, so a hardened layer pays a gather instead of
+the N x N soft-perm matmul without recompiling.
+
+Sparsified sites follow Apdx C.5: ViT — patch projection, MHA output
+projection, both FFN linears; GPT — all attention (QKV + output) and MLP
+linears; Mixer — channel-MLP linears.
+
+Parameters are name-keyed dicts with a deterministic ordering captured in
+the AOT manifest so the Rust side can lay out its buffers identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import perm as perm_lib
+from . import sparsity
+from .common import DTYPE
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    kind: str  # "vit" | "gpt" | "mixer"
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int            # tokens (vit/mixer: patches; gpt: context)
+    vocab: int = 0          # gpt only
+    n_classes: int = 0      # vit/mixer only
+    image: int = 16         # vit/mixer input image side
+    patch: int = 4
+    tok_hidden: int = 64    # mixer token-mixing hidden
+    # sparsity + permutation setup
+    structure: str = "diag"
+    density: float = 0.1
+    perm_mode: str = "learned"  # none | random | learned | kaleidoscope
+    perm_side: str = "col"      # col | row (Tbl. 10 ablation)
+    sinkhorn_iters: int = 8
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image // self.patch) ** 2
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * 3
+
+
+def vit_tiny(**kw) -> ModelConfig:
+    return ModelConfig(kind="vit", name="vit_tiny", d_model=128, n_layers=4,
+                       n_heads=4, d_ff=256, seq_len=17, n_classes=16,
+                       image=16, patch=4, **kw)
+
+
+def gpt_tiny(**kw) -> ModelConfig:
+    return ModelConfig(kind="gpt", name="gpt_tiny", d_model=128, n_layers=4,
+                       n_heads=4, d_ff=256, seq_len=64, vocab=256, **kw)
+
+
+def mixer_tiny(**kw) -> ModelConfig:
+    return ModelConfig(kind="mixer", name="mixer_tiny", d_model=128,
+                       n_layers=4, n_heads=1, d_ff=256, seq_len=16,
+                       n_classes=16, image=16, patch=4, tok_hidden=64, **kw)
+
+
+def gpt_small(**kw) -> ModelConfig:
+    """Scaled-up GPT config for the end-to-end example (examples/train_gpt.rs).
+    ~7 M params — the largest a single-core CPU trains a few hundred steps
+    of in-budget; stands in for the paper's GPT-2 Small (Tbl. 12)."""
+    return ModelConfig(kind="gpt", name="gpt_small", d_model=256, n_layers=8,
+                       n_heads=8, d_ff=512, seq_len=128, vocab=512, **kw)
+
+
+CONFIGS: dict[str, Callable[..., ModelConfig]] = {
+    "vit_tiny": vit_tiny,
+    "gpt_tiny": gpt_tiny,
+    "mixer_tiny": mixer_tiny,
+    "gpt_small": gpt_small,
+}
+
+
+# ---------------------------------------------------------------------------
+# Sparse site enumeration
+# ---------------------------------------------------------------------------
+
+
+def sparse_sites(cfg: ModelConfig) -> list[tuple[str, int, int]]:
+    """Ordered (name, rows, cols) of every sparsified linear (Apdx C.5)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    sites: list[tuple[str, int, int]] = []
+    if cfg.kind == "vit":
+        sites.append(("patch_proj", d, cfg.patch_dim))
+        for i in range(cfg.n_layers):
+            sites += [
+                (f"blk{i}.attn_out", d, d),
+                (f"blk{i}.fc1", ff, d),
+                (f"blk{i}.fc2", d, ff),
+            ]
+    elif cfg.kind == "gpt":
+        for i in range(cfg.n_layers):
+            sites += [
+                (f"blk{i}.qkv", 3 * d, d),
+                (f"blk{i}.attn_out", d, d),
+                (f"blk{i}.fc1", ff, d),
+                (f"blk{i}.fc2", d, ff),
+            ]
+    elif cfg.kind == "mixer":
+        for i in range(cfg.n_layers):
+            sites += [
+                (f"blk{i}.chan_fc1", ff, d),
+                (f"blk{i}.chan_fc2", d, ff),
+            ]
+    else:
+        raise ValueError(cfg.kind)
+    return sites
+
+
+def site_names(cfg: ModelConfig) -> list[str]:
+    return [s[0] for s in sparse_sites(cfg)]
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int | None = None) -> dict[str, np.ndarray]:
+    """Deterministic name->array parameter dict (numpy, build-time)."""
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    d, ff = cfg.d_model, cfg.d_ff
+    p: dict[str, np.ndarray] = {}
+
+    def lin(name, rows, cols):
+        scale = 1.0 / math.sqrt(cols)
+        p[f"{name}.w"] = rng.uniform(-scale, scale, (rows, cols)).astype(np.float32)
+        p[f"{name}.b"] = np.zeros((rows,), np.float32)
+
+    def ln(name, dim):
+        p[f"{name}.g"] = np.ones((dim,), np.float32)
+        p[f"{name}.b"] = np.zeros((dim,), np.float32)
+
+    if cfg.kind == "vit":
+        lin("patch_proj", d, cfg.patch_dim)
+        p["cls"] = (rng.standard_normal((d,)) * 0.02).astype(np.float32)
+        p["pos"] = (rng.standard_normal((cfg.n_patches + 1, d)) * 0.02).astype(np.float32)
+        for i in range(cfg.n_layers):
+            ln(f"blk{i}.ln1", d)
+            lin(f"blk{i}.qkv", 3 * d, d)
+            lin(f"blk{i}.attn_out", d, d)
+            ln(f"blk{i}.ln2", d)
+            lin(f"blk{i}.fc1", ff, d)
+            lin(f"blk{i}.fc2", d, ff)
+        ln("ln_f", d)
+        lin("head", cfg.n_classes, d)
+    elif cfg.kind == "gpt":
+        p["tok_emb"] = (rng.standard_normal((cfg.vocab, d)) * 0.02).astype(np.float32)
+        p["pos_emb"] = (rng.standard_normal((cfg.seq_len, d)) * 0.02).astype(np.float32)
+        for i in range(cfg.n_layers):
+            ln(f"blk{i}.ln1", d)
+            lin(f"blk{i}.qkv", 3 * d, d)
+            lin(f"blk{i}.attn_out", d, d)
+            ln(f"blk{i}.ln2", d)
+            lin(f"blk{i}.fc1", ff, d)
+            lin(f"blk{i}.fc2", d, ff)
+        ln("ln_f", d)
+        lin("head", cfg.vocab, d)
+    elif cfg.kind == "mixer":
+        lin("patch_proj", d, cfg.patch_dim)
+        for i in range(cfg.n_layers):
+            ln(f"blk{i}.ln1", d)
+            lin(f"blk{i}.tok_fc1", cfg.tok_hidden, cfg.seq_len)
+            lin(f"blk{i}.tok_fc2", cfg.seq_len, cfg.tok_hidden)
+            ln(f"blk{i}.ln2", d)
+            lin(f"blk{i}.chan_fc1", ff, d)
+            lin(f"blk{i}.chan_fc2", d, ff)
+        ln("ln_f", d)
+        lin("head", cfg.n_classes, d)
+    return p
+
+
+def init_masks(cfg: ModelConfig, seed: int | None = None) -> dict[str, np.ndarray]:
+    base = cfg.seed if seed is None else seed
+    return {
+        name: sparsity.make_mask(cfg.structure, rows, cols, cfg.density,
+                                 seed=base * 1000 + i)
+        for i, (name, rows, cols) in enumerate(sparse_sites(cfg))
+    }
+
+
+def init_perm_state(cfg: ModelConfig, seed: int | None = None):
+    """(perm_logits, perm_idx, hard_flags) initial state.
+
+    * ``none``: identity idx, flags=1 (hard path, identity gather ~ no-op).
+    * ``random``: fixed random idx, flags=1 from step 0 (Tbl. 11 'Random').
+    * ``learned``: logits near-uniform with a small identity bias, flags=0.
+    * ``kaleidoscope``: butterfly angles instead of N x N logits.
+    """
+    base = cfg.seed if seed is None else seed
+    rng = np.random.default_rng(base + 7)
+    logits, idx = {}, {}
+    flags = []
+    for name, rows, cols in sparse_sites(cfg):
+        n = cols if cfg.perm_side == "col" else rows
+        if cfg.perm_mode == "kaleidoscope":
+            lev = perm_lib.n_kaleidoscope_levels(n)
+            logits[name] = (rng.standard_normal((lev, n)) * 0.01).astype(np.float32)
+        else:
+            logits[name] = (0.01 * rng.standard_normal((n, n)) + np.eye(n) * 5.0
+                            ).astype(np.float32)
+        if cfg.perm_mode == "random":
+            idx[name] = perm_lib.random_perm_index(n, base * 31 + len(idx)).astype(np.int32)
+        else:
+            idx[name] = np.arange(n, dtype=np.int32)
+        flags.append(0.0 if cfg.perm_mode in ("learned", "kaleidoscope") else 1.0)
+    return logits, idx, np.array(flags, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+class SparseCtx:
+    """Carries masks / permutation state / penalty accumulator through the
+    forward pass.  ``penalties`` lines up with ``site_names(cfg)``."""
+
+    def __init__(self, cfg: ModelConfig, masks, perm_logits, perm_idx, hard_flags):
+        self.cfg = cfg
+        self.masks = masks
+        self.logits = perm_logits
+        self.idx = perm_idx
+        self.flags = hard_flags
+        self.order = site_names(cfg)
+        self.penalties: dict[str, jnp.ndarray] = {}
+
+    def penalty_vector(self) -> jnp.ndarray:
+        zero = jnp.zeros((), DTYPE)
+        return jnp.stack([self.penalties.get(n, zero) for n in self.order])
+
+
+def _apply_perm(ctx: SparseCtx, name: str, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply this site's input permutation along the last axis of x."""
+    cfg = ctx.cfg
+    if cfg.perm_mode == "none":
+        return x
+    i = ctx.order.index(name)
+    flag = ctx.flags[i]
+    idx = ctx.idx[name]
+
+    def hard(xv):
+        # Re-indexing (Eqn. 16/18): a gather, zero penalty, no Sinkhorn.
+        return jnp.take(xv, idx, axis=-1), jnp.zeros((), DTYPE)
+
+    if cfg.perm_mode == "random":
+        ctx.penalties[name] = jnp.zeros((), DTYPE)
+        return hard(x)[0]
+
+    def soft(xv):
+        # The soft matrix and its penalty are traced *inside* the branch so
+        # a hardened layer skips the whole Sinkhorn + N x N matmul cost —
+        # this is where the early-stopping training speedup of Apdx C.2
+        # comes from.
+        if cfg.perm_mode == "kaleidoscope":
+            m = perm_lib.kaleidoscope_perm(ctx.logits[name], xv.shape[-1])
+        else:
+            m = perm_lib.soft_perm(ctx.logits[name], cfg.sinkhorn_iters)
+        return xv @ m.T, perm_lib.autoshuffle_penalty(m)
+
+    out, pen = jax.lax.cond(flag > 0.5, hard, soft, x)
+    ctx.penalties[name] = pen
+    return out
+
+
+def sparse_linear(ctx: SparseCtx, params, name: str, x: jnp.ndarray) -> jnp.ndarray:
+    """y = (W*mask)(P x) + b  (col perm)  or  P((W*mask) x) + b  (row perm)."""
+    w = params[f"{name}.w"] * ctx.masks[name]
+    b = params[f"{name}.b"]
+    if ctx.cfg.perm_side == "col":
+        x = _apply_perm(ctx, name, x)
+        return x @ w.T + b
+    y = x @ w.T
+    return _apply_perm(ctx, name, y) + b
+
+
+def _dense_linear(params, name, x):
+    return x @ params[f"{name}.w"].T + params[f"{name}.b"]
+
+
+def _attention(cfg: ModelConfig, params, ctx: SparseCtx, name: str,
+               x: jnp.ndarray, causal: bool, qkv_sparse: bool) -> jnp.ndarray:
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    if qkv_sparse:
+        qkv = sparse_linear(ctx, params, f"{name}.qkv", x)
+    else:
+        qkv = _dense_linear(params, f"{name}.qkv", x)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+    if causal:
+        neg = jnp.full((t, t), -1e30, DTYPE)
+        att = att + jnp.triu(neg, k=1)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    # MHA output projection — always a sparse site (Sec. 4.3).
+    return sparse_linear(ctx, params, f"{name}.attn_out", out)
+
+
+def _vit_forward(cfg, params, ctx, images):
+    """images: (B, image, image, 3) -> logits (B, n_classes)."""
+    b = images.shape[0]
+    p = cfg.patch
+    n = cfg.image // p
+    patches = images.reshape(b, n, p, n, p, 3).transpose(0, 1, 3, 2, 4, 5)
+    patches = patches.reshape(b, n * n, cfg.patch_dim)
+    x = sparse_linear(ctx, params, "patch_proj", patches)
+    cls = jnp.broadcast_to(params["cls"], (b, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+    for i in range(cfg.n_layers):
+        nm = f"blk{i}"
+        a = _layer_norm(x, params[f"{nm}.ln1.g"], params[f"{nm}.ln1.b"])
+        x = x + _attention(cfg, params, ctx, nm, a, causal=False, qkv_sparse=False)
+        a = _layer_norm(x, params[f"{nm}.ln2.g"], params[f"{nm}.ln2.b"])
+        hdn = jax.nn.gelu(sparse_linear(ctx, params, f"{nm}.fc1", a))
+        x = x + sparse_linear(ctx, params, f"{nm}.fc2", hdn)
+    x = _layer_norm(x, params["ln_f.g"], params["ln_f.b"])
+    return _dense_linear(params, "head", x[:, 0])
+
+
+def _gpt_forward(cfg, params, ctx, tokens):
+    """tokens: (B, T) int32 -> logits (B, T, vocab)."""
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :, :]
+    for i in range(cfg.n_layers):
+        nm = f"blk{i}"
+        a = _layer_norm(x, params[f"{nm}.ln1.g"], params[f"{nm}.ln1.b"])
+        x = x + _attention(cfg, params, ctx, nm, a, causal=True, qkv_sparse=True)
+        a = _layer_norm(x, params[f"{nm}.ln2.g"], params[f"{nm}.ln2.b"])
+        hdn = jax.nn.gelu(sparse_linear(ctx, params, f"{nm}.fc1", a))
+        x = x + sparse_linear(ctx, params, f"{nm}.fc2", hdn)
+    x = _layer_norm(x, params["ln_f.g"], params["ln_f.b"])
+    return _dense_linear(params, "head", x)
+
+
+def _mixer_forward(cfg, params, ctx, images):
+    b = images.shape[0]
+    p = cfg.patch
+    n = cfg.image // p
+    patches = images.reshape(b, n, p, n, p, 3).transpose(0, 1, 3, 2, 4, 5)
+    patches = patches.reshape(b, n * n, cfg.patch_dim)
+    x = _dense_linear(params, "patch_proj", patches)
+    for i in range(cfg.n_layers):
+        nm = f"blk{i}"
+        a = _layer_norm(x, params[f"{nm}.ln1.g"], params[f"{nm}.ln1.b"])
+        a = a.transpose(0, 2, 1)  # (B, d, tokens)
+        a = jax.nn.gelu(_dense_linear(params, f"{nm}.tok_fc1", a))
+        a = _dense_linear(params, f"{nm}.tok_fc2", a)
+        x = x + a.transpose(0, 2, 1)
+        a = _layer_norm(x, params[f"{nm}.ln2.g"], params[f"{nm}.ln2.b"])
+        hdn = jax.nn.gelu(sparse_linear(ctx, params, f"{nm}.chan_fc1", a))
+        x = x + sparse_linear(ctx, params, f"{nm}.chan_fc2", hdn)
+    x = _layer_norm(x, params["ln_f.g"], params["ln_f.b"])
+    return _dense_linear(params, "head", jnp.mean(x, axis=1))
+
+
+def forward(cfg: ModelConfig, params, ctx: SparseCtx, batch_x):
+    if cfg.kind == "vit":
+        return _vit_forward(cfg, params, ctx, batch_x)
+    if cfg.kind == "gpt":
+        return _gpt_forward(cfg, params, ctx, batch_x)
+    if cfg.kind == "mixer":
+        return _mixer_forward(cfg, params, ctx, batch_x)
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def loss_and_metrics(cfg: ModelConfig, logits, batch_y):
+    """(mean task loss, #correct).  Vision: CE over classes; LM: next-token
+    CE (targets are the pre-shifted batch_y from the data pipeline)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if cfg.kind == "gpt":
+        ll = jnp.take_along_axis(logp, batch_y[..., None], axis=-1)[..., 0]
+        loss = -jnp.mean(ll)
+        correct = jnp.sum((jnp.argmax(logits, -1) == batch_y).astype(DTYPE))
+        return loss, correct
+    ll = jnp.take_along_axis(logp, batch_y[:, None], axis=-1)[:, 0]
+    loss = -jnp.mean(ll)
+    correct = jnp.sum((jnp.argmax(logits, -1) == batch_y).astype(DTYPE))
+    return loss, correct
+
+
+def task_loss(cfg: ModelConfig, params, masks, perm_logits, perm_idx,
+              hard_flags, batch_x, batch_y, lam):
+    """Eqn. 13: L_task + lambda * sum_l P(M_l).  Returns (total, aux)."""
+    ctx = SparseCtx(cfg, masks, perm_logits, perm_idx, hard_flags)
+    logits = forward(cfg, params, ctx, batch_x)
+    loss, correct = loss_and_metrics(cfg, logits, batch_y)
+    pen = ctx.penalty_vector()
+    total = loss + lam * jnp.sum(pen * (1.0 - hard_flags))
+    return total, (loss, correct, pen)

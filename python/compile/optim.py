@@ -1,0 +1,37 @@
+"""Adam optimizer (L2, traced into the train_step AOT program).
+
+Matches the paper's training setup (AdamW-style decoupled weight decay,
+Tbl. 7/9 hyper-parameters scaled to the tiny variants).  State is a
+(m, v, step) triple of the same layout as the params so the Rust
+coordinator shuttles it as opaque buffers.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+B1, B2, EPS = 0.9, 0.999, 1e-8
+
+
+def adam_update(p, g, m, v, step, lr, weight_decay=0.0):
+    """One Adam step for a single tensor.  ``step`` is the *post-increment*
+    step count (1-based) used for bias correction."""
+    m = B1 * m + (1.0 - B1) * g
+    v = B2 * v + (1.0 - B2) * g * g
+    mhat = m / (1.0 - B1 ** step)
+    vhat = v / (1.0 - B2 ** step)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + EPS) + weight_decay * p)
+    return p, m, v
+
+
+def tree_adam(params: dict, grads: dict, ms: dict, vs: dict, step, lr,
+              weight_decay=0.0, decay_skip=("b", "g")):
+    """Adam over name-keyed dicts.  Weight decay skips biases / LN gains
+    (names ending in .b / .g), matching standard transformer recipes."""
+    out_p, out_m, out_v = {}, {}, {}
+    for k in params:
+        wd = 0.0 if k.rsplit(".", 1)[-1] in decay_skip else weight_decay
+        out_p[k], out_m[k], out_v[k] = adam_update(
+            params[k], grads[k], ms[k], vs[k], step, lr, wd
+        )
+    return out_p, out_m, out_v

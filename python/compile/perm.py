@@ -1,0 +1,152 @@
+"""Permutation-learning substrate (L2): Sinkhorn, AutoShuffle penalty, decode.
+
+The paper (Sec. 4.2) follows AutoShuffleNet (Lyu et al. 2020): instead of a
+discrete permutation P, learn a soft matrix M constrained to the Birkhoff
+polytope (doubly stochastic) and drive it to a vertex with the exact
+Lipschitz-continuous l1-l2 penalty
+
+    P(M) = sum_i (||M_i:||_1 - ||M_i:||_2) + sum_j (||M_:j||_1 - ||M_:j||_2)
+
+which is zero iff M is a permutation (for doubly-stochastic M).
+
+We parameterise M = sinkhorn(softplus(logits)) so the doubly-stochastic
+constraint holds by construction; the penalty is added to the task loss
+with weight lambda (Eqn. 13).  At hardening time the coordinator decodes a
+hard permutation with a Hungarian assignment (mirrored in Rust) and the
+layer switches from a matmul to re-indexing (Sec. 4.3).
+
+A Kaleidoscope-style alternative (``kaleidoscope_perm``) — a product of
+log2(N) butterfly factors — is provided for the Tbl. 2–5 overhead
+comparisons.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import DTYPE
+
+EPS = 1e-6
+
+
+def sinkhorn(x: jnp.ndarray, iters: int = 8) -> jnp.ndarray:
+    """Project a positive matrix onto (near-)doubly-stochastic by iterated
+    row/column normalisation.  8 iterations suffice for the penalty to be
+    meaningful; the hard decode at the end of training removes any residual
+    slack."""
+    m = x + EPS
+    for _ in range(iters):
+        m = m / jnp.sum(m, axis=1, keepdims=True)
+        m = m / jnp.sum(m, axis=0, keepdims=True)
+    return m
+
+
+def soft_perm(logits: jnp.ndarray, iters: int = 8, tau: float = 1.0) -> jnp.ndarray:
+    """Doubly-stochastic soft permutation from unconstrained logits.
+
+    Gumbel-Sinkhorn style positive map: row-stabilised exp (equivalent to
+    softmax rows, then Sinkhorn column balancing).  Unlike softplus, exp can
+    concentrate a row's mass on one column at any width N — softplus caps
+    the diagonal/off-diagonal ratio so M stays near-uniform for large N,
+    which destroys the layer input at init and blocks training.  Gradients
+    are multiplicative in the entry value (log-space dynamics), matching
+    how Gumbel-Sinkhorn learns latent permutations.
+    """
+    z = logits / tau
+    z = z - jnp.max(z, axis=1, keepdims=True)  # row-stabilise; sinkhorn
+    return sinkhorn(jnp.exp(z), iters)         # absorbs the row scaling
+
+
+def autoshuffle_penalty(m: jnp.ndarray) -> jnp.ndarray:
+    """Eqn. 14: exact l1-l2 row+column penalty.  Non-negative on the
+    Birkhoff polytope; zero iff M is a permutation matrix."""
+    row = jnp.sum(jnp.abs(m), axis=1) - jnp.sqrt(jnp.sum(m * m, axis=1) + EPS * EPS)
+    col = jnp.sum(jnp.abs(m), axis=0) - jnp.sqrt(jnp.sum(m * m, axis=0) + EPS * EPS)
+    return jnp.sum(row) + jnp.sum(col)
+
+
+def identity_distance(p: jnp.ndarray) -> jnp.ndarray:
+    """Sec. 6.3 width-invariant metric delta(P) = 1 - ||P - I||_F / sqrt(2N).
+
+    delta = 1 for the identity; delta = 0 for a full derangement.
+    """
+    n = p.shape[0]
+    eye = jnp.eye(n, dtype=p.dtype)
+    return 1.0 - jnp.linalg.norm(p - eye) / jnp.sqrt(2.0 * n)
+
+
+def greedy_decode(m: np.ndarray) -> np.ndarray:
+    """Greedy assignment decode (build-time helper; the production decode is
+    the Hungarian implementation in rust/src/perm/hungarian.rs).  Returns
+    idx with (P x)_i = x[idx[i]], i.e. P[i, idx[i]] = 1."""
+    m = np.asarray(m, dtype=np.float64).copy()
+    n = m.shape[0]
+    idx = np.full(n, -1, dtype=np.int64)
+    used = np.zeros(n, dtype=bool)
+    order = np.argsort(-m.max(axis=1))  # most confident rows first
+    for i in order:
+        row = m[i].copy()
+        row[used] = -np.inf
+        j = int(np.argmax(row))
+        idx[i] = j
+        used[j] = True
+    return idx
+
+
+def perm_matrix_from_index(idx: np.ndarray) -> np.ndarray:
+    """Dense permutation matrix P with P[i, idx[i]] = 1."""
+    n = len(idx)
+    p = np.zeros((n, n), dtype=np.float32)
+    p[np.arange(n), idx] = 1.0
+    return p
+
+
+def random_perm_index(n: int, seed: int) -> np.ndarray:
+    """Fixed random permutation (the 'Random' rows in Tbl. 11/12)."""
+    return np.random.default_rng(seed).permutation(n)
+
+
+def apply_perm_index(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """(P x)_i = x[idx[i]] applied along the last axis — the re-indexing
+    form used at inference (Eqn. 16/18): a gather, not a matmul."""
+    return jnp.take(x, idx, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Kaleidoscope-style alternative (overhead baseline for Tbl. 2–5)
+# ---------------------------------------------------------------------------
+
+
+def butterfly_factor(params: jnp.ndarray, stride: int, n: int) -> jnp.ndarray:
+    """One butterfly factor B_s as a dense n x n matrix: 2x2 rotations
+    between lanes i and i^stride.  ``params`` has shape (n,) of angles."""
+    i = jnp.arange(n)
+    j = i ^ stride
+    c, s = jnp.cos(params), jnp.sin(params)
+    mat = jnp.zeros((n, n), DTYPE)
+    mat = mat.at[i, i].set(c)
+    mat = mat.at[i, j].add(jnp.where(i < j, s, -s))
+    return mat
+
+
+def kaleidoscope_perm(angles: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Product of log2(n) butterfly factors — the K-matrix parameterisation
+    of a (soft) permutation (Dao et al. 2020).  ``angles``: (log2 n, n)."""
+    out = jnp.eye(n, dtype=DTYPE)
+    stride, level = 1, 0
+    while stride < n:
+        out = butterfly_factor(angles[level], stride, n) @ out
+        stride *= 2
+        level += 1
+    return out
+
+
+def n_kaleidoscope_levels(n: int) -> int:
+    lev = 0
+    s = 1
+    while s < n:
+        s *= 2
+        lev += 1
+    return lev

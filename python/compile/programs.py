@@ -1,0 +1,444 @@
+"""L2 program builders: the exact functions AOT-lowered to HLO artifacts.
+
+Every program takes and returns *flat positional* arrays so the Rust
+coordinator can marshal buffers without a pytree library; the ordering is
+captured by ``ProgramSpec`` and serialised into ``artifacts/manifest.json``
+by aot.py.
+
+Programs per model variant:
+
+* ``train_step``   — fwd/bwd + Adam + Eqn. 13 penalty; per-layer soft/hard
+                     permutation selected at runtime via ``hard_flags``.
+* ``dst_update``   — RigL/SET/MEST-style prune-and-grow *within the
+                     structure family* (sparsity.py); recomputes a dense
+                     gradient wrt the effective weights on the given batch
+                     (exactly RigL's grow signal), returns new masks with
+                     newly-grown weights and their Adam moments zeroed.
+* ``eval_step``    — loss + correct-count on an eval batch.
+* ``infer``        — the hardened inference graph: every sparse site runs
+                     the L1 ``gather_spmm`` Pallas kernel on compressed
+                     (vals, idx) weights with the learned permutation
+                     pre-composed into idx (re-indexing, Eqn. 16/18).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import optim, sparsity
+from .common import DTYPE
+from .kernels.gather_spmm import gather_spmm
+
+# ---------------------------------------------------------------------------
+# Flat <-> dict marshalling
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ProgramSpec:
+    """Input/output layout of one AOT program (serialised to the manifest)."""
+
+    name: str
+    inputs: list[tuple[str, list[int], str]]   # (name, shape, dtype)
+    outputs: list[tuple[str, list[int], str]]
+
+    def to_json(self):
+        return {
+            "name": self.name,
+            "inputs": [
+                {"name": n, "shape": s, "dtype": d} for n, s, d in self.inputs
+            ],
+            "outputs": [
+                {"name": n, "shape": s, "dtype": d} for n, s, d in self.outputs
+            ],
+        }
+
+
+def param_names(cfg: M.ModelConfig) -> list[str]:
+    return list(M.init_params(cfg).keys())
+
+
+def row_nnz_budget(cfg: M.ModelConfig, rows: int, cols: int,
+                   bs: int = 16, m: int = 16) -> int:
+    """Deterministic per-row nnz of the compressed inference form, agreed
+    between aot.py (shape baking) and the Rust compressor."""
+    s = cfg.structure
+    if s in ("diag", "banded", "butterfly"):
+        k = max(1, round(cfg.density * cols))
+        if s == "banded":
+            k += (k + 1) % 2
+        return min(k, cols)
+    if s == "nm":
+        return (cols // m) * max(1, round(cfg.density * m))
+    if s == "block":
+        return min(cols, max(1, round(cfg.density * (cols // bs))) * bs)
+    if s == "unstructured":
+        # Global budget; rows vary.  Pad to 2x the mean (clipped rows lose
+        # their smallest-|w| tail — documented in DESIGN.md).
+        return min(cols, max(1, int(np.ceil(cfg.density * cols * 2))))
+    if s == "dense":
+        return cols
+    raise ValueError(s)
+
+
+def batch_spec(cfg: M.ModelConfig, batch: int):
+    if cfg.kind == "gpt":
+        x = ("batch_x", [batch, cfg.seq_len], "i32")
+        y = ("batch_y", [batch, cfg.seq_len], "i32")
+    else:
+        x = ("batch_x", [batch, cfg.image, cfg.image, 3], "f32")
+        y = ("batch_y", [batch], "i32")
+    return x, y
+
+
+def _dict_from(names, arrays):
+    return dict(zip(names, arrays))
+
+
+# ---------------------------------------------------------------------------
+# train_step
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: M.ModelConfig, batch: int):
+    """Returns (fn, example_args, ProgramSpec) for AOT lowering."""
+    pnames = param_names(cfg)
+    snames = M.site_names(cfg)
+    p0 = M.init_params(cfg)
+    masks0 = M.init_masks(cfg)
+    logits0, idx0, flags0 = M.init_perm_state(cfg)
+    n_sites = len(snames)
+    has_perm = cfg.perm_mode in ("learned", "kaleidoscope", "random")
+
+    def fn(*args):
+        it = iter(args)
+        params = _dict_from(pnames, [next(it) for _ in pnames])
+        ms = _dict_from(pnames, [next(it) for _ in pnames])
+        vs = _dict_from(pnames, [next(it) for _ in pnames])
+        step = next(it)
+        masks = _dict_from(snames, [next(it) for _ in snames])
+        if has_perm:
+            plog = _dict_from(snames, [next(it) for _ in snames])
+            pidx = _dict_from(snames, [next(it) for _ in snames])
+            flags = next(it)
+        else:
+            plog, pidx, flags = {}, {}, jnp.ones((n_sites,), DTYPE)
+        bx, by = next(it), next(it)
+        lr, lam = next(it), next(it)
+
+        trainable = dict(params)
+        if cfg.perm_mode in ("learned", "kaleidoscope"):
+            for n in snames:
+                trainable[f"__perm__{n}"] = plog[n]
+
+        def loss_fn(tr):
+            pr = {k: v for k, v in tr.items() if not k.startswith("__perm__")}
+            pl = {n: tr[f"__perm__{n}"] for n in snames} \
+                if cfg.perm_mode in ("learned", "kaleidoscope") else plog
+            return M.task_loss(cfg, pr, masks, pl, pidx, flags, bx, by, lam)
+
+        grads, (loss, correct, pen) = jax.grad(loss_fn, has_aux=True)(trainable)
+        step1 = step + 1.0
+        # Perm logits use the same Adam state layout appended after params?
+        # No: perm logits carry their own SGD-style update (AutoShuffleNet
+        # uses plain projected gradient on the soft matrix) — simpler state,
+        # and hardened layers get exactly-zero updates via the cond grad.
+        new_p, new_m, new_v = optim.tree_adam(
+            {k: params[k] for k in pnames},
+            {k: grads[k] for k in pnames},
+            ms, vs, step1, lr, weight_decay=1e-4,
+        )
+        outs = [new_p[k] for k in pnames] + [new_m[k] for k in pnames] + \
+               [new_v[k] for k in pnames] + [step1]
+        if cfg.perm_mode in ("learned", "kaleidoscope"):
+            perm_lr = 10.0 * lr  # permutations need a hotter LR (Lyu et al.)
+            outs += [plog[n] - perm_lr * grads[f"__perm__{n}"] for n in snames]
+        outs += [loss, correct, pen]
+        return tuple(outs)
+
+    # Example args (concrete shapes for lowering) + spec.
+    bx_spec, by_spec = batch_spec(cfg, batch)
+    inputs, args = [], []
+
+    def add(name, arr, dtype="f32"):
+        inputs.append((name, list(arr.shape), dtype))
+        args.append(jnp.asarray(arr))
+
+    for k in pnames:
+        add(f"param.{k}", p0[k])
+    for k in pnames:
+        add(f"adam_m.{k}", np.zeros_like(p0[k]))
+    for k in pnames:
+        add(f"adam_v.{k}", np.zeros_like(p0[k]))
+    add("step", np.zeros((), np.float32))
+    for n in snames:
+        add(f"mask.{n}", masks0[n])
+    if has_perm:
+        for n in snames:
+            add(f"perm_logits.{n}", logits0[n])
+        for n in snames:
+            add(f"perm_idx.{n}", idx0[n], "i32")
+        add("hard_flags", flags0)
+    if cfg.kind == "gpt":
+        add("batch_x", np.zeros(bx_spec[1], np.int32), "i32")
+        add("batch_y", np.zeros(by_spec[1], np.int32), "i32")
+    else:
+        add("batch_x", np.zeros(bx_spec[1], np.float32))
+        add("batch_y", np.zeros(by_spec[1], np.int32), "i32")
+    add("lr", np.asarray(1e-3, np.float32))
+    add("lambda", np.asarray(0.1, np.float32))
+
+    outputs = [(f"param.{k}", list(p0[k].shape), "f32") for k in pnames]
+    outputs += [(f"adam_m.{k}", list(p0[k].shape), "f32") for k in pnames]
+    outputs += [(f"adam_v.{k}", list(p0[k].shape), "f32") for k in pnames]
+    outputs += [("step", [], "f32")]
+    if cfg.perm_mode in ("learned", "kaleidoscope"):
+        outputs += [(f"perm_logits.{n}", list(logits0[n].shape), "f32")
+                    for n in snames]
+    outputs += [("loss", [], "f32"), ("correct", [], "f32"),
+                ("penalties", [n_sites], "f32")]
+    return fn, args, ProgramSpec("train_step", inputs, outputs)
+
+
+# ---------------------------------------------------------------------------
+# dst_update
+# ---------------------------------------------------------------------------
+
+
+def make_dst_update(cfg: M.ModelConfig, batch: int):
+    """Prune-and-grow program.  grow_mode: 0=RigL(|grad|), 1=SET(random),
+    2=MEST(|grad| + 0.3|w|) — only meaningful for unstructured; structured
+    families use their own unit-level rules."""
+    pnames = param_names(cfg)
+    snames = M.site_names(cfg)
+    sites = {n: (r, c) for n, r, c in M.sparse_sites(cfg)}
+    p0 = M.init_params(cfg)
+    masks0 = M.init_masks(cfg)
+    logits0, idx0, flags0 = M.init_perm_state(cfg)
+    has_perm = cfg.perm_mode in ("learned", "kaleidoscope", "random")
+
+    def fn(*args):
+        it = iter(args)
+        params = _dict_from(pnames, [next(it) for _ in pnames])
+        ms = _dict_from(pnames, [next(it) for _ in pnames])
+        vs = _dict_from(pnames, [next(it) for _ in pnames])
+        masks = _dict_from(snames, [next(it) for _ in snames])
+        if has_perm:
+            plog = _dict_from(snames, [next(it) for _ in snames])
+            pidx = _dict_from(snames, [next(it) for _ in snames])
+            flags = next(it)
+        else:
+            plog, pidx, flags = {}, {}, jnp.ones((len(snames),), DTYPE)
+        bx, by = next(it), next(it)
+        frac, grow_mode, seed = next(it), next(it), next(it)
+
+        # Dense grow signal: differentiate wrt the *effective* (masked)
+        # weights so inactive coordinates get real gradients (RigL Sec. 3).
+        eff = {n: params[f"{n}.w"] * masks[n] for n in snames}
+
+        def loss_fn(eff_d):
+            pr = dict(params)
+            mk = dict(masks)
+            for n in snames:
+                pr[f"{n}.w"] = eff_d[n]
+                mk[n] = jnp.ones_like(masks[n])
+            total, _ = M.task_loss(cfg, pr, mk, plog, pidx, flags, bx, by,
+                                   jnp.zeros((), DTYPE))
+            return total
+
+        dense_grads = jax.grad(loss_fn)(eff)
+
+        key = jax.random.PRNGKey(seed)
+        new_masks, new_p, new_m, new_v = {}, dict(params), dict(ms), dict(vs)
+        for i, n in enumerate(snames):
+            w, mask, g = params[f"{n}.w"], masks[n], dense_grads[n]
+            if cfg.structure == "unstructured":
+                k1 = jax.random.fold_in(key, i)
+                rand = jax.random.uniform(k1, w.shape, DTYPE)
+                gs = jax.lax.switch(
+                    grow_mode,
+                    [lambda: jnp.abs(g),                       # RigL
+                     lambda: rand,                              # SET
+                     lambda: jnp.abs(g) + 0.3 * jnp.abs(w)],    # MEST
+                )
+                nm = sparsity.unstructured_prune_grow(w, mask, g, frac, gs)
+            else:
+                nm = sparsity.dst_update_for(cfg.structure, w, mask, g, frac)
+            newly = nm * (1.0 - mask)
+            keep = 1.0 - newly
+            new_masks[n] = nm
+            new_p[f"{n}.w"] = w * keep        # new connections start at 0
+            new_m[f"{n}.w"] = ms[f"{n}.w"] * keep
+            new_v[f"{n}.w"] = vs[f"{n}.w"] * keep
+
+        return tuple([new_p[k] for k in pnames] + [new_m[k] for k in pnames] +
+                     [new_v[k] for k in pnames] + [new_masks[n] for n in snames])
+
+    bx_spec, by_spec = batch_spec(cfg, batch)
+    inputs, args = [], []
+
+    def add(name, arr, dtype="f32"):
+        inputs.append((name, list(arr.shape), dtype))
+        args.append(jnp.asarray(arr))
+
+    for k in pnames:
+        add(f"param.{k}", p0[k])
+    for k in pnames:
+        add(f"adam_m.{k}", np.zeros_like(p0[k]))
+    for k in pnames:
+        add(f"adam_v.{k}", np.zeros_like(p0[k]))
+    for n in snames:
+        add(f"mask.{n}", masks0[n])
+    if has_perm:
+        for n in snames:
+            add(f"perm_logits.{n}", logits0[n])
+        for n in snames:
+            add(f"perm_idx.{n}", idx0[n], "i32")
+        add("hard_flags", flags0)
+    add("batch_x", np.zeros(bx_spec[1], np.int32 if cfg.kind == "gpt" else np.float32),
+        "i32" if cfg.kind == "gpt" else "f32")
+    add("batch_y", np.zeros(by_spec[1], np.int32), "i32")
+    add("frac", np.asarray(0.3, np.float32))
+    inputs.append(("grow_mode", [], "i32"))
+    args.append(jnp.asarray(0, jnp.int32))
+    inputs.append(("seed", [], "i32"))
+    args.append(jnp.asarray(0, jnp.int32))
+
+    outputs = [(f"param.{k}", list(p0[k].shape), "f32") for k in pnames]
+    outputs += [(f"adam_m.{k}", list(p0[k].shape), "f32") for k in pnames]
+    outputs += [(f"adam_v.{k}", list(p0[k].shape), "f32") for k in pnames]
+    outputs += [(f"mask.{n}", list(masks0[n].shape), "f32") for n in snames]
+    return fn, args, ProgramSpec("dst_update", inputs, outputs)
+
+
+# ---------------------------------------------------------------------------
+# eval_step
+# ---------------------------------------------------------------------------
+
+
+def make_eval_step(cfg: M.ModelConfig, batch: int):
+    pnames = param_names(cfg)
+    snames = M.site_names(cfg)
+    p0 = M.init_params(cfg)
+    masks0 = M.init_masks(cfg)
+    logits0, idx0, flags0 = M.init_perm_state(cfg)
+    has_perm = cfg.perm_mode in ("learned", "kaleidoscope", "random")
+
+    def fn(*args):
+        it = iter(args)
+        params = _dict_from(pnames, [next(it) for _ in pnames])
+        masks = _dict_from(snames, [next(it) for _ in snames])
+        if has_perm:
+            plog = _dict_from(snames, [next(it) for _ in snames])
+            pidx = _dict_from(snames, [next(it) for _ in snames])
+            flags = next(it)
+        else:
+            plog, pidx, flags = {}, {}, jnp.ones((len(snames),), DTYPE)
+        bx, by = next(it), next(it)
+        _, (loss, correct, pen) = M.task_loss(
+            cfg, params, masks, plog, pidx, flags, bx, by, jnp.zeros((), DTYPE)
+        )
+        return loss, correct, pen
+
+    bx_spec, by_spec = batch_spec(cfg, batch)
+    inputs, args = [], []
+
+    def add(name, arr, dtype="f32"):
+        inputs.append((name, list(arr.shape), dtype))
+        args.append(jnp.asarray(arr))
+
+    for k in pnames:
+        add(f"param.{k}", p0[k])
+    for n in snames:
+        add(f"mask.{n}", masks0[n])
+    if has_perm:
+        for n in snames:
+            add(f"perm_logits.{n}", logits0[n])
+        for n in snames:
+            add(f"perm_idx.{n}", idx0[n], "i32")
+        add("hard_flags", flags0)
+    add("batch_x", np.zeros(bx_spec[1], np.int32 if cfg.kind == "gpt" else np.float32),
+        "i32" if cfg.kind == "gpt" else "f32")
+    add("batch_y", np.zeros(by_spec[1], np.int32), "i32")
+
+    outputs = [("loss", [], "f32"), ("correct", [], "f32"),
+               ("penalties", [len(snames)], "f32")]
+    return fn, args, ProgramSpec("eval_step", inputs, outputs)
+
+
+# ---------------------------------------------------------------------------
+# infer — hardened graph on L1 Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+def make_infer(cfg: M.ModelConfig, batch: int):
+    """Inference with every sparse site compressed to (vals, idx) and the
+    permutation folded into idx.  idx therefore maps output-row slot k to
+    the *pre-permutation* input coordinate: idx'[i,k] = perm[idx[i,k]],
+    exactly the re-indexed sparse GEMM of Eqn. 16/18, and the site executes
+    as the gather_spmm Pallas kernel."""
+    pnames = param_names(cfg)
+    snames = M.site_names(cfg)
+    sites = {n: (r, c) for n, r, c in M.sparse_sites(cfg)}
+    p0 = M.init_params(cfg)
+
+    class KernelCtx(M.SparseCtx):
+        def __init__(self, cfg, vals, idx):
+            super().__init__(cfg, {}, {}, {}, jnp.ones((len(snames),), DTYPE))
+            self.vals, self.kidx = vals, idx
+
+    def kernel_sparse_linear(ctx, params, name, x):
+        vals, idx = ctx.vals[name], ctx.kidx[name]
+        shape = x.shape
+        x2 = x.reshape(-1, shape[-1])
+        y = gather_spmm(x2, vals, idx)
+        y = y + params[f"{name}.b"]
+        return y.reshape(*shape[:-1], vals.shape[0])
+
+    def fn(*args):
+        it = iter(args)
+        vals = _dict_from(snames, [next(it) for _ in snames])
+        idx = _dict_from(snames, [next(it) for _ in snames])
+        params = _dict_from(pnames, [next(it) for _ in pnames])
+        bx = next(it)
+        ctx = KernelCtx(cfg, vals, idx)
+        orig = M.sparse_linear
+        M.sparse_linear = kernel_sparse_linear  # route sites to the kernel
+        try:
+            logits = M.forward(cfg, params, ctx, bx)
+        finally:
+            M.sparse_linear = orig
+        return (logits,)
+
+    bx_spec, _ = batch_spec(cfg, batch)
+    inputs, args = [], []
+
+    def add(name, arr, dtype="f32"):
+        inputs.append((name, list(arr.shape), dtype))
+        args.append(jnp.asarray(arr))
+
+    for n in snames:
+        r, c = sites[n]
+        k = row_nnz_budget(cfg, r, c)
+        add(f"vals.{n}", np.zeros((r, k), np.float32))
+    for n in snames:
+        r, c = sites[n]
+        k = row_nnz_budget(cfg, r, c)
+        add(f"idx.{n}", np.zeros((r, k), np.int32), "i32")
+    for k2 in pnames:
+        add(f"param.{k2}", p0[k2])
+    add("batch_x", np.zeros(bx_spec[1], np.int32 if cfg.kind == "gpt" else np.float32),
+        "i32" if cfg.kind == "gpt" else "f32")
+
+    if cfg.kind == "gpt":
+        out_shape = [batch, cfg.seq_len, cfg.vocab]
+    else:
+        out_shape = [batch, cfg.n_classes]
+    outputs = [("logits", out_shape, "f32")]
+    return fn, args, ProgramSpec("infer", inputs, outputs)

@@ -1,0 +1,330 @@
+"""Structured sparsity substrate (L2): mask builders and DST update rules.
+
+The paper studies three canonical accelerator-friendly structures plus the
+unstructured baselines:
+
+* **Diagonal-K** (DynaDiag, Tyagi et al. 2025): the mask is the union of K
+  cyclic (wrap-around) diagonals of the R x C weight.  The *set of active
+  diagonal offsets* is what DST updates.
+* **Block-B** (DSB / Pixelated-Butterfly block term): the matrix is tiled
+  into bs x bs blocks and a fixed number of blocks is active; DST moves
+  whole blocks.
+* **N:M** (SRigL): each group of M consecutive input positions keeps exactly
+  N non-zeros; DST re-selects the N survivors per group.
+* **Banded-b**: static band of half-width b around the (scaled) main
+  diagonal — used by the expressivity theory (Table 1).
+* **Butterfly**: Pixelated-Butterfly style *static* support built from
+  power-of-two stride diagonals; never updated (SST baseline).
+* **Unstructured**: free support with a global nnz budget (RigL / SET /
+  MEST baselines).
+
+Masks are dense 0/1 float32 arrays of the weight's shape so they compose
+with the masked-dense training graph; the *compressed* forms used by the L1
+kernels (per-row value/index arrays) are derived from the same builders.
+
+All DST update rules preserve the layer nnz budget exactly and keep the
+mask inside its structure family — properties the test-suites (hypothesis
+here, proptest on the Rust mirror) check.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import DTYPE, cdiv
+
+# ---------------------------------------------------------------------------
+# Offset geometry shared by the diagonal family
+# ---------------------------------------------------------------------------
+
+
+def row_col_base(rows: int, cols: int) -> np.ndarray:
+    """For rectangular layers, the column the 'main diagonal' passes through
+    at each row: floor(i * cols / rows).  Square matrices reduce to i."""
+    return (np.arange(rows) * cols) // rows
+
+
+def diag_mask_from_offsets(rows: int, cols: int, offsets: np.ndarray) -> np.ndarray:
+    """Dense 0/1 mask that is the union of cyclic diagonals at ``offsets``."""
+    base = row_col_base(rows, cols)[:, None]  # (rows, 1)
+    cols_idx = (base + np.asarray(offsets)[None, :]) % cols  # (rows, K)
+    mask = np.zeros((rows, cols), dtype=np.float32)
+    mask[np.repeat(np.arange(rows), len(offsets)), cols_idx.reshape(-1)] = 1.0
+    return mask
+
+
+def diag_offsets_init(cols: int, k: int, seed: int = 0) -> np.ndarray:
+    """K distinct initial diagonal offsets, evenly spread over [0, cols)."""
+    if k > cols:
+        raise ValueError(f"K={k} exceeds cols={cols}")
+    rng = np.random.default_rng(seed)
+    # Evenly spaced offsets with a random rotation: spread coverage while
+    # keeping runs distinct across layers/seeds.
+    start = int(rng.integers(0, cols))
+    return (start + (np.arange(k) * cols) // k) % cols
+
+
+# ---------------------------------------------------------------------------
+# Mask builders (numpy, build-time) — one per structure family
+# ---------------------------------------------------------------------------
+
+
+def make_diag_mask(rows: int, cols: int, k: int, seed: int = 0) -> np.ndarray:
+    return diag_mask_from_offsets(rows, cols, diag_offsets_init(cols, k, seed))
+
+
+def make_banded_mask(rows: int, cols: int, band: int) -> np.ndarray:
+    """Band of width ``band`` (odd) centred on the scaled main diagonal,
+    with wrap-around so every row has exactly ``band`` nnz (Apdx A)."""
+    half = band // 2
+    offsets = np.arange(-half, half + 1) % cols
+    return diag_mask_from_offsets(rows, cols, np.unique(offsets))
+
+
+def make_block_mask(
+    rows: int, cols: int, density: float, bs: int = 16, seed: int = 0
+) -> np.ndarray:
+    """Block mask with ceil(density * nblocks) active bs x bs blocks, chosen
+    uniformly at random but balanced across block-rows (each block-row gets
+    the same budget, matching DSB's per-row-group layout)."""
+    br, bc = cdiv(rows, bs), cdiv(cols, bs)
+    per_row = max(1, round(density * bc))
+    rng = np.random.default_rng(seed)
+    mask = np.zeros((rows, cols), dtype=np.float32)
+    for i in range(br):
+        picks = rng.choice(bc, size=min(per_row, bc), replace=False)
+        for j in picks:
+            mask[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs] = 1.0
+    return mask[:rows, :cols]
+
+
+def make_nm_mask(rows: int, cols: int, n: int, m: int, seed: int = 0) -> np.ndarray:
+    """N:M mask: each group of M consecutive columns keeps N random nnz."""
+    if cols % m != 0:
+        raise ValueError(f"cols={cols} not divisible by M={m}")
+    rng = np.random.default_rng(seed)
+    groups = cols // m
+    mask = np.zeros((rows, groups, m), dtype=np.float32)
+    for i in range(rows):
+        for g in range(groups):
+            mask[i, g, rng.choice(m, size=n, replace=False)] = 1.0
+    return mask.reshape(rows, cols)
+
+
+def make_butterfly_mask(rows: int, cols: int, density: float) -> np.ndarray:
+    """Pixelated-Butterfly style static support: union of power-of-two
+    stride diagonals (the 'flat butterfly' of Dao et al. 2021) up to the
+    nnz budget.  Static — never updated by DST."""
+    budget = max(1, round(density * cols))
+    offsets = [0]
+    stride = 1
+    while len(offsets) < budget and stride < cols:
+        for off in (stride, cols - stride):
+            if len(offsets) < budget and off % cols not in offsets:
+                offsets.append(off % cols)
+        stride *= 2
+    # Fill any remainder with evenly spaced offsets.
+    extra = 1
+    while len(offsets) < budget:
+        if extra not in offsets:
+            offsets.append(extra)
+        extra += 1
+    return diag_mask_from_offsets(rows, cols, np.array(sorted(set(offsets))[:budget]))
+
+
+def make_unstructured_mask(rows: int, cols: int, density: float, seed: int = 0) -> np.ndarray:
+    """Free support with per-layer nnz budget = round(density * rows * cols),
+    drawn as an Erdos–Renyi mask (SET-style initialisation)."""
+    rng = np.random.default_rng(seed)
+    nnz = max(1, round(density * rows * cols))
+    flat = np.zeros(rows * cols, dtype=np.float32)
+    flat[rng.choice(rows * cols, size=nnz, replace=False)] = 1.0
+    return flat.reshape(rows, cols)
+
+
+def make_mask(structure: str, rows: int, cols: int, density: float, seed: int = 0,
+              bs: int = 16, m: int = 16) -> np.ndarray:
+    """Dispatch on the structure family name used throughout the repo."""
+    if structure == "diag":
+        return make_diag_mask(rows, cols, max(1, round(density * cols)), seed)
+    if structure == "banded":
+        band = max(1, round(density * cols))
+        band += (band + 1) % 2  # nearest odd
+        return make_banded_mask(rows, cols, min(band, cols))
+    if structure == "block":
+        return make_block_mask(rows, cols, density, bs, seed)
+    if structure == "nm":
+        return make_nm_mask(rows, cols, max(1, round(density * m)), m, seed)
+    if structure == "butterfly":
+        return make_butterfly_mask(rows, cols, density)
+    if structure == "unstructured":
+        return make_unstructured_mask(rows, cols, density, seed)
+    if structure == "dense":
+        return np.ones((rows, cols), dtype=np.float32)
+    raise ValueError(f"unknown structure {structure!r}")
+
+
+# ---------------------------------------------------------------------------
+# DST update rules (jnp, traced into the dst_update AOT program)
+#
+# All rules follow the prune-and-grow template of RigL (Evci et al. 2020):
+# drop the ``frac`` lowest-|w| *structural units* among the active set and
+# grow the same number of inactive units by the grow criterion (|grad| for
+# RigL/SRigL/DSB/DynaDiag, random for SET, |w|+|grad| mix for MEST).  The
+# structural unit is the weight (unstructured, N:M), the block (block) or
+# the whole diagonal (diag).
+# ---------------------------------------------------------------------------
+
+
+def _topk_mask(scores: jnp.ndarray, k: jnp.ndarray | int) -> jnp.ndarray:
+    """0/1 mask (same shape as ``scores``) selecting the k largest entries.
+
+    ``k`` may be a traced scalar.  Implemented as sort + threshold against
+    the k-th order statistic rather than the argsort/rank-scatter idiom:
+    the scatter form miscompiles under the xla_extension 0.5.1 runtime the
+    Rust side executes (masks silently densify), while sort + dynamic take
+    lowers to well-supported primitives.  Assumes the top-k boundary value
+    is unique among *candidate* scores (score construction in the callers
+    separates candidates from the -1e30 sentinels), which holds w.p. 1 for
+    the |w| / |grad| sums being ranked.
+    """
+    flat = scores.reshape(-1)
+    desc = -jnp.sort(-flat)  # descending
+    kk = jnp.asarray(k)
+    idx = jnp.clip(kk - 1, 0, flat.shape[0] - 1).astype(jnp.int32)
+    kth = jnp.take(desc, idx)
+    sel = (flat >= kth) & (kk > 0)
+    return sel.astype(DTYPE).reshape(scores.shape)
+
+
+def unstructured_prune_grow(
+    w: jnp.ndarray,
+    mask: jnp.ndarray,
+    grad: jnp.ndarray,
+    frac: jnp.ndarray,
+    grow_scores: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """RigL-style unstructured update.  ``grow_scores`` defaults to |grad|
+    (RigL); pass uniform random numbers for SET or a |w|,|grad| mix for MEST.
+    The nnz budget is preserved exactly.
+    """
+    nnz = jnp.sum(mask)
+    n_inactive = mask.size - nnz
+    n_move = jnp.minimum(jnp.floor(frac * nnz), n_inactive)
+    # Keep the (nnz - n_move) largest-|w| active weights...
+    keep_scores = jnp.abs(w) * mask - (1.0 - mask) * 1e30
+    keep = _topk_mask(keep_scores, nnz - n_move)
+    # ...and grow n_move inactive positions by the grow criterion.
+    gs = jnp.abs(grad) if grow_scores is None else grow_scores
+    grow_scores_masked = gs * (1.0 - keep) * (1.0 - mask) - (keep + mask) * 1e30
+    grow = _topk_mask(grow_scores_masked, n_move)
+    return jnp.clip(keep + grow, 0.0, 1.0)
+
+
+def nm_prune_grow(
+    w: jnp.ndarray, mask: jnp.ndarray, grad: jnp.ndarray, m: int, gamma: float = 0.3
+) -> jnp.ndarray:
+    """SRigL-style N:M update: within every group of M input positions,
+    re-select the N survivors by score = |w| (active) vs gamma*|grad|
+    (inactive candidates).  N is inferred from the incoming mask so the
+    budget is preserved per group."""
+    rows, cols = w.shape
+    groups = cols // m
+    wg = jnp.abs(w).reshape(rows, groups, m)
+    gg = jnp.abs(grad).reshape(rows, groups, m)
+    mg = mask.reshape(rows, groups, m)
+    n = jnp.sum(mg, axis=-1, keepdims=True)  # (rows, groups, 1) — N per group
+    scores = wg * mg + gamma * gg * (1.0 - mg)
+    # Keep the top-N per group: sort + threshold on the N-th order
+    # statistic (see _topk_mask for why not the rank-scatter idiom).
+    desc = -jnp.sort(-scores, axis=-1)
+    idx = jnp.clip(n - 1, 0, m - 1).astype(jnp.int32)
+    kth = jnp.take_along_axis(desc, idx, axis=-1)
+    new = ((scores >= kth) & (n > 0)).astype(DTYPE)
+    return new.reshape(rows, cols)
+
+
+def block_prune_grow(
+    w: jnp.ndarray, mask: jnp.ndarray, grad: jnp.ndarray, bs: int, frac: jnp.ndarray
+) -> jnp.ndarray:
+    """DSB-style block update: score active blocks by sum|w| and inactive
+    blocks by sum|grad|; move ``frac`` of the active blocks."""
+    rows, cols = w.shape
+    br, bc = rows // bs, cols // bs
+
+    def block_reduce(x):
+        return jnp.abs(x).reshape(br, bs, bc, bs).sum(axis=(1, 3))
+
+    bmask = (mask.reshape(br, bs, bc, bs).mean(axis=(1, 3)) > 0.5).astype(DTYPE)
+    nblk = jnp.sum(bmask)
+    n_move = jnp.minimum(jnp.floor(frac * nblk), bmask.size - nblk)
+    keep_scores = block_reduce(w * mask) - (1.0 - bmask) * 1e30
+    keep = _topk_mask(keep_scores, nblk - n_move)
+    grow_sc = block_reduce(grad) * (1.0 - bmask) * (1.0 - keep) - (bmask + keep) * 1e30
+    grow = _topk_mask(grow_sc, n_move)
+    bnew = jnp.clip(keep + grow, 0.0, 1.0)
+    return jnp.repeat(jnp.repeat(bnew, bs, axis=0), bs, axis=1)
+
+
+def diag_prune_grow(
+    w: jnp.ndarray, mask: jnp.ndarray, grad: jnp.ndarray, frac: jnp.ndarray
+) -> jnp.ndarray:
+    """DynaDiag-style diagonal update: the structural unit is the whole
+    cyclic diagonal.  Active diagonals are scored by sum|w| along the
+    diagonal, inactive ones by sum|grad|; ``frac`` of the K active
+    diagonals are moved per update."""
+    rows, cols = w.shape
+    base = jnp.asarray(row_col_base(rows, cols))[:, None]  # (rows,1)
+    # offset of entry (i,j) = (j - base_i) mod cols.
+    off = (jnp.arange(cols)[None, :] - base) % cols  # (rows, cols)
+    # Column of offset o in row i: (base_i + o) mod cols — used to reduce
+    # per-offset via *gather* (take_along_axis) rather than scatter-add:
+    # the scatter lowering miscompiles under the xla_extension 0.5.1
+    # runtime (every offset reports mass, densifying the mask; see
+    # EXPERIMENTS.md bug log), while gathers round-trip correctly.
+    gidx = (base + jnp.arange(cols)[None, :]) % cols  # (rows, offsets)
+
+    def per_offset(x):
+        g = jnp.take_along_axis(jnp.abs(x), gidx, axis=1)  # col o = offset o
+        return jnp.sum(g, axis=0)
+
+    dmask = (per_offset(mask) > 0.5).astype(DTYPE)  # active offsets
+    k = jnp.sum(dmask)
+    n_move = jnp.minimum(jnp.floor(frac * k), cols - k)
+    keep_scores = per_offset(w * mask) - (1.0 - dmask) * 1e30
+    keep = _topk_mask(keep_scores, k - n_move)
+    grow_sc = per_offset(grad) * (1.0 - dmask) * (1.0 - keep) - (dmask + keep) * 1e30
+    grow = _topk_mask(grow_sc, n_move)
+    dnew = jnp.clip(keep + grow, 0.0, 1.0)
+    # Rebuild the dense mask from the new offset set.
+    return dnew[off]
+
+
+def dst_update_for(
+    structure: str, w, mask, grad, frac, *, m: int = 16, bs: int = 16,
+    grow_scores=None,
+):
+    """Dispatch a single-layer DST update by structure family.  ``butterfly``
+    and ``banded`` are static (SST) — they return the mask unchanged, as does
+    ``dense``."""
+    if structure in ("butterfly", "banded", "dense"):
+        return mask
+    if structure == "unstructured":
+        return unstructured_prune_grow(w, mask, grad, frac, grow_scores)
+    if structure == "nm":
+        return nm_prune_grow(w, mask, grad, m)
+    if structure == "block":
+        return block_prune_grow(w, mask, grad, bs, frac)
+    if structure == "diag":
+        return diag_prune_grow(w, mask, grad, frac)
+    raise ValueError(f"unknown structure {structure!r}")
+
+
+def cosine_update_frac(step: jnp.ndarray, total_steps: int, frac0: float = 0.3) -> jnp.ndarray:
+    """RigL's cosine-decayed drop fraction alpha_t = frac0/2 (1 + cos(pi t/T))."""
+    t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+    return frac0 * 0.5 * (1.0 + jnp.cos(jnp.pi * t))

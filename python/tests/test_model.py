@@ -1,0 +1,193 @@
+"""L2 model: shapes, gradients, permutation equivalences, and program
+builders (train/dst/eval/infer) for all three architectures."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import programs as P
+from compile.kernels import ref
+
+
+def make_batch(cfg, batch=2, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.kind == "gpt":
+        x = jnp.asarray(rng.integers(0, cfg.vocab, (batch, cfg.seq_len)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, cfg.vocab, (batch, cfg.seq_len)), jnp.int32)
+    else:
+        x = jnp.asarray(rng.standard_normal((batch, cfg.image, cfg.image, 3)), jnp.float32)
+        y = jnp.asarray(rng.integers(0, cfg.n_classes, (batch,)), jnp.int32)
+    return x, y
+
+
+def state_for(cfg):
+    params = {k: jnp.asarray(v) for k, v in M.init_params(cfg).items()}
+    masks = {k: jnp.asarray(v) for k, v in M.init_masks(cfg).items()}
+    logits, idx, flags = M.init_perm_state(cfg)
+    logits = {k: jnp.asarray(v) for k, v in logits.items()}
+    idx = {k: jnp.asarray(v) for k, v in idx.items()}
+    return params, masks, logits, idx, jnp.asarray(flags)
+
+
+@pytest.mark.parametrize("kind", ["vit_tiny", "gpt_tiny", "mixer_tiny"])
+def test_forward_shapes(kind):
+    cfg = M.CONFIGS[kind](perm_mode="learned")
+    params, masks, logits, idx, flags = state_for(cfg)
+    x, _ = make_batch(cfg)
+    ctx = M.SparseCtx(cfg, masks, logits, idx, flags)
+    out = M.forward(cfg, params, ctx, x)
+    if cfg.kind == "gpt":
+        assert out.shape == (2, cfg.seq_len, cfg.vocab)
+    else:
+        assert out.shape == (2, cfg.n_classes)
+    assert np.isfinite(np.array(out)).all()
+
+
+@pytest.mark.parametrize("kind", ["vit_tiny", "gpt_tiny"])
+def test_gradients_finite_and_masked(kind):
+    """Grads must be finite everywhere and *zero outside the mask* for
+    sparse-site weights (masked-dense parameterisation)."""
+    cfg = M.CONFIGS[kind](perm_mode="learned", density=0.2)
+    params, masks, logits, idx, flags = state_for(cfg)
+    x, y = make_batch(cfg)
+
+    def loss(p):
+        t, _ = M.task_loss(cfg, p, masks, logits, idx, flags, x, y, jnp.float32(0.01))
+        return t
+
+    g = jax.grad(loss)(params)
+    for k, v in g.items():
+        assert np.isfinite(np.array(v)).all(), k
+    site = M.site_names(cfg)[0]
+    gw = np.array(g[f"{site}.w"])
+    m = np.array(masks[site])
+    assert (np.abs(gw[m < 0.5]) < 1e-8).all(), "gradient leaked outside mask"
+
+
+def test_hard_identity_equals_noperm():
+    """flags=1 with identity idx must equal the no-permutation model."""
+    cfg_l = M.CONFIGS["vit_tiny"](perm_mode="learned")
+    cfg_n = M.CONFIGS["vit_tiny"](perm_mode="none")
+    params, masks, logits, idx, _ = state_for(cfg_l)
+    x, y = make_batch(cfg_l)
+    ones = jnp.ones((len(M.site_names(cfg_l)),), jnp.float32)
+    ctx_h = M.SparseCtx(cfg_l, masks, logits, idx, ones)
+    out_h = M.forward(cfg_l, params, ctx_h, x)
+    ctx_n = M.SparseCtx(cfg_n, masks, {}, {}, ones)
+    out_n = M.forward(cfg_n, params, ctx_n, x)
+    np.testing.assert_allclose(np.array(out_h), np.array(out_n), atol=1e-5)
+
+
+def test_random_hard_perm_changes_output():
+    cfg = M.CONFIGS["vit_tiny"](perm_mode="random", seed=3)
+    params, masks, logits, idx, flags = state_for(cfg)
+    x, _ = make_batch(cfg)
+    ctx = M.SparseCtx(cfg, masks, logits, idx, flags)
+    out_r = M.forward(cfg, params, ctx, x)
+    ident = {k: jnp.arange(v.shape[0], dtype=jnp.int32) for k, v in idx.items()}
+    ctx_i = M.SparseCtx(cfg, masks, logits, ident, flags)
+    out_i = M.forward(cfg, params, ctx_i, x)
+    assert np.abs(np.array(out_r) - np.array(out_i)).max() > 1e-3
+
+
+def test_row_perm_ablation_runs():
+    """Tbl. 10: row-permutation formulation must be trainable too."""
+    cfg = M.CONFIGS["vit_tiny"](perm_mode="learned", perm_side="row")
+    params, masks, logits0, idx0, flags = state_for(cfg)
+    # Row perms act on layer *outputs*: dims = rows.
+    logits, idx = {}, {}
+    for name, rows, cols in M.sparse_sites(cfg):
+        logits[name] = jnp.zeros((rows, rows), jnp.float32)
+        idx[name] = jnp.arange(rows, dtype=jnp.int32)
+    x, y = make_batch(cfg)
+    total, (loss, _, pen) = M.task_loss(
+        cfg, params, masks, logits, idx, jnp.zeros_like(flags), x, y, jnp.float32(0.01)
+    )
+    assert np.isfinite(float(total)) and float(pen.sum()) > 0
+
+
+def test_train_step_reduces_loss_all_models():
+    for kind in ["vit_tiny", "gpt_tiny", "mixer_tiny"]:
+        cfg = M.CONFIGS[kind](perm_mode="learned", density=0.3)
+        fn, args, spec = P.make_train_step(cfg, batch=4)
+        jfn = jax.jit(fn)
+        names = [n for n, _, _ in spec.inputs]
+        onames = [n for n, _, _ in spec.outputs]
+        args = list(args)
+        x, y = make_batch(cfg, batch=4, seed=1)
+        args[names.index("batch_x")] = x
+        args[names.index("batch_y")] = y
+        first = None
+        for _ in range(6):
+            outs = jfn(*args)
+            od = dict(zip(onames, outs))
+            if first is None:
+                first = float(od["loss"])
+            for i, n in enumerate(names):
+                if n in od:
+                    args[i] = od[n]
+        assert float(od["loss"]) < first, f"{kind}: loss did not decrease"
+
+
+def test_dst_update_budget_and_moment_reset():
+    cfg = M.CONFIGS["vit_tiny"](structure="diag", density=0.2)
+    fn, args, spec = P.make_dst_update(cfg, batch=4)
+    names = [n for n, _, _ in spec.inputs]
+    onames = [n for n, _, _ in spec.outputs]
+    args = list(args)
+    x, y = make_batch(cfg, batch=4, seed=2)
+    args[names.index("batch_x")] = x
+    args[names.index("batch_y")] = y
+    # Seed Adam moments with ones to observe the reset.
+    for i, n in enumerate(names):
+        if n.startswith("adam_m."):
+            args[i] = jnp.ones_like(args[i])
+    outs = dict(zip(onames, jax.jit(fn)(*args)))
+    ins = dict(zip(names, args))
+    for site in M.site_names(cfg)[:4]:
+        m0, m1 = np.array(ins[f"mask.{site}"]), np.array(outs[f"mask.{site}"])
+        assert m0.sum() == m1.sum(), "nnz budget changed"
+        newly = (m1 > 0.5) & (m0 < 0.5)
+        if newly.any():
+            w1 = np.array(outs[f"param.{site}.w"])
+            am1 = np.array(outs[f"adam_m.{site}.w"])
+            assert (np.abs(w1[newly]) < 1e-8).all(), "grown weights not zeroed"
+            assert (np.abs(am1[newly]) < 1e-8).all(), "grown moments not reset"
+
+
+def test_infer_matches_eval_path():
+    cfg = M.CONFIGS["gpt_tiny"](structure="diag", density=0.1, perm_mode="learned")
+    fn, args, spec = P.make_infer(cfg, batch=2)
+    names = [n for n, _, _ in spec.inputs]
+    args = list(args)
+    x, _ = make_batch(cfg, batch=2, seed=3)
+    args[names.index("batch_x")] = x
+    p0, masks0 = M.init_params(cfg), M.init_masks(cfg)
+    for n, r, c in M.sparse_sites(cfg):
+        k = P.row_nnz_budget(cfg, r, c)
+        vals, idx = ref.compress_mask(p0[f"{n}.w"], masks0[n], k)
+        args[names.index(f"vals.{n}")] = jnp.asarray(vals)
+        args[names.index(f"idx.{n}")] = jnp.asarray(idx)
+    (logits,) = jax.jit(fn)(*args)
+    cfg_n = M.CONFIGS["gpt_tiny"](structure="diag", density=0.1, perm_mode="none")
+    ctx = M.SparseCtx(
+        cfg_n,
+        {k: jnp.asarray(v) for k, v in masks0.items()},
+        {}, {}, jnp.ones((len(M.site_names(cfg)),)),
+    )
+    want = M.forward(cfg_n, {k: jnp.asarray(v) for k, v in p0.items()}, ctx, x)
+    np.testing.assert_allclose(np.array(logits), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+def test_penalty_excluded_when_hardened():
+    cfg = M.CONFIGS["vit_tiny"](perm_mode="learned")
+    params, masks, logits, idx, flags = state_for(cfg)
+    x, y = make_batch(cfg)
+    ones = jnp.ones_like(flags)
+    total_h, (loss_h, _, pen_h) = M.task_loss(
+        cfg, params, masks, logits, idx, ones, x, y, jnp.float32(1.0)
+    )
+    assert float(np.abs(np.array(pen_h)).sum()) == 0.0, "hardened penalty must be 0"
+    assert float(total_h) == pytest.approx(float(loss_h), rel=1e-6)

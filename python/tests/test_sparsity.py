@@ -1,0 +1,132 @@
+"""Structure-family invariants of the mask builders and DST update rules —
+the Python half of the property suite (the Rust mirror checks the same
+invariants with proptest-style generators)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import sparsity
+
+SET = settings(max_examples=10, deadline=None)
+
+STRUCTS = ["diag", "banded", "block", "nm", "butterfly", "unstructured"]
+
+
+@given(st.sampled_from(STRUCTS), st.integers(0, 10_000),
+       st.sampled_from([0.05, 0.1, 0.3]))
+@SET
+def test_mask_density_near_target(structure, seed, density):
+    m = sparsity.make_mask(structure, 128, 128, density, seed=seed)
+    got = m.mean()
+    # Block granularity floors density at one 16x16 block per block-row.
+    floor = 16.0 / 128.0 if structure == "block" else 0.0
+    target = max(density, floor)
+    assert abs(got - target) < 0.06, f"{structure}: {got} vs {target}"
+
+
+@given(st.integers(0, 10_000))
+@SET
+def test_diag_mask_exact_row_nnz(seed):
+    m = sparsity.make_mask("diag", 96, 64, 0.1, seed=seed)
+    k = round(0.1 * 64)
+    assert (m.sum(axis=1) == k).all()
+
+
+@given(st.integers(0, 10_000))
+@SET
+def test_nm_mask_per_group(seed):
+    m = sparsity.make_mask("nm", 32, 64, 0.25, seed=seed)
+    groups = m.reshape(32, 4, 16)
+    assert (groups.sum(axis=-1) == 4).all()  # N = 0.25*16
+
+
+def test_butterfly_static_and_deterministic():
+    a = sparsity.make_mask("butterfly", 64, 64, 0.1)
+    b = sparsity.make_mask("butterfly", 64, 64, 0.1, seed=99)
+    assert (a == b).all()
+
+
+@given(st.integers(0, 10_000), st.sampled_from([0.1, 0.3, 0.5]))
+@SET
+def test_unstructured_prune_grow_budget(seed, frac):
+    rng = np.random.default_rng(seed)
+    mask = jnp.array(sparsity.make_mask("unstructured", 32, 32, 0.2, seed=seed))
+    w = jnp.array(rng.standard_normal((32, 32)).astype(np.float32))
+    g = jnp.array(rng.standard_normal((32, 32)).astype(np.float32))
+    new = sparsity.unstructured_prune_grow(w, mask, g, jnp.float32(frac))
+    assert float(new.sum()) == float(mask.sum())
+    assert set(np.unique(np.array(new))) <= {0.0, 1.0}
+
+
+@given(st.integers(0, 10_000))
+@SET
+def test_diag_prune_grow_stays_diagonal(seed):
+    rng = np.random.default_rng(seed)
+    mask = jnp.array(sparsity.make_mask("diag", 32, 32, 0.15, seed=seed))
+    w = jnp.array(rng.standard_normal((32, 32)).astype(np.float32))
+    g = jnp.array(rng.standard_normal((32, 32)).astype(np.float32))
+    new = np.array(sparsity.diag_prune_grow(w, mask, g, jnp.float32(0.4)))
+    assert new.sum() == float(mask.sum())
+    # Row-independent offset sets: every row has nnz at the same offsets.
+    base = (np.arange(32) * 32) // 32
+    offs = [frozenset((np.nonzero(new[i])[0] - base[i]) % 32) for i in range(32)]
+    assert all(o == offs[0] for o in offs)
+
+
+@given(st.integers(0, 10_000))
+@SET
+def test_block_prune_grow_stays_blocky(seed):
+    rng = np.random.default_rng(seed)
+    mask = jnp.array(sparsity.make_mask("block", 32, 64, 0.25, seed=seed))
+    w = jnp.array(rng.standard_normal((32, 64)).astype(np.float32))
+    g = jnp.array(rng.standard_normal((32, 64)).astype(np.float32))
+    new = np.array(sparsity.block_prune_grow(w, mask, g, 16, jnp.float32(0.5)))
+    assert new.sum() == float(np.array(mask).sum())
+    blocks = new.reshape(2, 16, 4, 16).mean(axis=(1, 3))
+    assert np.isin(blocks, [0.0, 1.0]).all()
+
+
+@given(st.integers(0, 10_000))
+@SET
+def test_nm_prune_grow_preserves_group_counts(seed):
+    rng = np.random.default_rng(seed)
+    mask = jnp.array(sparsity.make_mask("nm", 16, 64, 0.25, seed=seed))
+    w = jnp.array(rng.standard_normal((16, 64)).astype(np.float32))
+    g = jnp.array(rng.standard_normal((16, 64)).astype(np.float32))
+    new = np.array(sparsity.nm_prune_grow(w, mask, g, 16))
+    groups = new.reshape(16, 4, 16)
+    assert (groups.sum(axis=-1) == 4).all()
+
+
+def test_grow_targets_hot_gradient():
+    """RigL property: with zero weights, the grown positions are exactly
+    the top-|grad| inactive positions."""
+    mask = jnp.array(sparsity.make_mask("unstructured", 8, 8, 0.25, seed=1))
+    w = jnp.zeros((8, 8), jnp.float32)
+    g = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    new = np.array(sparsity.unstructured_prune_grow(w, mask, g, jnp.float32(0.5)))
+    nnz = int(np.array(mask).sum())
+    n_move = nnz // 2
+    grown = (new > 0.5) & (np.array(mask) < 0.5)
+    # Grown positions must be the highest-gradient inactive cells.
+    inactive_grads = np.where(np.array(mask) < 0.5, np.array(g), -np.inf)
+    top = np.argsort(-inactive_grads.ravel())[:n_move]
+    assert set(np.nonzero(grown.ravel())[0]) == set(top.tolist())
+
+
+def test_cosine_schedule():
+    assert float(sparsity.cosine_update_frac(jnp.float32(0), 100)) == pytest.approx(0.3)
+    assert float(sparsity.cosine_update_frac(jnp.float32(100), 100)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_density_param_mapping_apdx_a():
+    p = sparsity.make_mask  # smoke: the numeric mapping lives in common.py
+    from compile.common import density_to_pattern_params
+    d = density_to_pattern_params(0.05, 1024)
+    assert d["K"] == 51 and d["band"] == 51
+    d2 = density_to_pattern_params(0.05, 4096)
+    assert d2["K"] == 205
+    with pytest.raises(ValueError):
+        density_to_pattern_params(0.0, 128)

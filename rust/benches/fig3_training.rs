@@ -1,0 +1,114 @@
+//! Fig. 3 (training half) + Tbl. 5 (time columns): wall-clock per training
+//! step through the *AOT artifacts* for the permutation treatments —
+//!
+//!   noperm      {model}_train_noperm   (structured DST baseline)
+//!   PA-DST      {model}_train          soft perms on every site (flags=0)
+//!   PA-hardened {model}_train          all sites hardened (flags=1) — the
+//!                                      end-state after Apdx C.2 early stop
+//!   Kaleido     {model}_train_kperm    K-matrix comparator (Tbl. 5)
+//!
+//! The overhead columns are the paper's "learning permutations costs extra
+//! training time; hardening claws it back" story, measured end-to-end
+//! through PJRT (compile excluded, first call warmed).
+
+use std::collections::HashMap;
+
+use padst::coordinator::{make_batch_buffers, RunConfig, Trainer};
+use padst::runtime::Runtime;
+use padst::sparsity::patterns::Structure;
+use padst::tensor::Tensor;
+use padst::util::stats::{bench, fmt_time};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return Ok(());
+    }
+    let mut rt = Runtime::open(dir)?;
+    println!("# Fig. 3 (training) / Tbl. 5: seconds per train step via PJRT");
+    println!(
+        "{:<12} {:<14} {:>12} {:>10}",
+        "model", "variant", "p50/step", "overhead"
+    );
+
+    for model in ["vit_tiny", "gpt_tiny"] {
+        let variants: &[(&str, &str, f32)] = &[
+            ("noperm", &format!("{model}_train_noperm"), 0.0),
+            ("PA-DST", &format!("{model}_train"), 0.0),
+            ("PA-hardened", &format!("{model}_train"), 1.0),
+            ("Kaleido", &format!("{model}_train_kperm"), 0.0),
+        ];
+        let mut base = f64::NAN;
+        for (label, artifact, flags) in variants {
+            let t = time_variant(&mut rt, model, artifact, *flags)?;
+            if *label == "noperm" {
+                base = t;
+            }
+            println!(
+                "{:<12} {:<14} {:>12} {:>9.1}%",
+                model,
+                label,
+                fmt_time(t),
+                (t / base - 1.0) * 100.0
+            );
+        }
+    }
+    println!("\n# done (recorded in EXPERIMENTS.md §Fig3-training)");
+    Ok(())
+}
+
+/// Time one variant's steady-state step.  Uses the Trainer's own state
+/// initialisation so buffers are exactly what production runs feed.
+fn time_variant(
+    rt: &mut Runtime,
+    model: &str,
+    artifact: &str,
+    hard_flags: f32,
+) -> anyhow::Result<f64> {
+    let perm_mode = if artifact.ends_with("noperm") {
+        "none"
+    } else if artifact.ends_with("kperm") {
+        "kaleidoscope"
+    } else {
+        "learned"
+    };
+    let cfg = RunConfig {
+        model: model.to_string(),
+        structure: Structure::Diag,
+        density: 0.1,
+        perm_mode: perm_mode.to_string(),
+        steps: 0,
+        ..Default::default()
+    };
+    let entry = rt.manifest.models[model].clone();
+    let batch = rt.manifest.batch;
+    let prog = rt.program(artifact)?;
+    let mut trainer = Trainer::new(rt, cfg);
+    let mut state = trainer.init_state()?;
+    if let Some(f) = state.vals.get_mut("hard_flags") {
+        f.f32s_mut().fill(hard_flags);
+    }
+
+    let (bx, by) = make_batch_buffers(&entry, batch);
+    let mut extras: HashMap<&str, Tensor> = HashMap::new();
+    extras.insert("batch_x", bx);
+    extras.insert("batch_y", by);
+    extras.insert("lr", Tensor::scalar(1e-3));
+    extras.insert("lambda", Tensor::scalar(5e-3));
+    let inputs: Vec<Tensor> = prog
+        .spec
+        .inputs
+        .iter()
+        .map(|s| {
+            extras
+                .get(s.name.as_str())
+                .or_else(|| state.vals.get(&s.name))
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("missing {}", s.name))
+        })
+        .collect::<anyhow::Result<_>>()?;
+
+    let s = bench(|| { let _ = prog.run(&inputs).unwrap(); }, 2, 5, 1.0);
+    Ok(s.p50)
+}

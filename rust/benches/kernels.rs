@@ -1,0 +1,98 @@
+//! Kernel micro-benchmarks: GFLOP/s of every native kernel across shapes
+//! and densities — the profiling substrate for the §Perf iteration loop
+//! (EXPERIMENTS.md).  Run with `cargo bench --bench kernels`.
+
+use padst::kernels::{
+    block_matmul, csr_from_mask, csr_matmul, dense_matmul, dense_matmul_blocked,
+    gather_matmul, gather_matmul_batched, spmm_flops,
+};
+use padst::sparsity::compress::{compress_blocks, compress_rows};
+use padst::sparsity::patterns::{make_mask, Structure};
+use padst::util::stats::{bench, fmt_time};
+use padst::util::Rng;
+
+fn main() {
+    let shapes = [(64usize, 768usize, 768usize), (64, 3072, 768), (8, 256, 256)];
+    println!("# kernel microbench: p50 / GFLOPs");
+    println!(
+        "{:<26} {:>12} {:>9} {:>10}",
+        "kernel(batch,rows,cols)", "p50", "GFLOP/s", "vs naive"
+    );
+    for (batch, rows, cols) in shapes {
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; batch * rows];
+        let dense_flops = 2 * batch * rows * cols;
+
+        let naive = bench(|| dense_matmul(&x, &w, batch, rows, cols, &mut y), 1, 3, 0.3);
+        let blocked = bench(
+            || dense_matmul_blocked(&x, &w, batch, rows, cols, &mut y),
+            1,
+            3,
+            0.3,
+        );
+        println!(
+            "{:<26} {:>12} {:>9.2} {:>9.2}x",
+            format!("dense_naive({batch},{rows},{cols})"),
+            fmt_time(naive.p50),
+            dense_flops as f64 / naive.p50 / 1e9,
+            1.0
+        );
+        println!(
+            "{:<26} {:>12} {:>9.2} {:>9.2}x",
+            format!("dense_blocked({batch},{rows},{cols})"),
+            fmt_time(blocked.p50),
+            dense_flops as f64 / blocked.p50 / 1e9,
+            naive.p50 / blocked.p50
+        );
+
+        for density in [0.1f64, 0.05] {
+            let mask = make_mask(Structure::Diag, rows, cols, density, &mut rng);
+            let k = (0..mask.rows).map(|i| mask.row_nnz(i)).max().unwrap();
+            let rc = compress_rows(&w, &mask, k, None);
+            let flops = spmm_flops(batch, mask.nnz());
+            let g1 = bench(|| gather_matmul(&x, &rc, batch, &mut y), 1, 3, 0.3);
+            let g2 = bench(|| gather_matmul_batched(&x, &rc, batch, &mut y), 1, 3, 0.3);
+            println!(
+                "{:<26} {:>12} {:>9.2} {:>9.2}x",
+                format!("gather d={density}"),
+                fmt_time(g1.p50),
+                flops as f64 / g1.p50 / 1e9,
+                naive.p50 / g1.p50
+            );
+            println!(
+                "{:<26} {:>12} {:>9.2} {:>9.2}x",
+                format!("gather_batched d={density}"),
+                fmt_time(g2.p50),
+                flops as f64 / g2.p50 / 1e9,
+                naive.p50 / g2.p50
+            );
+
+            let bmask = make_mask(Structure::Block, rows, cols, density, &mut rng);
+            let bc = compress_blocks(&w, &bmask, 16);
+            let bflops = spmm_flops(batch, bmask.nnz());
+            let b = bench(|| block_matmul(&x, &bc, batch, &mut y), 1, 3, 0.3);
+            println!(
+                "{:<26} {:>12} {:>9.2} {:>9.2}x",
+                format!("block d={density}"),
+                fmt_time(b.p50),
+                bflops as f64 / b.p50 / 1e9,
+                naive.p50 / b.p50
+            );
+
+            let umask = make_mask(Structure::Unstructured, rows, cols, density, &mut rng);
+            let csr = csr_from_mask(&w, &umask);
+            let uflops = spmm_flops(batch, umask.nnz());
+            let c = bench(|| csr_matmul(&x, &csr, batch, &mut y), 1, 3, 0.3);
+            println!(
+                "{:<26} {:>12} {:>9.2} {:>9.2}x",
+                format!("csr d={density}"),
+                fmt_time(c.p50),
+                uflops as f64 / c.p50 / 1e9,
+                naive.p50 / c.p50
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,57 @@
+//! Table 1 + Apdx B/C.1: regenerate the expressivity lower-bound summary
+//! and the worked examples, and time the bound evaluation itself (the NLR
+//! calculator is also library API, so it gets a perf row).
+
+use padst::nlr::{
+    effective_dims_var, layer_factor_u128, log10_nlr_bound, nlr_bound_u128, table1_rows, Setting,
+};
+use padst::util::stats::{bench, fmt_time};
+
+fn main() {
+    // --- Table 1 at the paper's ViT-L/16 surrogate geometry -------------
+    let d0 = 1024;
+    let widths: Vec<usize> = (0..48).map(|i| if i % 2 == 0 { 4096 } else { 1024 }).collect();
+    println!("# Table 1: NLR lower bounds, ViT-L surrogate (d0=1024, 48 layers, density 5%)");
+    println!("{:<40} {:>14} {:>12}", "setting", "log10 NLR", "overhead");
+    for row in table1_rows(d0, &widths, 0.05) {
+        println!(
+            "{:<40} {:>14.1} {:>12}",
+            row.setting,
+            row.log10_nlr,
+            match row.depth_overhead {
+                Some(0) => "0".into(),
+                Some(l) => format!("{l} layers"),
+                None => "stalls".into(),
+            }
+        );
+    }
+
+    // --- Apdx B: alternating caps 51/205, catch-up at 4 blocks ----------
+    let r: Vec<usize> = (0..48).map(|i| if i % 2 == 0 { 51 } else { 205 }).collect();
+    let dims = effective_dims_var(d0, &widths, &r);
+    let catchup = dims.iter().position(|&k| k == d0).unwrap();
+    println!("\n# Apdx B: span budget saturates at layer {} (paper: 8 = 4 blocks)", catchup + 1);
+    assert_eq!(catchup + 1, 8);
+
+    // --- Apdx C.1: exact worked example ---------------------------------
+    println!("\n# Apdx C.1 exact (d0=4, widths 8x3):");
+    println!("  dense layer factor        = {} (paper: 163)", layer_factor_u128(8, 4));
+    println!("  block-2 layer factor      = {} (paper: 37)", layer_factor_u128(8, 2));
+    println!(
+        "  dense NLR >= {} | block-2 >= {} | block-2+perm >= {}",
+        nlr_bound_u128(Setting::Dense, 4, &[8, 8, 8]),
+        nlr_bound_u128(Setting::StructNoPerm { r: 2 }, 4, &[8, 8, 8]),
+        nlr_bound_u128(Setting::StructPerm { r: 2 }, 4, &[8, 8, 8]),
+    );
+
+    // --- timing ----------------------------------------------------------
+    let s = bench(
+        || {
+            let _ = log10_nlr_bound(Setting::StructPerm { r: 51 }, d0, &widths);
+        },
+        3,
+        20,
+        0.3,
+    );
+    println!("\n# bound evaluation: {} per 48-layer network", fmt_time(s.p50));
+}

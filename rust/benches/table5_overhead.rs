@@ -1,0 +1,45 @@
+//! Tbl. 2–5: memory (and state) overhead of permutation methods per model,
+//! computed from the exact buffer inventory a run holds (params + Adam +
+//! masks + permutation state), relative to the no-permutation baseline of
+//! the same structured method — mirroring the paper's "% overhead relative
+//! to DynaDiag/SRigL" columns.
+
+use padst::models::memory_footprint;
+use padst::runtime::manifest::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let path = std::path::Path::new("artifacts/manifest.json");
+    if !path.exists() {
+        eprintln!("run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = Manifest::load(path)?;
+
+    println!("# Tbl. 2-5 analogue: training-state memory by permutation method");
+    println!(
+        "{:<12} {:<16} {:>12} {:>10}",
+        "model", "method", "state (MB)", "overhead"
+    );
+    for (model, entry) in &manifest.models {
+        let base = memory_footprint(entry, "none", false) as f64;
+        for (label, mode, hardened) in [
+            ("baseline", "none", false),
+            ("+FixedRandPerm", "random", false),
+            ("+PA-DST", "learned", false),
+            ("+PA-DST(hard)", "learned", true),
+            ("+Kaleidoscope", "kaleidoscope", false),
+        ] {
+            let m = memory_footprint(entry, mode, hardened) as f64;
+            println!(
+                "{:<12} {:<16} {:>12.2} {:>9.2}%",
+                model,
+                label,
+                m / (1024.0 * 1024.0),
+                (m / base - 1.0) * 100.0
+            );
+        }
+        println!();
+    }
+    println!("# time columns of Tbl. 5 come from `cargo bench --bench fig3_training`");
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Checkpointing: the full [`TrainState`] (params, Adam moments, masks,
+//! permutation logits/index maps, hard flags, step counter) serialises to
+//! a single `.tnz` bundle — the same format the Python compile path uses
+//! for goldens — so runs can be stopped/resumed and trained models handed
+//! to the compressed-inference path.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::TrainState;
+use crate::tensor::{read_tnz, write_tnz, Tensor};
+
+/// Save the complete state.  Site order is recorded under a reserved key
+/// so `load` restores it without consulting the manifest.
+pub fn save(path: &Path, state: &TrainState) -> Result<()> {
+    let mut entries: Vec<(String, &Tensor)> = state
+        .vals
+        .iter()
+        .map(|(k, v)| (k.clone(), v))
+        .collect();
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    // Encode site order as an i32 tensor of indices into the sorted
+    // mask.* keys (names themselves are recoverable from the keys).
+    let order: Vec<i32> = state
+        .site_names
+        .iter()
+        .map(|n| {
+            let key = format!("mask.{n}");
+            entries
+                .iter()
+                .position(|(k, _)| *k == key)
+                .map(|p| p as i32)
+                .unwrap_or(-1)
+        })
+        .collect();
+    let order_t = Tensor::from_i32(&[order.len()], order);
+    let mut all = entries;
+    all.push(("__site_order__".to_string(), &order_t));
+    write_tnz(path, &all)
+}
+
+/// Load a checkpoint saved by [`save`].
+pub fn load(path: &Path) -> Result<TrainState> {
+    let mut bundle = read_tnz(path)?;
+    let order = bundle
+        .remove("__site_order__")
+        .ok_or_else(|| anyhow!("not a padst checkpoint (missing __site_order__)"))?;
+    let keys: Vec<String> = bundle.keys().cloned().collect();
+    let site_names: Vec<String> = order
+        .i32s()
+        .iter()
+        .map(|&p| {
+            let key = &keys[p as usize];
+            key.strip_prefix("mask.")
+                .ok_or_else(|| anyhow!("site-order entry {key:?} is not a mask"))
+                .map(str::to_string)
+        })
+        .collect::<Result<_>>()?;
+    let vals: std::collections::HashMap<_, _> = bundle.into_iter().collect();
+    let budgets = site_names
+        .iter()
+        .map(|n| {
+            vals[&format!("mask.{n}")]
+                .f32s()
+                .iter()
+                .filter(|&&b| b > 0.5)
+                .count()
+        })
+        .collect();
+    Ok(TrainState { vals, site_names, budgets })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn roundtrip() {
+        let mut vals = HashMap::new();
+        vals.insert("param.a.w".to_string(), Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]));
+        vals.insert("mask.a".to_string(), Tensor::from_f32(&[2, 2], vec![1., 0., 0., 1.]));
+        vals.insert("mask.b".to_string(), Tensor::from_f32(&[2, 2], vec![0., 1., 1., 0.]));
+        vals.insert("perm_idx.a".to_string(), Tensor::from_i32(&[2], vec![1, 0]));
+        vals.insert("step".to_string(), Tensor::scalar(42.0));
+        let state = TrainState {
+            vals,
+            site_names: vec!["b".to_string(), "a".to_string()], // non-sorted order
+            budgets: vec![2, 2],
+        };
+        let dir = std::env::temp_dir().join("padst_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("state.tnz");
+        save(&p, &state).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.site_names, state.site_names);
+        assert_eq!(back.vals["step"].f32s(), &[42.0]);
+        assert_eq!(back.vals["perm_idx.a"].i32s(), &[1, 0]);
+        assert_eq!(back.vals.len(), state.vals.len());
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let dir = std::env::temp_dir().join("padst_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.tnz");
+        let t = Tensor::scalar(1.0);
+        crate::tensor::write_tnz(&p, &[("a".to_string(), &t)]).unwrap();
+        assert!(load(&p).is_err());
+    }
+}

@@ -1,0 +1,548 @@
+//! L3 coordinator — the training orchestrator.
+//!
+//! This is the system half of the reproduction: the Rust process owns the
+//! run lifecycle end to end.  Per step it assembles the flat input list for
+//! the AOT `train_step` artifact from the named [`TrainState`], executes it
+//! on PJRT, writes the outputs back, and consults two controllers:
+//!
+//! * the **DST scheduler** ([`dst_sched`]) — fires the `dst_update`
+//!   artifact every `dst_every` steps with RigL's cosine-decayed update
+//!   fraction until `dst_end_frac` of the run (Evci et al. 2020);
+//! * the **permutation-hardening controller** ([`perm_ctrl`]) — tracks the
+//!   per-layer AutoShuffle penalty, and when a layer's normalised penalty
+//!   crosses the threshold delta it decodes the soft matrix to a hard
+//!   permutation (Hungarian), flips that layer's `hard_flags` entry, and
+//!   the layer switches from an N x N matmul to re-indexing *without
+//!   recompilation* (Apdx C.2).
+//!
+//! Python never runs here: the artifacts are self-contained HLO.
+
+pub mod checkpoint;
+pub mod perm_ctrl;
+pub mod sweep;
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::{TaskData, TextTask, VisionTask};
+use crate::models::init_params;
+use crate::perm;
+use crate::runtime::{Program, Runtime};
+use crate::sparsity::dst::cosine_update_frac;
+use crate::sparsity::patterns::{make_mask, validate_structure, Structure};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+use perm_ctrl::PermController;
+
+/// Grow-signal selector for the unstructured baselines (`dst_update`'s
+/// `grow_mode` input): RigL = |grad|, SET = random, MEST = mixed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GrowMode {
+    RigL = 0,
+    Set = 1,
+    Mest = 2,
+}
+
+/// Full configuration of one training run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub structure: Structure,
+    pub density: f64,
+    /// "none" | "random" | "learned" | "kaleidoscope"
+    pub perm_mode: String,
+    pub steps: usize,
+    pub lr: f32,
+    /// Penalty weight lambda (Eqn. 13).
+    pub lambda: f32,
+    /// DST cadence (Delta T); 0 disables mask updates.
+    pub dst_every: usize,
+    /// Stop DST after this fraction of the run (RigL's T_end).
+    pub dst_end_frac: f64,
+    /// Initial drop fraction for the cosine schedule.
+    pub dst_frac0: f64,
+    pub grow_mode: GrowMode,
+    /// Normalised-penalty threshold for hardening; <0 disables.
+    pub harden_threshold: f64,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "vit_tiny".into(),
+            structure: Structure::Diag,
+            density: 0.1,
+            perm_mode: "learned".into(),
+            steps: 200,
+            lr: 1e-3,
+            lambda: 5e-3,
+            dst_every: 25,
+            dst_end_frac: 0.75,
+            dst_frac0: 0.3,
+            grow_mode: GrowMode::RigL,
+            harden_threshold: 0.22,
+            eval_every: 50,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Metrics of one finished run (Fig. 2 points, Fig. 4–6 series).
+#[derive(Clone, Debug, Default)]
+pub struct RunResult {
+    pub losses: Vec<f32>,
+    pub eval_losses: Vec<(usize, f32)>,
+    pub eval_accs: Vec<(usize, f32)>,
+    /// Per-site penalty history, sampled every step: `[site][step]`.
+    pub penalties: Vec<Vec<f32>>,
+    /// Step at which each site hardened (None = never; Fig. 6).
+    pub harden_step: Vec<Option<usize>>,
+    /// delta(P) identity distance per site at the end (Fig. 4).
+    pub identity_distance: Vec<f64>,
+    pub site_names: Vec<String>,
+    pub train_seconds: f64,
+    pub final_eval_loss: f32,
+    pub final_eval_acc: f32,
+    /// exp(eval loss) — perplexity for LM runs.
+    pub final_ppl: f32,
+}
+
+/// Named buffer store for the run: every artifact input that persists
+/// across steps lives here, keyed by its manifest name.
+pub struct TrainState {
+    pub vals: HashMap<String, Tensor>,
+    pub site_names: Vec<String>,
+    /// Per-site nnz budget fixed at init; DST must preserve it exactly.
+    pub budgets: Vec<usize>,
+}
+
+enum Task {
+    Vision(VisionTask),
+    Text(TextTask),
+}
+
+impl Task {
+    fn next_train(&mut self, x: &mut Tensor, y: &mut Tensor) {
+        match self {
+            Task::Vision(t) => t.next_train(x, y),
+            Task::Text(t) => t.next_train(x, y),
+        }
+    }
+    fn eval_batch(&self, i: usize, x: &mut Tensor, y: &mut Tensor) {
+        match self {
+            Task::Vision(t) => t.eval_batch(i, x, y),
+            Task::Text(t) => t.eval_batch(i, x, y),
+        }
+    }
+    fn n_eval_batches(&self) -> usize {
+        match self {
+            Task::Vision(t) => t.n_eval_batches(),
+            Task::Text(t) => t.n_eval_batches(),
+        }
+    }
+}
+
+/// The trainer: one run = one `Trainer::run` call.  Compiled programs are
+/// cached in the shared [`Runtime`], so sweeps amortise compile time.
+pub struct Trainer<'rt> {
+    rt: &'rt mut Runtime,
+    cfg: RunConfig,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt mut Runtime, cfg: RunConfig) -> Trainer<'rt> {
+        Trainer { rt, cfg }
+    }
+
+    fn train_artifact(&self) -> String {
+        match self.cfg.perm_mode.as_str() {
+            "none" => format!("{}_train_noperm", self.cfg.model),
+            "kaleidoscope" => format!("{}_train_kperm", self.cfg.model),
+            _ => format!("{}_train", self.cfg.model),
+        }
+    }
+
+    fn dst_artifact(&self) -> Option<String> {
+        if self.cfg.dst_every == 0 || !self.cfg.structure.is_dynamic() {
+            return None;
+        }
+        Some(format!(
+            "{}_dst_{}",
+            self.cfg.model,
+            self.cfg.structure.name()
+        ))
+    }
+
+    /// Build the initial state: params (host init), Adam zeros, masks from
+    /// the structure family, permutation state per mode.
+    pub fn init_state(&mut self) -> Result<TrainState> {
+        let cfg = &self.cfg;
+        let entry = self
+            .rt
+            .manifest
+            .models
+            .get(&cfg.model)
+            .ok_or_else(|| anyhow!("model {:?} not in manifest", cfg.model))?
+            .clone();
+        let mut vals = HashMap::new();
+        let mut rng = Rng::new(cfg.seed);
+
+        for (name, t) in init_params(&entry, cfg.seed) {
+            vals.insert(format!("adam_m.{name}"), Tensor::zeros(&t.shape));
+            vals.insert(format!("adam_v.{name}"), Tensor::zeros(&t.shape));
+            vals.insert(format!("param.{name}"), t);
+        }
+        vals.insert("step".into(), Tensor::scalar(0.0));
+
+        let mut site_names = Vec::new();
+        let mut budgets = Vec::new();
+        for site in &entry.sites {
+            site_names.push(site.name.clone());
+            let mut mrng = rng.fork(site_names.len() as u64);
+            let mask = make_mask(cfg.structure, site.rows, site.cols, cfg.density, &mut mrng);
+            budgets.push(mask.nnz());
+            vals.insert(
+                format!("mask.{}", site.name),
+                Tensor::from_f32(&[site.rows, site.cols], mask.bits),
+            );
+        }
+
+        // Permutation state (present for every mode; the noperm train
+        // artifact simply doesn't consume it, but eval/dst do).
+        let n_sites = entry.sites.len();
+        let hard_init = if cfg.perm_mode == "learned" || cfg.perm_mode == "kaleidoscope" {
+            0.0
+        } else {
+            1.0
+        };
+        vals.insert(
+            "hard_flags".into(),
+            Tensor::from_f32(&[n_sites], vec![hard_init; n_sites]),
+        );
+        for (si, site) in entry.sites.iter().enumerate() {
+            let n = site.cols;
+            let logits = if cfg.perm_mode == "kaleidoscope" {
+                let levels = (usize::BITS - (n - 1).leading_zeros()) as usize;
+                let mut t = Tensor::zeros(&[levels, n]);
+                for v in t.f32s_mut() {
+                    *v = 0.01 * rng.normal();
+                }
+                t
+            } else {
+                let mut t = Tensor::zeros(&[n, n]);
+                let d = t.f32s_mut();
+                for (p, v) in d.iter_mut().enumerate() {
+                    *v = 0.01 * rng.normal()
+                        + if p % (n + 1) == 0 { 5.0 } else { 0.0 };
+                }
+                t
+            };
+            vals.insert(format!("perm_logits.{}", site.name), logits);
+            let idx: Vec<i32> = if cfg.perm_mode == "random" {
+                let mut prng = rng.fork(1000 + si as u64);
+                prng.permutation(n).iter().map(|&i| i as i32).collect()
+            } else {
+                (0..n as i32).collect()
+            };
+            vals.insert(
+                format!("perm_idx.{}", site.name),
+                Tensor::from_i32(&[n], idx),
+            );
+        }
+
+        Ok(TrainState { vals, site_names, budgets })
+    }
+
+    fn make_task(&self) -> Result<Task> {
+        let entry = &self.rt.manifest.models[&self.cfg.model];
+        Ok(match entry.kind.as_str() {
+            "gpt" => Task::Text(TextTask::new(entry.vocab, entry.seq_len, self.cfg.seed ^ 0xD)),
+            "vit" | "mixer" => {
+                Task::Vision(VisionTask::new(entry.image, entry.n_classes, self.cfg.seed ^ 0xD))
+            }
+            k => bail!("unknown model kind {k:?}"),
+        })
+    }
+
+    /// Assemble the flat input list for `prog` from state + per-call extras.
+    fn gather_inputs(
+        prog: &Program,
+        state: &TrainState,
+        extras: &HashMap<&str, Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        prog.spec
+            .inputs
+            .iter()
+            .map(|spec| {
+                if let Some(t) = extras.get(spec.name.as_str()) {
+                    Ok(t.clone())
+                } else if let Some(t) = state.vals.get(&spec.name) {
+                    Ok(t.clone())
+                } else {
+                    Err(anyhow!("no value for input {:?}", spec.name))
+                }
+            })
+            .collect()
+    }
+
+    /// Write a program's outputs back into the state (by matching names).
+    fn scatter_outputs(prog: &Program, state: &mut TrainState, outs: Vec<Tensor>) {
+        for (t, spec) in outs.into_iter().zip(&prog.spec.outputs) {
+            if state.vals.contains_key(&spec.name) {
+                state.vals.insert(spec.name.clone(), t);
+            }
+        }
+    }
+
+    /// Run the full training loop; returns metrics.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let cfg = self.cfg.clone();
+        let entry = self.rt.manifest.models[&cfg.model].clone();
+        let batch = self.rt.manifest.batch;
+        let train_prog = self.rt.program(&self.train_artifact())?;
+        let eval_prog = self.rt.program(&format!("{}_eval", cfg.model))?;
+        let dst_prog: Option<Rc<Program>> = match self.dst_artifact() {
+            Some(name) => Some(self.rt.program(&name)?),
+            None => None,
+        };
+
+        let mut state = self.init_state()?;
+        let mut task = self.make_task()?;
+        let mut ctrl = PermController::new(&state.site_names, cfg.harden_threshold);
+
+        let (mut bx, mut by) = make_batch_buffers(&entry, batch);
+        let mut result = RunResult {
+            penalties: vec![Vec::new(); state.site_names.len()],
+            harden_step: vec![None; state.site_names.len()],
+            site_names: state.site_names.clone(),
+            ..Default::default()
+        };
+
+        let learned = cfg.perm_mode == "learned" || cfg.perm_mode == "kaleidoscope";
+        let dst_until = (cfg.steps as f64 * cfg.dst_end_frac) as usize;
+        let t0 = std::time::Instant::now();
+
+        for step in 0..cfg.steps {
+            task.next_train(&mut bx, &mut by);
+            let mut extras: HashMap<&str, Tensor> = HashMap::new();
+            extras.insert("batch_x", bx.clone());
+            extras.insert("batch_y", by.clone());
+            extras.insert("lr", Tensor::scalar(cfg.lr));
+            extras.insert("lambda", Tensor::scalar(cfg.lambda));
+            let inputs = Self::gather_inputs(&train_prog, &state, &extras)?;
+            let outs = train_prog.run(&inputs)?;
+
+            let loss = outs[train_prog.output_index("loss")?].f32s()[0];
+            let pen_idx = train_prog.output_index("penalties").ok();
+            if let Some(pi) = pen_idx {
+                let pens = outs[pi].f32s().to_vec();
+                for (s, &p) in pens.iter().enumerate() {
+                    result.penalties[s].push(p);
+                }
+                // Hardening decisions (only when learning permutations).
+                if learned && cfg.harden_threshold >= 0.0 {
+                    let decisions = ctrl.observe(step, &pens, &entry);
+                    for site_i in decisions {
+                        self.harden_site(&mut state, &entry, site_i)?;
+                        result.harden_step[site_i] = Some(step);
+                        if cfg.verbose {
+                            eprintln!(
+                                "[harden] step {step}: {}",
+                                state.site_names[site_i]
+                            );
+                        }
+                    }
+                }
+            }
+            result.losses.push(loss);
+            Self::scatter_outputs(&train_prog, &mut state, outs);
+
+            // DST prune-and-grow on the RigL cadence.
+            if let Some(dp) = &dst_prog {
+                if cfg.dst_every > 0
+                    && step > 0
+                    && step % cfg.dst_every == 0
+                    && step <= dst_until
+                {
+                    let frac = cosine_update_frac(step, cfg.steps, cfg.dst_frac0);
+                    task.next_train(&mut bx, &mut by);
+                    let mut ex: HashMap<&str, Tensor> = HashMap::new();
+                    ex.insert("batch_x", bx.clone());
+                    ex.insert("batch_y", by.clone());
+                    ex.insert("frac", Tensor::scalar(frac as f32));
+                    ex.insert(
+                        "grow_mode",
+                        Tensor::scalar_i32(cfg.grow_mode as i32),
+                    );
+                    ex.insert("seed", Tensor::scalar_i32((cfg.seed as i32) ^ step as i32));
+                    let inputs = Self::gather_inputs(dp, &state, &ex)?;
+                    // Snapshot: the xla_extension 0.5.1 runtime is known to
+                    // miscompile parts of the prune/grow graph for some
+                    // layer geometries (EXPERIMENTS.md bug log).  If the
+                    // returned masks violate the structure family or the
+                    // nnz budget we roll the whole DST transaction back and
+                    // continue training on the previous masks.
+                    let snapshot: Vec<(String, Tensor)> = dp
+                        .spec
+                        .outputs
+                        .iter()
+                        .filter_map(|s| {
+                            state.vals.get(&s.name).map(|t| (s.name.clone(), t.clone()))
+                        })
+                        .collect();
+                    let outs = dp.run(&inputs)?;
+                    Self::scatter_outputs(dp, &mut state, outs);
+                    if let Err(e) = self.validate_masks(&state) {
+                        if cfg.verbose {
+                            eprintln!(
+                                "[dst] step {step}: rejected compiled update ({e}); rolled back"
+                            );
+                        }
+                        for (k, t) in snapshot {
+                            state.vals.insert(k, t);
+                        }
+                    }
+                }
+            }
+
+            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+                let (el, ea) = self.evaluate(&eval_prog, &state, &task, &entry, batch)?;
+                result.eval_losses.push((step + 1, el));
+                result.eval_accs.push((step + 1, ea));
+                if cfg.verbose {
+                    eprintln!(
+                        "[train] step {:>5} loss {:.4} eval_loss {:.4} eval_acc {:.3}",
+                        step + 1,
+                        loss,
+                        el,
+                        ea
+                    );
+                }
+            }
+        }
+        result.train_seconds = t0.elapsed().as_secs_f64();
+
+        let (el, ea) = self.evaluate(&eval_prog, &state, &task, &entry, batch)?;
+        result.final_eval_loss = el;
+        result.final_eval_acc = ea;
+        result.final_ppl = el.exp();
+
+        // Fig. 4: identity distance of the final permutations.  For sites
+        // still in the soft regime, decode the current soft matrix (what
+        // hardening *would* produce) so the metric reflects the learned
+        // shuffle rather than the untouched identity index map.
+        for (i, site) in state.site_names.iter().enumerate() {
+            let hardened = state.vals["hard_flags"].f32s()[i] > 0.5;
+            let idx: Vec<usize> = if hardened || cfg.perm_mode != "learned" {
+                state.vals[&format!("perm_idx.{site}")]
+                    .i32s()
+                    .iter()
+                    .map(|&x| x as usize)
+                    .collect()
+            } else {
+                let n = entry.sites[i].cols;
+                let logits = state.vals[&format!("perm_logits.{site}")].f32s();
+                perm::decode(&perm::soft_perm(logits, n, 12), n)
+            };
+            result.identity_distance.push(perm::identity_distance(&idx));
+        }
+        Ok(result)
+    }
+
+    /// Decode site `site_i`'s soft permutation to a hard index map and flip
+    /// its hard flag (the Apdx C.2 early-stop).
+    fn harden_site(
+        &self,
+        state: &mut TrainState,
+        entry: &crate::runtime::manifest::ModelEntry,
+        site_i: usize,
+    ) -> Result<()> {
+        let site = &entry.sites[site_i];
+        let name = &state.site_names[site_i];
+        let n = site.cols;
+        if self.cfg.perm_mode == "learned" {
+            let logits = state.vals[&format!("perm_logits.{name}")].f32s();
+            let m = perm::soft_perm(logits, n, 12);
+            let idx = perm::decode(&m, n);
+            state.vals.insert(
+                format!("perm_idx.{name}"),
+                Tensor::from_i32(&[n], idx.iter().map(|&i| i as i32).collect()),
+            );
+        }
+        // Kaleidoscope hardening: keep identity idx (the K-matrix is not a
+        // pure permutation; the comparator only measures overhead).
+        let flags = state.vals.get_mut("hard_flags").unwrap();
+        flags.f32s_mut()[site_i] = 1.0;
+        Ok(())
+    }
+
+    fn validate_masks(&self, state: &TrainState) -> Result<()> {
+        for (i, name) in state.site_names.iter().enumerate() {
+            let t = &state.vals[&format!("mask.{name}")];
+            let mask = crate::sparsity::patterns::Mask {
+                rows: t.shape[0],
+                cols: t.shape[1],
+                bits: t.f32s().to_vec(),
+            };
+            validate_structure(&mask, self.cfg.structure)
+                .map_err(|e| anyhow!("mask {name} left its family after DST: {e}"))?;
+            // DST must preserve the nnz budget fixed at init exactly.
+            let want = state.budgets[i];
+            if mask.nnz() != want {
+                bail!("mask {name} budget changed after DST: {} != {want}", mask.nnz());
+            }
+        }
+        Ok(())
+    }
+
+    fn evaluate(
+        &self,
+        eval_prog: &Program,
+        state: &TrainState,
+        task: &Task,
+        entry: &crate::runtime::manifest::ModelEntry,
+        batch: usize,
+    ) -> Result<(f32, f32)> {
+        let (mut bx, mut by) = make_batch_buffers(entry, batch);
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut total = 0usize;
+        for i in 0..task.n_eval_batches() {
+            task.eval_batch(i, &mut bx, &mut by);
+            let mut ex: HashMap<&str, Tensor> = HashMap::new();
+            ex.insert("batch_x", bx.clone());
+            ex.insert("batch_y", by.clone());
+            let inputs = Self::gather_inputs(eval_prog, state, &ex)?;
+            let outs = eval_prog.run(&inputs)?;
+            loss_sum += outs[eval_prog.output_index("loss")?].f32s()[0] as f64;
+            correct += outs[eval_prog.output_index("correct")?].f32s()[0] as f64;
+            total += by.numel();
+        }
+        let n = task.n_eval_batches() as f64;
+        Ok(((loss_sum / n) as f32, (correct / total as f64) as f32))
+    }
+}
+
+/// Allocate (batch_x, batch_y) tensors of the right shape/dtype for a model.
+pub fn make_batch_buffers(
+    entry: &crate::runtime::manifest::ModelEntry,
+    batch: usize,
+) -> (Tensor, Tensor) {
+    if entry.kind == "gpt" {
+        (
+            Tensor::zeros_i32(&[batch, entry.seq_len]),
+            Tensor::zeros_i32(&[batch, entry.seq_len]),
+        )
+    } else {
+        (
+            Tensor::zeros(&[batch, entry.image, entry.image, 3]),
+            Tensor::zeros_i32(&[batch]),
+        )
+    }
+}

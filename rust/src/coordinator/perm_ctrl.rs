@@ -1,0 +1,129 @@
+//! Permutation-hardening controller (Apdx C.2).
+//!
+//! The paper tracks each layer's soft-permutation penalty (Eqn. 14, Fig. 5)
+//! and stops learning that layer's permutation — switching to hard
+//! re-indexing — once the penalty crosses a threshold delta (Fig. 6 shows
+//! the per-layer crossing epochs).  We normalise the raw penalty by the
+//! permutation dimension N so a single delta works across layer widths
+//! (the raw penalty scales ~linearly in N for doubly-stochastic matrices),
+//! and debounce the decision over `patience` consecutive observations so a
+//! single noisy step cannot harden a layer prematurely.
+
+use crate::runtime::manifest::ModelEntry;
+
+pub struct PermController {
+    threshold: f64,
+    patience: usize,
+    below: Vec<usize>,
+    hardened: Vec<bool>,
+    n_sites: usize,
+}
+
+impl PermController {
+    pub fn new(site_names: &[String], threshold: f64) -> PermController {
+        PermController {
+            threshold,
+            patience: 3,
+            below: vec![0; site_names.len()],
+            hardened: vec![false; site_names.len()],
+            n_sites: site_names.len(),
+        }
+    }
+
+    /// Feed this step's raw per-site penalties; returns the sites to harden
+    /// *now*.  Hardening is monotone: a hardened site is never revisited.
+    pub fn observe(&mut self, _step: usize, penalties: &[f32], entry: &ModelEntry) -> Vec<usize> {
+        assert_eq!(penalties.len(), self.n_sites);
+        let mut fire = Vec::new();
+        for (i, &p) in penalties.iter().enumerate() {
+            if self.hardened[i] {
+                continue;
+            }
+            let n = entry.sites[i].cols as f64;
+            let norm = p as f64 / n;
+            if norm < self.threshold {
+                self.below[i] += 1;
+                if self.below[i] >= self.patience {
+                    self.hardened[i] = true;
+                    fire.push(i);
+                }
+            } else {
+                self.below[i] = 0;
+            }
+        }
+        fire
+    }
+
+    pub fn is_hardened(&self, i: usize) -> bool {
+        self.hardened[i]
+    }
+
+    pub fn n_hardened(&self) -> usize {
+        self.hardened.iter().filter(|&&h| h).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::SiteSpec;
+
+    fn entry(n_sites: usize) -> ModelEntry {
+        ModelEntry {
+            kind: "vit".into(),
+            d_model: 64,
+            n_layers: 1,
+            n_heads: 1,
+            d_ff: 64,
+            seq_len: 4,
+            vocab: 0,
+            n_classes: 2,
+            image: 8,
+            patch: 4,
+            params: vec![],
+            sites: (0..n_sites)
+                .map(|i| SiteSpec { name: format!("s{i}"), rows: 64, cols: 100 })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn hardens_after_patience() {
+        let e = entry(2);
+        let names = vec!["s0".to_string(), "s1".to_string()];
+        let mut c = PermController::new(&names, 0.22);
+        // site 0 penalty below threshold (0.1*100=10 raw), site 1 above.
+        for step in 0..2 {
+            assert!(c.observe(step, &[10.0, 80.0], &e).is_empty());
+        }
+        let fired = c.observe(2, &[10.0, 80.0], &e);
+        assert_eq!(fired, vec![0]);
+        assert!(c.is_hardened(0) && !c.is_hardened(1));
+        // Never fires twice.
+        assert!(c.observe(3, &[10.0, 80.0], &e).is_empty());
+        assert_eq!(c.n_hardened(), 1);
+    }
+
+    #[test]
+    fn noisy_spike_resets_debounce() {
+        let e = entry(1);
+        let names = vec!["s0".to_string()];
+        let mut c = PermController::new(&names, 0.22);
+        assert!(c.observe(0, &[10.0], &e).is_empty());
+        assert!(c.observe(1, &[10.0], &e).is_empty());
+        assert!(c.observe(2, &[90.0], &e).is_empty()); // spike resets
+        assert!(c.observe(3, &[10.0], &e).is_empty());
+        assert!(c.observe(4, &[10.0], &e).is_empty());
+        assert_eq!(c.observe(5, &[10.0], &e), vec![0]);
+    }
+
+    #[test]
+    fn negative_threshold_never_fires() {
+        let e = entry(1);
+        let names = vec!["s0".to_string()];
+        let mut c = PermController::new(&names, -1.0);
+        for step in 0..10 {
+            assert!(c.observe(step, &[0.0], &e).is_empty());
+        }
+    }
+}

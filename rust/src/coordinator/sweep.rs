@@ -1,0 +1,159 @@
+//! Sweep runner — regenerates the accuracy-vs-sparsity grids (Fig. 2,
+//! Tbl. 11/12) on the synthetic tasks, and the row-vs-col ablation
+//! (Tbl. 10 is exercised at the artifact level: the L2 graph supports
+//! both; the exported artifacts use column permutations, matching the
+//! paper's main results).
+//!
+//! A "method" is (structure, perm_mode, grow_mode) — e.g. RigL is
+//! (unstructured, none, RigL); DynaDiag+PA-DST is (diag, learned, RigL).
+//! The same compiled artifacts are reused across every cell of the grid,
+//! so one process sweeps the whole table paying each compile once.
+
+use anyhow::Result;
+
+use super::{GrowMode, RunConfig, RunResult, Trainer};
+use crate::runtime::Runtime;
+use crate::sparsity::patterns::Structure;
+
+/// One method row of Fig. 2 / Tbl. 11–12.
+#[derive(Clone, Debug)]
+pub struct Method {
+    pub name: &'static str,
+    pub structure: Structure,
+    pub perm_mode: &'static str,
+    pub grow_mode: GrowMode,
+}
+
+/// The paper's method zoo, mapped onto this testbed.
+pub const METHODS: &[Method] = &[
+    // Unstructured DST baselines (upper accuracy bound).
+    Method { name: "RigL", structure: Structure::Unstructured, perm_mode: "none", grow_mode: GrowMode::RigL },
+    Method { name: "SET", structure: Structure::Unstructured, perm_mode: "none", grow_mode: GrowMode::Set },
+    Method { name: "MEST", structure: Structure::Unstructured, perm_mode: "none", grow_mode: GrowMode::Mest },
+    // Structured DST without permutations.
+    Method { name: "DynaDiag", structure: Structure::Diag, perm_mode: "none", grow_mode: GrowMode::RigL },
+    Method { name: "SRigL", structure: Structure::NM, perm_mode: "none", grow_mode: GrowMode::RigL },
+    Method { name: "DSB", structure: Structure::Block, perm_mode: "none", grow_mode: GrowMode::RigL },
+    Method { name: "PixelatedBFly", structure: Structure::Butterfly, perm_mode: "none", grow_mode: GrowMode::RigL },
+    // + fixed random permutations (Tbl. 11 'Random' rows).
+    Method { name: "DynaDiag+Rand", structure: Structure::Diag, perm_mode: "random", grow_mode: GrowMode::RigL },
+    Method { name: "SRigL+Rand", structure: Structure::NM, perm_mode: "random", grow_mode: GrowMode::RigL },
+    Method { name: "DSB+Rand", structure: Structure::Block, perm_mode: "random", grow_mode: GrowMode::RigL },
+    // + learned permutations (PA-DST, the paper's contribution).
+    Method { name: "DynaDiag+PA", structure: Structure::Diag, perm_mode: "learned", grow_mode: GrowMode::RigL },
+    Method { name: "SRigL+PA", structure: Structure::NM, perm_mode: "learned", grow_mode: GrowMode::RigL },
+    Method { name: "DSB+PA", structure: Structure::Block, perm_mode: "learned", grow_mode: GrowMode::RigL },
+    Method { name: "PBFly+PA", structure: Structure::Butterfly, perm_mode: "learned", grow_mode: GrowMode::RigL },
+    // Dense reference.
+    Method { name: "Dense", structure: Structure::Dense, perm_mode: "none", grow_mode: GrowMode::RigL },
+];
+
+pub fn method_by_name(name: &str) -> Option<&'static Method> {
+    METHODS.iter().find(|m| m.name == name)
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub method: &'static str,
+    pub sparsity: f64,
+    pub result: RunResult,
+}
+
+/// Run `methods` x `sparsities` on `model`; returns all cells.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sweep(
+    rt: &mut Runtime,
+    model: &str,
+    methods: &[&'static Method],
+    sparsities: &[f64],
+    steps: usize,
+    seed: u64,
+    verbose: bool,
+) -> Result<Vec<SweepCell>> {
+    let mut cells = Vec::new();
+    for m in methods {
+        for &sp in sparsities {
+            let density = if m.structure == Structure::Dense { 1.0 } else { 1.0 - sp };
+            let cfg = RunConfig {
+                model: model.to_string(),
+                structure: m.structure,
+                density,
+                perm_mode: m.perm_mode.to_string(),
+                steps,
+                grow_mode: m.grow_mode,
+                seed,
+                verbose,
+                ..Default::default()
+            };
+            let mut tr = Trainer::new(rt, cfg);
+            let result = tr.run()?;
+            if verbose {
+                eprintln!(
+                    "[sweep] {:<14} s={:.0}% loss={:.4} acc={:.3} ppl={:.2} ({:.1}s)",
+                    m.name,
+                    sp * 100.0,
+                    result.final_eval_loss,
+                    result.final_eval_acc,
+                    result.final_ppl,
+                    result.train_seconds
+                );
+            }
+            cells.push(SweepCell { method: m.name, sparsity: sp, result });
+            if m.structure == Structure::Dense {
+                break; // dense has no sparsity axis
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Print the Fig. 2 / Tbl. 11-style grid: rows = methods, cols = sparsity.
+pub fn print_table(model: &str, kind: &str, cells: &[SweepCell], sparsities: &[f64]) {
+    let metric = if kind == "gpt" { "ppl" } else { "acc" };
+    println!("\n=== {model}: {metric} vs sparsity (paper Fig. 2 / Tbl. 11-12 analogue) ===");
+    print!("{:<16}", "method");
+    for &s in sparsities {
+        print!("{:>10}", format!("{:.0}%", s * 100.0));
+    }
+    println!();
+    let mut methods: Vec<&str> = Vec::new();
+    for c in cells {
+        if !methods.contains(&c.method) {
+            methods.push(c.method);
+        }
+    }
+    for m in methods {
+        print!("{m:<16}");
+        for &s in sparsities {
+            let cell = cells
+                .iter()
+                .find(|c| c.method == m && (c.sparsity - s).abs() < 1e-9);
+            match cell {
+                Some(c) => {
+                    let v = if kind == "gpt" { c.result.final_ppl } else { c.result.final_eval_acc };
+                    print!("{v:>10.3}");
+                }
+                None => print!("{:>10}", "-"),
+            }
+        }
+        println!();
+    }
+}
+
+/// CSV dump of all cells for downstream plotting.
+pub fn write_csv(path: &std::path::Path, cells: &[SweepCell]) -> Result<()> {
+    let mut s = String::from("method,sparsity,final_eval_loss,final_eval_acc,final_ppl,train_seconds\n");
+    for c in cells {
+        s.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            c.method,
+            c.sparsity,
+            c.result.final_eval_loss,
+            c.result.final_eval_acc,
+            c.result.final_ppl,
+            c.result.train_seconds
+        ));
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}

@@ -1,0 +1,314 @@
+//! Synthetic data pipeline — the stand-in for ImageNet-1K / WikiText-103
+//! (DESIGN.md §Hardware-Adaptation).
+//!
+//! Both tasks are engineered so that *expressivity in the paper's sense*
+//! (the ability of a layer stack to mix input coordinates across the
+//! structural support, Sec. 3) is what separates the methods:
+//!
+//! * **Shuffled-mixture vision task** ([`VisionTask`]): class prototypes
+//!   live in a *hidden rotated basis* — every pixel is a mixture of all
+//!   latent coordinates through a fixed random orthogonal-ish mixing.  A
+//!   diagonal/block layer without permutations can only combine nearby
+//!   coordinates and struggles; a learned permutation can re-route them.
+//! * **Markov LM task** ([`TextTask`]): an order-2 hidden-state Markov
+//!   chain over a byte vocabulary whose emission table is permuted by a
+//!   hidden shuffle, giving long-range coordinate structure the model must
+//!   unmix.
+//!
+//! Generators are deterministic in the seed, infinite, and allocation-free
+//! per batch (they fill caller-provided tensors).
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Sample noise relative to unit prototype separation (see VisionTask).
+/// Tuned so a dense tiny-ViT reaches high accuracy within a few hundred
+/// steps while 90-95 % structured masks are capacity-bound — the regime
+/// where the paper's Fig. 2 gaps live.
+const VISION_NOISE: f32 = 2.0;
+
+/// Common interface the coordinator's training loop consumes.
+pub trait TaskData {
+    /// Fill (batch_x, batch_y) for the next training batch.
+    fn next_train(&mut self, x: &mut Tensor, y: &mut Tensor);
+    /// Fill a deterministic eval batch `i` (fixed held-out stream).
+    fn eval_batch(&self, i: usize, x: &mut Tensor, y: &mut Tensor);
+    /// Number of distinct eval batches.
+    fn n_eval_batches(&self) -> usize;
+}
+
+// ---------------------------------------------------------------------------
+// Vision: shuffled-mixture classification
+// ---------------------------------------------------------------------------
+
+pub struct VisionTask {
+    pub image: usize,
+    pub n_classes: usize,
+    /// Hidden mixing matrix (dim x dim), fixed per task seed.
+    mixing: Vec<f32>,
+    /// Class prototypes in the latent basis (n_classes x dim).
+    protos: Vec<f32>,
+    dim: usize,
+    noise: f32,
+    rng: Rng,
+    eval_seed: u64,
+    n_eval: usize,
+}
+
+impl VisionTask {
+    pub fn new(image: usize, n_classes: usize, seed: u64) -> VisionTask {
+        let dim = image * image * 3;
+        let mut rng = Rng::new(seed ^ 0xDA7A);
+        // Dense random mixing: every pixel depends on every latent
+        // coordinate (this is what kills no-perm structured masks).
+        let scale = 1.0 / (dim as f32).sqrt();
+        let mixing: Vec<f32> = (0..dim * dim).map(|_| rng.normal() * scale).collect();
+        // Labels are nearest-prototype in the *latent* basis: unit-norm
+        // class prototypes plus isotropic noise, then mixed into pixel
+        // space.  Every pixel depends on every latent coordinate through
+        // the hidden mixing, so a structured layer that cannot re-route
+        // coordinates (no permutation) must burn depth/width to undo it —
+        // the expressivity bottleneck of Sec. 3 — while the task stays
+        // sample-efficient enough for a dense tiny model to master in a
+        // few hundred steps.
+        let protos: Vec<f32> = (0..n_classes * dim)
+            .map(|_| rng.normal() / (dim as f32).sqrt())
+            .collect();
+        VisionTask {
+            image,
+            n_classes,
+            mixing,
+            protos,
+            dim,
+            noise: VISION_NOISE / (dim as f32).sqrt(),
+            rng: Rng::new(seed),
+            eval_seed: seed ^ 0xE7A1,
+            n_eval: 16,
+        }
+    }
+
+    fn fill(&self, rng: &mut Rng, x: &mut Tensor, y: &mut Tensor) {
+        let batch = x.shape[0];
+        let dim = self.dim;
+        debug_assert_eq!(x.numel(), batch * dim);
+        let ys = y.i32s_mut();
+        let mut latent = vec![0.0f32; dim];
+        for b in 0..batch {
+            let c = rng.below(self.n_classes);
+            for (d, l) in latent.iter_mut().enumerate() {
+                *l = self.protos[c * dim + d] + self.noise * rng.normal();
+            }
+            ys[b] = c as i32;
+            let xb = &mut x.f32s_mut()[b * dim..(b + 1) * dim];
+            for i in 0..dim {
+                let mi = &self.mixing[i * dim..(i + 1) * dim];
+                let mut acc = 0.0f32;
+                for d in 0..dim {
+                    acc += mi[d] * latent[d];
+                }
+                xb[i] = acc;
+            }
+        }
+    }
+}
+
+impl TaskData for VisionTask {
+    fn next_train(&mut self, x: &mut Tensor, y: &mut Tensor) {
+        let mut rng = self.rng.fork(1);
+        self.fill(&mut rng, x, y);
+        self.rng.next_u64();
+    }
+
+    fn eval_batch(&self, i: usize, x: &mut Tensor, y: &mut Tensor) {
+        let mut rng = Rng::new(self.eval_seed.wrapping_add(i as u64));
+        self.fill(&mut rng, x, y);
+    }
+
+    fn n_eval_batches(&self) -> usize {
+        self.n_eval
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Text: hidden-state Markov LM
+// ---------------------------------------------------------------------------
+
+pub struct TextTask {
+    pub vocab: usize,
+    pub seq_len: usize,
+    n_states: usize,
+    /// Transition table (n_states x n_states) as cumulative distributions.
+    trans_cdf: Vec<f32>,
+    /// Emission: state -> token distribution CDF (n_states x vocab),
+    /// column-permuted by a hidden shuffle.
+    emit_cdf: Vec<f32>,
+    rng: Rng,
+    eval_seed: u64,
+    n_eval: usize,
+}
+
+impl TextTask {
+    pub fn new(vocab: usize, seq_len: usize, seed: u64) -> TextTask {
+        let n_states = 12;
+        let mut rng = Rng::new(seed ^ 0x7E57);
+        let mut sharpen = |v: &mut Vec<f32>, n: usize, width: usize| {
+            // Rows are sparse-ish (peaked on `width` entries) then CDF'd.
+            for r in 0..v.len() / n {
+                let row = &mut v[r * n..(r + 1) * n];
+                row.fill(0.05 / n as f32);
+                for _ in 0..width {
+                    row[rng.below(n)] += 1.0;
+                }
+                let s: f32 = row.iter().sum();
+                let mut acc = 0.0;
+                for e in row.iter_mut() {
+                    acc += *e / s;
+                    *e = acc;
+                }
+            }
+        };
+        let mut trans = vec![0.0f32; n_states * n_states];
+        sharpen(&mut trans, n_states, 3);
+        let mut emit = vec![0.0f32; n_states * vocab];
+        sharpen(&mut emit, vocab, 6);
+        TextTask {
+            vocab,
+            seq_len,
+            n_states,
+            trans_cdf: trans,
+            emit_cdf: emit,
+            rng: Rng::new(seed),
+            eval_seed: seed ^ 0x3333,
+            n_eval: 8,
+        }
+    }
+
+    fn sample_cdf(cdf: &[f32], r: f32) -> usize {
+        match cdf.binary_search_by(|p| p.partial_cmp(&r).unwrap()) {
+            Ok(i) | Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+
+    fn fill(&self, rng: &mut Rng, x: &mut Tensor, y: &mut Tensor) {
+        let batch = x.shape[0];
+        let t = self.seq_len;
+        let xs = x.i32s_mut();
+        let ys = y.i32s_mut();
+        for b in 0..batch {
+            let mut state = rng.below(self.n_states);
+            let mut prev_tok = 0usize;
+            for s in 0..=t {
+                let tok = Self::sample_cdf(
+                    &self.emit_cdf[state * self.vocab..(state + 1) * self.vocab],
+                    rng.f32(),
+                );
+                // Second-order flavour: the next state also depends on the
+                // emitted token parity, entangling token and state streams.
+                let ns = Self::sample_cdf(
+                    &self.trans_cdf[state * self.n_states..(state + 1) * self.n_states],
+                    rng.f32(),
+                );
+                state = (ns + (tok + prev_tok) % 2) % self.n_states;
+                prev_tok = tok;
+                if s < t {
+                    xs[b * t + s] = tok as i32;
+                }
+                if s > 0 {
+                    ys[b * t + s - 1] = tok as i32;
+                }
+            }
+        }
+    }
+}
+
+impl TaskData for TextTask {
+    fn next_train(&mut self, x: &mut Tensor, y: &mut Tensor) {
+        let mut rng = self.rng.fork(1);
+        self.fill(&mut rng, x, y);
+        self.rng.next_u64();
+    }
+
+    fn eval_batch(&self, i: usize, x: &mut Tensor, y: &mut Tensor) {
+        let mut rng = Rng::new(self.eval_seed.wrapping_add(i as u64));
+        self.fill(&mut rng, x, y);
+    }
+
+    fn n_eval_batches(&self) -> usize {
+        self.n_eval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vision_batches_deterministic_eval() {
+        let task = VisionTask::new(8, 4, 7);
+        let mut x1 = Tensor::zeros(&[2, 8, 8, 3]);
+        let mut y1 = Tensor::zeros_i32(&[2]);
+        let mut x2 = Tensor::zeros(&[2, 8, 8, 3]);
+        let mut y2 = Tensor::zeros_i32(&[2]);
+        task.eval_batch(0, &mut x1, &mut y1);
+        task.eval_batch(0, &mut x2, &mut y2);
+        assert_eq!(x1.f32s(), x2.f32s());
+        assert_eq!(y1.i32s(), y2.i32s());
+    }
+
+    #[test]
+    fn vision_train_advances() {
+        let mut task = VisionTask::new(8, 4, 7);
+        let mut x1 = Tensor::zeros(&[2, 8, 8, 3]);
+        let mut y1 = Tensor::zeros_i32(&[2]);
+        task.next_train(&mut x1, &mut y1);
+        let first = x1.f32s().to_vec();
+        task.next_train(&mut x1, &mut y1);
+        assert_ne!(first, x1.f32s());
+    }
+
+    #[test]
+    fn vision_labels_in_range() {
+        let mut task = VisionTask::new(8, 4, 9);
+        let mut x = Tensor::zeros(&[16, 8, 8, 3]);
+        let mut y = Tensor::zeros_i32(&[16]);
+        task.next_train(&mut x, &mut y);
+        assert!(y.i32s().iter().all(|&c| (0..4).contains(&c)));
+        // Multiple classes appear in a 16-sample batch with 4 classes, w.h.p.
+        let distinct: std::collections::HashSet<_> = y.i32s().iter().collect();
+        assert!(distinct.len() >= 2);
+    }
+
+    #[test]
+    fn text_tokens_in_range_and_shifted() {
+        let mut task = TextTask::new(64, 16, 3);
+        let mut x = Tensor::zeros_i32(&[4, 16]);
+        let mut y = Tensor::zeros_i32(&[4, 16]);
+        task.next_train(&mut x, &mut y);
+        assert!(x.i32s().iter().all(|&t| (0..64).contains(&t)));
+        assert!(y.i32s().iter().all(|&t| (0..64).contains(&t)));
+        // y is x shifted by one within each row (teacher forcing).
+        for b in 0..4 {
+            for s in 0..15 {
+                assert_eq!(y.i32s()[b * 16 + s], x.i32s()[b * 16 + s + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn text_not_uniform() {
+        // The Markov structure must make token frequencies non-uniform —
+        // otherwise there is nothing for the LM to learn.
+        let mut task = TextTask::new(64, 32, 5);
+        let mut x = Tensor::zeros_i32(&[32, 32]);
+        let mut y = Tensor::zeros_i32(&[32, 32]);
+        task.next_train(&mut x, &mut y);
+        let mut counts = vec![0usize; 64];
+        for &t in x.i32s() {
+            counts[t as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let nonzero = counts.iter().filter(|&&c| c > 0).count();
+        assert!(max > 2 * x.numel() / 64, "distribution too flat");
+        assert!(nonzero > 8, "distribution too peaked");
+    }
+}

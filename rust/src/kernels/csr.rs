@@ -1,0 +1,84 @@
+//! CSR sparse GEMM — the *unstructured* comparator for Fig. 3.
+//!
+//! CSR is what cuSparse executes for RigL/SET-style free masks in the
+//! paper's timing section.  Row lengths are ragged, the column stream has
+//! no structure to exploit, and each nonzero pays a full indirection —
+//! which is exactly why unstructured DST wins accuracy but loses the
+//! speedup race, on GPU and CPU alike.
+
+use crate::sparsity::patterns::Mask;
+
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<i32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+pub fn csr_from_mask(w: &[f32], mask: &Mask) -> Csr {
+    let (rows, cols) = (mask.rows, mask.cols);
+    assert_eq!(w.len(), rows * cols);
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    let mut col_idx = Vec::new();
+    let mut vals = Vec::new();
+    row_ptr.push(0);
+    for i in 0..rows {
+        for j in 0..cols {
+            if mask.get(i, j) {
+                col_idx.push(j as i32);
+                vals.push(w[i * cols + j]);
+            }
+        }
+        row_ptr.push(col_idx.len());
+    }
+    Csr { rows, cols, row_ptr, col_idx, vals }
+}
+
+/// y[b, i] = sum_{nz in row i} vals[nz] * x[b, col_idx[nz]].
+pub fn csr_matmul(x: &[f32], csr: &Csr, batch: usize, y: &mut [f32]) {
+    let (rows, cols) = (csr.rows, csr.cols);
+    debug_assert_eq!(x.len(), batch * cols);
+    debug_assert_eq!(y.len(), batch * rows);
+    for b in 0..batch {
+        let xb = &x[b * cols..(b + 1) * cols];
+        let yb = &mut y[b * rows..(b + 1) * rows];
+        for i in 0..rows {
+            let (s, e) = (csr.row_ptr[i], csr.row_ptr[i + 1]);
+            let mut acc = 0.0f32;
+            for nz in s..e {
+                acc += csr.vals[nz] * xb[csr.col_idx[nz] as usize];
+            }
+            yb[i] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::patterns::make_unstructured_mask;
+    use crate::util::Rng;
+
+    #[test]
+    fn csr_structure() {
+        let mut rng = Rng::new(50);
+        let mask = make_unstructured_mask(16, 32, 0.2, &mut rng);
+        let w: Vec<f32> = (0..512).map(|_| rng.normal()).collect();
+        let csr = csr_from_mask(&w, &mask);
+        assert_eq!(csr.nnz(), mask.nnz());
+        assert_eq!(csr.row_ptr.len(), 17);
+        // Column indices strictly increasing within each row.
+        for i in 0..16 {
+            let s = &csr.col_idx[csr.row_ptr[i]..csr.row_ptr[i + 1]];
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

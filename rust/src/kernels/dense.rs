@@ -1,0 +1,157 @@
+//! Dense GEMM baselines + the explicit permutation-shuffle pass.
+//!
+//! `dense_matmul` is the naive triple loop (kept as a correctness oracle);
+//! `dense_matmul_blocked` is the production baseline: 8x-unrolled dot with
+//! register-blocked accumulation over 4 output rows, which is what the
+//! sparse kernels must beat for the Fig. 3 speedup curves to be honest.
+
+/// y[b, i] = sum_j w[i, j] * x[b, j]  — naive, correctness oracle.
+pub fn dense_matmul(
+    x: &[f32],
+    w: &[f32],
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), batch * cols);
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(y.len(), batch * rows);
+    for b in 0..batch {
+        let xb = &x[b * cols..(b + 1) * cols];
+        for i in 0..rows {
+            let wi = &w[i * cols..(i + 1) * cols];
+            let mut acc = 0.0f32;
+            for j in 0..cols {
+                acc += wi[j] * xb[j];
+            }
+            y[b * rows + i] = acc;
+        }
+    }
+}
+
+/// Production dense baseline: 4-row register blocking + 8-wide unrolled
+/// inner loop (auto-vectorises to SSE/AVX on x86).
+pub fn dense_matmul_blocked(
+    x: &[f32],
+    w: &[f32],
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), batch * cols);
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(y.len(), batch * rows);
+    const RB: usize = 4;
+    for b in 0..batch {
+        let xb = &x[b * cols..(b + 1) * cols];
+        let mut i = 0;
+        while i + RB <= rows {
+            let w0 = &w[i * cols..(i + 1) * cols];
+            let w1 = &w[(i + 1) * cols..(i + 2) * cols];
+            let w2 = &w[(i + 2) * cols..(i + 3) * cols];
+            let w3 = &w[(i + 3) * cols..(i + 4) * cols];
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for j in 0..cols {
+                let xv = xb[j];
+                a0 += w0[j] * xv;
+                a1 += w1[j] * xv;
+                a2 += w2[j] * xv;
+                a3 += w3[j] * xv;
+            }
+            y[b * rows + i] = a0;
+            y[b * rows + i + 1] = a1;
+            y[b * rows + i + 2] = a2;
+            y[b * rows + i + 3] = a3;
+            i += RB;
+        }
+        while i < rows {
+            let wi = &w[i * cols..(i + 1) * cols];
+            let mut acc = 0.0f32;
+            for j in 0..cols {
+                acc += wi[j] * xb[j];
+            }
+            y[b * rows + i] = acc;
+            i += 1;
+        }
+    }
+}
+
+/// Explicit permutation pass: out[b, i] = x[b, perm[i]] — the extra
+/// memory sweep a permutation *multiply* costs (the strawman of Sec. 4.3;
+/// a permutation matmul degenerates to exactly this gather once you skip
+/// the zero multiplies, so this is its best case).
+pub fn shuffle_rows(x: &[f32], perm: &[i32], batch: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(perm.len(), cols);
+    debug_assert_eq!(x.len(), batch * cols);
+    debug_assert_eq!(out.len(), batch * cols);
+    for b in 0..batch {
+        let xb = &x[b * cols..(b + 1) * cols];
+        let ob = &mut out[b * cols..(b + 1) * cols];
+        for i in 0..cols {
+            ob[i] = xb[perm[i] as usize];
+        }
+    }
+}
+
+/// Dense permutation-matrix multiply (the truly naive strawman: N^2 MACs
+/// per batch row).  Only used by the overhead benches for scale.
+pub fn perm_matmul(x: &[f32], p: &[f32], batch: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(p.len(), n * n);
+    for b in 0..batch {
+        let xb = &x[b * n..(b + 1) * n];
+        let ob = &mut out[b * n..(b + 1) * n];
+        for i in 0..n {
+            let pi = &p[i * n..(i + 1) * n];
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += pi[j] * xb[j];
+            }
+            ob[i] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn blocked_matches_naive() {
+        let mut rng = Rng::new(30);
+        for (b, r, c) in [(1, 7, 13), (3, 64, 96), (2, 33, 65)] {
+            let x: Vec<f32> = (0..b * c).map(|_| rng.normal()).collect();
+            let w: Vec<f32> = (0..r * c).map(|_| rng.normal()).collect();
+            let mut y1 = vec![0.0; b * r];
+            let mut y2 = vec![0.0; b * r];
+            dense_matmul(&x, &w, b, r, c, &mut y1);
+            dense_matmul_blocked(&x, &w, b, r, c, &mut y2);
+            let d = y1
+                .iter()
+                .zip(&y2)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d < 1e-4, "({b},{r},{c}): {d}");
+        }
+    }
+
+    #[test]
+    fn shuffle_equals_perm_matmul() {
+        let mut rng = Rng::new(31);
+        let n = 24;
+        let batch = 2;
+        let x: Vec<f32> = (0..batch * n).map(|_| rng.normal()).collect();
+        let idx: Vec<i32> = rng.permutation(n).iter().map(|&i| i as i32).collect();
+        let mut pmat = vec![0.0f32; n * n];
+        for (i, &j) in idx.iter().enumerate() {
+            pmat[i * n + j as usize] = 1.0;
+        }
+        let mut a = vec![0.0; batch * n];
+        let mut b = vec![0.0; batch * n];
+        shuffle_rows(&x, &idx, batch, n, &mut a);
+        perm_matmul(&x, &pmat, batch, n, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,129 @@
+//! Native CPU sparse GEMM kernels — the Fig. 3 substrate.
+//!
+//! The paper's inference-speedup claims (up to 2.9x at 90 % with DynaDiag,
+//! 3.16–8.69 % permutation re-indexing overhead) are measured with vendor
+//! kernels on A100s.  This testbed reproduces the *structural* argument on
+//! CPU: structured layouts stream memory contiguously so time scales with
+//! density, unstructured CSR pays per-element indirection, a permutation
+//! *matmul* pays an extra full pass over the activations, and permutation
+//! *re-indexing* (Eqn. 16/18) folds into the sparse GEMM's index stream at
+//! near-zero cost.
+//!
+//! All kernels compute `y = x @ W^T + b` for row-major
+//! `x: (batch, cols)`, `W: (rows, cols)`, matching the model's linears.
+//! Each has a `*_permuted` variant taking the input permutation either as
+//! a pre-composed index stream (re-indexing) or as an explicit shuffle
+//! pass (the strawman the paper compares against).
+
+pub mod csr;
+pub mod dense;
+pub mod gather;
+
+pub use csr::{csr_from_mask, csr_matmul, Csr};
+pub use dense::{dense_matmul, dense_matmul_blocked, shuffle_rows};
+pub use gather::{block_matmul, gather_matmul, gather_matmul_batched};
+
+/// FLOPs of one sparse GEMM at the given geometry (2 * batch * nnz).
+pub fn spmm_flops(batch: usize, nnz: usize) -> usize {
+    2 * batch * nnz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::compress::{compress_blocks, compress_rows};
+    use crate::sparsity::patterns::{make_block_mask, make_diag_mask, Mask};
+    use crate::util::Rng;
+
+    /// Reference masked-dense oracle.
+    fn oracle(x: &[f32], w: &[f32], mask: &Mask, batch: usize) -> Vec<f32> {
+        let (rows, cols) = (mask.rows, mask.cols);
+        let mut y = vec![0.0f32; batch * rows];
+        for b in 0..batch {
+            for i in 0..rows {
+                let mut acc = 0.0;
+                for j in 0..cols {
+                    if mask.get(i, j) {
+                        acc += w[i * cols + j] * x[b * cols + j];
+                    }
+                }
+                y[b * rows + i] = acc;
+            }
+        }
+        y
+    }
+
+    fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn all_kernels_match_oracle() {
+        let mut rng = Rng::new(20);
+        let (batch, rows, cols) = (4, 64, 96);
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+
+        // diag via gather kernel
+        let dm = make_diag_mask(rows, cols, 9, &mut rng);
+        let want = oracle(&x, &w, &dm, batch);
+        let rc = compress_rows(&w, &dm, 9, None);
+        let mut y = vec![0.0f32; batch * rows];
+        gather_matmul(&x, &rc, batch, &mut y);
+        assert!(max_diff(&y, &want) < 1e-4, "gather kernel mismatch");
+
+        // csr
+        let wm: Vec<f32> = (0..rows * cols)
+            .map(|p| if dm.bits[p] > 0.5 { w[p] } else { 0.0 })
+            .collect();
+        let csr = csr_from_mask(&wm, &dm);
+        let mut y2 = vec![0.0f32; batch * rows];
+        csr_matmul(&x, &csr, batch, &mut y2);
+        assert!(max_diff(&y2, &want) < 1e-4, "csr kernel mismatch");
+
+        // block
+        let bm = make_block_mask(rows, 96, 0.25, 16, &mut rng);
+        let want_b = oracle(&x, &w, &bm, batch);
+        let bc = compress_blocks(&w, &bm, 16);
+        let mut y3 = vec![0.0f32; batch * rows];
+        block_matmul(&x, &bc, batch, &mut y3);
+        assert!(max_diff(&y3, &want_b) < 1e-4, "block kernel mismatch");
+
+        // dense with a ones mask
+        let ones = Mask::ones(rows, cols);
+        let want_d = oracle(&x, &w, &ones, batch);
+        let mut y4 = vec![0.0f32; batch * rows];
+        dense_matmul(&x, &w, batch, rows, cols, &mut y4);
+        assert!(max_diff(&y4, &want_d) < 1e-3, "dense kernel mismatch");
+        let mut y5 = vec![0.0f32; batch * rows];
+        dense_matmul_blocked(&x, &w, batch, rows, cols, &mut y5);
+        assert!(max_diff(&y5, &want_d) < 1e-3, "blocked dense mismatch");
+    }
+
+    #[test]
+    fn reindex_equals_shuffle_then_matmul() {
+        // The paper's equivalence: W (P x) computed by (a) explicit shuffle
+        // pass then sparse GEMM, vs (b) pre-composing P into the index
+        // stream.  Both must agree bit-for-bit reorder-tolerantly.
+        let mut rng = Rng::new(21);
+        let (batch, rows, cols) = (3, 32, 48);
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let mask = make_diag_mask(rows, cols, 5, &mut rng);
+        let perm: Vec<i32> = rng.permutation(cols).iter().map(|&p| p as i32).collect();
+
+        // (a) shuffle x then plain compressed matmul
+        let mut xp = vec![0.0f32; batch * cols];
+        shuffle_rows(&x, &perm, batch, cols, &mut xp);
+        let rc_plain = compress_rows(&w, &mask, 5, None);
+        let mut ya = vec![0.0f32; batch * rows];
+        gather_matmul(&xp, &rc_plain, batch, &mut ya);
+
+        // (b) fold perm into idx
+        let rc_fused = compress_rows(&w, &mask, 5, Some(&perm));
+        let mut yb = vec![0.0f32; batch * rows];
+        gather_matmul(&x, &rc_fused, batch, &mut yb);
+
+        assert!(max_diff(&ya, &yb) < 1e-5);
+    }
+}

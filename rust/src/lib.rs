@@ -1,0 +1,23 @@
+//! # PA-DST — Permutation-Augmented Dynamic Structured Sparse Training
+//!
+//! Rust + JAX + Pallas reproduction of *"Efficient Dynamic Structured
+//! Sparse Training with Learned Shuffles"* (Tyagi et al., 2025).
+//!
+//! Three layers, Python never on the hot path:
+//! * **L1** — Pallas kernels (permuted structured-sparse matmuls), authored
+//!   and verified in `python/compile/kernels/`.
+//! * **L2** — JAX model fwd/bwd + DST updates, AOT-lowered to HLO text.
+//! * **L3** — this crate: the training coordinator (DST schedule, per-layer
+//!   permutation hardening, metrics), the PJRT runtime that executes the
+//!   artifacts, and the native CPU sparse kernels used to reproduce the
+//!   paper's inference-speedup results.
+pub mod tensor;
+pub mod util;
+pub mod runtime;
+pub mod sparsity;
+pub mod perm;
+pub mod nlr;
+pub mod kernels;
+pub mod data;
+pub mod models;
+pub mod coordinator;

@@ -1,0 +1,231 @@
+//! `padst` CLI — the leader entrypoint of the L3 coordinator.
+//!
+//! Subcommands:
+//!   train   — one PA-DST training run (model/structure/density/perm flags)
+//!   sweep   — method x sparsity grid (Fig. 2 / Tbl. 11-12 analogue)
+//!   nlr     — expressivity bound tables (Table 1, Apdx B/C.1)
+//!   list    — artifacts available in the manifest
+//!
+//! Benches (Fig. 3, Tbl. 5) live under `cargo bench`; analysis examples
+//! (Fig. 4-6) under `cargo run --example`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use padst::coordinator::{sweep, GrowMode, RunConfig, Trainer};
+use padst::nlr;
+use padst::runtime::Runtime;
+use padst::sparsity::patterns::Structure;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument {a:?}");
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get("artifacts", "artifacts"))
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "padst — Permutation-Augmented Dynamic Structured Sparse Training
+
+USAGE: padst <train|sweep|nlr|list> [--flag value ...]
+
+train:
+  --model vit_tiny|gpt_tiny|mixer_tiny|gpt_small   (default vit_tiny)
+  --structure diag|block|nm|butterfly|unstructured|dense (default diag)
+  --sparsity 0.9          target sparsity (density = 1 - sparsity)
+  --perm none|random|learned|kaleidoscope          (default learned)
+  --steps 200  --lr 1e-3  --lambda 5e-3  --seed 0
+  --dst-every 25  --harden-threshold 0.22
+  --grow rigl|set|mest    unstructured grow rule
+  --artifacts DIR         artifact directory (default artifacts)
+
+sweep:
+  --model ...  --steps N  --sparsities 0.6,0.9  --methods RigL,DynaDiag+PA
+  --csv PATH              dump results as CSV
+
+nlr:
+  --d0 1024 --widths 4096,1024x24 --density 0.05   Table-1 style bounds
+"
+    );
+    std::process::exit(2);
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut rt = Runtime::open(&artifacts_dir(args))?;
+    let sparsity = args.get_f64("sparsity", 0.9)?;
+    let structure = Structure::parse(&args.get("structure", "diag"))
+        .ok_or_else(|| anyhow!("bad --structure"))?;
+    let grow_mode = match args.get("grow", "rigl").as_str() {
+        "rigl" => GrowMode::RigL,
+        "set" => GrowMode::Set,
+        "mest" => GrowMode::Mest,
+        g => bail!("bad --grow {g:?}"),
+    };
+    let cfg = RunConfig {
+        model: args.get("model", "vit_tiny"),
+        structure,
+        density: if structure == Structure::Dense { 1.0 } else { 1.0 - sparsity },
+        perm_mode: args.get("perm", "learned"),
+        steps: args.get_usize("steps", 200)?,
+        lr: args.get_f64("lr", 1e-3)? as f32,
+        lambda: args.get_f64("lambda", 5e-3)? as f32,
+        dst_every: args.get_usize("dst-every", 25)?,
+        eval_every: args.get_usize("eval-every", 50)?,
+        harden_threshold: args.get_f64("harden-threshold", 0.22)?,
+        grow_mode,
+        seed: args.get_usize("seed", 0)? as u64,
+        verbose: true,
+        ..Default::default()
+    };
+    eprintln!("[padst] {cfg:?}");
+    let mut tr = Trainer::new(&mut rt, cfg);
+    let res = tr.run()?;
+    println!(
+        "final: eval_loss={:.4} eval_acc={:.3} ppl={:.2} train={:.1}s hardened={}/{}",
+        res.final_eval_loss,
+        res.final_eval_acc,
+        res.final_ppl,
+        res.train_seconds,
+        res.harden_step.iter().filter(|h| h.is_some()).count(),
+        res.harden_step.len()
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut rt = Runtime::open(&artifacts_dir(args))?;
+    let model = args.get("model", "vit_tiny");
+    let steps = args.get_usize("steps", 150)?;
+    let sparsities: Vec<f64> = args
+        .get("sparsities", "0.6,0.9")
+        .split(',')
+        .map(|s| s.parse().unwrap())
+        .collect();
+    let method_names = args.get("methods", "RigL,DynaDiag,DynaDiag+PA,SRigL,SRigL+PA");
+    let methods: Vec<_> = method_names
+        .split(',')
+        .map(|n| sweep::method_by_name(n).ok_or_else(|| anyhow!("unknown method {n:?}")))
+        .collect::<Result<_>>()?;
+    let cells = sweep::run_sweep(
+        &mut rt,
+        &model,
+        &methods,
+        &sparsities,
+        steps,
+        args.get_usize("seed", 0)? as u64,
+        true,
+    )?;
+    let kind = rt.manifest.models[&model].kind.clone();
+    sweep::print_table(&model, &kind, &cells, &sparsities);
+    if let Some(csv) = args.flags.get("csv") {
+        sweep::write_csv(std::path::Path::new(csv), &cells)?;
+        eprintln!("[padst] wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_nlr(args: &Args) -> Result<()> {
+    let d0 = args.get_usize("d0", 1024)?;
+    let density = args.get_f64("density", 0.05)?;
+    // widths syntax: "4096,1024x24" = (4096, 1024) repeated 24 times.
+    let spec = args.get("widths", "4096,1024x24");
+    let (pat, reps) = match spec.split_once('x') {
+        Some((p, r)) => (p, r.parse::<usize>()?),
+        None => (spec.as_str(), 1),
+    };
+    let base: Vec<usize> = pat.split(',').map(|s| s.parse().unwrap()).collect();
+    let widths: Vec<usize> = (0..reps).flat_map(|_| base.iter().copied()).collect();
+    println!("NLR lower bounds (log10), d0={d0}, density={density}, L={}:", widths.len());
+    println!("{:<36} {:>14} {:>12}", "setting", "log10 NLR", "overhead");
+    for row in nlr::table1_rows(d0, &widths, density) {
+        println!(
+            "{:<36} {:>14.1} {:>12}",
+            row.setting,
+            row.log10_nlr,
+            match row.depth_overhead {
+                Some(0) => "0".to_string(),
+                Some(l) => format!("{l} layers"),
+                None => "stalls".to_string(),
+            }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&artifacts_dir(args))?;
+    println!("batch={}", rt.manifest.batch);
+    for (name, e) in &rt.manifest.programs {
+        println!(
+            "{:<28} {:<10} model={:<10} structure={:<12} perm={:<12} in/out={}/{}",
+            name,
+            e.program,
+            e.model,
+            e.structure,
+            e.perm_mode,
+            e.spec.inputs.len(),
+            e.spec.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let args = Args::parse(&argv[1..])?;
+    match argv[0].as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "nlr" => cmd_nlr(&args),
+        "list" => cmd_list(&args),
+        _ => usage(),
+    }
+}

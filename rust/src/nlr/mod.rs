@@ -1,0 +1,325 @@
+//! Combinatorial expressivity via linear regions (Sec. 3 + Apdx B/C).
+//!
+//! Implements the paper's master lower bound (Eqn. 1):
+//! `NLR(f) >= prod_l sum_{j=0}^{k_l} C(n_l, j)`
+//!
+//! with the span-budget recursions of Table 1 determining the effective
+//! dimension k_l per setting, in both exact (u128, small widths) and
+//! log10 (f64, paper-scale widths) arithmetic.  Reproduces the worked
+//! examples of Apdx B (ViT-L surrogate) and Apdx C.1 (163^3 vs 37^3 vs
+//! 37*163^2) in unit tests and powers `examples/expressivity.rs` +
+//! `benches/table1_nlr.rs`.
+
+/// The settings of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Setting {
+    Dense,
+    /// Unstructured DST (free masks) — same recursion as dense.
+    Unstructured,
+    /// N:M with free per-group supports — dense-like.
+    NMFree,
+    /// N:M tied template: k_l = min(n_l, alpha * u_{l-1}), span stalls.
+    NMTied { alpha: f64 },
+    /// Diagonal-K / Banded-b / Block-B without permutation: stalls at r.
+    StructNoPerm { r: usize },
+    /// Structured + per-layer permutation: span grows by r per layer.
+    StructPerm { r: usize },
+}
+
+impl Setting {
+    pub fn name(&self) -> String {
+        match self {
+            Setting::Dense => "Dense".into(),
+            Setting::Unstructured => "Unstructured DST (free masks)".into(),
+            Setting::NMFree => "N:M (free supports)".into(),
+            Setting::NMTied { alpha } => format!("N:M (tied, alpha={alpha})"),
+            Setting::StructNoPerm { r } => format!("Struct r={r} (no perm)"),
+            Setting::StructPerm { r } => format!("Struct r={r} + permutation"),
+        }
+    }
+
+    /// Depth overhead before dense-like factors resume (Table 1 last col).
+    /// `None` = stalls forever; `Some(0)` = no overhead.
+    pub fn depth_overhead(&self, d0: usize) -> Option<usize> {
+        match self {
+            Setting::Dense | Setting::Unstructured | Setting::NMFree => Some(0),
+            Setting::NMTied { .. } | Setting::StructNoPerm { .. } => None,
+            Setting::StructPerm { r } => Some(d0.div_ceil(*r)),
+        }
+    }
+}
+
+/// Effective dimensions k_l for a network with input dim `d0` and layer
+/// widths `widths`, under `setting` (Eqn. 2–3 / Table 1 recursions).
+///
+/// For [`Setting::StructPerm`], `r` may be width-dependent in the paper's
+/// worked example; use [`effective_dims_var`] for per-layer caps.
+pub fn effective_dims(setting: Setting, d0: usize, widths: &[usize]) -> Vec<usize> {
+    match setting {
+        Setting::Dense | Setting::Unstructured | Setting::NMFree => {
+            widths.iter().map(|&n| n.min(d0)).collect()
+        }
+        Setting::NMTied { alpha } => {
+            // u stalls at u_0 = d0 but k is alpha-capped each layer.
+            widths
+                .iter()
+                .map(|&n| n.min((alpha * d0 as f64).floor() as usize))
+                .collect()
+        }
+        Setting::StructNoPerm { r } => {
+            let s = r.min(d0);
+            widths.iter().map(|&n| n.min(s)).collect()
+        }
+        Setting::StructPerm { r } => {
+            effective_dims_var(d0, widths, &vec![r; widths.len()])
+        }
+    }
+}
+
+/// Structured + permutation with a per-layer structural cap r_l (e.g. the
+/// alternating 51/205 caps of the ViT-L surrogate, Apdx B):
+/// u_l = min(d0, u_{l-1} + r_l), k_l = min(n_l, u_l).
+pub fn effective_dims_var(d0: usize, widths: &[usize], r: &[usize]) -> Vec<usize> {
+    assert_eq!(widths.len(), r.len());
+    let mut u = 0usize;
+    widths
+        .iter()
+        .zip(r)
+        .map(|(&n, &rl)| {
+            u = d0.min(u + rl);
+            n.min(u)
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Arithmetic: exact (u128) and log-space (f64)
+// ---------------------------------------------------------------------------
+
+/// Exact binomial coefficient; panics on overflow (use for small widths).
+pub fn binom_u128(n: usize, k: usize) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut r: u128 = 1;
+    for i in 0..k {
+        r = r.checked_mul((n - i) as u128).expect("binom overflow");
+        r /= (i + 1) as u128;
+    }
+    r
+}
+
+/// Per-layer factor sum_{j=0}^{k} C(n, j), exact.
+pub fn layer_factor_u128(n: usize, k: usize) -> u128 {
+    (0..=k.min(n)).map(|j| binom_u128(n, j)).sum()
+}
+
+/// Exact NLR lower bound (Eqn. 1); panics on overflow.
+pub fn nlr_bound_u128(setting: Setting, d0: usize, widths: &[usize]) -> u128 {
+    effective_dims(setting, d0, widths)
+        .iter()
+        .zip(widths)
+        .map(|(&k, &n)| layer_factor_u128(n, k))
+        .product()
+}
+
+/// ln Gamma via Lanczos (g=7, n=9), |err| < 1e-13 for x > 0.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_1,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        return std::f64::consts::PI.ln()
+            - (std::f64::consts::PI * x).sin().ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = G[0];
+    let t = x + 7.5;
+    for (i, &g) in G.iter().enumerate().skip(1) {
+        a += g / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// log10 of C(n, k).
+pub fn log10_binom(n: usize, k: usize) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    (ln_gamma(n as f64 + 1.0) - ln_gamma(k as f64 + 1.0) - ln_gamma((n - k) as f64 + 1.0))
+        / std::f64::consts::LN_10
+}
+
+/// log10 of sum_{j=0}^{k} C(n, j) via log-sum-exp.
+pub fn log10_layer_factor(n: usize, k: usize) -> f64 {
+    let terms: Vec<f64> = (0..=k.min(n)).map(|j| log10_binom(n, j)).collect();
+    let mx = terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    mx + terms
+        .iter()
+        .map(|t| 10f64.powf(t - mx))
+        .sum::<f64>()
+        .log10()
+}
+
+/// log10 of the NLR lower bound with a width-varying structural cap.
+pub fn log10_nlr_bound_var(d0: usize, widths: &[usize], r: &[usize]) -> f64 {
+    effective_dims_var(d0, widths, r)
+        .iter()
+        .zip(widths)
+        .map(|(&k, &n)| log10_layer_factor(n, k))
+        .sum()
+}
+
+/// log10 of the NLR lower bound (Eqn. 1) for a uniform setting.
+pub fn log10_nlr_bound(setting: Setting, d0: usize, widths: &[usize]) -> f64 {
+    effective_dims(setting, d0, widths)
+        .iter()
+        .zip(widths)
+        .map(|(&k, &n)| log10_layer_factor(n, k))
+        .sum()
+}
+
+/// One row of the Table-1 style report produced by the bench/example.
+#[derive(Clone, Debug)]
+pub struct BoundRow {
+    pub setting: String,
+    pub ks: Vec<usize>,
+    pub log10_nlr: f64,
+    pub depth_overhead: Option<usize>,
+}
+
+pub fn table1_rows(d0: usize, widths: &[usize], density: f64) -> Vec<BoundRow> {
+    let r = ((density * d0 as f64).round() as usize).max(1);
+    let settings = [
+        Setting::Dense,
+        Setting::Unstructured,
+        Setting::NMFree,
+        Setting::NMTied { alpha: density },
+        Setting::StructNoPerm { r },
+        Setting::StructPerm { r },
+    ];
+    settings
+        .iter()
+        .map(|&s| BoundRow {
+            setting: s.name(),
+            ks: effective_dims(s, d0, widths),
+            log10_nlr: log10_nlr_bound(s, d0, widths),
+            depth_overhead: s.depth_overhead(d0),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binom_small() {
+        assert_eq!(binom_u128(8, 0), 1);
+        assert_eq!(binom_u128(8, 2), 28);
+        assert_eq!(binom_u128(8, 3), 56);
+        assert_eq!(binom_u128(8, 4), 70);
+    }
+
+    /// Apdx C.1 worked example, exactly.
+    #[test]
+    fn apdx_c1_worked_example() {
+        let d0 = 4;
+        let widths = [8, 8, 8];
+        // Dense: per-layer factor 163, NLR >= 163^3.
+        assert_eq!(layer_factor_u128(8, 4), 163);
+        assert_eq!(
+            nlr_bound_u128(Setting::Dense, d0, &widths),
+            163u128.pow(3)
+        );
+        // Unstructured matches dense.
+        assert_eq!(
+            nlr_bound_u128(Setting::Unstructured, d0, &widths),
+            163u128.pow(3)
+        );
+        // Block-2 without permutation: factor 37 per layer.
+        assert_eq!(layer_factor_u128(8, 2), 37);
+        assert_eq!(
+            nlr_bound_u128(Setting::StructNoPerm { r: 2 }, d0, &widths),
+            37u128.pow(3)
+        );
+        // Block-2 with permutation: u = 2, 4, 4 -> 37 * 163 * 163.
+        assert_eq!(
+            nlr_bound_u128(Setting::StructPerm { r: 2 }, d0, &widths),
+            37 * 163 * 163
+        );
+    }
+
+    /// Apdx B: ViT-L surrogate catch-up point = 4 blocks (8 layers).
+    #[test]
+    fn apdx_b_vitl_surrogate() {
+        let d0 = 1024;
+        // 24 blocks of (1024 -> 4096 -> 1024): widths alternate 4096, 1024.
+        let widths: Vec<usize> = (0..48)
+            .map(|i| if i % 2 == 0 { 4096 } else { 1024 })
+            .collect();
+        let r: Vec<usize> = (0..48).map(|i| if i % 2 == 0 { 51 } else { 205 }).collect();
+        let dims = effective_dims_var(d0, &widths, &r);
+        // Per-block gain r_pair = 51 + 205 = 256 => u_{2t} = min(1024, 256 t);
+        // saturation after t = 4 blocks = 8 layers.
+        assert_eq!(dims[0], 51);
+        assert_eq!(dims[1], 256);
+        assert_eq!(dims[7], 1024, "u must saturate at layer 8 (4 blocks)");
+        assert!(dims[6] < 1024);
+        // Without mixing the cap stays at 51 forever.
+        let no_perm = effective_dims(Setting::StructNoPerm { r: 51 }, d0, &widths);
+        assert!(no_perm.iter().all(|&k| k == 51));
+    }
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        for n in 1..20u64 {
+            let f: f64 = (1..=n).map(|i| i as f64).product::<f64>().ln();
+            assert!((ln_gamma(n as f64 + 1.0) - f).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn log_space_matches_exact() {
+        for (n, k) in [(8, 4), (16, 7), (32, 10), (64, 3)] {
+            let exact = layer_factor_u128(n, k) as f64;
+            let got = 10f64.powf(log10_layer_factor(n, k));
+            assert!(
+                (got / exact - 1.0).abs() < 1e-9,
+                "n={n} k={k}: {got} vs {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn perm_bound_dominates_noperm_at_depth() {
+        // The paper's central ordering: dense >= struct+perm >> struct.
+        let d0 = 256;
+        let widths = vec![512; 12];
+        let r = 16;
+        let dense = log10_nlr_bound(Setting::Dense, d0, &widths);
+        let perm = log10_nlr_bound(Setting::StructPerm { r }, d0, &widths);
+        let noperm = log10_nlr_bound(Setting::StructNoPerm { r }, d0, &widths);
+        assert!(dense >= perm && perm > noperm + 50.0,
+            "dense={dense:.1} perm={perm:.1} noperm={noperm:.1}");
+    }
+
+    #[test]
+    fn overheads_match_table1() {
+        assert_eq!(Setting::Dense.depth_overhead(1024), Some(0));
+        assert_eq!(Setting::StructPerm { r: 51 }.depth_overhead(1024), Some(21));
+        assert_eq!(Setting::StructPerm { r: 256 }.depth_overhead(1024), Some(4));
+        assert_eq!(Setting::StructNoPerm { r: 51 }.depth_overhead(1024), None);
+    }
+}

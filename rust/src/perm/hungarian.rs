@@ -1,0 +1,162 @@
+//! Hungarian (Kuhn–Munkres) algorithm, O(n^3), maximum-weight perfect
+//! matching on a dense square profit matrix.  This is the production hard
+//! decode for soft permutations at hardening time (Apdx C.2): the learned
+//! doubly-stochastic M is snapped to the permutation vertex maximising
+//! sum_i M[i, idx[i]].
+//!
+//! Implementation: the classic shortest-augmenting-path formulation with
+//! potentials over the *cost* matrix (we negate profits), which is the
+//! standard numerically-robust variant.
+
+/// Maximum-weight assignment.  `m` is row-major n x n; returns `idx` with
+/// row i assigned to column idx[i].
+pub fn hungarian_max(m: &[f64], n: usize) -> Vec<usize> {
+    assert_eq!(m.len(), n * n);
+    if n == 0 {
+        return vec![];
+    }
+    // Convert to minimisation: cost = max - profit (keeps costs >= 0).
+    let maxv = m.iter().cloned().fold(f64::MIN, f64::max);
+    let cost = |i: usize, j: usize| maxv - m[i * n + j];
+
+    // Potentials and matching, 1-indexed internally (0 is a sentinel).
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; n + 1];
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to column j
+    let mut way = vec![0usize; n + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![f64::INFINITY; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = f64::INFINITY;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost(i0 - 1, j - 1) - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut idx = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] != 0 {
+            idx[p[j] - 1] = j - 1;
+        }
+    }
+    idx
+}
+
+/// Brute-force maximum assignment for testing (n <= 8).
+#[cfg(test)]
+pub fn brute_force_max(m: &[f64], n: usize) -> (f64, Vec<usize>) {
+    fn perms(n: usize) -> Vec<Vec<usize>> {
+        if n == 1 {
+            return vec![vec![0]];
+        }
+        let mut out = Vec::new();
+        for p in perms(n - 1) {
+            for pos in 0..n {
+                let mut q: Vec<usize> = p.iter().map(|&x| x).collect();
+                q.insert(pos, n - 1);
+                out.push(q);
+            }
+        }
+        out
+    }
+    let mut best = (f64::MIN, vec![]);
+    for p in perms(n) {
+        let s: f64 = (0..n).map(|i| m[i * n + p[i]]).sum();
+        if s > best.0 {
+            best = (s, p);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Rng::new(10);
+        for n in 2..=7 {
+            for _ in 0..20 {
+                let m: Vec<f64> = (0..n * n).map(|_| rng.f32() as f64).collect();
+                let idx = hungarian_max(&m, n);
+                let got: f64 = (0..n).map(|i| m[i * n + idx[i]]).sum();
+                let (want, _) = brute_force_max(&m, n);
+                assert!(
+                    (got - want).abs() < 1e-9,
+                    "n={n}: hungarian {got} != brute {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn output_is_permutation() {
+        let mut rng = Rng::new(11);
+        let n = 64;
+        let m: Vec<f64> = (0..n * n).map(|_| rng.f32() as f64).collect();
+        let idx = hungarian_max(&m, n);
+        let mut seen = vec![false; n];
+        for &j in &idx {
+            assert!(!seen[j], "column {j} assigned twice");
+            seen[j] = true;
+        }
+    }
+
+    #[test]
+    fn identity_profit_gives_identity() {
+        let n = 32;
+        let mut m = vec![0.0f64; n * n];
+        for i in 0..n {
+            m[i * n + i] = 1.0;
+        }
+        assert_eq!(hungarian_max(&m, n), (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_negative_profits() {
+        let m = vec![-5.0, -1.0, -2.0, -4.0];
+        let idx = hungarian_max(&m, 2);
+        // Best: (0,1) + (1,0) = -1 + -2 = -3 vs (0,0)+(1,1) = -9.
+        assert_eq!(idx, vec![1, 0]);
+    }
+}

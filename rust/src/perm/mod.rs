@@ -1,0 +1,197 @@
+//! Permutation substrate (Rust mirror of `python/compile/perm.py` plus the
+//! production decode path): Sinkhorn projection, the AutoShuffle l1-l2
+//! penalty (Eqn. 14), Hungarian assignment for hard decode, the
+//! identity-distance metric of Sec. 6.3, and index-map algebra for
+//! re-indexed inference.
+
+pub mod hungarian;
+
+pub use hungarian::hungarian_max;
+
+/// Sinkhorn projection of a positive matrix onto (near-)doubly-stochastic.
+pub fn sinkhorn(m: &mut [f64], n: usize, iters: usize) {
+    const EPS: f64 = 1e-6;
+    for v in m.iter_mut() {
+        *v += EPS;
+    }
+    for _ in 0..iters {
+        for i in 0..n {
+            let s: f64 = m[i * n..(i + 1) * n].iter().sum();
+            for j in 0..n {
+                m[i * n + j] /= s;
+            }
+        }
+        for j in 0..n {
+            let mut s = 0.0;
+            for i in 0..n {
+                s += m[i * n + j];
+            }
+            for i in 0..n {
+                m[i * n + j] /= s;
+            }
+        }
+    }
+}
+
+/// Softplus, matching `jax.nn.softplus`.
+pub fn softplus(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+/// The soft permutation M = sinkhorn(exp(logits - rowmax)) (Sec. 4.2) —
+/// the Gumbel-Sinkhorn positive map (see python/compile/perm.py for why
+/// exp rather than softplus: exp can concentrate a row at any width).
+pub fn soft_perm(logits: &[f32], n: usize, iters: usize) -> Vec<f64> {
+    let mut m = vec![0.0f64; n * n];
+    for i in 0..n {
+        let row = &logits[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::MIN, f32::max) as f64;
+        for j in 0..n {
+            m[i * n + j] = ((row[j] as f64) - mx).exp();
+        }
+    }
+    sinkhorn(&mut m, n, iters);
+    m
+}
+
+/// Eqn. 14: P(M) = sum_i (||M_i:||_1 - ||M_i:||_2) + sum_j (cols).
+/// Zero iff M is a permutation (for doubly-stochastic M).
+pub fn autoshuffle_penalty(m: &[f64], n: usize) -> f64 {
+    let mut p = 0.0;
+    for i in 0..n {
+        let row = &m[i * n..(i + 1) * n];
+        let l1: f64 = row.iter().map(|x| x.abs()).sum();
+        let l2: f64 = row.iter().map(|x| x * x).sum::<f64>().sqrt();
+        p += l1 - l2;
+    }
+    for j in 0..n {
+        let mut l1 = 0.0;
+        let mut l2 = 0.0;
+        for i in 0..n {
+            let v = m[i * n + j];
+            l1 += v.abs();
+            l2 += v * v;
+        }
+        p += l1 - l2.sqrt();
+    }
+    p
+}
+
+/// Sec. 6.3: delta(P) = 1 - ||P - I||_F / sqrt(2N) in [0, 1];
+/// 1 = identity, 0 = full derangement.
+pub fn identity_distance(perm_idx: &[usize]) -> f64 {
+    let n = perm_idx.len();
+    // ||P - I||_F^2 = 2 * (# rows where idx[i] != i).
+    let moved = perm_idx.iter().enumerate().filter(|(i, &p)| *i != p).count();
+    1.0 - ((2.0 * moved as f64).sqrt() / (2.0 * n as f64).sqrt())
+}
+
+/// Hard decode: maximum-weight assignment over the soft matrix, i.e. the
+/// permutation vertex of the Birkhoff polytope nearest in the linear sense.
+/// Returns idx with (P x)_i = x[idx[i]].
+pub fn decode(m: &[f64], n: usize) -> Vec<usize> {
+    hungarian_max(m, n)
+}
+
+/// Inverse index map: inv[idx[i]] = i.
+pub fn invert(idx: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; idx.len()];
+    for (i, &p) in idx.iter().enumerate() {
+        inv[p] = i;
+    }
+    inv
+}
+
+/// Compose two index maps: (P_a ∘ P_b) x = P_a (P_b x); out[i] = b[a[i]].
+pub fn compose(a: &[usize], b: &[usize]) -> Vec<usize> {
+    a.iter().map(|&i| b[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn sinkhorn_doubly_stochastic() {
+        let mut rng = Rng::new(1);
+        let n = 16;
+        let mut m: Vec<f64> = (0..n * n).map(|_| rng.f32() as f64 + 0.1).collect();
+        sinkhorn(&mut m, n, 20);
+        for i in 0..n {
+            let rs: f64 = m[i * n..(i + 1) * n].iter().sum();
+            assert!((rs - 1.0).abs() < 1e-6, "row {i} sums to {rs}");
+        }
+        for j in 0..n {
+            let cs: f64 = (0..n).map(|i| m[i * n + j]).sum();
+            assert!((cs - 1.0).abs() < 1e-3, "col {j} sums to {cs}");
+        }
+    }
+
+    #[test]
+    fn penalty_zero_iff_permutation() {
+        let n = 8;
+        let mut rng = Rng::new(2);
+        let p = rng.permutation(n);
+        let mut m = vec![0.0f64; n * n];
+        for (i, &j) in p.iter().enumerate() {
+            m[i * n + j] = 1.0;
+        }
+        assert!(autoshuffle_penalty(&m, n) < 1e-12);
+        // Uniform doubly-stochastic matrix has maximal penalty 2n(sqrt(n)-1)/sqrt(n)... just > 0.
+        let u = vec![1.0 / n as f64; n * n];
+        assert!(autoshuffle_penalty(&u, n) > 1.0);
+    }
+
+    #[test]
+    fn identity_distance_endpoints() {
+        let id: Vec<usize> = (0..16).collect();
+        assert!((identity_distance(&id) - 1.0).abs() < 1e-12);
+        let rot: Vec<usize> = (0..16).map(|i| (i + 1) % 16).collect(); // derangement
+        assert!(identity_distance(&rot).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_recovers_planted_permutation() {
+        let n = 12;
+        let mut rng = Rng::new(3);
+        let p = rng.permutation(n);
+        // Soft matrix: 0.9 at the planted positions + noise elsewhere.
+        let mut m = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                m[i * n + j] = 0.05 * rng.f32() as f64;
+            }
+            m[i * n + p[i]] = 0.9;
+        }
+        assert_eq!(decode(&m, n), p);
+    }
+
+    #[test]
+    fn soft_perm_near_identity_logits() {
+        // Strong identity-biased logits should decode to the identity.
+        let n = 8;
+        let mut logits = vec![0.0f32; n * n];
+        for i in 0..n {
+            logits[i * n + i] = 8.0;
+        }
+        let m = soft_perm(&logits, n, 10);
+        assert_eq!(decode(&m, n), (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn compose_and_invert() {
+        let mut rng = Rng::new(4);
+        let a = rng.permutation(10);
+        let inv = invert(&a);
+        let id = compose(&a, &inv);
+        // (P_a then P_a^-1) — composing a with inv: out[i] = inv[a[i]]... ==
+        // i only if a[inv[x]] = x; check identity.
+        assert_eq!(compose(&inv, &a), (0..10).collect::<Vec<_>>());
+        let _ = id;
+    }
+}

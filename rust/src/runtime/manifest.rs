@@ -1,0 +1,184 @@
+//! `artifacts/manifest.json` schema — the contract between the Python
+//! compile path and the Rust coordinator.  Program specs give the exact
+//! flat ordering of inputs/outputs; model entries give parameter layouts
+//! and sparse-site geometry.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramEntry {
+    pub file: String,
+    pub model: String,
+    pub program: String,
+    pub structure: String,
+    pub density: f64,
+    pub perm_mode: String,
+    pub batch: usize,
+    pub golden: bool,
+    pub spec: ProgramSpec,
+}
+
+#[derive(Clone, Debug)]
+pub struct SiteSpec {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub kind: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_classes: usize,
+    pub image: usize,
+    pub patch: usize,
+    pub params: Vec<(String, Vec<usize>)>,
+    pub sites: Vec<SiteSpec>,
+}
+
+impl ModelEntry {
+    pub fn site(&self, name: &str) -> Option<&SiteSpec> {
+        self.sites.iter().find(|s| s.name == name)
+    }
+
+    /// Total parameter count (dense storage).
+    pub fn n_params(&self) -> usize {
+        self.params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>().max(1))
+            .sum()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub programs: BTreeMap<String, ProgramEntry>,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("spec list not an array"))?
+        .iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e.at(&["name"])?.as_str().unwrap().to_string(),
+                shape: e
+                    .at(&["shape"])?
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|x| x.as_usize().unwrap())
+                    .collect(),
+                dtype: DType::parse(e.at(&["dtype"])?.as_str().unwrap())?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        let j = Json::parse(&text)?;
+        let batch = j.at(&["batch"])?.as_usize().unwrap();
+
+        let mut programs = BTreeMap::new();
+        for (name, p) in j.at(&["programs"])?.as_obj().unwrap() {
+            programs.insert(
+                name.clone(),
+                ProgramEntry {
+                    file: p.at(&["file"])?.as_str().unwrap().to_string(),
+                    model: p.at(&["model"])?.as_str().unwrap().to_string(),
+                    program: p.at(&["program"])?.as_str().unwrap().to_string(),
+                    structure: p.at(&["structure"])?.as_str().unwrap().to_string(),
+                    density: p.at(&["density"])?.as_f64().unwrap(),
+                    perm_mode: p.at(&["perm_mode"])?.as_str().unwrap().to_string(),
+                    batch: p.at(&["batch"])?.as_usize().unwrap(),
+                    golden: matches!(p.get("golden"), Some(Json::Bool(true))),
+                    spec: ProgramSpec {
+                        inputs: tensor_specs(p.at(&["spec", "inputs"])?)?,
+                        outputs: tensor_specs(p.at(&["spec", "outputs"])?)?,
+                    },
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.at(&["models"])?.as_obj().unwrap() {
+            let geti = |k: &str| -> usize {
+                m.get(k).and_then(|v| v.as_usize()).unwrap_or(0)
+            };
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    kind: m.at(&["kind"])?.as_str().unwrap().to_string(),
+                    d_model: geti("d_model"),
+                    n_layers: geti("n_layers"),
+                    n_heads: geti("n_heads"),
+                    d_ff: geti("d_ff"),
+                    seq_len: geti("seq_len"),
+                    vocab: geti("vocab"),
+                    n_classes: geti("n_classes"),
+                    image: geti("image"),
+                    patch: geti("patch"),
+                    params: m
+                        .at(&["params"])?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|e| {
+                            (
+                                e.at(&["name"]).unwrap().as_str().unwrap().to_string(),
+                                e.at(&["shape"])
+                                    .unwrap()
+                                    .as_arr()
+                                    .unwrap()
+                                    .iter()
+                                    .map(|x| x.as_usize().unwrap())
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                    sites: m
+                        .at(&["sites"])?
+                        .as_arr()
+                        .unwrap()
+                        .iter()
+                        .map(|e| SiteSpec {
+                            name: e.at(&["name"]).unwrap().as_str().unwrap().to_string(),
+                            rows: e.at(&["rows"]).unwrap().as_usize().unwrap(),
+                            cols: e.at(&["cols"]).unwrap().as_usize().unwrap(),
+                        })
+                        .collect(),
+                },
+            );
+        }
+        Ok(Manifest { batch, programs, models })
+    }
+}

@@ -1,0 +1,170 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client.  This is the only module that
+//! touches the `xla` crate; everything above it works in host [`Tensor`]s.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — the
+//! image's xla_extension 0.5.1 rejects jax>=0.5 serialized protos with
+//! 64-bit instruction ids, while the text parser reassigns ids cleanly.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{DType, Data, Tensor};
+use manifest::{Manifest, ProgramSpec};
+
+/// A compiled AOT program plus its I/O spec.
+pub struct Program {
+    pub name: String,
+    pub spec: ProgramSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: one PJRT CPU client + an executable cache keyed by artifact
+/// name.  Compilation happens lazily on first use and is cached for the
+/// lifetime of the process (compiling a train_step takes ~100 ms–1 s).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, std::rc::Rc<Program>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (usually `artifacts/`) and its manifest.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn program(&mut self, name: &str) -> Result<std::rc::Rc<Program>> {
+        if let Some(p) = self.cache.get(name) {
+            return Ok(p.clone());
+        }
+        let entry = self
+            .manifest
+            .programs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let p = std::rc::Rc::new(Program { name: name.to_string(), spec: entry.spec.clone(), exe });
+        self.cache.insert(name.to_string(), p.clone());
+        Ok(p)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.programs.keys().cloned().collect()
+    }
+
+    pub fn golden_path(&self, name: &str) -> PathBuf {
+        self.dir.join("golden").join(format!("{name}.tnz"))
+    }
+}
+
+impl Program {
+    /// Execute with host tensors; validates count/shape/dtype against the
+    /// spec and unpacks the 1-tuple the AOT path emits (return_tuple=True).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != spec.shape {
+                bail!(
+                    "{}: input {:?} shape {:?} != spec {:?}",
+                    self.name, spec.name, t.shape, spec.shape
+                );
+            }
+            if t.dtype() != spec.dtype {
+                bail!(
+                    "{}: input {:?} dtype {:?} != spec {:?}",
+                    self.name, spec.name, t.dtype(), spec.dtype
+                );
+            }
+            lits.push(tensor_to_literal(t)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let elems = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if elems.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs.len(),
+                elems.len()
+            );
+        }
+        elems
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, spec)| literal_to_tensor(&l, &spec.shape, spec.dtype))
+            .collect()
+    }
+
+    /// Position of a named input in the flat argument list.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("{}: no input named {name:?}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("{}: no output named {name:?}", self.name))
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    let lit = match &t.data {
+        Data::F32(v) => xla::Literal::vec1(v),
+        Data::I32(v) => xla::Literal::vec1(v),
+    };
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+pub fn literal_to_tensor(l: &xla::Literal, shape: &[usize], dtype: DType) -> Result<Tensor> {
+    let t = match dtype {
+        DType::F32 => Tensor::from_f32(
+            shape,
+            l.to_vec::<f32>().map_err(|e| anyhow!("literal->f32: {e:?}"))?,
+        ),
+        DType::I32 => Tensor::from_i32(
+            shape,
+            l.to_vec::<i32>().map_err(|e| anyhow!("literal->i32: {e:?}"))?,
+        ),
+    };
+    Ok(t)
+}

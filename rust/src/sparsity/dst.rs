@@ -1,0 +1,245 @@
+//! Host-side DST bookkeeping: the prune-and-grow rules mirrored from
+//! `python/compile/sparsity.py` (the production updates run inside the AOT
+//! `dst_update` artifact; these mirrors exist for unit/property testing of
+//! the invariants and for the coordinator's mask validation), plus the
+//! cosine update-fraction schedule of RigL.
+
+use super::patterns::{row_col_base, Mask};
+
+/// RigL's cosine-decayed drop fraction: alpha_t = f0/2 * (1 + cos(pi t/T)).
+pub fn cosine_update_frac(step: usize, total_steps: usize, frac0: f64) -> f64 {
+    let t = (step as f64 / total_steps.max(1) as f64).clamp(0.0, 1.0);
+    frac0 * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+}
+
+/// Unstructured RigL update: drop `frac` of the active weights by |w|,
+/// grow the same count by the grow score.  Budget preserved exactly.
+pub fn unstructured_prune_grow(
+    w: &[f32],
+    mask: &Mask,
+    grow_scores: &[f32],
+    frac: f64,
+) -> Mask {
+    let nnz = mask.nnz();
+    let n_inactive = mask.rows * mask.cols - nnz;
+    let n_move = ((frac * nnz as f64).floor() as usize).min(n_inactive);
+    // Keep (nnz - n_move) largest-|w| active entries.
+    let mut active: Vec<(usize, f32)> = mask
+        .bits
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b > 0.5)
+        .map(|(p, _)| (p, w[p].abs()))
+        .collect();
+    active.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut new = Mask::zeros(mask.rows, mask.cols);
+    for &(p, _) in active.iter().take(nnz - n_move) {
+        new.bits[p] = 1.0;
+    }
+    // Grow n_move inactive entries by grow score.
+    let mut inactive: Vec<(usize, f32)> = mask
+        .bits
+        .iter()
+        .enumerate()
+        .filter(|(p, &b)| b < 0.5 && new.bits[*p] < 0.5)
+        .map(|(p, _)| (p, grow_scores[p]))
+        .collect();
+    inactive.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    for &(p, _) in inactive.iter().take(n_move) {
+        new.bits[p] = 1.0;
+    }
+    new
+}
+
+/// DynaDiag update: the structural unit is the cyclic diagonal; score
+/// active offsets by sum|w| along the diagonal, inactive by sum|grad|.
+pub fn diag_prune_grow(w: &[f32], mask: &Mask, grad: &[f32], frac: f64) -> Mask {
+    let (rows, cols) = (mask.rows, mask.cols);
+    let base = row_col_base(rows, cols);
+    let offset_of = |i: usize, j: usize| (j + cols - base[i] % cols) % cols;
+
+    let mut active = vec![false; cols];
+    let mut keep_score = vec![0.0f64; cols];
+    let mut grow_score = vec![0.0f64; cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let o = offset_of(i, j);
+            if mask.get(i, j) {
+                active[o] = true;
+                keep_score[o] += w[i * cols + j].abs() as f64;
+            }
+            grow_score[o] += grad[i * cols + j].abs() as f64;
+        }
+    }
+    let k = active.iter().filter(|&&a| a).count();
+    let n_move = ((frac * k as f64).floor() as usize).min(cols - k);
+
+    let mut act: Vec<usize> = (0..cols).filter(|&o| active[o]).collect();
+    act.sort_by(|&a, &b| keep_score[b].partial_cmp(&keep_score[a]).unwrap());
+    let kept: Vec<usize> = act[..k - n_move].to_vec();
+
+    let mut inact: Vec<usize> = (0..cols)
+        .filter(|&o| !active[o] && !kept.contains(&o))
+        .collect();
+    inact.sort_by(|&a, &b| grow_score[b].partial_cmp(&grow_score[a]).unwrap());
+    let mut offsets = kept;
+    offsets.extend(inact.into_iter().take(n_move));
+
+    super::patterns::diag_mask_from_offsets(rows, cols, &offsets)
+}
+
+/// SRigL-style N:M update: within each group of M, re-select N survivors by
+/// score |w| (active) vs gamma*|grad| (candidates).
+pub fn nm_prune_grow(w: &[f32], mask: &Mask, grad: &[f32], m_group: usize, gamma: f32) -> Mask {
+    let (rows, cols) = (mask.rows, mask.cols);
+    let mut new = Mask::zeros(rows, cols);
+    for i in 0..rows {
+        for g in 0..cols / m_group {
+            let n = (g * m_group..(g + 1) * m_group)
+                .filter(|&j| mask.get(i, j))
+                .count();
+            let mut scored: Vec<(usize, f32)> = (0..m_group)
+                .map(|c| {
+                    let j = g * m_group + c;
+                    let s = if mask.get(i, j) {
+                        w[i * cols + j].abs()
+                    } else {
+                        gamma * grad[i * cols + j].abs()
+                    };
+                    (j, s)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            for &(j, _) in scored.iter().take(n) {
+                new.set(i, j, true);
+            }
+        }
+    }
+    new
+}
+
+/// DSB-style block update: move `frac` of the active blocks; score active
+/// by sum|w|, inactive by sum|grad|.
+pub fn block_prune_grow(w: &[f32], mask: &Mask, grad: &[f32], bs: usize, frac: f64) -> Mask {
+    let (rows, cols) = (mask.rows, mask.cols);
+    let (br, bc) = (rows / bs, cols / bs);
+    let bsum = |x: &[f32], bi: usize, bj: usize| -> f64 {
+        let mut s = 0.0f64;
+        for r in bi * bs..(bi + 1) * bs {
+            for c in bj * bs..(bj + 1) * bs {
+                s += x[r * cols + c].abs() as f64;
+            }
+        }
+        s
+    };
+    let mut act = Vec::new();
+    let mut inact = Vec::new();
+    for bi in 0..br {
+        for bj in 0..bc {
+            if mask.get(bi * bs, bj * bs) {
+                act.push(((bi, bj), bsum(w, bi, bj)));
+            } else {
+                inact.push(((bi, bj), bsum(grad, bi, bj)));
+            }
+        }
+    }
+    let nblk = act.len();
+    // Cannot move more blocks than there are inactive slots to grow into
+    // (narrow layers can have every block active).
+    let n_move = ((frac * nblk as f64).floor() as usize).min(inact.len());
+    act.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    inact.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut new = Mask::zeros(rows, cols);
+    let mut set_block = |bi: usize, bj: usize| {
+        for r in bi * bs..(bi + 1) * bs {
+            for c in bj * bs..(bj + 1) * bs {
+                new.set(r, c, true);
+            }
+        }
+    };
+    for &((bi, bj), _) in act.iter().take(nblk - n_move) {
+        set_block(bi, bj);
+    }
+    for &((bi, bj), _) in inact.iter().take(n_move) {
+        set_block(bi, bj);
+    }
+    new
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsity::patterns::{
+        make_block_mask, make_diag_mask, make_nm_mask, make_unstructured_mask,
+        validate_structure, Structure,
+    };
+    use crate::util::Rng;
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        assert!((cosine_update_frac(0, 100, 0.3) - 0.3).abs() < 1e-12);
+        assert!(cosine_update_frac(100, 100, 0.3) < 1e-12);
+        let mid = cosine_update_frac(50, 100, 0.3);
+        assert!((mid - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unstructured_budget_preserved() {
+        let mut rng = Rng::new(5);
+        let mask = make_unstructured_mask(16, 32, 0.2, &mut rng);
+        let w: Vec<f32> = (0..512).map(|_| rng.normal()).collect();
+        let g: Vec<f32> = (0..512).map(|_| rng.normal().abs()).collect();
+        let new = unstructured_prune_grow(&w, &mask, &g, 0.3);
+        assert_eq!(new.nnz(), mask.nnz());
+    }
+
+    #[test]
+    fn diag_stays_diag_and_budget() {
+        let mut rng = Rng::new(6);
+        let mask = make_diag_mask(32, 32, 4, &mut rng);
+        let w: Vec<f32> = (0..1024).map(|_| rng.normal()).collect();
+        let g: Vec<f32> = (0..1024).map(|_| rng.normal()).collect();
+        let new = diag_prune_grow(&w, &mask, &g, 0.5);
+        assert_eq!(new.nnz(), mask.nnz());
+        assert!(validate_structure(&new, Structure::Diag).is_ok());
+    }
+
+    #[test]
+    fn nm_stays_nm() {
+        let mut rng = Rng::new(7);
+        let mask = make_nm_mask(8, 32, 3, 16, &mut rng);
+        let w: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
+        let g: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
+        let new = nm_prune_grow(&w, &mask, &g, 16, 0.3);
+        assert_eq!(new.nnz(), mask.nnz());
+        assert!(validate_structure(&new, Structure::NM).is_ok());
+    }
+
+    #[test]
+    fn block_stays_block() {
+        let mut rng = Rng::new(8);
+        let mask = make_block_mask(32, 64, 0.25, 16, &mut rng);
+        let w: Vec<f32> = (0..2048).map(|_| rng.normal()).collect();
+        let g: Vec<f32> = (0..2048).map(|_| rng.normal()).collect();
+        let new = block_prune_grow(&w, &mask, &g, 16, 0.5);
+        assert_eq!(new.nnz(), mask.nnz());
+        assert!(validate_structure(&new, Structure::Block).is_ok());
+    }
+
+    #[test]
+    fn grow_targets_high_gradient() {
+        // A diagonal with zero weight everywhere and one very hot gradient
+        // diagonal must grow onto that diagonal.
+        let mut rng = Rng::new(9);
+        let mask = make_diag_mask(16, 16, 2, &mut rng);
+        let w = vec![0.0f32; 256];
+        let mut g = vec![0.0f32; 256];
+        // Heat offset 7 (relative to base = identity for square).
+        for i in 0..16 {
+            g[i * 16 + (i + 7) % 16] = 10.0;
+        }
+        let new = diag_prune_grow(&w, &mask, &g, 0.5);
+        // offset 7 must be active in the new mask.
+        assert!(new.get(0, 7), "hot gradient diagonal was not grown");
+    }
+}

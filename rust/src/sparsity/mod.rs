@@ -1,0 +1,64 @@
+//! Structured-sparsity substrate (Rust mirror of `python/compile/sparsity.py`).
+//!
+//! The coordinator needs masks host-side for three reasons: (i) initialising
+//! runs with arbitrary (structure, density, seed) combinations without
+//! round-tripping through Python, (ii) compressing trained dense weights
+//! into the kernel forms used by the native Fig.-3 benches and the AOT
+//! `infer` artifacts, and (iii) verifying — via unit + property tests —
+//! the invariants the DST update programs must preserve (budget, family
+//! membership).
+
+pub mod compress;
+pub mod dst;
+pub mod patterns;
+
+pub use compress::{compress_blocks, compress_rows, BlockCompressed, RowCompressed};
+pub use patterns::{make_mask, Mask, Structure};
+
+/// Apdx A: map a per-layer density to structural parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PatternParams {
+    /// Diagonal count K = round(density * n_in).
+    pub k: usize,
+    /// Per-row block budget (same magnitude as K).
+    pub b: usize,
+    /// Band width 2b+1 (nearest odd).
+    pub band: usize,
+    /// Tied N:M pair with N/M ~ density.
+    pub n: usize,
+    pub m: usize,
+}
+
+pub fn density_to_params(density: f64, n_in: usize, m: usize) -> PatternParams {
+    assert!(density > 0.0 && density <= 1.0, "density out of range: {density}");
+    let k = ((density * n_in as f64).round() as usize).max(1);
+    let mut band = k;
+    if band % 2 == 0 {
+        band = if band + 1 <= n_in { band + 1 } else { band - 1 };
+    }
+    let n = ((density * m as f64).round() as usize).max(1);
+    PatternParams { k, b: k, band, n, m }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apdx_a_vitl_worked_example() {
+        // Paper Apdx A: ViT-L/16 surrogate at density 0.05:
+        //   n_in=1024 -> K=B=51, band=51;  n_in=4096 -> K'=B'=205.
+        let p1 = density_to_params(0.05, 1024, 20);
+        assert_eq!(p1.k, 51);
+        assert_eq!(p1.band, 51);
+        let p2 = density_to_params(0.05, 4096, 20);
+        assert_eq!(p2.k, 205);
+        assert_eq!(p2.n, 1); // alpha = N/M = 1/20 = 0.05
+    }
+
+    #[test]
+    #[should_panic]
+    fn density_zero_rejected() {
+        density_to_params(0.0, 128, 16);
+    }
+}

@@ -1,0 +1,398 @@
+//! Mask builders for every structure family in the paper (Sec. 3.4, Apdx A):
+//! diagonal-K, banded-b, block-B, N:M, butterfly (static), unstructured.
+//!
+//! These mirror `python/compile/sparsity.py` builder-for-builder; the
+//! property tests in `rust/tests/prop_sparsity.rs` check the same
+//! invariants hypothesis checks on the Python side.
+
+use crate::util::Rng;
+
+/// Structure families.  String forms match the manifest / Python side.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Structure {
+    Diag,
+    Banded,
+    Block,
+    NM,
+    Butterfly,
+    Unstructured,
+    Dense,
+}
+
+impl Structure {
+    pub fn parse(s: &str) -> Option<Structure> {
+        Some(match s {
+            "diag" => Structure::Diag,
+            "banded" => Structure::Banded,
+            "block" => Structure::Block,
+            "nm" => Structure::NM,
+            "butterfly" => Structure::Butterfly,
+            "unstructured" => Structure::Unstructured,
+            "dense" => Structure::Dense,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Structure::Diag => "diag",
+            Structure::Banded => "banded",
+            Structure::Block => "block",
+            Structure::NM => "nm",
+            Structure::Butterfly => "butterfly",
+            Structure::Unstructured => "unstructured",
+            Structure::Dense => "dense",
+        }
+    }
+
+    /// Is the mask updated by DST? (butterfly/banded are static — SST.)
+    pub fn is_dynamic(self) -> bool {
+        matches!(
+            self,
+            Structure::Diag | Structure::Block | Structure::NM | Structure::Unstructured
+        )
+    }
+
+    /// The paper's structural rank cap r_struct (Sec. 3.4) for a layer with
+    /// `n_in` inputs at `density` — used by the NLR module.
+    pub fn rank_cap(self, density: f64, n_in: usize) -> usize {
+        let k = ((density * n_in as f64).round() as usize).max(1);
+        match self {
+            Structure::Diag | Structure::Banded | Structure::Block | Structure::Butterfly => k,
+            // Tied N:M: r_struct = alpha * d0 with alpha = N/M = density.
+            Structure::NM => ((density * n_in as f64).round() as usize).max(1),
+            Structure::Unstructured | Structure::Dense => n_in,
+        }
+    }
+}
+
+/// Dense 0/1 mask, row-major `rows x cols`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: Vec<f32>,
+}
+
+impl Mask {
+    pub fn zeros(rows: usize, cols: usize) -> Mask {
+        Mask { rows, cols, bits: vec![0.0; rows * cols] }
+    }
+
+    pub fn ones(rows: usize, cols: usize) -> Mask {
+        Mask { rows, cols, bits: vec![1.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> bool {
+        self.bits[i * self.cols + j] > 0.5
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: bool) {
+        self.bits[i * self.cols + j] = if v { 1.0 } else { 0.0 };
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.bits.iter().filter(|&&b| b > 0.5).count()
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.bits[i * self.cols..(i + 1) * self.cols]
+            .iter()
+            .filter(|&&b| b > 0.5)
+            .count()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+/// Column the "main diagonal" passes through at each row (rectangular
+/// generalisation): floor(i * cols / rows).
+pub fn row_col_base(rows: usize, cols: usize) -> Vec<usize> {
+    (0..rows).map(|i| i * cols / rows).collect()
+}
+
+/// Union of cyclic diagonals at the given offsets.
+pub fn diag_mask_from_offsets(rows: usize, cols: usize, offsets: &[usize]) -> Mask {
+    let base = row_col_base(rows, cols);
+    let mut m = Mask::zeros(rows, cols);
+    for i in 0..rows {
+        for &o in offsets {
+            m.set(i, (base[i] + o) % cols, true);
+        }
+    }
+    m
+}
+
+/// K distinct initial offsets, evenly spread with a random rotation.
+pub fn diag_offsets_init(cols: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(k <= cols, "K={k} exceeds cols={cols}");
+    let start = rng.below(cols);
+    (0..k).map(|i| (start + i * cols / k) % cols).collect()
+}
+
+pub fn make_diag_mask(rows: usize, cols: usize, k: usize, rng: &mut Rng) -> Mask {
+    diag_mask_from_offsets(rows, cols, &diag_offsets_init(cols, k, rng))
+}
+
+pub fn make_banded_mask(rows: usize, cols: usize, band: usize) -> Mask {
+    let half = (band / 2) as isize;
+    let mut offs: Vec<usize> = (-half..=half)
+        .map(|o| o.rem_euclid(cols as isize) as usize)
+        .collect();
+    offs.sort_unstable();
+    offs.dedup();
+    diag_mask_from_offsets(rows, cols, &offs)
+}
+
+pub fn make_block_mask(rows: usize, cols: usize, density: f64, bs: usize, rng: &mut Rng) -> Mask {
+    let br = rows.div_ceil(bs);
+    let bc = cols.div_ceil(bs);
+    let per_row = ((density * bc as f64).round() as usize).clamp(1, bc);
+    let mut m = Mask::zeros(rows, cols);
+    for i in 0..br {
+        for j in rng.choose(bc, per_row) {
+            for r in i * bs..((i + 1) * bs).min(rows) {
+                for c in j * bs..((j + 1) * bs).min(cols) {
+                    m.set(r, c, true);
+                }
+            }
+        }
+    }
+    m
+}
+
+pub fn make_nm_mask(rows: usize, cols: usize, n: usize, m_group: usize, rng: &mut Rng) -> Mask {
+    assert_eq!(cols % m_group, 0, "cols={cols} not divisible by M={m_group}");
+    let mut m = Mask::zeros(rows, cols);
+    for i in 0..rows {
+        for g in 0..cols / m_group {
+            for c in rng.choose(m_group, n.min(m_group)) {
+                m.set(i, g * m_group + c, true);
+            }
+        }
+    }
+    m
+}
+
+/// Pixelated-Butterfly style static support: power-of-two stride diagonals
+/// up to the per-row budget.  Deterministic (no rng) — it is an SST pattern.
+pub fn make_butterfly_mask(rows: usize, cols: usize, density: f64) -> Mask {
+    let budget = ((density * cols as f64).round() as usize).clamp(1, cols);
+    let mut offsets: Vec<usize> = vec![0];
+    let mut stride = 1;
+    while offsets.len() < budget && stride < cols {
+        for off in [stride % cols, (cols - stride % cols) % cols] {
+            if offsets.len() < budget && !offsets.contains(&off) {
+                offsets.push(off);
+            }
+        }
+        stride *= 2;
+    }
+    let mut extra = 1;
+    while offsets.len() < budget {
+        if !offsets.contains(&extra) {
+            offsets.push(extra);
+        }
+        extra += 1;
+    }
+    offsets.sort_unstable();
+    offsets.truncate(budget);
+    diag_mask_from_offsets(rows, cols, &offsets)
+}
+
+pub fn make_unstructured_mask(rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Mask {
+    let total = rows * cols;
+    let nnz = ((density * total as f64).round() as usize).clamp(1, total);
+    let mut m = Mask::zeros(rows, cols);
+    for p in rng.choose(total, nnz) {
+        m.bits[p] = 1.0;
+    }
+    m
+}
+
+/// Dispatch matching `sparsity.make_mask` on the Python side.
+pub fn make_mask(
+    structure: Structure,
+    rows: usize,
+    cols: usize,
+    density: f64,
+    rng: &mut Rng,
+) -> Mask {
+    const BS: usize = 16;
+    const M: usize = 16;
+    match structure {
+        Structure::Diag => {
+            let k = ((density * cols as f64).round() as usize).clamp(1, cols);
+            make_diag_mask(rows, cols, k, rng)
+        }
+        Structure::Banded => {
+            let mut band = ((density * cols as f64).round() as usize).max(1);
+            band += (band + 1) % 2;
+            make_banded_mask(rows, cols, band.min(cols))
+        }
+        Structure::Block => make_block_mask(rows, cols, density, BS, rng),
+        Structure::NM => {
+            let n = ((density * M as f64).round() as usize).max(1);
+            make_nm_mask(rows, cols, n, M, rng)
+        }
+        Structure::Butterfly => make_butterfly_mask(rows, cols, density),
+        Structure::Unstructured => make_unstructured_mask(rows, cols, density, rng),
+        Structure::Dense => Mask::ones(rows, cols),
+    }
+}
+
+/// Check that `mask` belongs to the structure family — used by tests and by
+/// the coordinator to validate DST-updated masks returned from the AOT
+/// program (defence against compile-path regressions).
+pub fn validate_structure(mask: &Mask, structure: Structure) -> Result<(), String> {
+    match structure {
+        Structure::Dense => Ok(()),
+        Structure::Unstructured => Ok(()),
+        Structure::Diag | Structure::Banded | Structure::Butterfly => {
+            // Every row's nnz must sit at base(i)+o for a *row-independent*
+            // offset set.
+            let base = row_col_base(mask.rows, mask.cols);
+            let offsets_of_row = |i: usize| -> Vec<usize> {
+                (0..mask.cols)
+                    .filter(|&j| mask.get(i, j))
+                    .map(|j| (j + mask.cols - base[i] % mask.cols) % mask.cols)
+                    .collect::<Vec<_>>()
+            };
+            let mut first = offsets_of_row(0);
+            first.sort_unstable();
+            for i in 1..mask.rows {
+                let mut o = offsets_of_row(i);
+                o.sort_unstable();
+                if o != first {
+                    return Err(format!("row {i} offsets differ from row 0"));
+                }
+            }
+            Ok(())
+        }
+        Structure::Block => {
+            const BS: usize = 16;
+            for bi in 0..mask.rows.div_ceil(BS) {
+                for bj in 0..mask.cols.div_ceil(BS) {
+                    let mut any = false;
+                    let mut all = true;
+                    for i in bi * BS..((bi + 1) * BS).min(mask.rows) {
+                        for j in bj * BS..((bj + 1) * BS).min(mask.cols) {
+                            if mask.get(i, j) {
+                                any = true;
+                            } else {
+                                all = false;
+                            }
+                        }
+                    }
+                    if any && !all {
+                        return Err(format!("partial block at ({bi},{bj})"));
+                    }
+                }
+            }
+            Ok(())
+        }
+        Structure::NM => {
+            const M: usize = 16;
+            if mask.cols % M != 0 {
+                return Err("cols not divisible by M".into());
+            }
+            let n0 = (0..M).filter(|&j| mask.get(0, j)).count();
+            for i in 0..mask.rows {
+                for g in 0..mask.cols / M {
+                    let n = (g * M..(g + 1) * M).filter(|&j| mask.get(i, j)).count();
+                    if n != n0 {
+                        return Err(format!("group ({i},{g}) has {n} nnz, expected {n0}"));
+                    }
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(42)
+    }
+
+    #[test]
+    fn diag_exact_row_nnz() {
+        let m = make_diag_mask(96, 64, 7, &mut rng());
+        for i in 0..96 {
+            assert_eq!(m.row_nnz(i), 7);
+        }
+        assert!(validate_structure(&m, Structure::Diag).is_ok());
+    }
+
+    #[test]
+    fn banded_width() {
+        let m = make_banded_mask(64, 64, 5);
+        assert_eq!(m.row_nnz(0), 5);
+        assert!(m.get(0, 0) && m.get(0, 1) && m.get(0, 2));
+        assert!(m.get(0, 63) && m.get(0, 62)); // wrap-around
+        assert!(validate_structure(&m, Structure::Banded).is_ok());
+    }
+
+    #[test]
+    fn block_is_blocky() {
+        let m = make_block_mask(64, 64, 0.25, 16, &mut rng());
+        assert!(validate_structure(&m, Structure::Block).is_ok());
+        assert_eq!(m.nnz(), 64 * 16); // 1 of 4 block-cols per block-row
+    }
+
+    #[test]
+    fn nm_per_group() {
+        let m = make_nm_mask(32, 64, 3, 16, &mut rng());
+        assert!(validate_structure(&m, Structure::NM).is_ok());
+        assert_eq!(m.nnz(), 32 * 4 * 3);
+    }
+
+    #[test]
+    fn butterfly_deterministic() {
+        let a = make_butterfly_mask(64, 64, 0.1);
+        let b = make_butterfly_mask(64, 64, 0.1);
+        assert_eq!(a, b);
+        assert_eq!(a.row_nnz(0), 6); // round(0.1*64)=6
+    }
+
+    #[test]
+    fn unstructured_budget() {
+        let m = make_unstructured_mask(32, 64, 0.1, &mut rng());
+        assert_eq!(m.nnz(), (0.1f64 * 32.0 * 64.0).round() as usize);
+    }
+
+    #[test]
+    fn validate_rejects_partial_block() {
+        let mut m = Mask::zeros(32, 32);
+        m.set(0, 0, true); // lone element, not a full 16x16 block
+        assert!(validate_structure(&m, Structure::Block).is_err());
+    }
+
+    #[test]
+    fn dispatch_densities() {
+        let mut r = rng();
+        for st in [
+            Structure::Diag,
+            Structure::Block,
+            Structure::NM,
+            Structure::Butterfly,
+            Structure::Unstructured,
+        ] {
+            let m = make_mask(st, 128, 128, 0.1, &mut r);
+            let d = m.density();
+            assert!(
+                (d - 0.1).abs() < 0.06,
+                "{}: density {d} too far from 0.1",
+                st.name()
+            );
+            assert!(validate_structure(&m, st).is_ok(), "{}", st.name());
+        }
+    }
+}

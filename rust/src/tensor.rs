@@ -1,0 +1,263 @@
+//! Host-side tensors + the `.tnz` bundle format shared with the Python
+//! compile path (see `python/compile/aot.py::write_tnz`).
+//!
+//! `.tnz` layout: `u64 LE header_len | JSON header | raw LE payload` where
+//! the header is `[{name, shape, dtype, offset, nbytes}, ...]`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Element type of a tensor — the pipeline only uses f32 and i32.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype {s:?}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// A host tensor: shape + either f32 or i32 storage.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: Data::F32(vec![0.0; numel(shape)]) }
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: Data::I32(vec![0; numel(shape)]) }
+    }
+
+    pub fn from_f32(shape: &[usize], v: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), v.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Data::F32(v) }
+    }
+
+    pub fn from_i32(shape: &[usize], v: Vec<i32>) -> Tensor {
+        assert_eq!(numel(shape), v.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: Data::I32(v) }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: Data::F32(vec![v]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor { shape: vec![], data: Data::I32(vec![v]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            _ => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    pub fn i32s_mut(&mut self) -> &mut [i32] {
+        match &mut self.data {
+            Data::I32(v) => v,
+            _ => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// 2-D accessor, row-major.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.f32s()[i * self.shape[1] + j]
+    }
+
+    /// Max |a - b| over two same-shaped f32 tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        match (&self.data, &other.data) {
+            (Data::F32(a), Data::F32(b)) => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max),
+            (Data::I32(a), Data::I32(b)) => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs() as f32)
+                .fold(0.0f32, f32::max),
+            _ => panic!("dtype mismatch"),
+        }
+    }
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(1)
+}
+
+// ---------------------------------------------------------------------------
+// .tnz bundles
+// ---------------------------------------------------------------------------
+
+/// Read a `.tnz` bundle into an ordered name->tensor map.
+pub fn read_tnz(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut len_buf = [0u8; 8];
+    f.read_exact(&mut len_buf)?;
+    let hlen = u64::from_le_bytes(len_buf) as usize;
+    let mut hdr = vec![0u8; hlen];
+    f.read_exact(&mut hdr)?;
+    let metas = Json::parse(std::str::from_utf8(&hdr)?)?;
+    let mut payload = Vec::new();
+    f.read_to_end(&mut payload)?;
+
+    let mut out = BTreeMap::new();
+    for m in metas.as_arr().ok_or_else(|| anyhow!("tnz header not an array"))? {
+        let name = m.at(&["name"])?.as_str().unwrap().to_string();
+        let shape: Vec<usize> = m
+            .at(&["shape"])?
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_usize().unwrap())
+            .collect();
+        let dtype = DType::parse(m.at(&["dtype"])?.as_str().unwrap())?;
+        let off = m.at(&["offset"])?.as_usize().unwrap();
+        let nbytes = m.at(&["nbytes"])?.as_usize().unwrap();
+        let bytes = &payload[off..off + nbytes];
+        let t = match dtype {
+            DType::F32 => Tensor::from_f32(
+                &shape,
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            DType::I32 => Tensor::from_i32(
+                &shape,
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// Write a `.tnz` bundle (used for checkpoints).
+pub fn write_tnz(path: &Path, tensors: &[(String, &Tensor)]) -> Result<()> {
+    let mut metas = Vec::new();
+    let mut payload: Vec<u8> = Vec::new();
+    for (name, t) in tensors {
+        let offset = payload.len();
+        match &t.data {
+            Data::F32(v) => {
+                for x in v {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Data::I32(v) => {
+                for x in v {
+                    payload.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        metas.push(json::obj(vec![
+            ("name", json::s(name)),
+            ("shape", json::arr(t.shape.iter().map(|&d| json::num(d as f64)))),
+            ("dtype", json::s(t.dtype().name())),
+            ("offset", json::num(offset as f64)),
+            ("nbytes", json::num((payload.len() - offset) as f64)),
+        ]));
+    }
+    let hdr = Json::Arr(metas).to_string_pretty();
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&(hdr.len() as u64).to_le_bytes())?;
+    f.write_all(hdr.as_bytes())?;
+    f.write_all(&payload)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tnz_roundtrip() {
+        let dir = std::env::temp_dir().join("padst_tnz_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.tnz");
+        let a = Tensor::from_f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Tensor::from_i32(&[4], vec![7, -8, 9, 10]);
+        write_tnz(&p, &[("a".into(), &a), ("b".into(), &b)]).unwrap();
+        let m = read_tnz(&p).unwrap();
+        assert_eq!(m["a"].shape, vec![2, 3]);
+        assert_eq!(m["a"].f32s(), a.f32s());
+        assert_eq!(m["b"].i32s(), b.i32s());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = Tensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.at2(1, 0), 3.0);
+        assert_eq!(t.numel(), 4);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+}

@@ -1,0 +1,111 @@
+//! Summary statistics + a small timing harness (offline stand-in for
+//! criterion).  Every bench target reports mean / median / p95 over a
+//! warmed-up sample set, and the harness prints rows in a stable
+//! machine-grepable format consumed by EXPERIMENTS.md.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    let mean = v.iter().sum::<f64>() / n as f64;
+    let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let q = |p: f64| v[((n as f64 - 1.0) * p).round() as usize];
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: v[0],
+        p50: q(0.5),
+        p95: q(0.95),
+        max: v[n - 1],
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then timed runs until both
+/// `min_iters` and `min_time_s` are satisfied.  Returns per-iteration
+/// seconds.
+pub fn bench<F: FnMut()>(mut f: F, warmup: usize, min_iters: usize, min_time_s: f64) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < min_time_s {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    summarize(&samples)
+}
+
+/// Print one bench row: `name  mean  p50  p95  [extra]` with units scaled.
+pub fn report(name: &str, s: &Summary, extra: &str) {
+    println!(
+        "{:<44} mean {:>10}  p50 {:>10}  p95 {:>10}  n={:<5} {}",
+        name,
+        fmt_time(s.mean),
+        fmt_time(s.p50),
+        fmt_time(s.p95),
+        s.n,
+        extra
+    );
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_runs() {
+        let mut c = 0u64;
+        let s = bench(|| c += 1, 2, 5, 0.0);
+        assert!(s.n >= 5);
+        assert!(c >= 7);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("us"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,177 @@
+//! Property-based tests over the coordinator's invariants (hand-rolled
+//! generators — the offline build has no proptest crate, so we drive the
+//! same shrink-free random-case pattern from our own deterministic RNG;
+//! every case prints its seed on failure for reproduction).
+
+use padst::perm;
+use padst::sparsity::compress::{compress_rows, decompress_rows};
+use padst::sparsity::dst::*;
+use padst::sparsity::patterns::*;
+use padst::util::Rng;
+
+const CASES: usize = 60;
+
+fn arb_dims(rng: &mut Rng) -> (usize, usize) {
+    let rows = [16, 32, 48, 64, 96][rng.below(5)];
+    let cols = [16, 32, 48, 64, 128][rng.below(5)];
+    (rows, cols)
+}
+
+/// DST updates preserve the nnz budget and the structure family, for every
+/// family, across random weights/grads/fractions.
+#[test]
+fn prop_dst_preserves_budget_and_family() {
+    let mut meta = Rng::new(0xD57);
+    for case in 0..CASES {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let (rows, cols) = arb_dims(&mut rng);
+        let density = [0.05, 0.1, 0.25][rng.below(3)];
+        let frac = [0.1, 0.3, 0.5][rng.below(3)];
+        for st in [Structure::Diag, Structure::Block, Structure::NM, Structure::Unstructured] {
+            let mask = make_mask(st, rows, cols, density, &mut rng);
+            let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+            let g: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+            let new = match st {
+                Structure::Diag => diag_prune_grow(&w, &mask, &g, frac),
+                Structure::Block => block_prune_grow(&w, &mask, &g, 16, frac),
+                Structure::NM => nm_prune_grow(&w, &mask, &g, 16, 0.3),
+                Structure::Unstructured => {
+                    let gs: Vec<f32> = g.iter().map(|x| x.abs()).collect();
+                    unstructured_prune_grow(&w, &mask, &gs, frac)
+                }
+                _ => unreachable!(),
+            };
+            assert_eq!(
+                new.nnz(),
+                mask.nnz(),
+                "case {case} seed {seed} {}: budget changed",
+                st.name()
+            );
+            assert!(
+                validate_structure(&new, st).is_ok(),
+                "case {case} seed {seed} {}: left family",
+                st.name()
+            );
+        }
+    }
+}
+
+/// Compression round-trip with a fused permutation is exact for every
+/// structure with fixed row nnz.
+#[test]
+fn prop_compress_perm_roundtrip() {
+    let mut meta = Rng::new(0xC0);
+    for case in 0..CASES {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let (rows, cols) = arb_dims(&mut rng);
+        let density = [0.05, 0.1, 0.25][rng.below(3)];
+        let st = [Structure::Diag, Structure::NM, Structure::Butterfly][rng.below(3)];
+        let mask = make_mask(st, rows, cols, density, &mut rng);
+        let k = (0..rows).map(|i| mask.row_nnz(i)).max().unwrap();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let pidx: Vec<i32> = rng.permutation(cols).iter().map(|&p| p as i32).collect();
+        let mut inv = vec![0i32; cols];
+        for (i, &p) in pidx.iter().enumerate() {
+            inv[p as usize] = i as i32;
+        }
+        let rc = compress_rows(&w, &mask, k, Some(&pidx));
+        let back = decompress_rows(&rc, Some(&inv));
+        for i in 0..rows {
+            for j in 0..cols {
+                let want = if mask.get(i, j) { w[i * cols + j] } else { 0.0 };
+                assert!(
+                    (back[i * cols + j] - want).abs() < 1e-5,
+                    "case {case} seed {seed} {}: ({i},{j})",
+                    st.name()
+                );
+            }
+        }
+    }
+}
+
+/// Hungarian decode of a soft matrix built around a planted permutation
+/// recovers the plant, for any noise below the margin.
+#[test]
+fn prop_decode_recovers_planted() {
+    let mut meta = Rng::new(0xDEC);
+    for case in 0..CASES {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let n = [4, 8, 16, 32, 64][rng.below(5)];
+        let planted = rng.permutation(n);
+        let mut m = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                m[i * n + j] = 0.4 * rng.f32() as f64;
+            }
+            m[i * n + planted[i]] = 0.5 + 0.5 * rng.f32() as f64;
+        }
+        let idx = perm::decode(&m, n);
+        assert_eq!(idx, planted, "case {case} seed {seed} n {n}");
+    }
+}
+
+/// delta(P) is in [0,1], equals 1 only for the identity, and is invariant
+/// to which non-identity positions are permuted (depends only on count).
+#[test]
+fn prop_identity_distance_range() {
+    let mut meta = Rng::new(0x1D);
+    for _ in 0..CASES {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let n = 8 + rng.below(120);
+        let p = rng.permutation(n);
+        let d = perm::identity_distance(&p);
+        assert!((0.0..=1.0).contains(&d), "seed {seed}: d={d}");
+        let is_id = p.iter().enumerate().all(|(i, &x)| i == x);
+        if is_id {
+            assert!((d - 1.0).abs() < 1e-12);
+        } else {
+            assert!(d < 1.0);
+        }
+    }
+}
+
+/// Sinkhorn output is (near-)doubly-stochastic for arbitrary positive
+/// logits; the AutoShuffle penalty is non-negative and zero on vertices.
+#[test]
+fn prop_sinkhorn_and_penalty() {
+    let mut meta = Rng::new(0x51D4);
+    for _ in 0..CASES / 2 {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let n = 4 + rng.below(60);
+        let logits: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let m = perm::soft_perm(&logits, n, 16);
+        for i in 0..n {
+            let rs: f64 = m[i * n..(i + 1) * n].iter().sum();
+            assert!((rs - 1.0).abs() < 1e-4, "seed {seed} row {i}: {rs}");
+        }
+        let pen = perm::autoshuffle_penalty(&m, n);
+        assert!(pen >= -1e-9, "seed {seed}: negative penalty {pen}");
+        // Vertex: penalty ~ 0.
+        let planted = rng.permutation(n);
+        let mut v = vec![0.0f64; n * n];
+        for (i, &j) in planted.iter().enumerate() {
+            v[i * n + j] = 1.0;
+        }
+        assert!(perm::autoshuffle_penalty(&v, n) < 1e-9);
+    }
+}
+
+/// The cosine DST schedule is monotone decreasing and hits ~0 at T.
+#[test]
+fn prop_cosine_schedule_monotone() {
+    for total in [10usize, 100, 1000] {
+        let mut prev = f64::INFINITY;
+        for step in 0..=total {
+            let f = cosine_update_frac(step, total, 0.3);
+            assert!(f <= prev + 1e-12);
+            assert!((0.0..=0.3).contains(&f));
+            prev = f;
+        }
+        assert!(cosine_update_frac(total, total, 0.3) < 1e-9);
+    }
+}
