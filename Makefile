@@ -1,0 +1,29 @@
+# Convenience targets; everything here is also runnable by hand (see README).
+
+.PHONY: build test bench artifacts fmt lint doc pytest
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench kernels
+
+# Export the AOT artifact set (HLO text + manifest + goldens) with the
+# Python toolchain.  Needed only for the PJRT-executing benches/tests.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+fmt:
+	cargo fmt --check
+
+lint:
+	cargo clippy -- -D warnings
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+pytest:
+	cd python && python -m pytest tests/ -q

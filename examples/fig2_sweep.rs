@@ -7,7 +7,7 @@
 //! and `--model gpt_tiny` / `mixer_tiny` for the other panels.
 //!
 //! Run: `cargo run --release --example fig2_sweep -- [--full] [--model M]
-//!       [--steps N] [--csv PATH]`
+//!       [--steps N] [--csv PATH] [--threads N]`
 
 use padst::coordinator::sweep::{method_by_name, print_table, run_sweep, write_csv, METHODS};
 use padst::runtime::Runtime;
@@ -25,8 +25,9 @@ fn main() -> anyhow::Result<()> {
     let model = get("--model", "vit_tiny");
     let steps: usize = get("--steps", if full { "400" } else { "250" }).parse()?;
 
+    let threads: usize = get("--threads", "0").parse()?; // 0 = auto
     let dir = std::path::Path::new("artifacts");
-    let mut rt = Runtime::open(dir)?;
+    let mut rt = Runtime::open_with_threads(dir, threads)?;
     let kind = rt.manifest.models[&model].kind.clone();
 
     let (methods, sparsities): (Vec<_>, Vec<f64>) = if full {
@@ -46,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         methods.len(),
         sparsities
     );
-    let cells = run_sweep(&mut rt, &model, &methods, &sparsities, steps, 0, true)?;
+    let cells = run_sweep(&mut rt, &model, &methods, &sparsities, steps, 0, true, threads)?;
     print_table(&model, &kind, &cells, &sparsities);
 
     // The paper's qualitative claims, checked programmatically where the

@@ -10,9 +10,20 @@
 //! Prints speedup-vs-dense per sparsity so the 2.9x-at-90 % headline and
 //! the structured >> unstructured(CSR) ordering can be checked directly.
 //! Run: `cargo bench --bench fig3_inference` (offline criterion stand-in).
+//!
+//! Every path — dense baseline included — runs through the scoped-thread
+//! execution layer under the same worker budget (`--threads N` after `--`,
+//! or `PADST_THREADS`, default available parallelism), so the speedup
+//! ratios stay like-for-like at any thread count.  Methodology note: the
+//! gather paths use the sharded row-gather kernel at *every* thread count,
+//! not the serial batch-amortised `gather_matmul_batched` this bench used
+//! before the parallel layer landed — so `--threads 1` absolute times for
+//! diag/N:M/butterfly differ slightly from previously recorded runs (the
+//! batched serial variant is still timed in `cargo bench --bench kernels`).
 
+use padst::kernels::parallel::threads_from_env_or_args;
 use padst::kernels::{
-    block_matmul, csr_from_mask, csr_matmul, dense_matmul_blocked, gather_matmul_batched,
+    block_matmul_mt, csr_from_mask, csr_matmul_mt, dense_matmul_blocked_mt, gather_matmul_mt,
     shuffle_rows,
 };
 use padst::models::PAPER_LAYERS;
@@ -24,6 +35,7 @@ use padst::util::Rng;
 const BATCH: usize = 64; // tokens in flight, ~ViT-B/16 sequence dimension
 
 fn main() {
+    let threads = threads_from_env_or_args();
     let sparsities = [0.6, 0.7, 0.8, 0.9, 0.95];
     let structures = [
         Structure::Diag,
@@ -32,7 +44,7 @@ fn main() {
         Structure::Butterfly,
         Structure::Unstructured,
     ];
-    println!("# Fig. 3 (inference): y = x@W^T, batch={BATCH}, times per call");
+    println!("# Fig. 3 (inference): y = x@W^T, batch={BATCH}, threads={threads}, times per call");
     println!("# speedup = dense_time / variant_time at the same geometry");
 
     // Representative layer: ViT-B/16 FFN up-projection (3072 x 768) — the
@@ -50,7 +62,7 @@ fn main() {
         let mut y = vec![0.0f32; BATCH * rows];
 
         let dense = bench(
-            || dense_matmul_blocked(&x, &w, BATCH, rows, cols, &mut y),
+            || dense_matmul_blocked_mt(&x, &w, BATCH, rows, cols, &mut y, threads),
             2,
             5,
             0.4,
@@ -79,15 +91,15 @@ fn main() {
                 let t_none = match st {
                     Structure::Block => {
                         let bc = compress_blocks(&w, &mask, 16);
-                        bench(|| block_matmul(&x, &bc, BATCH, &mut y), 2, 5, 0.25)
+                        bench(|| block_matmul_mt(&x, &bc, BATCH, &mut y, threads), 2, 5, 0.25)
                     }
                     Structure::Unstructured => {
                         let csr = csr_from_mask(&w, &mask);
-                        bench(|| csr_matmul(&x, &csr, BATCH, &mut y), 2, 5, 0.25)
+                        bench(|| csr_matmul_mt(&x, &csr, BATCH, &mut y, threads), 2, 5, 0.25)
                     }
                     _ => {
                         let rc = compress_rows(&w, &mask, k, None);
-                        bench(|| gather_matmul_batched(&x, &rc, BATCH, &mut y), 2, 5, 0.25)
+                        bench(|| gather_matmul_mt(&x, &rc, BATCH, &mut y, threads), 2, 5, 0.25)
                     }
                 };
 
@@ -106,11 +118,11 @@ fn main() {
                             c
                         };
                         let _ = &mut wp;
-                        bench(|| csr_matmul(&x, &csr, BATCH, &mut y), 2, 5, 0.25)
+                        bench(|| csr_matmul_mt(&x, &csr, BATCH, &mut y, threads), 2, 5, 0.25)
                     }
                     _ => {
                         let rc = compress_rows(&w, &mask, k, Some(&perm));
-                        bench(|| gather_matmul_batched(&x, &rc, BATCH, &mut y), 2, 5, 0.25)
+                        bench(|| gather_matmul_mt(&x, &rc, BATCH, &mut y, threads), 2, 5, 0.25)
                     }
                 };
 
@@ -122,7 +134,7 @@ fn main() {
                         bench(
                             || {
                                 shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
-                                block_matmul(&xp, &bc, BATCH, &mut y);
+                                block_matmul_mt(&xp, &bc, BATCH, &mut y, threads);
                             },
                             2,
                             5,
@@ -134,7 +146,7 @@ fn main() {
                         bench(
                             || {
                                 shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
-                                csr_matmul(&xp, &csr, BATCH, &mut y);
+                                csr_matmul_mt(&xp, &csr, BATCH, &mut y, threads);
                             },
                             2,
                             5,
@@ -146,7 +158,7 @@ fn main() {
                         bench(
                             || {
                                 shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
-                                gather_matmul_batched(&xp, &rc, BATCH, &mut y);
+                                gather_matmul_mt(&xp, &rc, BATCH, &mut y, threads);
                             },
                             2,
                             5,

@@ -25,8 +25,9 @@ fn main() -> anyhow::Result<()> {
         eprintln!("run `make artifacts` first");
         return Ok(());
     }
-    let mut rt = Runtime::open(dir)?;
-    println!("# Fig. 3 (training) / Tbl. 5: seconds per train step via PJRT");
+    let threads = padst::kernels::parallel::threads_from_env_or_args();
+    let mut rt = Runtime::open_with_threads(dir, threads)?;
+    println!("# Fig. 3 (training) / Tbl. 5: seconds per train step via PJRT (threads={threads})");
     println!(
         "{:<12} {:<14} {:>12} {:>10}",
         "model", "variant", "p50/step", "overhead"
@@ -79,6 +80,7 @@ fn time_variant(
         density: 0.1,
         perm_mode: perm_mode.to_string(),
         steps: 0,
+        threads: rt.threads,
         ..Default::default()
     };
     let entry = rt.manifest.models[model].clone();

@@ -1,14 +1,21 @@
 //! Kernel micro-benchmarks: GFLOP/s of every native kernel across shapes
 //! and densities — the profiling substrate for the §Perf iteration loop
 //! (EXPERIMENTS.md).  Run with `cargo bench --bench kernels`.
+//!
+//! The second half is the serial-vs-parallel comparison for the scoped-
+//! thread execution layer: each kernel at 1/2/4/max threads, speedup
+//! relative to its own serial path.  Thread ceiling: `--threads N` after
+//! `--`, or `PADST_THREADS`, else available parallelism.
 
+use padst::kernels::parallel::{available_threads, threads_from_env_or_args};
 use padst::kernels::{
-    block_matmul, csr_from_mask, csr_matmul, dense_matmul, dense_matmul_blocked,
-    gather_matmul, gather_matmul_batched, spmm_flops,
+    block_matmul, block_matmul_mt, csr_from_mask, csr_matmul, csr_matmul_mt, dense_matmul,
+    dense_matmul_blocked, dense_matmul_blocked_mt, gather_matmul, gather_matmul_batched,
+    gather_matmul_mt, spmm_flops,
 };
 use padst::sparsity::compress::{compress_blocks, compress_rows};
 use padst::sparsity::patterns::{make_mask, Structure};
-use padst::util::stats::{bench, fmt_time};
+use padst::util::stats::{bench, fmt_time, Summary};
 use padst::util::Rng;
 
 fn main() {
@@ -95,4 +102,86 @@ fn main() {
         }
         println!();
     }
+
+    parallel_scaling();
+}
+
+/// Serial vs parallel at the ViT-B/16 FFN geometry (the Fig. 3 headline
+/// layer): every `_mt` kernel across thread counts, speedup vs its own
+/// serial path.  The gather/block paths should clear 1x comfortably from
+/// 4 threads up; CSR is indirection-bound and scales worst — which is the
+/// paper's structured >> unstructured ordering, now with a thread axis.
+fn parallel_scaling() {
+    let max_threads = threads_from_env_or_args();
+    let mut counts = vec![1usize, 2, 4];
+    counts.retain(|&t| t <= max_threads);
+    if !counts.contains(&max_threads) {
+        counts.push(max_threads);
+    }
+
+    let (batch, rows, cols) = (64usize, 3072usize, 768usize);
+    let density = 0.1;
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0f32; batch * rows];
+
+    let dmask = make_mask(Structure::Diag, rows, cols, density, &mut rng);
+    let k = (0..dmask.rows).map(|i| dmask.row_nnz(i)).max().unwrap();
+    let rc = compress_rows(&w, &dmask, k, None);
+    let bmask = make_mask(Structure::Block, rows, cols, density, &mut rng);
+    let bc = compress_blocks(&w, &bmask, 16);
+    let umask = make_mask(Structure::Unstructured, rows, cols, density, &mut rng);
+    let csr = csr_from_mask(&w, &umask);
+
+    println!(
+        "# parallel scaling ({batch},{rows},{cols}) d={density}, ceiling {max_threads} threads"
+    );
+    println!("{:<26} {:>8} {:>12} {:>10}", "kernel", "threads", "p50", "vs serial");
+
+    let report = |name: &str, t: usize, s: &Summary, serial_p50: f64| {
+        println!(
+            "{:<26} {:>8} {:>12} {:>9.2}x",
+            name,
+            t,
+            fmt_time(s.p50),
+            serial_p50 / s.p50
+        );
+    };
+
+    let mut serial = 0.0f64;
+    for &t in &counts {
+        let s = bench(|| gather_matmul_mt(&x, &rc, batch, &mut y, t), 1, 3, 0.3);
+        if t == 1 {
+            serial = s.p50;
+        }
+        report("gather", t, &s, serial);
+    }
+    for &t in &counts {
+        let s = bench(|| block_matmul_mt(&x, &bc, batch, &mut y, t), 1, 3, 0.3);
+        if t == 1 {
+            serial = s.p50;
+        }
+        report("block", t, &s, serial);
+    }
+    for &t in &counts {
+        let s = bench(|| csr_matmul_mt(&x, &csr, batch, &mut y, t), 1, 3, 0.3);
+        if t == 1 {
+            serial = s.p50;
+        }
+        report("csr", t, &s, serial);
+    }
+    for &t in &counts {
+        let s = bench(
+            || dense_matmul_blocked_mt(&x, &w, batch, rows, cols, &mut y, t),
+            1,
+            3,
+            0.3,
+        );
+        if t == 1 {
+            serial = s.p50;
+        }
+        report("dense_blocked", t, &s, serial);
+    }
+    println!("# (available parallelism on this machine: {})", available_threads());
 }

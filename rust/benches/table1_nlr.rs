@@ -2,18 +2,23 @@
 //! and the worked examples, and time the bound evaluation itself (the NLR
 //! calculator is also library API, so it gets a perf row).
 
+use padst::kernels::parallel::threads_from_env_or_args;
 use padst::nlr::{
-    effective_dims_var, layer_factor_u128, log10_nlr_bound, nlr_bound_u128, table1_rows, Setting,
+    effective_dims_var, layer_factor_u128, log10_nlr_bound, nlr_bound_u128, table1_rows_mt,
+    Setting,
 };
 use padst::util::stats::{bench, fmt_time};
 
 fn main() {
     // --- Table 1 at the paper's ViT-L/16 surrogate geometry -------------
+    let threads = threads_from_env_or_args();
     let d0 = 1024;
     let widths: Vec<usize> = (0..48).map(|i| if i % 2 == 0 { 4096 } else { 1024 }).collect();
-    println!("# Table 1: NLR lower bounds, ViT-L surrogate (d0=1024, 48 layers, density 5%)");
+    println!(
+        "# Table 1: NLR lower bounds, ViT-L surrogate (d0=1024, 48 layers, density 5%, threads={threads})"
+    );
     println!("{:<40} {:>14} {:>12}", "setting", "log10 NLR", "overhead");
-    for row in table1_rows(d0, &widths, 0.05) {
+    for row in table1_rows_mt(d0, &widths, 0.05, threads) {
         println!(
             "{:<40} {:>14.1} {:>12}",
             row.setting,

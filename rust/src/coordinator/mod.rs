@@ -5,9 +5,9 @@
 //! the AOT `train_step` artifact from the named [`TrainState`], executes it
 //! on PJRT, writes the outputs back, and consults two controllers:
 //!
-//! * the **DST scheduler** ([`dst_sched`]) — fires the `dst_update`
-//!   artifact every `dst_every` steps with RigL's cosine-decayed update
-//!   fraction until `dst_end_frac` of the run (Evci et al. 2020);
+//! * the **DST scheduler** — fires the `dst_update` artifact every
+//!   `dst_every` steps with RigL's cosine-decayed update fraction until
+//!   `dst_end_frac` of the run (Evci et al. 2020);
 //! * the **permutation-hardening controller** ([`perm_ctrl`]) — tracks the
 //!   per-layer AutoShuffle penalty, and when a layer's normalised penalty
 //!   crosses the threshold delta it decodes the soft matrix to a hard
@@ -69,6 +69,11 @@ pub struct RunConfig {
     pub eval_every: usize,
     pub seed: u64,
     pub verbose: bool,
+    /// Worker-thread budget (0 = auto, 1 = serial).  Propagated to the
+    /// `Runtime` and honoured by the native parallel-kernel paths;
+    /// artifact execution runs under PJRT's own pool until the intra-op
+    /// wiring lands (ROADMAP).
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -89,6 +94,7 @@ impl Default for RunConfig {
             eval_every: 50,
             seed: 0,
             verbose: false,
+            threads: 0,
         }
     }
 }
@@ -157,6 +163,9 @@ pub struct Trainer<'rt> {
 
 impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt mut Runtime, cfg: RunConfig) -> Trainer<'rt> {
+        // The run's thread budget wins over whatever the runtime was opened
+        // with, so sweep cells with different --threads behave as asked.
+        rt.set_threads(cfg.threads);
         Trainer { rt, cfg }
     }
 

@@ -59,7 +59,12 @@ pub struct SweepCell {
     pub result: RunResult,
 }
 
-/// Run `methods` x `sparsities` on `model`; returns all cells.
+/// Run `methods` x `sparsities` on `model`; returns all cells.  `threads`
+/// is the per-run worker budget (0 = auto), recorded on every cell's
+/// `RunConfig` and pushed to the shared `Runtime` so all cells advertise
+/// the same budget.  Note: artifact execution currently runs under PJRT's
+/// own thread pool (intra-op wiring is a ROADMAP item); today the knob
+/// governs the native parallel-kernel paths.
 #[allow(clippy::too_many_arguments)]
 pub fn run_sweep(
     rt: &mut Runtime,
@@ -69,6 +74,7 @@ pub fn run_sweep(
     steps: usize,
     seed: u64,
     verbose: bool,
+    threads: usize,
 ) -> Result<Vec<SweepCell>> {
     let mut cells = Vec::new();
     for m in methods {
@@ -83,6 +89,7 @@ pub fn run_sweep(
                 grow_mode: m.grow_mode,
                 seed,
                 verbose,
+                threads,
                 ..Default::default()
             };
             let mut tr = Trainer::new(rt, cfg);

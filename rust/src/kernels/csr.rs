@@ -42,6 +42,18 @@ pub fn csr_from_mask(w: &[f32], mask: &Mask) -> Csr {
     Csr { rows, cols, row_ptr, col_idx, vals }
 }
 
+/// One CSR row's dot product.  Shared by the serial and parallel paths so
+/// the reduction order — and the f32 result — is identical in both.
+#[inline(always)]
+pub(crate) fn csr_row_dot(csr: &Csr, i: usize, xb: &[f32]) -> f32 {
+    let (s, e) = (csr.row_ptr[i], csr.row_ptr[i + 1]);
+    let mut acc = 0.0f32;
+    for nz in s..e {
+        acc += csr.vals[nz] * xb[csr.col_idx[nz] as usize];
+    }
+    acc
+}
+
 /// y[b, i] = sum_{nz in row i} vals[nz] * x[b, col_idx[nz]].
 pub fn csr_matmul(x: &[f32], csr: &Csr, batch: usize, y: &mut [f32]) {
     let (rows, cols) = (csr.rows, csr.cols);
@@ -50,13 +62,8 @@ pub fn csr_matmul(x: &[f32], csr: &Csr, batch: usize, y: &mut [f32]) {
     for b in 0..batch {
         let xb = &x[b * cols..(b + 1) * cols];
         let yb = &mut y[b * rows..(b + 1) * rows];
-        for i in 0..rows {
-            let (s, e) = (csr.row_ptr[i], csr.row_ptr[i + 1]);
-            let mut acc = 0.0f32;
-            for nz in s..e {
-                acc += csr.vals[nz] * xb[csr.col_idx[nz] as usize];
-            }
-            yb[i] = acc;
+        for (i, yv) in yb.iter_mut().enumerate() {
+            *yv = csr_row_dot(csr, i, xb);
         }
     }
 }

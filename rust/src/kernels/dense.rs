@@ -30,6 +30,46 @@ pub fn dense_matmul(
     }
 }
 
+/// Register-blocked panel: `y_out[i] = dot(w_rows[i], xb)` for a contiguous
+/// run of output rows, 4 rows per register block.  Each output element is a
+/// single accumulator walked in `j` order, so results do not depend on the
+/// blocking phase — sharding a row range across threads and re-running this
+/// panel on each chunk reproduces the serial numbers bit-for-bit.
+#[inline(always)]
+pub(crate) fn dense_rows_blocked(xb: &[f32], w_rows: &[f32], cols: usize, y_out: &mut [f32]) {
+    const RB: usize = 4;
+    let rows = y_out.len();
+    debug_assert_eq!(w_rows.len(), rows * cols);
+    let mut i = 0;
+    while i + RB <= rows {
+        let w0 = &w_rows[i * cols..(i + 1) * cols];
+        let w1 = &w_rows[(i + 1) * cols..(i + 2) * cols];
+        let w2 = &w_rows[(i + 2) * cols..(i + 3) * cols];
+        let w3 = &w_rows[(i + 3) * cols..(i + 4) * cols];
+        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for (j, &xv) in xb.iter().enumerate() {
+            a0 += w0[j] * xv;
+            a1 += w1[j] * xv;
+            a2 += w2[j] * xv;
+            a3 += w3[j] * xv;
+        }
+        y_out[i] = a0;
+        y_out[i + 1] = a1;
+        y_out[i + 2] = a2;
+        y_out[i + 3] = a3;
+        i += RB;
+    }
+    while i < rows {
+        let wi = &w_rows[i * cols..(i + 1) * cols];
+        let mut acc = 0.0f32;
+        for (wv, xv) in wi.iter().zip(xb) {
+            acc += wv * xv;
+        }
+        y_out[i] = acc;
+        i += 1;
+    }
+}
+
 /// Production dense baseline: 4-row register blocking + 8-wide unrolled
 /// inner loop (auto-vectorises to SSE/AVX on x86).
 pub fn dense_matmul_blocked(
@@ -43,38 +83,9 @@ pub fn dense_matmul_blocked(
     debug_assert_eq!(x.len(), batch * cols);
     debug_assert_eq!(w.len(), rows * cols);
     debug_assert_eq!(y.len(), batch * rows);
-    const RB: usize = 4;
     for b in 0..batch {
         let xb = &x[b * cols..(b + 1) * cols];
-        let mut i = 0;
-        while i + RB <= rows {
-            let w0 = &w[i * cols..(i + 1) * cols];
-            let w1 = &w[(i + 1) * cols..(i + 2) * cols];
-            let w2 = &w[(i + 2) * cols..(i + 3) * cols];
-            let w3 = &w[(i + 3) * cols..(i + 4) * cols];
-            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for j in 0..cols {
-                let xv = xb[j];
-                a0 += w0[j] * xv;
-                a1 += w1[j] * xv;
-                a2 += w2[j] * xv;
-                a3 += w3[j] * xv;
-            }
-            y[b * rows + i] = a0;
-            y[b * rows + i + 1] = a1;
-            y[b * rows + i + 2] = a2;
-            y[b * rows + i + 3] = a3;
-            i += RB;
-        }
-        while i < rows {
-            let wi = &w[i * cols..(i + 1) * cols];
-            let mut acc = 0.0f32;
-            for j in 0..cols {
-                acc += wi[j] * xb[j];
-            }
-            y[b * rows + i] = acc;
-            i += 1;
-        }
+        dense_rows_blocked(xb, w, cols, &mut y[b * rows..(b + 1) * rows]);
     }
 }
 

@@ -11,6 +11,29 @@
 
 use crate::sparsity::compress::{BlockCompressed, RowCompressed};
 
+/// One output row's gather dot product, 4-wide unrolled (the index stream
+/// is the only indirection).  Shared by the serial and parallel paths so
+/// their reduction order — and therefore their f32 results — are
+/// bit-identical by construction.
+#[inline(always)]
+pub(crate) fn gather_row_dot(vals: &[f32], idx: &[i32], xb: &[f32]) -> f32 {
+    let k = vals.len();
+    debug_assert_eq!(idx.len(), k);
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut s = 0;
+    while s + 4 <= k {
+        acc0 += vals[s] * xb[idx[s] as usize] + vals[s + 1] * xb[idx[s + 1] as usize];
+        acc1 += vals[s + 2] * xb[idx[s + 2] as usize] + vals[s + 3] * xb[idx[s + 3] as usize];
+        s += 4;
+    }
+    while s < k {
+        acc0 += vals[s] * xb[idx[s] as usize];
+        s += 1;
+    }
+    acc0 + acc1
+}
+
 /// y[b, i] = sum_s vals[i, s] * x[b, idx[i, s]].
 pub fn gather_matmul(x: &[f32], rc: &RowCompressed, batch: usize, y: &mut [f32]) {
     let (rows, cols, k) = (rc.rows, rc.cols, rc.k);
@@ -19,25 +42,8 @@ pub fn gather_matmul(x: &[f32], rc: &RowCompressed, batch: usize, y: &mut [f32])
     for b in 0..batch {
         let xb = &x[b * cols..(b + 1) * cols];
         let yb = &mut y[b * rows..(b + 1) * rows];
-        for i in 0..rows {
-            let vals = &rc.vals[i * k..(i + 1) * k];
-            let idx = &rc.idx[i * k..(i + 1) * k];
-            // 4-wide unroll: the index stream is the only indirection.
-            let mut acc0 = 0.0f32;
-            let mut acc1 = 0.0f32;
-            let mut s = 0;
-            while s + 4 <= k {
-                acc0 += vals[s] * xb[idx[s] as usize]
-                    + vals[s + 1] * xb[idx[s + 1] as usize];
-                acc1 += vals[s + 2] * xb[idx[s + 2] as usize]
-                    + vals[s + 3] * xb[idx[s + 3] as usize];
-                s += 4;
-            }
-            while s < k {
-                acc0 += vals[s] * xb[idx[s] as usize];
-                s += 1;
-            }
-            yb[i] = acc0 + acc1;
+        for (i, yv) in yb.iter_mut().enumerate() {
+            *yv = gather_row_dot(&rc.vals[i * k..(i + 1) * k], &rc.idx[i * k..(i + 1) * k], xb);
         }
     }
 }
@@ -80,34 +86,45 @@ pub fn gather_matmul_batched(x: &[f32], rc: &RowCompressed, batch: usize, y: &mu
     }
 }
 
+/// One block-row of the block-sparse product: `ys` (length `bs`) receives
+/// the contributions of block-row `bi` against the single batch row `xb`.
+/// Active blocks accumulate in storage order, so any scheduling that calls
+/// this per (batch, block-row) unit — serial or sharded across threads —
+/// produces bit-identical sums.
+#[inline(always)]
+pub(crate) fn block_row_matmul(xb: &[f32], bc: &BlockCompressed, bi: usize, ys: &mut [f32]) {
+    let (bs, nab) = (bc.bs, bc.nab);
+    debug_assert_eq!(ys.len(), bs);
+    ys.fill(0.0);
+    for a in 0..nab {
+        let jb = bc.block_cols[bi * nab + a];
+        if jb < 0 {
+            continue;
+        }
+        let xs = &xb[jb as usize * bs..(jb as usize + 1) * bs];
+        let blk = &bc.blocks[(bi * nab + a) * bs * bs..(bi * nab + a + 1) * bs * bs];
+        for (r, yv) in ys.iter_mut().enumerate() {
+            let wr = &blk[r * bs..(r + 1) * bs];
+            let mut acc = 0.0f32;
+            for (wv, xv) in wr.iter().zip(xs) {
+                acc += wv * xv;
+            }
+            *yv += acc;
+        }
+    }
+}
+
 /// Block-sparse y = x @ W^T over [`BlockCompressed`].
 pub fn block_matmul(x: &[f32], bc: &BlockCompressed, batch: usize, y: &mut [f32]) {
-    let (rows, cols, bs, nab) = (bc.rows, bc.cols, bc.bs, bc.nab);
+    let (rows, cols, bs) = (bc.rows, bc.cols, bc.bs);
     let br = rows / bs;
     debug_assert_eq!(x.len(), batch * cols);
     debug_assert_eq!(y.len(), batch * rows);
-    y.fill(0.0);
     for b in 0..batch {
         let xb = &x[b * cols..(b + 1) * cols];
         let yb = &mut y[b * rows..(b + 1) * rows];
         for bi in 0..br {
-            for a in 0..nab {
-                let jb = bc.block_cols[bi * nab + a];
-                if jb < 0 {
-                    continue;
-                }
-                let xs = &xb[jb as usize * bs..(jb as usize + 1) * bs];
-                let blk = &bc.blocks[(bi * nab + a) * bs * bs..(bi * nab + a + 1) * bs * bs];
-                let ys = &mut yb[bi * bs..(bi + 1) * bs];
-                for r in 0..bs {
-                    let wr = &blk[r * bs..(r + 1) * bs];
-                    let mut acc = 0.0f32;
-                    for c in 0..bs {
-                        acc += wr[c] * xs[c];
-                    }
-                    ys[r] += acc;
-                }
-            }
+            block_row_matmul(xb, bc, bi, &mut yb[bi * bs..(bi + 1) * bs]);
         }
     }
 }

@@ -13,15 +13,22 @@
 //! `x: (batch, cols)`, `W: (rows, cols)`, matching the model's linears.
 //! Each has a `*_permuted` variant taking the input permutation either as
 //! a pre-composed index stream (re-indexing) or as an explicit shuffle
-//! pass (the strawman the paper compares against).
+//! pass (the strawman the paper compares against), and a `*_mt` variant
+//! (see [`parallel`]) that shards the output across scoped threads with
+//! bit-identical results.
 
 pub mod csr;
 pub mod dense;
 pub mod gather;
+pub mod parallel;
 
 pub use csr::{csr_from_mask, csr_matmul, Csr};
 pub use dense::{dense_matmul, dense_matmul_blocked, shuffle_rows};
 pub use gather::{block_matmul, gather_matmul, gather_matmul_batched};
+pub use parallel::{
+    available_threads, block_matmul_mt, csr_matmul_mt, dense_matmul_blocked_mt,
+    gather_matmul_mt, parallel_map, resolve_threads,
+};
 
 /// FLOPs of one sparse GEMM at the given geometry (2 * batch * nnz).
 pub fn spmm_flops(batch: usize, nnz: usize) -> usize {

@@ -1,0 +1,335 @@
+//! Scoped-thread execution layer for the native kernels.
+//!
+//! The paper's speedup story ("trains up to 1.21x and infers up to 2.9x
+//! faster") assumes the structured kernels exploit hardware parallelism;
+//! the serial kernels in this module's siblings leave every core but one
+//! idle.  This layer shards the four hot GEMMs — [`gather_matmul`],
+//! [`csr_matmul`], [`block_matmul`] and [`dense_matmul_blocked`] — across
+//! output rows x batch using `std::thread::scope` (no extra dependencies,
+//! no persistent pool to manage).
+//!
+//! **Determinism contract:** every output element is a per-row reduction
+//! whose accumulation order is fixed by the shared row helpers
+//! (`gather_row_dot`, `csr_row_dot`, `dense_rows_blocked`,
+//! `block_row_matmul`).  Sharding only changes *which thread* computes an
+//! element, never the order of the f32 additions inside it, so the
+//! parallel results are bit-identical to the serial kernels for any thread
+//! count.  `tests/parallel_kernels.rs` pins this with `to_bits` equality.
+//!
+//! Thread-count convention used across the crate (CLI `--threads`,
+//! `RunConfig::threads`, `Runtime::threads`, `PADST_THREADS`): `0` means
+//! "auto" (available parallelism), `1` forces the serial path, `n > 1`
+//! spawns at most `n` workers (never more than there are shard units).
+
+use std::thread;
+
+use crate::sparsity::compress::{BlockCompressed, RowCompressed};
+
+use super::csr::{csr_matmul, csr_row_dot, Csr};
+use super::dense::{dense_matmul_blocked, dense_rows_blocked};
+use super::gather::{block_matmul, block_row_matmul, gather_matmul, gather_row_dot};
+
+/// The machine's available parallelism (>= 1).
+pub fn available_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a thread knob: 0 = auto (available parallelism).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        available_threads()
+    } else {
+        threads
+    }
+}
+
+/// Thread count for benches: `--threads N` argv (cargo bench forwards args
+/// after `--`), else `PADST_THREADS`, else available parallelism.
+pub fn threads_from_env_or_args() -> usize {
+    let argv: Vec<String> = std::env::args().collect();
+    if let Some(p) = argv.iter().position(|a| a == "--threads") {
+        if let Some(n) = argv.get(p + 1).and_then(|v| v.parse::<usize>().ok()) {
+            return resolve_threads(n);
+        }
+    }
+    if let Ok(v) = std::env::var("PADST_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return resolve_threads(n);
+        }
+    }
+    available_threads()
+}
+
+/// Split `y` into at most `threads` contiguous chunks aligned to `unit`
+/// elements and run `f(first_unit_index, chunk)` on scoped threads.  Unit
+/// counts differ by at most one across chunks, so load stays balanced for
+/// uniform-cost units (every kernel here has uniform per-unit cost).
+fn shard_units<F>(y: &mut [f32], unit: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(y.len() % unit.max(1), 0);
+    let n_units = y.len() / unit.max(1);
+    let threads = threads.clamp(1, n_units.max(1));
+    if threads == 1 {
+        f(0, y);
+        return;
+    }
+    let base = n_units / threads;
+    let extra = n_units % threads;
+    thread::scope(|scope| {
+        let fref = &f;
+        let mut rest = y;
+        let mut u0 = 0usize;
+        for t in 0..threads {
+            let units = base + usize::from(t < extra);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(units * unit);
+            rest = tail;
+            let first = u0;
+            scope.spawn(move || fref(first, chunk));
+            u0 += units;
+        }
+    });
+}
+
+/// Parallel [`gather_matmul`]: output elements sharded across
+/// `batch * rows`.  Bit-identical to the serial kernel.
+pub fn gather_matmul_mt(
+    x: &[f32],
+    rc: &RowCompressed,
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+) {
+    let threads = resolve_threads(threads);
+    if threads <= 1 {
+        gather_matmul(x, rc, batch, y);
+        return;
+    }
+    let (rows, cols, k) = (rc.rows, rc.cols, rc.k);
+    debug_assert_eq!(x.len(), batch * cols);
+    debug_assert_eq!(y.len(), batch * rows);
+    shard_units(y, 1, threads, |u0, chunk| {
+        // Walk the chunk as (batch-row, row-range) panels so the division
+        // and the x reslice happen once per panel, not per element.
+        let mut p = u0;
+        let mut off = 0;
+        while off < chunk.len() {
+            let (b, i0) = (p / rows, p % rows);
+            let take = (rows - i0).min(chunk.len() - off);
+            let xb = &x[b * cols..(b + 1) * cols];
+            for (d, yv) in chunk[off..off + take].iter_mut().enumerate() {
+                let i = i0 + d;
+                *yv =
+                    gather_row_dot(&rc.vals[i * k..(i + 1) * k], &rc.idx[i * k..(i + 1) * k], xb);
+            }
+            p += take;
+            off += take;
+        }
+    });
+}
+
+/// Parallel [`csr_matmul`]: output elements sharded across `batch * rows`.
+/// Bit-identical to the serial kernel.
+pub fn csr_matmul_mt(x: &[f32], csr: &Csr, batch: usize, y: &mut [f32], threads: usize) {
+    let threads = resolve_threads(threads);
+    if threads <= 1 {
+        csr_matmul(x, csr, batch, y);
+        return;
+    }
+    let (rows, cols) = (csr.rows, csr.cols);
+    debug_assert_eq!(x.len(), batch * cols);
+    debug_assert_eq!(y.len(), batch * rows);
+    shard_units(y, 1, threads, |u0, chunk| {
+        let mut p = u0;
+        let mut off = 0;
+        while off < chunk.len() {
+            let (b, i0) = (p / rows, p % rows);
+            let take = (rows - i0).min(chunk.len() - off);
+            let xb = &x[b * cols..(b + 1) * cols];
+            for (d, yv) in chunk[off..off + take].iter_mut().enumerate() {
+                *yv = csr_row_dot(csr, i0 + d, xb);
+            }
+            p += take;
+            off += take;
+        }
+    });
+}
+
+/// Parallel [`block_matmul`]: sharded across `batch * block_rows`, chunk
+/// boundaries aligned to whole block-rows.  Bit-identical to the serial
+/// kernel (each block-row accumulates its active blocks in storage order).
+pub fn block_matmul_mt(
+    x: &[f32],
+    bc: &BlockCompressed,
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+) {
+    let threads = resolve_threads(threads);
+    if threads <= 1 {
+        block_matmul(x, bc, batch, y);
+        return;
+    }
+    let (rows, cols, bs) = (bc.rows, bc.cols, bc.bs);
+    let br = rows / bs;
+    debug_assert_eq!(x.len(), batch * cols);
+    debug_assert_eq!(y.len(), batch * rows);
+    shard_units(y, bs, threads, |u0, chunk| {
+        for (d, ys) in chunk.chunks_mut(bs).enumerate() {
+            let u = u0 + d;
+            let (b, bi) = (u / br, u % br);
+            block_row_matmul(&x[b * cols..(b + 1) * cols], bc, bi, ys);
+        }
+    });
+}
+
+/// Parallel [`dense_matmul_blocked`]: output elements sharded across
+/// `batch * rows`; each chunk is decomposed into per-batch row panels and
+/// handed to the same register-blocked inner loop as the serial kernel, so
+/// results are bit-identical.
+pub fn dense_matmul_blocked_mt(
+    x: &[f32],
+    w: &[f32],
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    y: &mut [f32],
+    threads: usize,
+) {
+    let threads = resolve_threads(threads);
+    if threads <= 1 {
+        dense_matmul_blocked(x, w, batch, rows, cols, y);
+        return;
+    }
+    debug_assert_eq!(x.len(), batch * cols);
+    debug_assert_eq!(w.len(), rows * cols);
+    debug_assert_eq!(y.len(), batch * rows);
+    shard_units(y, 1, threads, |u0, chunk| {
+        let mut p = u0;
+        let mut off = 0;
+        while off < chunk.len() {
+            let (b, i0) = (p / rows, p % rows);
+            let take = (rows - i0).min(chunk.len() - off);
+            let xb = &x[b * cols..(b + 1) * cols];
+            dense_rows_blocked(
+                xb,
+                &w[i0 * cols..(i0 + take) * cols],
+                cols,
+                &mut chunk[off..off + take],
+            );
+            p += take;
+            off += take;
+        }
+    });
+}
+
+/// Order-preserving parallel map over owned items with at most `threads`
+/// workers (0 = auto).  Used by the coordinator/CLI for embarrassingly
+/// parallel host-side work (NLR table rows, per-site compression).
+pub fn parallel_map<T, U, F>(items: Vec<T>, threads: usize, f: F) -> Vec<U>
+where
+    T: Send,
+    U: Send,
+    F: Fn(T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = resolve_threads(threads).clamp(1, n.max(1));
+    if threads == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<T>> = items.into_iter().map(Some).collect();
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let base = n / threads;
+    let extra = n % threads;
+    thread::scope(|scope| {
+        let fref = &f;
+        let mut in_rest = slots.as_mut_slice();
+        let mut out_rest = out.as_mut_slice();
+        for t in 0..threads {
+            let len = base + usize::from(t < extra);
+            let (in_chunk, in_tail) = std::mem::take(&mut in_rest).split_at_mut(len);
+            let (out_chunk, out_tail) = std::mem::take(&mut out_rest).split_at_mut(len);
+            in_rest = in_tail;
+            out_rest = out_tail;
+            scope.spawn(move || {
+                for (slot_in, slot_out) in in_chunk.iter_mut().zip(out_chunk) {
+                    *slot_out = Some(fref(slot_in.take().expect("item taken twice")));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|u| u.expect("worker missed a slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::csr_from_mask;
+    use crate::sparsity::compress::{compress_blocks, compress_rows};
+    use crate::sparsity::patterns::{make_block_mask, make_diag_mask, make_unstructured_mask};
+    use crate::util::Rng;
+
+    #[test]
+    fn resolve_zero_is_auto() {
+        assert_eq!(resolve_threads(0), available_threads());
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..37).collect();
+        for threads in [1, 2, 5, 64] {
+            let got = parallel_map(items.clone(), threads, |i| i * i);
+            let want: Vec<usize> = items.iter().map(|&i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn shard_units_covers_everything_once() {
+        let mut y = vec![0.0f32; 103];
+        shard_units(&mut y, 1, 7, |u0, chunk| {
+            for (d, v) in chunk.iter_mut().enumerate() {
+                *v += (u0 + d) as f32;
+            }
+        });
+        for (i, &v) in y.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+    }
+
+    /// Smoke-level bitwise check (the exhaustive sweep lives in
+    /// tests/parallel_kernels.rs).
+    #[test]
+    fn mt_kernels_match_serial_bitwise() {
+        let mut rng = Rng::new(77);
+        let (batch, rows, cols) = (5, 64, 96);
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+
+        let dm = make_diag_mask(rows, cols, 7, &mut rng);
+        let rc = compress_rows(&w, &dm, 7, None);
+        let mut ys = vec![0.0f32; batch * rows];
+        let mut ym = vec![0.0f32; batch * rows];
+        gather_matmul(&x, &rc, batch, &mut ys);
+        gather_matmul_mt(&x, &rc, batch, &mut ym, 3);
+        assert!(ys.iter().zip(&ym).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        let um = make_unstructured_mask(rows, cols, 0.2, &mut rng);
+        let csr = csr_from_mask(&w, &um);
+        csr_matmul(&x, &csr, batch, &mut ys);
+        csr_matmul_mt(&x, &csr, batch, &mut ym, 3);
+        assert!(ys.iter().zip(&ym).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        let bm = make_block_mask(rows, cols, 0.25, 16, &mut rng);
+        let bc = compress_blocks(&w, &bm, 16);
+        block_matmul(&x, &bc, batch, &mut ys);
+        block_matmul_mt(&x, &bc, batch, &mut ym, 3);
+        assert!(ys.iter().zip(&ym).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        dense_matmul_blocked(&x, &w, batch, rows, cols, &mut ys);
+        dense_matmul_blocked_mt(&x, &w, batch, rows, cols, &mut ym, 3);
+        assert!(ys.iter().zip(&ym).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+}

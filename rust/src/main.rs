@@ -83,20 +83,24 @@ train:
   --dst-every 25  --harden-threshold 0.22
   --grow rigl|set|mest    unstructured grow rule
   --artifacts DIR         artifact directory (default artifacts)
+  --threads N             worker threads (default: available parallelism)
 
 sweep:
   --model ...  --steps N  --sparsities 0.6,0.9  --methods RigL,DynaDiag+PA
   --csv PATH              dump results as CSV
+  --threads N             worker threads shared by every cell
 
 nlr:
   --d0 1024 --widths 4096,1024x24 --density 0.05   Table-1 style bounds
+  --threads N             parallel bound evaluation (default: auto)
 "
     );
     std::process::exit(2);
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let mut rt = Runtime::open(&artifacts_dir(args))?;
+    let threads = args.get_usize("threads", 0)?; // 0 = auto
+    let mut rt = Runtime::open_with_threads(&artifacts_dir(args), threads)?;
     let sparsity = args.get_f64("sparsity", 0.9)?;
     let structure = Structure::parse(&args.get("structure", "diag"))
         .ok_or_else(|| anyhow!("bad --structure"))?;
@@ -120,6 +124,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         grow_mode,
         seed: args.get_usize("seed", 0)? as u64,
         verbose: true,
+        threads,
         ..Default::default()
     };
     eprintln!("[padst] {cfg:?}");
@@ -138,7 +143,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let mut rt = Runtime::open(&artifacts_dir(args))?;
+    let threads = args.get_usize("threads", 0)?; // 0 = auto
+    let mut rt = Runtime::open_with_threads(&artifacts_dir(args), threads)?;
     let model = args.get("model", "vit_tiny");
     let steps = args.get_usize("steps", 150)?;
     let sparsities: Vec<f64> = args
@@ -159,6 +165,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         steps,
         args.get_usize("seed", 0)? as u64,
         true,
+        threads,
     )?;
     let kind = rt.manifest.models[&model].kind.clone();
     sweep::print_table(&model, &kind, &cells, &sparsities);
@@ -170,6 +177,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_nlr(args: &Args) -> Result<()> {
+    let threads = args.get_usize("threads", 0)?; // 0 = auto
     let d0 = args.get_usize("d0", 1024)?;
     let density = args.get_f64("density", 0.05)?;
     // widths syntax: "4096,1024x24" = (4096, 1024) repeated 24 times.
@@ -182,7 +190,7 @@ fn cmd_nlr(args: &Args) -> Result<()> {
     let widths: Vec<usize> = (0..reps).flat_map(|_| base.iter().copied()).collect();
     println!("NLR lower bounds (log10), d0={d0}, density={density}, L={}:", widths.len());
     println!("{:<36} {:>14} {:>12}", "setting", "log10 NLR", "overhead");
-    for row in nlr::table1_rows(d0, &widths, density) {
+    for row in nlr::table1_rows_mt(d0, &widths, density, threads) {
         println!(
             "{:<36} {:>14.1} {:>12}",
             row.setting,

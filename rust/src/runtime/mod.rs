@@ -5,14 +5,26 @@
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`) — the
 //! image's xla_extension 0.5.1 rejects jax>=0.5 serialized protos with
 //! 64-bit instruction ids, while the text parser reassigns ids cleanly.
+//!
+//! The backend is swappable at compile time: with the `pjrt` feature the
+//! real `xla` bindings are used; without it the [`pjrt_stub`] module
+//! provides the same API and fails with a descriptive error when artifact
+//! execution is attempted (host-only paths — native kernels, NLR tables,
+//! mask algebra — never touch it).
 
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt_stub;
+
+#[cfg(not(feature = "pjrt"))]
+use self::pjrt_stub as xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::kernels::parallel::available_threads;
 use crate::tensor::{DType, Data, Tensor};
 use manifest::{Manifest, ProgramSpec};
 
@@ -29,18 +41,45 @@ pub struct Program {
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
+    /// Worker-thread budget advertised to consumers of this runtime.
+    /// Honoured today by the native parallel-kernel paths
+    /// ([`crate::kernels::parallel`]); artifact execution still runs under
+    /// PJRT's own pool — wiring this into the client's intra-op
+    /// parallelism is a ROADMAP open item.  Defaults to the machine's
+    /// available parallelism; 1 means serial.
+    pub threads: usize,
     dir: PathBuf,
     cache: HashMap<String, std::rc::Rc<Program>>,
 }
 
 impl Runtime {
-    /// Open the artifact directory (usually `artifacts/`) and its manifest.
+    /// Open the artifact directory (usually `artifacts/`) and its manifest,
+    /// with the default thread budget (available parallelism).
     pub fn open(dir: &Path) -> Result<Runtime> {
+        Self::open_with_threads(dir, available_threads())
+    }
+
+    /// [`Runtime::open`] with an explicit worker-thread budget (0 = auto).
+    pub fn open_with_threads(dir: &Path, threads: usize) -> Result<Runtime> {
         let manifest = Manifest::load(&dir.join("manifest.json"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client, manifest, dir: dir.to_path_buf(), cache: HashMap::new() })
+        let threads = if threads == 0 { available_threads() } else { threads };
+        Ok(Runtime {
+            client,
+            manifest,
+            threads,
+            dir: dir.to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Re-budget the worker threads (0 = auto).  Takes effect for native
+    /// kernel calls issued after this point; compiled programs are
+    /// unaffected (PJRT pins its pool at client creation).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = if threads == 0 { available_threads() } else { threads };
     }
 
     /// Compile (or fetch from cache) an artifact by name.

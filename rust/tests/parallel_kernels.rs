@@ -1,0 +1,169 @@
+//! Property tests for the scoped-thread kernel execution layer
+//! (`padst::kernels::parallel`): for every structure family and random
+//! geometry, the parallel kernels must reproduce the serial kernels
+//! **bit-for-bit** (`f32::to_bits` equality, not epsilon closeness) at 1,
+//! 2, and 8 threads.  This is the determinism contract that lets the
+//! Fig. 3 benches and the coordinator switch thread counts without
+//! changing a single reproduced number.
+//!
+//! Hand-rolled generator pattern (no proptest in the offline build): every
+//! case prints its seed on failure for reproduction, mirroring
+//! tests/prop_invariants.rs.
+
+use padst::kernels::{
+    block_matmul, block_matmul_mt, csr_from_mask, csr_matmul, csr_matmul_mt, dense_matmul_blocked,
+    dense_matmul_blocked_mt, gather_matmul, gather_matmul_mt,
+};
+use padst::sparsity::compress::{compress_blocks, compress_rows};
+use padst::sparsity::patterns::{make_mask, Structure};
+use padst::util::Rng;
+
+const CASES: usize = 30;
+const THREADS: [usize; 3] = [1, 2, 8];
+
+/// Dims divisible by the block size 16, so every family (incl. block and
+/// N:M group-16) is valid at every drawn geometry.
+fn arb_dims(rng: &mut Rng) -> (usize, usize, usize) {
+    let batch = [1usize, 2, 3, 5, 8, 64][rng.below(6)];
+    let rows = [16usize, 32, 48, 64, 96][rng.below(5)];
+    let cols = [16usize, 32, 64, 96, 128][rng.below(5)];
+    (batch, rows, cols)
+}
+
+fn assert_bits_eq(serial: &[f32], parallel: &[f32], what: &str) {
+    assert_eq!(serial.len(), parallel.len(), "{what}: length mismatch");
+    for (p, (a, b)) in serial.iter().zip(parallel).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: element {p} differs ({a} vs {b})"
+        );
+    }
+}
+
+#[test]
+fn prop_gather_matmul_mt_bit_identical() {
+    let mut meta = Rng::new(0x6A7);
+    for case in 0..CASES {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let (batch, rows, cols) = arb_dims(&mut rng);
+        let density = [0.05, 0.1, 0.25][rng.below(3)];
+        // Diag exercises the row-gather form; N:M and butterfly share it.
+        let st = [Structure::Diag, Structure::NM, Structure::Butterfly][rng.below(3)];
+        let mask = make_mask(st, rows, cols, density, &mut rng);
+        let k = (0..rows).map(|i| mask.row_nnz(i)).max().unwrap();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+        let rc = compress_rows(&w, &mask, k, None);
+
+        let mut ys = vec![0.0f32; batch * rows];
+        gather_matmul(&x, &rc, batch, &mut ys);
+        for threads in THREADS {
+            let mut ym = vec![f32::NAN; batch * rows]; // NaN poison: every element must be written
+            gather_matmul_mt(&x, &rc, batch, &mut ym, threads);
+            assert_bits_eq(
+                &ys,
+                &ym,
+                &format!("case {case} seed {seed} {} t={threads}", st.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_csr_matmul_mt_bit_identical() {
+    let mut meta = Rng::new(0xC58);
+    for case in 0..CASES {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let (batch, rows, cols) = arb_dims(&mut rng);
+        let density = [0.05, 0.1, 0.25][rng.below(3)];
+        let mask = make_mask(Structure::Unstructured, rows, cols, density, &mut rng);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+        let csr = csr_from_mask(&w, &mask);
+
+        let mut ys = vec![0.0f32; batch * rows];
+        csr_matmul(&x, &csr, batch, &mut ys);
+        for threads in THREADS {
+            let mut ym = vec![f32::NAN; batch * rows];
+            csr_matmul_mt(&x, &csr, batch, &mut ym, threads);
+            assert_bits_eq(&ys, &ym, &format!("case {case} seed {seed} csr t={threads}"));
+        }
+    }
+}
+
+#[test]
+fn prop_block_matmul_mt_bit_identical() {
+    let mut meta = Rng::new(0xB70);
+    for case in 0..CASES {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let (batch, rows, cols) = arb_dims(&mut rng);
+        let density = [0.1, 0.25, 0.5][rng.below(3)];
+        let mask = make_mask(Structure::Block, rows, cols, density, &mut rng);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+        let bc = compress_blocks(&w, &mask, 16);
+
+        let mut ys = vec![0.0f32; batch * rows];
+        block_matmul(&x, &bc, batch, &mut ys);
+        for threads in THREADS {
+            let mut ym = vec![f32::NAN; batch * rows];
+            block_matmul_mt(&x, &bc, batch, &mut ym, threads);
+            assert_bits_eq(
+                &ys,
+                &ym,
+                &format!("case {case} seed {seed} block t={threads}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_dense_matmul_blocked_mt_bit_identical() {
+    let mut meta = Rng::new(0xDE5E);
+    for case in 0..CASES {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        // Dense has no block-size constraint: also draw odd row counts to
+        // exercise register-block tails at chunk boundaries.
+        let batch = [1usize, 2, 5, 64][rng.below(4)];
+        let rows = [7usize, 16, 33, 64, 97][rng.below(5)];
+        let cols = [13usize, 32, 65, 96][rng.below(4)];
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+
+        let mut ys = vec![0.0f32; batch * rows];
+        dense_matmul_blocked(&x, &w, batch, rows, cols, &mut ys);
+        for threads in THREADS {
+            let mut ym = vec![f32::NAN; batch * rows];
+            dense_matmul_blocked_mt(&x, &w, batch, rows, cols, &mut ym, threads);
+            assert_bits_eq(
+                &ys,
+                &ym,
+                &format!("case {case} seed {seed} dense t={threads}"),
+            );
+        }
+    }
+}
+
+/// Thread counts far beyond the unit count must degrade gracefully (clamp,
+/// not panic or leave gaps), including the batch=1, rows=1-block edge.
+#[test]
+fn oversubscribed_threads_are_clamped() {
+    let mut rng = Rng::new(0x05);
+    let (batch, rows, cols) = (1usize, 16usize, 32usize);
+    let mask = make_mask(Structure::Block, rows, cols, 0.5, &mut rng);
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let bc = compress_blocks(&w, &mask, 16);
+    let mut ys = vec![0.0f32; batch * rows];
+    let mut ym = vec![f32::NAN; batch * rows];
+    block_matmul(&x, &bc, batch, &mut ys);
+    block_matmul_mt(&x, &bc, batch, &mut ym, 1000);
+    for (a, b) in ys.iter().zip(&ym) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

@@ -1,0 +1,140 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The PA-DST build runs with no network and no registry cache, so the
+//! error-handling surface the crate actually uses is vendored here:
+//! [`Error`], [`Result`], the [`anyhow!`] and [`bail!`] macros, and the
+//! [`Context`] extension trait.  Errors carry a single flattened message
+//! string — context wraps as `"context: cause"` — which is all the
+//! coordinator, CLI, and tests rely on.
+//!
+//! Not implemented (and not used anywhere in the workspace): downcasting,
+//! backtraces, `std::error::Error` source chains.  `Error` deliberately
+//! does **not** implement `std::error::Error`, which is what makes the
+//! blanket `From<E: std::error::Error>` conversion (powering `?`) coherent.
+
+use std::fmt;
+
+/// A flattened error message with `"context: cause"` nesting.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// `?` on std errors (io, utf8, parse, ...) converts into [`Error`].
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for results, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/padst")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_wraps_outermost_first() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| "opening artifact").unwrap_err();
+        assert!(e.to_string().starts_with("opening artifact: "));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad density {}", 1.5);
+        assert_eq!(e.to_string(), "bad density 1.5");
+        let name = "fc1";
+        let e2 = anyhow!("missing site {name:?}");
+        assert_eq!(e2.to_string(), "missing site \"fc1\"");
+        fn bails() -> Result<()> {
+            bail!("stop at {}", 3);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop at 3");
+    }
+}
