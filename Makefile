@@ -1,6 +1,6 @@
 # Convenience targets; everything here is also runnable by hand (see README).
 
-.PHONY: build test bench artifacts fmt lint doc pytest
+.PHONY: build test bench bench-json artifacts fmt lint doc pytest
 
 build:
 	cargo build --release
@@ -10,6 +10,17 @@ test:
 
 bench:
 	cargo bench --bench kernels
+
+# Machine-readable BENCH_<name>.json from every bench, short sample
+# budgets (the benches that need artifacts skip gracefully).  Compare two
+# reports with `padst bench-compare <old> <new>` (see README §Perf
+# tracking).
+bench-json:
+	cargo bench --bench kernels -- --short
+	cargo bench --bench fig3_inference -- --short
+	cargo bench --bench table1_nlr -- --short
+	cargo bench --bench fig3_training -- --short
+	cargo bench --bench table5_overhead -- --short
 
 # Export the AOT artifact set (HLO text + manifest + goldens) with the
 # Python toolchain.  Needed only for the PJRT-executing benches/tests.

@@ -5,30 +5,29 @@
 //! Default is a reduced grid that finishes in minutes on one core; pass
 //! `--full` for the whole method zoo and all five sparsities (budget ~1 h)
 //! and `--model gpt_tiny` / `mixer_tiny` for the other panels.
+//! `--workers N` shards the grid across N runtimes (~N x wall-clock cut);
+//! `--journal PATH` checkpoints completed cells so a killed sweep resumes.
 //!
 //! Run: `cargo run --release --example fig2_sweep -- [--full] [--model M]
-//!       [--steps N] [--csv PATH] [--threads N]`
+//!       [--steps N] [--csv PATH] [--threads N] [--workers N]
+//!       [--journal PATH]`
 
-use padst::coordinator::sweep::{method_by_name, print_table, run_sweep, write_csv, METHODS};
-use padst::runtime::Runtime;
+use padst::coordinator::sweep::{
+    method_by_name, print_table, run_sweep_auto, write_csv, SweepShardOpts, METHODS,
+};
+use padst::util::cli::{arg_value_in, has_flag_in};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let full = args.iter().any(|a| a == "--full");
-    let get = |k: &str, d: &str| -> String {
-        args.iter()
-            .position(|a| a == k)
-            .and_then(|i| args.get(i + 1))
-            .cloned()
-            .unwrap_or_else(|| d.to_string())
-    };
+    let full = has_flag_in(&args, "--full");
+    let get = |k: &str, d: &str| arg_value_in(&args, k).unwrap_or_else(|| d.to_string());
     let model = get("--model", "vit_tiny");
     let steps: usize = get("--steps", if full { "400" } else { "250" }).parse()?;
 
     let threads: usize = get("--threads", "0").parse()?; // 0 = auto
+    let workers: usize = get("--workers", "1").parse()?; // 1 = sequential
+    let journal = arg_value_in(&args, "--journal").map(std::path::PathBuf::from);
     let dir = std::path::Path::new("artifacts");
-    let mut rt = Runtime::open_with_threads(dir, threads)?;
-    let kind = rt.manifest.models[&model].kind.clone();
 
     let (methods, sparsities): (Vec<_>, Vec<f64>) = if full {
         (METHODS.iter().collect(), vec![0.6, 0.7, 0.8, 0.9, 0.95])
@@ -43,11 +42,12 @@ fn main() -> anyhow::Result<()> {
     };
 
     eprintln!(
-        "[fig2] model={model} methods={} sparsities={:?} steps={steps}",
+        "[fig2] model={model} methods={} sparsities={:?} steps={steps} workers={workers}",
         methods.len(),
         sparsities
     );
-    let cells = run_sweep(&mut rt, &model, &methods, &sparsities, steps, 0, true, threads)?;
+    let opts = SweepShardOpts { workers, threads, journal, verbose: true };
+    let (cells, kind) = run_sweep_auto(dir, &model, &methods, &sparsities, steps, 0, &opts)?;
     print_table(&model, &kind, &cells, &sparsities);
 
     // The paper's qualitative claims, checked programmatically where the

@@ -21,7 +21,7 @@
 //! diag/N:M/butterfly differ slightly from previously recorded runs (the
 //! batched serial variant is still timed in `cargo bench --bench kernels`).
 
-use padst::kernels::parallel::threads_from_env_or_args;
+use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::kernels::{
     block_matmul_mt, csr_from_mask, csr_matmul_mt, dense_matmul_blocked_mt, gather_matmul_mt,
     shuffle_rows,
@@ -29,13 +29,16 @@ use padst::kernels::{
 use padst::models::PAPER_LAYERS;
 use padst::sparsity::compress::{compress_blocks, compress_rows};
 use padst::sparsity::patterns::{make_mask, Structure};
+use padst::util::cli::BenchOpts;
 use padst::util::stats::{bench, fmt_time};
 use padst::util::Rng;
 
 const BATCH: usize = 64; // tokens in flight, ~ViT-B/16 sequence dimension
 
-fn main() {
-    let threads = threads_from_env_or_args();
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::parse("fig3_inference");
+    let threads = opts.threads;
+    let mut report = BenchReport::new("fig3_inference", threads);
     let sparsities = [0.6, 0.7, 0.8, 0.9, 0.95];
     let structures = [
         Structure::Diag,
@@ -61,11 +64,12 @@ fn main() {
         let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
         let mut y = vec![0.0f32; BATCH * rows];
 
+        let (bw, bi, bt) = opts.budget(2, 5, 0.4);
         let dense = bench(
             || dense_matmul_blocked_mt(&x, &w, BATCH, rows, cols, &mut y, threads),
-            2,
-            5,
-            0.4,
+            bw,
+            bi,
+            bt,
         );
         println!(
             "\n## {}/{} ({rows}x{cols})  dense: {}",
@@ -73,6 +77,9 @@ fn main() {
             layer.site,
             fmt_time(dense.p50)
         );
+        let site_id = format!("{}/{}", layer.model, layer.site);
+        report.push(BenchRecord::from_summary("inference", &format!("{site_id} dense"), &dense));
+        let (bw, bi, bt) = opts.budget(2, 5, 0.25);
         println!(
             "{:<14} {:>5} {:>12} {:>9} {:>12} {:>9} {:>12} {:>9}",
             "structure", "s%", "none", "spdup", "reindex", "spdup", "shuffle", "spdup"
@@ -91,15 +98,15 @@ fn main() {
                 let t_none = match st {
                     Structure::Block => {
                         let bc = compress_blocks(&w, &mask, 16);
-                        bench(|| block_matmul_mt(&x, &bc, BATCH, &mut y, threads), 2, 5, 0.25)
+                        bench(|| block_matmul_mt(&x, &bc, BATCH, &mut y, threads), bw, bi, bt)
                     }
                     Structure::Unstructured => {
                         let csr = csr_from_mask(&w, &mask);
-                        bench(|| csr_matmul_mt(&x, &csr, BATCH, &mut y, threads), 2, 5, 0.25)
+                        bench(|| csr_matmul_mt(&x, &csr, BATCH, &mut y, threads), bw, bi, bt)
                     }
                     _ => {
                         let rc = compress_rows(&w, &mask, k, None);
-                        bench(|| gather_matmul_mt(&x, &rc, BATCH, &mut y, threads), 2, 5, 0.25)
+                        bench(|| gather_matmul_mt(&x, &rc, BATCH, &mut y, threads), bw, bi, bt)
                     }
                 };
 
@@ -118,11 +125,11 @@ fn main() {
                             c
                         };
                         let _ = &mut wp;
-                        bench(|| csr_matmul_mt(&x, &csr, BATCH, &mut y, threads), 2, 5, 0.25)
+                        bench(|| csr_matmul_mt(&x, &csr, BATCH, &mut y, threads), bw, bi, bt)
                     }
                     _ => {
                         let rc = compress_rows(&w, &mask, k, Some(&perm));
-                        bench(|| gather_matmul_mt(&x, &rc, BATCH, &mut y, threads), 2, 5, 0.25)
+                        bench(|| gather_matmul_mt(&x, &rc, BATCH, &mut y, threads), bw, bi, bt)
                     }
                 };
 
@@ -136,9 +143,9 @@ fn main() {
                                 shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
                                 block_matmul_mt(&xp, &bc, BATCH, &mut y, threads);
                             },
-                            2,
-                            5,
-                            0.25,
+                            bw,
+                            bi,
+                            bt,
                         )
                     }
                     Structure::Unstructured => {
@@ -148,9 +155,9 @@ fn main() {
                                 shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
                                 csr_matmul_mt(&xp, &csr, BATCH, &mut y, threads);
                             },
-                            2,
-                            5,
-                            0.25,
+                            bw,
+                            bi,
+                            bt,
                         )
                     }
                     _ => {
@@ -160,9 +167,9 @@ fn main() {
                                 shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
                                 gather_matmul_mt(&xp, &rc, BATCH, &mut y, threads);
                             },
-                            2,
-                            5,
-                            0.25,
+                            bw,
+                            bi,
+                            bt,
                         )
                     }
                 };
@@ -178,10 +185,25 @@ fn main() {
                     fmt_time(t_shuffle.p50),
                     dense.p50 / t_shuffle.p50,
                 );
+                for (variant, s) in
+                    [("none", &t_none), ("reindex", &t_reindex), ("shuffle", &t_shuffle)]
+                {
+                    report.push(
+                        BenchRecord::from_summary(
+                            "inference",
+                            &format!("{site_id} {} s{sp} {variant}", st.name()),
+                            s,
+                        )
+                        .with_metric("speedup_vs_dense", dense.p50 / s.p50),
+                    );
+                }
             }
         }
     }
+    report.write(&opts.json_path)?;
+    println!("# wrote {}", opts.json_path.display());
     println!("\n# done (see EXPERIMENTS.md §Fig3 for the recorded run)");
+    Ok(())
 }
 
 fn mask_k(mask: &padst::sparsity::patterns::Mask) -> usize {

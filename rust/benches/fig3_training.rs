@@ -10,14 +10,19 @@
 //! The overhead columns are the paper's "learning permutations costs extra
 //! training time; hardening claws it back" story, measured end-to-end
 //! through PJRT (compile excluded, first call warmed).
+//!
+//! Writes `BENCH_fig3_training.json` alongside the table (skipped, like
+//! the table, when artifacts are absent).
 
 use std::collections::HashMap;
 
 use padst::coordinator::{make_batch_buffers, RunConfig, Trainer};
+use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::runtime::Runtime;
 use padst::sparsity::patterns::Structure;
 use padst::tensor::Tensor;
-use padst::util::stats::{bench, fmt_time};
+use padst::util::cli::BenchOpts;
+use padst::util::stats::{bench, fmt_time, Summary};
 
 fn main() -> anyhow::Result<()> {
     let dir = std::path::Path::new("artifacts");
@@ -25,7 +30,9 @@ fn main() -> anyhow::Result<()> {
         eprintln!("run `make artifacts` first");
         return Ok(());
     }
-    let threads = padst::kernels::parallel::threads_from_env_or_args();
+    let opts = BenchOpts::parse("fig3_training");
+    let threads = opts.threads;
+    let mut report = BenchReport::new("fig3_training", threads);
     let mut rt = Runtime::open_with_threads(dir, threads)?;
     println!("# Fig. 3 (training) / Tbl. 5: seconds per train step via PJRT (threads={threads})");
     println!(
@@ -42,19 +49,26 @@ fn main() -> anyhow::Result<()> {
         ];
         let mut base = f64::NAN;
         for (label, artifact, flags) in variants {
-            let t = time_variant(&mut rt, model, artifact, *flags)?;
+            let s = time_variant(&mut rt, &opts, model, artifact, *flags)?;
             if *label == "noperm" {
-                base = t;
+                base = s.p50;
             }
+            let overhead_pct = (s.p50 / base - 1.0) * 100.0;
             println!(
                 "{:<12} {:<14} {:>12} {:>9.1}%",
                 model,
                 label,
-                fmt_time(t),
-                (t / base - 1.0) * 100.0
+                fmt_time(s.p50),
+                overhead_pct
+            );
+            report.push(
+                BenchRecord::from_summary("train_step", &format!("{model}/{label}"), &s)
+                    .with_metric("overhead_pct", overhead_pct),
             );
         }
     }
+    report.write(&opts.json_path)?;
+    println!("# wrote {}", opts.json_path.display());
     println!("\n# done (recorded in EXPERIMENTS.md §Fig3-training)");
     Ok(())
 }
@@ -63,10 +77,11 @@ fn main() -> anyhow::Result<()> {
 /// initialisation so buffers are exactly what production runs feed.
 fn time_variant(
     rt: &mut Runtime,
+    opts: &BenchOpts,
     model: &str,
     artifact: &str,
     hard_flags: f32,
-) -> anyhow::Result<f64> {
+) -> anyhow::Result<Summary> {
     let perm_mode = if artifact.ends_with("noperm") {
         "none"
     } else if artifact.ends_with("kperm") {
@@ -111,6 +126,7 @@ fn time_variant(
         })
         .collect::<anyhow::Result<_>>()?;
 
-    let s = bench(|| { let _ = prog.run(&inputs).unwrap(); }, 2, 5, 1.0);
-    Ok(s.p50)
+    let (bw, bi, bt) = opts.budget(2, 5, 1.0);
+    let s = bench(|| { let _ = prog.run(&inputs).unwrap(); }, bw, bi, bt);
+    Ok(s)
 }

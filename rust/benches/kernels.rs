@@ -6,8 +6,14 @@
 //! thread execution layer: each kernel at 1/2/4/max threads, speedup
 //! relative to its own serial path.  Thread ceiling: `--threads N` after
 //! `--`, or `PADST_THREADS`, else available parallelism.
+//!
+//! Alongside the human tables the run writes `BENCH_kernels.json`
+//! (schema: `padst::harness::telemetry`); `padst bench-compare` diffs two
+//! such reports for the CI perf gate.  `--short` (or
+//! `PADST_BENCH_SHORT=1`) shrinks sample budgets to CI size.
 
-use padst::kernels::parallel::{available_threads, threads_from_env_or_args};
+use padst::harness::telemetry::{BenchRecord, BenchReport};
+use padst::kernels::parallel::available_threads;
 use padst::kernels::{
     block_matmul, block_matmul_mt, csr_from_mask, csr_matmul, csr_matmul_mt, dense_matmul,
     dense_matmul_blocked, dense_matmul_blocked_mt, gather_matmul, gather_matmul_batched,
@@ -15,10 +21,15 @@ use padst::kernels::{
 };
 use padst::sparsity::compress::{compress_blocks, compress_rows};
 use padst::sparsity::patterns::{make_mask, Structure};
+use padst::util::cli::BenchOpts;
 use padst::util::stats::{bench, fmt_time, Summary};
 use padst::util::Rng;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts::parse("kernels");
+    let (bw, bi, bt) = opts.budget(1, 3, 0.3);
+    let mut report = BenchReport::new("kernels", opts.threads);
+
     let shapes = [(64usize, 768usize, 768usize), (64, 3072, 768), (8, 256, 256)];
     println!("# kernel microbench: p50 / GFLOPs");
     println!(
@@ -26,84 +37,69 @@ fn main() {
         "kernel(batch,rows,cols)", "p50", "GFLOP/s", "vs naive"
     );
     for (batch, rows, cols) in shapes {
+        let shape = format!("({batch},{rows},{cols})");
         let mut rng = Rng::new(3);
         let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
         let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
         let mut y = vec![0.0f32; batch * rows];
         let dense_flops = 2 * batch * rows * cols;
 
-        let naive = bench(|| dense_matmul(&x, &w, batch, rows, cols, &mut y), 1, 3, 0.3);
+        // One row: print the human line and record the telemetry.
+        let mut row = |name: &str, s: &Summary, flops: usize, naive_p50: f64| {
+            println!(
+                "{:<26} {:>12} {:>9.2} {:>9.2}x",
+                name,
+                fmt_time(s.p50),
+                flops as f64 / s.p50 / 1e9,
+                naive_p50 / s.p50
+            );
+            report.push(
+                BenchRecord::from_summary("microbench", name, s)
+                    .with_metric("gflops", flops as f64 / s.p50 / 1e9)
+                    .with_metric("vs_naive", naive_p50 / s.p50),
+            );
+        };
+
+        let naive = bench(|| dense_matmul(&x, &w, batch, rows, cols, &mut y), bw, bi, bt);
         let blocked = bench(
             || dense_matmul_blocked(&x, &w, batch, rows, cols, &mut y),
-            1,
-            3,
-            0.3,
+            bw,
+            bi,
+            bt,
         );
-        println!(
-            "{:<26} {:>12} {:>9.2} {:>9.2}x",
-            format!("dense_naive({batch},{rows},{cols})"),
-            fmt_time(naive.p50),
-            dense_flops as f64 / naive.p50 / 1e9,
-            1.0
-        );
-        println!(
-            "{:<26} {:>12} {:>9.2} {:>9.2}x",
-            format!("dense_blocked({batch},{rows},{cols})"),
-            fmt_time(blocked.p50),
-            dense_flops as f64 / blocked.p50 / 1e9,
-            naive.p50 / blocked.p50
-        );
+        row(&format!("dense_naive{shape}"), &naive, dense_flops, naive.p50);
+        row(&format!("dense_blocked{shape}"), &blocked, dense_flops, naive.p50);
 
         for density in [0.1f64, 0.05] {
             let mask = make_mask(Structure::Diag, rows, cols, density, &mut rng);
             let k = (0..mask.rows).map(|i| mask.row_nnz(i)).max().unwrap();
             let rc = compress_rows(&w, &mask, k, None);
             let flops = spmm_flops(batch, mask.nnz());
-            let g1 = bench(|| gather_matmul(&x, &rc, batch, &mut y), 1, 3, 0.3);
-            let g2 = bench(|| gather_matmul_batched(&x, &rc, batch, &mut y), 1, 3, 0.3);
-            println!(
-                "{:<26} {:>12} {:>9.2} {:>9.2}x",
-                format!("gather d={density}"),
-                fmt_time(g1.p50),
-                flops as f64 / g1.p50 / 1e9,
-                naive.p50 / g1.p50
-            );
-            println!(
-                "{:<26} {:>12} {:>9.2} {:>9.2}x",
-                format!("gather_batched d={density}"),
-                fmt_time(g2.p50),
-                flops as f64 / g2.p50 / 1e9,
-                naive.p50 / g2.p50
-            );
+            let g1 = bench(|| gather_matmul(&x, &rc, batch, &mut y), bw, bi, bt);
+            let g2 = bench(|| gather_matmul_batched(&x, &rc, batch, &mut y), bw, bi, bt);
+            row(&format!("gather{shape} d={density}"), &g1, flops, naive.p50);
+            row(&format!("gather_batched{shape} d={density}"), &g2, flops, naive.p50);
 
             let bmask = make_mask(Structure::Block, rows, cols, density, &mut rng);
             let bc = compress_blocks(&w, &bmask, 16);
             let bflops = spmm_flops(batch, bmask.nnz());
-            let b = bench(|| block_matmul(&x, &bc, batch, &mut y), 1, 3, 0.3);
-            println!(
-                "{:<26} {:>12} {:>9.2} {:>9.2}x",
-                format!("block d={density}"),
-                fmt_time(b.p50),
-                bflops as f64 / b.p50 / 1e9,
-                naive.p50 / b.p50
-            );
+            let b = bench(|| block_matmul(&x, &bc, batch, &mut y), bw, bi, bt);
+            row(&format!("block{shape} d={density}"), &b, bflops, naive.p50);
 
             let umask = make_mask(Structure::Unstructured, rows, cols, density, &mut rng);
             let csr = csr_from_mask(&w, &umask);
             let uflops = spmm_flops(batch, umask.nnz());
-            let c = bench(|| csr_matmul(&x, &csr, batch, &mut y), 1, 3, 0.3);
-            println!(
-                "{:<26} {:>12} {:>9.2} {:>9.2}x",
-                format!("csr d={density}"),
-                fmt_time(c.p50),
-                uflops as f64 / c.p50 / 1e9,
-                naive.p50 / c.p50
-            );
+            let c = bench(|| csr_matmul(&x, &csr, batch, &mut y), bw, bi, bt);
+            row(&format!("csr{shape} d={density}"), &c, uflops, naive.p50);
         }
         println!();
     }
 
-    parallel_scaling();
+    parallel_scaling(&opts, &mut report);
+
+    report.write(&opts.json_path)?;
+    println!("# wrote {}", opts.json_path.display());
+    Ok(())
 }
 
 /// Serial vs parallel at the ViT-B/16 FFN geometry (the Fig. 3 headline
@@ -111,8 +107,9 @@ fn main() {
 /// serial path.  The gather/block paths should clear 1x comfortably from
 /// 4 threads up; CSR is indirection-bound and scales worst — which is the
 /// paper's structured >> unstructured ordering, now with a thread axis.
-fn parallel_scaling() {
-    let max_threads = threads_from_env_or_args();
+fn parallel_scaling(opts: &BenchOpts, report: &mut BenchReport) {
+    let max_threads = opts.threads;
+    let (bw, bi, bt) = opts.budget(1, 3, 0.3);
     let mut counts = vec![1usize, 2, 4];
     counts.retain(|&t| t <= max_threads);
     if !counts.contains(&max_threads) {
@@ -139,7 +136,7 @@ fn parallel_scaling() {
     );
     println!("{:<26} {:>8} {:>12} {:>10}", "kernel", "threads", "p50", "vs serial");
 
-    let report = |name: &str, t: usize, s: &Summary, serial_p50: f64| {
+    let mut row = |name: &str, t: usize, s: &Summary, serial_p50: f64| {
         println!(
             "{:<26} {:>8} {:>12} {:>9.2}x",
             name,
@@ -147,41 +144,46 @@ fn parallel_scaling() {
             fmt_time(s.p50),
             serial_p50 / s.p50
         );
+        report.push(
+            BenchRecord::from_summary("parallel_scaling", &format!("{name} t={t}"), s)
+                .with_metric("threads", t as f64)
+                .with_metric("speedup_vs_serial", serial_p50 / s.p50),
+        );
     };
 
     let mut serial = 0.0f64;
     for &t in &counts {
-        let s = bench(|| gather_matmul_mt(&x, &rc, batch, &mut y, t), 1, 3, 0.3);
+        let s = bench(|| gather_matmul_mt(&x, &rc, batch, &mut y, t), bw, bi, bt);
         if t == 1 {
             serial = s.p50;
         }
-        report("gather", t, &s, serial);
+        row("gather", t, &s, serial);
     }
     for &t in &counts {
-        let s = bench(|| block_matmul_mt(&x, &bc, batch, &mut y, t), 1, 3, 0.3);
+        let s = bench(|| block_matmul_mt(&x, &bc, batch, &mut y, t), bw, bi, bt);
         if t == 1 {
             serial = s.p50;
         }
-        report("block", t, &s, serial);
+        row("block", t, &s, serial);
     }
     for &t in &counts {
-        let s = bench(|| csr_matmul_mt(&x, &csr, batch, &mut y, t), 1, 3, 0.3);
+        let s = bench(|| csr_matmul_mt(&x, &csr, batch, &mut y, t), bw, bi, bt);
         if t == 1 {
             serial = s.p50;
         }
-        report("csr", t, &s, serial);
+        row("csr", t, &s, serial);
     }
     for &t in &counts {
         let s = bench(
             || dense_matmul_blocked_mt(&x, &w, batch, rows, cols, &mut y, t),
-            1,
-            3,
-            0.3,
+            bw,
+            bi,
+            bt,
         );
         if t == 1 {
             serial = s.p50;
         }
-        report("dense_blocked", t, &s, serial);
+        row("dense_blocked", t, &s, serial);
     }
     println!("# (available parallelism on this machine: {})", available_threads());
 }

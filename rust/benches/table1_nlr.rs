@@ -1,17 +1,23 @@
 //! Table 1 + Apdx B/C.1: regenerate the expressivity lower-bound summary
 //! and the worked examples, and time the bound evaluation itself (the NLR
 //! calculator is also library API, so it gets a perf row).
+//!
+//! Writes `BENCH_table1_nlr.json`: the Table-1 rows as value-only records
+//! (metric `log10_nlr`) plus the timed bound-evaluation row.
 
-use padst::kernels::parallel::threads_from_env_or_args;
+use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::nlr::{
     effective_dims_var, layer_factor_u128, log10_nlr_bound, nlr_bound_u128, table1_rows_mt,
     Setting,
 };
+use padst::util::cli::BenchOpts;
 use padst::util::stats::{bench, fmt_time};
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     // --- Table 1 at the paper's ViT-L/16 surrogate geometry -------------
-    let threads = threads_from_env_or_args();
+    let opts = BenchOpts::parse("table1_nlr");
+    let threads = opts.threads;
+    let mut report = BenchReport::new("table1_nlr", threads);
     let d0 = 1024;
     let widths: Vec<usize> = (0..48).map(|i| if i % 2 == 0 { 4096 } else { 1024 }).collect();
     println!(
@@ -28,6 +34,9 @@ fn main() {
                 Some(l) => format!("{l} layers"),
                 None => "stalls".into(),
             }
+        );
+        report.push(
+            BenchRecord::value("table1", &row.setting).with_metric("log10_nlr", row.log10_nlr),
         );
     }
 
@@ -50,13 +59,19 @@ fn main() {
     );
 
     // --- timing ----------------------------------------------------------
+    let (bw, bi, bt) = opts.budget(3, 20, 0.3);
     let s = bench(
         || {
             let _ = log10_nlr_bound(Setting::StructPerm { r: 51 }, d0, &widths);
         },
-        3,
-        20,
-        0.3,
+        bw,
+        bi,
+        bt,
     );
     println!("\n# bound evaluation: {} per 48-layer network", fmt_time(s.p50));
+    report.push(BenchRecord::from_summary("nlr", "bound_eval(48-layer)", &s));
+
+    report.write(&opts.json_path)?;
+    println!("# wrote {}", opts.json_path.display());
+    Ok(())
 }

@@ -3,9 +3,15 @@
 //! masks + permutation state), relative to the no-permutation baseline of
 //! the same structured method — mirroring the paper's "% overhead relative
 //! to DynaDiag/SRigL" columns.
+//!
+//! Writes `BENCH_table5_overhead.json` with value-only records (metrics
+//! `state_mb` / `overhead_pct`); the bench-compare gate skips them, but
+//! the trajectory is tracked like any timed bench.
 
+use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::models::memory_footprint;
 use padst::runtime::manifest::Manifest;
+use padst::util::cli::BenchOpts;
 
 fn main() -> anyhow::Result<()> {
     let path = std::path::Path::new("artifacts/manifest.json");
@@ -13,6 +19,8 @@ fn main() -> anyhow::Result<()> {
         eprintln!("run `make artifacts` first");
         return Ok(());
     }
+    let opts = BenchOpts::parse("table5_overhead");
+    let mut report = BenchReport::new("table5_overhead", opts.threads);
     let manifest = Manifest::load(path)?;
 
     println!("# Tbl. 2-5 analogue: training-state memory by permutation method");
@@ -30,16 +38,22 @@ fn main() -> anyhow::Result<()> {
             ("+Kaleidoscope", "kaleidoscope", false),
         ] {
             let m = memory_footprint(entry, mode, hardened) as f64;
+            let state_mb = m / (1024.0 * 1024.0);
+            let overhead_pct = (m / base - 1.0) * 100.0;
             println!(
                 "{:<12} {:<16} {:>12.2} {:>9.2}%",
-                model,
-                label,
-                m / (1024.0 * 1024.0),
-                (m / base - 1.0) * 100.0
+                model, label, state_mb, overhead_pct
+            );
+            report.push(
+                BenchRecord::value("memory", &format!("{model}/{label}"))
+                    .with_metric("state_mb", state_mb)
+                    .with_metric("overhead_pct", overhead_pct),
             );
         }
         println!();
     }
+    report.write(&opts.json_path)?;
+    println!("# wrote {}", opts.json_path.display());
     println!("# time columns of Tbl. 5 come from `cargo bench --bench fig3_training`");
     Ok(())
 }

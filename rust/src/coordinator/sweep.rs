@@ -6,14 +6,34 @@
 //!
 //! A "method" is (structure, perm_mode, grow_mode) — e.g. RigL is
 //! (unstructured, none, RigL); DynaDiag+PA-DST is (diag, learned, RigL).
-//! The same compiled artifacts are reused across every cell of the grid,
-//! so one process sweeps the whole table paying each compile once.
+//!
+//! Two execution paths produce identical cells:
+//!
+//! * [`run_sweep`] — sequential against one shared `Runtime`, so every
+//!   cell reuses the same compiled-program cache (one compile per
+//!   artifact for the whole grid).
+//! * [`run_sweep_sharded`] — the (method x sparsity) grid fanned out on
+//!   the harness executor, **each worker owning its own `Runtime`**
+//!   (cells are independent given separate runtimes; runtimes are not
+//!   `Send`, so each is created inside its worker thread).  The global
+//!   `threads` budget is divided across workers so total parallelism
+//!   stays bounded, results merge back in grid order (bit-identical
+//!   ordering to the sequential path), and completed cells checkpoint to
+//!   a JSONL journal so an interrupted sweep resumes without
+//!   recomputation.
 
-use anyhow::Result;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
 
 use super::{GrowMode, RunConfig, RunResult, Trainer};
+use crate::harness::executor;
+use crate::harness::shard::{plan_cells, CellKey, Journal};
 use crate::runtime::Runtime;
 use crate::sparsity::patterns::Structure;
+use crate::util::cli::resolve_threads;
+use crate::util::json::{self, Json};
 
 /// One method row of Fig. 2 / Tbl. 11–12.
 #[derive(Clone, Debug)]
@@ -59,12 +79,74 @@ pub struct SweepCell {
     pub result: RunResult,
 }
 
-/// Run `methods` x `sparsities` on `model`; returns all cells.  `threads`
-/// is the per-run worker budget (0 = auto), recorded on every cell's
-/// `RunConfig` and pushed to the shared `Runtime` so all cells advertise
-/// the same budget.  Note: artifact execution currently runs under PJRT's
-/// own thread pool (intra-op wiring is a ROADMAP item); today the knob
-/// governs the native parallel-kernel paths.
+/// The flat (method, sparsity) cell list in sequential-sweep order: methods
+/// outer, sparsities inner, dense contributing one cell.  Both execution
+/// paths walk exactly this list, which is what makes their outputs merge
+/// identically.  The expansion itself is `harness::shard::plan_cells` —
+/// one source of truth for cell order shared with the executor tests.
+fn grid(methods: &[&'static Method], sparsities: &[f64]) -> Vec<(&'static Method, f64)> {
+    let axes: Vec<(&str, bool)> = methods
+        .iter()
+        .map(|m| (m.name, m.structure != Structure::Dense))
+        .collect();
+    plan_cells(&axes, sparsities)
+        .into_iter()
+        .map(|k| {
+            // The name came out of `methods` one line up; the find is total.
+            let m = *methods.iter().find(|m| m.name == k.method).unwrap();
+            (m, k.sparsity)
+        })
+        .collect()
+}
+
+/// Train one grid cell.
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    rt: &mut Runtime,
+    model: &str,
+    m: &'static Method,
+    sparsity: f64,
+    steps: usize,
+    seed: u64,
+    verbose: bool,
+    threads: usize,
+) -> Result<SweepCell> {
+    let density = if m.structure == Structure::Dense { 1.0 } else { 1.0 - sparsity };
+    let cfg = RunConfig {
+        model: model.to_string(),
+        structure: m.structure,
+        density,
+        perm_mode: m.perm_mode.to_string(),
+        steps,
+        grow_mode: m.grow_mode,
+        seed,
+        verbose,
+        threads,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(rt, cfg);
+    let result = tr.run()?;
+    if verbose {
+        eprintln!(
+            "[sweep] {:<14} s={:.0}% loss={:.4} acc={:.3} ppl={:.2} ({:.1}s)",
+            m.name,
+            sparsity * 100.0,
+            result.final_eval_loss,
+            result.final_eval_acc,
+            result.final_ppl,
+            result.train_seconds
+        );
+    }
+    Ok(SweepCell { method: m.name, sparsity, result })
+}
+
+/// Run `methods` x `sparsities` on `model` sequentially against one shared
+/// runtime; returns all cells.  `threads` is the per-run worker budget
+/// (0 = auto), recorded on every cell's `RunConfig` and pushed to the
+/// shared `Runtime` so all cells advertise the same budget.  Note:
+/// artifact execution currently runs under PJRT's own thread pool
+/// (intra-op wiring is a ROADMAP item); today the knob governs the native
+/// parallel-kernel paths.
 #[allow(clippy::too_many_arguments)]
 pub fn run_sweep(
     rt: &mut Runtime,
@@ -76,42 +158,314 @@ pub fn run_sweep(
     verbose: bool,
     threads: usize,
 ) -> Result<Vec<SweepCell>> {
-    let mut cells = Vec::new();
-    for m in methods {
-        for &sp in sparsities {
-            let density = if m.structure == Structure::Dense { 1.0 } else { 1.0 - sp };
-            let cfg = RunConfig {
-                model: model.to_string(),
-                structure: m.structure,
-                density,
-                perm_mode: m.perm_mode.to_string(),
-                steps,
-                grow_mode: m.grow_mode,
-                seed,
-                verbose,
-                threads,
-                ..Default::default()
-            };
-            let mut tr = Trainer::new(rt, cfg);
-            let result = tr.run()?;
-            if verbose {
-                eprintln!(
-                    "[sweep] {:<14} s={:.0}% loss={:.4} acc={:.3} ppl={:.2} ({:.1}s)",
-                    m.name,
-                    sp * 100.0,
-                    result.final_eval_loss,
-                    result.final_eval_acc,
-                    result.final_ppl,
-                    result.train_seconds
-                );
+    grid(methods, sparsities)
+        .into_iter()
+        .map(|(m, sp)| run_cell(rt, model, m, sp, steps, seed, verbose, threads))
+        .collect()
+}
+
+/// Journal line holding the sweep parameters; a journal only resumes a
+/// sweep with identical (model, steps, seed).
+const JOURNAL_META_KEY: &str = "__meta__";
+
+/// Options for the sharded sweep path.
+#[derive(Clone, Debug, Default)]
+pub struct SweepShardOpts {
+    /// Worker count: 0 = auto (min(cores, cells)), 1 = the sequential
+    /// path on the calling thread.  Always clamped to the resolved
+    /// `threads` budget so worker count alone can never oversubscribe it.
+    pub workers: usize,
+    /// Global native-kernel thread budget (0 = auto), divided across
+    /// workers so total parallelism stays bounded at the budget.
+    pub threads: usize,
+    /// JSONL checkpoint: completed cells are appended as they finish and
+    /// skipped on the next invocation (resume).
+    pub journal: Option<PathBuf>,
+    pub verbose: bool,
+}
+
+/// The sweep front door shared by the CLI and the fig2 example: one
+/// worker with no journal takes the sequential shared-runtime fast path
+/// (every cell reuses one compiled-program cache), anything else goes
+/// through [`run_sweep_sharded`].  Returns the cells plus the model kind
+/// (for [`print_table`]'s acc-vs-ppl choice).
+pub fn run_sweep_auto(
+    artifacts_dir: &Path,
+    model: &str,
+    methods: &[&'static Method],
+    sparsities: &[f64],
+    steps: usize,
+    seed: u64,
+    opts: &SweepShardOpts,
+) -> Result<(Vec<SweepCell>, String)> {
+    let kind_of = |manifest: &crate::runtime::manifest::Manifest| -> Result<String> {
+        Ok(manifest
+            .models
+            .get(model)
+            .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?
+            .kind
+            .clone())
+    };
+    if opts.workers == 1 && opts.journal.is_none() {
+        let mut rt = Runtime::open_with_threads(artifacts_dir, opts.threads)?;
+        let kind = kind_of(&rt.manifest)?;
+        let cells = run_sweep(
+            &mut rt,
+            model,
+            methods,
+            sparsities,
+            steps,
+            seed,
+            opts.verbose,
+            opts.threads,
+        )?;
+        Ok((cells, kind))
+    } else {
+        let cells = run_sweep_sharded(artifacts_dir, model, methods, sparsities, steps, seed, opts)?;
+        let manifest =
+            crate::runtime::manifest::Manifest::load(&artifacts_dir.join("manifest.json"))?;
+        Ok((cells, kind_of(&manifest)?))
+    }
+}
+
+/// [`run_sweep`] fanned out on the harness executor: same grid, same cell
+/// order in the output, but each worker owns its own `Runtime` opened from
+/// `artifacts_dir`.  Workers pay their own artifact compiles (amortised
+/// across the cells they pull), which the wall-clock win across cells
+/// dominates for any real grid.
+pub fn run_sweep_sharded(
+    artifacts_dir: &Path,
+    model: &str,
+    methods: &[&'static Method],
+    sparsities: &[f64],
+    steps: usize,
+    seed: u64,
+    opts: &SweepShardOpts,
+) -> Result<Vec<SweepCell>> {
+    let cells = grid(methods, sparsities);
+    let keys: Vec<CellKey> = cells
+        .iter()
+        .map(|&(m, sp)| CellKey { method: m.name.to_string(), sparsity: sp })
+        .collect();
+
+    // Resume: cells already journaled by a previous (interrupted) run are
+    // deserialised instead of re-trained.  Cell ids are only
+    // "method@sparsity", so the journal carries a metadata header and
+    // refuses to resume a sweep with different (model, steps, seed) —
+    // otherwise stale cells would silently masquerade as this run's.
+    let meta = json::obj(vec![
+        ("model", json::s(model)),
+        ("steps", json::num(steps as f64)),
+        ("seed", json::num(seed as f64)),
+    ]);
+    let mut done: HashMap<String, SweepCell> = HashMap::new();
+    let journal = match &opts.journal {
+        Some(path) => {
+            let (j, mut prior) = Journal::open(path)?;
+            match prior.remove(JOURNAL_META_KEY) {
+                Some(m) if m != meta => bail!(
+                    "journal {} belongs to a different sweep ({}); this run is {} — \
+                     pass a fresh --journal path",
+                    path.display(),
+                    m.to_string_pretty(),
+                    meta.to_string_pretty()
+                ),
+                Some(_) => {}
+                None if prior.is_empty() => j.record(JOURNAL_META_KEY, &meta)?,
+                None => bail!(
+                    "journal {} has cells but no {JOURNAL_META_KEY} header; refusing to resume",
+                    path.display()
+                ),
             }
-            cells.push(SweepCell { method: m.name, sparsity: sp, result });
-            if m.structure == Structure::Dense {
-                break; // dense has no sparsity axis
+            for (id, v) in &prior {
+                done.insert(id.clone(), cell_from_json(v)?);
             }
+            Some(j)
+        }
+        None => None,
+    };
+
+    let pending: Vec<(usize, CellKey)> = keys
+        .iter()
+        .cloned()
+        .enumerate()
+        .filter(|(_, k)| !done.contains_key(&k.id()))
+        .collect();
+    if opts.verbose && pending.len() < keys.len() {
+        eprintln!(
+            "[sweep] resuming: {}/{} cells restored from journal",
+            keys.len() - pending.len(),
+            keys.len()
+        );
+    }
+
+    // Workers are capped by the resolved thread budget, and the budget is
+    // divided across them, so (workers x per-cell threads) never exceeds
+    // the budget the caller asked for.
+    let budget = resolve_threads(opts.threads);
+    let workers = executor::resolve_workers(opts.workers, pending.len()).min(budget).max(1);
+    let cell_threads = (budget / workers).max(1);
+    let journal_ref = journal.as_ref();
+    let cells_ref = &cells;
+    let fresh = executor::execute_sharded(
+        &pending,
+        workers,
+        |_wid| Runtime::open_with_threads(artifacts_dir, cell_threads),
+        |rt, _slot, (cell_i, key)| {
+            let (m, sp) = cells_ref[*cell_i];
+            let cell = run_cell(rt, model, m, sp, steps, seed, opts.verbose, cell_threads)?;
+            if let Some(j) = journal_ref {
+                j.record(&key.id(), &cell_to_json(&cell))?;
+            }
+            Ok(cell)
+        },
+    )?;
+
+    // Merge journaled + fresh cells back into grid order.  Fresh results
+    // key on the grid *slot*, not the cell id: a grid with duplicate
+    // (method, sparsity) entries (the CLI doesn't forbid them) has
+    // distinct slots but colliding ids, and each slot must get a result.
+    let mut fresh_by_slot: HashMap<usize, SweepCell> =
+        pending.iter().map(|&(slot, _)| slot).zip(fresh).collect();
+    keys.iter()
+        .enumerate()
+        .map(|(slot, k)| {
+            fresh_by_slot
+                .remove(&slot)
+                .or_else(|| done.get(&k.id()).cloned())
+                .ok_or_else(|| anyhow!("sweep cell {} missing after merge", k.id()))
+        })
+        .collect()
+}
+
+/// What a method *does* — detects a [`METHODS`] entry whose definition
+/// changed between the run that wrote a journal and the run resuming it.
+fn method_fingerprint(m: &Method) -> String {
+    format!("{}|{}|{:?}", m.structure.name(), m.perm_mode, m.grow_mode)
+}
+
+/// Serialise one cell (full `RunResult` fidelity) for the resume journal.
+pub fn cell_to_json(c: &SweepCell) -> Json {
+    fn f32s(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| json::num(x as f64)).collect())
+    }
+    fn pairs(xs: &[(usize, f32)]) -> Json {
+        Json::Arr(
+            xs.iter()
+                .map(|&(i, v)| json::arr([json::num(i as f64), json::num(v as f64)]))
+                .collect(),
+        )
+    }
+    let r = &c.result;
+    json::obj(vec![
+        ("method", json::s(c.method)),
+        (
+            "method_config",
+            match method_by_name(c.method) {
+                Some(m) => json::s(&method_fingerprint(m)),
+                None => Json::Null,
+            },
+        ),
+        ("sparsity", json::num(c.sparsity)),
+        ("losses", f32s(&r.losses)),
+        ("eval_losses", pairs(&r.eval_losses)),
+        ("eval_accs", pairs(&r.eval_accs)),
+        ("penalties", Json::Arr(r.penalties.iter().map(|p| f32s(p)).collect())),
+        (
+            "harden_step",
+            Json::Arr(
+                r.harden_step
+                    .iter()
+                    .map(|h| match h {
+                        Some(s) => json::num(*s as f64),
+                        None => Json::Null,
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "identity_distance",
+            Json::Arr(r.identity_distance.iter().map(|&d| json::num(d)).collect()),
+        ),
+        ("site_names", Json::Arr(r.site_names.iter().map(|s| json::s(s)).collect())),
+        ("train_seconds", json::num(r.train_seconds)),
+        ("final_eval_loss", json::num(r.final_eval_loss as f64)),
+        ("final_eval_acc", json::num(r.final_eval_acc as f64)),
+        ("final_ppl", json::num(r.final_ppl as f64)),
+    ])
+}
+
+/// Inverse of [`cell_to_json`].  The method name must still exist in
+/// [`METHODS`], and the journaled `method_config` fingerprint must match
+/// the current definition — a cell trained under an edited method
+/// (different structure/perm/grow) is refused rather than silently
+/// merged into this run's results.
+pub fn cell_from_json(v: &Json) -> Result<SweepCell> {
+    // Non-finite values (a diverged run's ppl) serialise as JSON null and
+    // come back as NaN; a missing key is still an error.
+    let num = |k: &str| -> Result<f64> {
+        let x = v.get(k).ok_or_else(|| anyhow!("journal cell: missing number {k:?}"))?;
+        Ok(x.as_f64().unwrap_or(f64::NAN))
+    };
+    let arr = |k: &str| {
+        v.get(k).and_then(Json::as_arr).ok_or_else(|| anyhow!("journal cell: missing array {k:?}"))
+    };
+    fn f32s(a: &[Json]) -> Vec<f32> {
+        a.iter().map(|x| x.as_f64().unwrap_or(f64::NAN) as f32).collect()
+    }
+    fn pairs(a: &[Json]) -> Vec<(usize, f32)> {
+        a.iter()
+            .map(|p| {
+                (
+                    p.idx(0).and_then(Json::as_usize).unwrap_or(0),
+                    p.idx(1).and_then(Json::as_f64).unwrap_or(f64::NAN) as f32,
+                )
+            })
+            .collect()
+    }
+
+    let name = v
+        .get("method")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("journal cell: missing method"))?;
+    let entry = method_by_name(name)
+        .ok_or_else(|| anyhow!("journal cell: unknown method {name:?}"))?;
+    if let Some(fp) = v.get("method_config").and_then(Json::as_str) {
+        let want = method_fingerprint(entry);
+        if fp != want {
+            bail!(
+                "journal cell for {name:?} was trained under method config {fp:?} but the \
+                 current zoo defines {want:?}; use a fresh journal"
+            );
         }
     }
-    Ok(cells)
+    let method = entry.name;
+    let result = RunResult {
+        losses: f32s(arr("losses")?),
+        eval_losses: pairs(arr("eval_losses")?),
+        eval_accs: pairs(arr("eval_accs")?),
+        penalties: arr("penalties")?
+            .iter()
+            .map(|p| f32s(p.as_arr().unwrap_or(&[])))
+            .collect(),
+        harden_step: arr("harden_step")?
+            .iter()
+            .map(|h| h.as_usize())
+            .collect(),
+        identity_distance: arr("identity_distance")?
+            .iter()
+            .map(|d| d.as_f64().unwrap_or(f64::NAN))
+            .collect(),
+        site_names: arr("site_names")?
+            .iter()
+            .map(|s| s.as_str().unwrap_or("").to_string())
+            .collect(),
+        train_seconds: num("train_seconds")?,
+        final_eval_loss: num("final_eval_loss")? as f32,
+        final_eval_acc: num("final_eval_acc")? as f32,
+        final_ppl: num("final_ppl")? as f32,
+    };
+    Ok(SweepCell { method, sparsity: num("sparsity")?, result })
 }
 
 /// Print the Fig. 2 / Tbl. 11-style grid: rows = methods, cols = sparsity.
@@ -123,12 +477,13 @@ pub fn print_table(model: &str, kind: &str, cells: &[SweepCell], sparsities: &[f
         print!("{:>10}", format!("{:.0}%", s * 100.0));
     }
     println!();
-    let mut methods: Vec<&str> = Vec::new();
-    for c in cells {
-        if !methods.contains(&c.method) {
-            methods.push(c.method);
-        }
-    }
+    // Rows in METHODS declaration order: cell encounter order is not a
+    // stable row order once cells arrive shard-merged or journal-resumed.
+    let methods: Vec<&str> = METHODS
+        .iter()
+        .map(|m| m.name)
+        .filter(|name| cells.iter().any(|c| c.method == *name))
+        .collect();
     for m in methods {
         print!("{m:<16}");
         for &s in sparsities {
@@ -147,7 +502,9 @@ pub fn print_table(model: &str, kind: &str, cells: &[SweepCell], sparsities: &[f
     }
 }
 
-/// CSV dump of all cells for downstream plotting.
+/// CSV dump of all cells for downstream plotting.  Written atomically
+/// (temp + rename, parent dirs created) so an interrupted run never
+/// leaves a truncated file.
 pub fn write_csv(path: &std::path::Path, cells: &[SweepCell]) -> Result<()> {
     let mut s = String::from("method,sparsity,final_eval_loss,final_eval_acc,final_ppl,train_seconds\n");
     for c in cells {
@@ -161,6 +518,87 @@ pub fn write_csv(path: &std::path::Path, cells: &[SweepCell]) -> Result<()> {
             c.result.train_seconds
         ));
     }
-    std::fs::write(path, s)?;
-    Ok(())
+    crate::util::fs::write_atomic(path, &s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_matches_sequential_order() {
+        let methods: Vec<&'static Method> =
+            ["RigL", "Dense", "DynaDiag+PA"].iter().map(|n| method_by_name(n).unwrap()).collect();
+        let cells = grid(&methods, &[0.6, 0.9]);
+        let ids: Vec<(&str, f64)> = cells.iter().map(|&(m, sp)| (m.name, sp)).collect();
+        assert_eq!(
+            ids,
+            [
+                ("RigL", 0.6),
+                ("RigL", 0.9),
+                ("Dense", 0.6),
+                ("DynaDiag+PA", 0.6),
+                ("DynaDiag+PA", 0.9)
+            ]
+        );
+    }
+
+    #[test]
+    fn cell_json_roundtrip_preserves_everything() {
+        let cell = SweepCell {
+            method: method_by_name("DynaDiag+PA").unwrap().name,
+            sparsity: 0.95,
+            result: RunResult {
+                losses: vec![2.5, 1.25, 0.75],
+                eval_losses: vec![(50, 1.5), (100, 1.0)],
+                eval_accs: vec![(50, 0.25), (100, 0.5)],
+                penalties: vec![vec![0.5, 0.25], vec![0.125]],
+                harden_step: vec![Some(42), None],
+                identity_distance: vec![0.75, 0.0],
+                site_names: vec!["l0.fc1".into(), "l1.fc1".into()],
+                train_seconds: 12.5,
+                final_eval_loss: 1.0,
+                final_eval_acc: 0.5,
+                final_ppl: 2.71828,
+            },
+        };
+        let j = cell_to_json(&cell);
+        // Through text, as the journal stores it.
+        let back = cell_from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.method, cell.method);
+        assert_eq!(back.sparsity, cell.sparsity);
+        assert_eq!(back.result.losses, cell.result.losses);
+        assert_eq!(back.result.eval_losses, cell.result.eval_losses);
+        assert_eq!(back.result.eval_accs, cell.result.eval_accs);
+        assert_eq!(back.result.penalties, cell.result.penalties);
+        assert_eq!(back.result.harden_step, cell.result.harden_step);
+        assert_eq!(back.result.identity_distance, cell.result.identity_distance);
+        assert_eq!(back.result.site_names, cell.result.site_names);
+        assert_eq!(back.result.train_seconds, cell.result.train_seconds);
+        assert_eq!(back.result.final_eval_loss, cell.result.final_eval_loss);
+        assert_eq!(back.result.final_eval_acc, cell.result.final_eval_acc);
+        assert_eq!(back.result.final_ppl, cell.result.final_ppl);
+    }
+
+    #[test]
+    fn cell_from_json_rejects_unknown_method() {
+        let j = json::obj(vec![("method", json::s("NotAMethod")), ("sparsity", json::num(0.5))]);
+        assert!(cell_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn cell_from_json_rejects_changed_method_config() {
+        let cell = SweepCell {
+            method: method_by_name("DynaDiag").unwrap().name,
+            sparsity: 0.9,
+            result: RunResult::default(),
+        };
+        let mut j = cell_to_json(&cell);
+        // A journal written before DynaDiag's definition was edited.
+        if let Json::Obj(m) = &mut j {
+            m.insert("method_config".into(), json::s("block|learned|Set"));
+        }
+        let err = cell_from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("method config"), "{err}");
+    }
 }

@@ -1,0 +1,162 @@
+//! Baseline comparison — the CI perf gate behind `padst bench-compare`.
+//!
+//! Two [`BenchReport`]s are matched record-by-record on `(group, name)`
+//! and diffed on p50.  A record whose p50 grew by more than the threshold
+//! is a regression; `padst bench-compare <old> <new>` exits non-zero if
+//! any survive.  Value-only records (`n == 0`) and records present in only
+//! one report are listed but never gate.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::telemetry::{BenchRecord, BenchReport};
+use crate::util::stats::fmt_time;
+
+/// One matched record's p50 movement.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub id: String,
+    pub old_p50_s: f64,
+    pub new_p50_s: f64,
+    /// Signed percent change of p50 (positive = slower).
+    pub pct: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub threshold_pct: f64,
+    /// p50 grew by more than the threshold — these gate.
+    pub regressions: Vec<Delta>,
+    /// p50 shrank by more than the threshold.
+    pub improvements: Vec<Delta>,
+    /// Matched timed records inside the threshold band.
+    pub within: usize,
+    /// Record ids only in the new report.
+    pub added: Vec<String>,
+    /// Record ids only in the old report.
+    pub removed: Vec<String>,
+}
+
+impl Comparison {
+    pub fn regressed(&self) -> bool {
+        !self.regressions.is_empty()
+    }
+}
+
+/// Diff `new` against `old` with a p50 regression threshold in percent.
+pub fn compare(old: &BenchReport, new: &BenchReport, threshold_pct: f64) -> Comparison {
+    let mut cmp = Comparison {
+        threshold_pct,
+        regressions: Vec::new(),
+        improvements: Vec::new(),
+        within: 0,
+        added: Vec::new(),
+        removed: Vec::new(),
+    };
+    let old_by: BTreeMap<String, &BenchRecord> = old.records.iter().map(|r| (r.id(), r)).collect();
+    let new_ids: BTreeSet<String> = new.records.iter().map(|r| r.id()).collect();
+
+    for r in &new.records {
+        match old_by.get(&r.id()) {
+            None => cmp.added.push(r.id()),
+            // Value-only rows and degenerate timings carry no p50 signal.
+            Some(o) if o.n == 0 || r.n == 0 || o.p50_s <= 0.0 => {}
+            Some(o) => {
+                let pct = (r.p50_s / o.p50_s - 1.0) * 100.0;
+                let d = Delta { id: r.id(), old_p50_s: o.p50_s, new_p50_s: r.p50_s, pct };
+                if pct > threshold_pct {
+                    cmp.regressions.push(d);
+                } else if pct < -threshold_pct {
+                    cmp.improvements.push(d);
+                } else {
+                    cmp.within += 1;
+                }
+            }
+        }
+    }
+    for id in old_by.keys() {
+        if !new_ids.contains(id) {
+            cmp.removed.push(id.clone());
+        }
+    }
+    cmp.regressions.sort_by(|a, b| b.pct.total_cmp(&a.pct));
+    cmp.improvements.sort_by(|a, b| a.pct.total_cmp(&b.pct));
+    cmp
+}
+
+/// Human rendering of a comparison (the `bench-compare` output).
+pub fn print_comparison(c: &Comparison) {
+    let row = |d: &Delta, tag: &str| {
+        println!(
+            "  {tag} {:<52} {:>10} -> {:>10}  {:>+7.1}%",
+            d.id,
+            fmt_time(d.old_p50_s),
+            fmt_time(d.new_p50_s),
+            d.pct
+        );
+    };
+    println!(
+        "# bench-compare: threshold ±{:.1}% on p50 ({} regressed, {} improved, {} within, {} added, {} removed)",
+        c.threshold_pct,
+        c.regressions.len(),
+        c.improvements.len(),
+        c.within,
+        c.added.len(),
+        c.removed.len()
+    );
+    for d in &c.regressions {
+        row(d, "REGRESSED");
+    }
+    for d in &c.improvements {
+        row(d, "improved ");
+    }
+    for id in &c.added {
+        println!("  added     {id}");
+    }
+    for id in &c.removed {
+        println!("  removed   {id}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::summarize;
+
+    fn report_with_p50(p50: f64) -> BenchReport {
+        let mut r = BenchReport::new("kernels", 1);
+        r.push(BenchRecord::from_summary("g", "hot", &summarize(&[p50, p50, p50])));
+        r
+    }
+
+    #[test]
+    fn threshold_splits_regressions_and_improvements() {
+        let old = report_with_p50(1.0);
+        assert!(!compare(&old, &report_with_p50(1.05), 10.0).regressed());
+        let c = compare(&old, &report_with_p50(1.25), 10.0);
+        assert!(c.regressed());
+        assert_eq!(c.regressions[0].id, "g/hot");
+        let c = compare(&old, &report_with_p50(0.5), 10.0);
+        assert!(!c.regressed());
+        assert_eq!(c.improvements.len(), 1);
+    }
+
+    #[test]
+    fn value_only_records_never_gate() {
+        let mut old = BenchReport::new("table5_overhead", 1);
+        old.push(BenchRecord::value("memory", "vit_tiny/+PA-DST").with_metric("state_mb", 1.0));
+        let mut new = BenchReport::new("table5_overhead", 1);
+        new.push(BenchRecord::value("memory", "vit_tiny/+PA-DST").with_metric("state_mb", 99.0));
+        assert!(!compare(&old, &new, 10.0).regressed());
+    }
+
+    #[test]
+    fn added_and_removed_are_reported() {
+        let mut old = BenchReport::new("kernels", 1);
+        old.push(BenchRecord::value("g", "gone"));
+        let mut new = BenchReport::new("kernels", 1);
+        new.push(BenchRecord::value("g", "fresh"));
+        let c = compare(&old, &new, 10.0);
+        assert_eq!(c.added, ["g/fresh"]);
+        assert_eq!(c.removed, ["g/gone"]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Scoped-thread worker pool for independent cells.
+//!
+//! Workers pull cell indices from a shared atomic cursor (dynamic load
+//! balancing: cell costs vary wildly across a sweep — Dense at one step
+//! count vs a 95 %-sparse butterfly run), execute them with a per-worker
+//! context built *inside* the worker thread (the context type needs no
+//! `Send`/`Sync` bounds, which is what lets each sweep worker own its own
+//! `Runtime`), and write results into per-index slots.  Merging by index
+//! makes the output order bit-identical to the sequential path regardless
+//! of scheduling.
+//!
+//! Error policy: the first failing cell (or worker init) aborts the pool —
+//! in-flight cells finish, queued cells are abandoned — and the error is
+//! returned after all workers have joined.  With a journal upstream
+//! (`shard::Journal`), cells completed before the failure are not lost.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::cli::available_threads;
+
+/// Resolve a worker knob against a cell count: 0 = auto (available
+/// parallelism), and never more workers than cells.
+pub fn resolve_workers(workers: usize, n_cells: usize) -> usize {
+    let cap = n_cells.max(1);
+    if workers == 0 {
+        available_threads().min(cap)
+    } else {
+        workers.min(cap)
+    }
+}
+
+/// Execute `work` over every key on a pool of `workers` scoped threads
+/// (resolved via [`resolve_workers`]); returns results in key order.
+///
+/// `init(worker_id)` builds one context per worker, inside that worker's
+/// thread.  `work(ctx, index, key)` runs one cell.  With one worker the
+/// whole thing runs inline on the calling thread — that *is* the
+/// sequential path, same context, same cell order.
+pub fn execute_sharded<K, W, T, I, F>(
+    keys: &[K],
+    workers: usize,
+    init: I,
+    work: F,
+) -> Result<Vec<T>>
+where
+    K: Sync,
+    T: Send,
+    I: Fn(usize) -> Result<W> + Sync,
+    F: Fn(&mut W, usize, &K) -> Result<T> + Sync,
+{
+    if keys.is_empty() {
+        return Ok(Vec::new());
+    }
+    let workers = resolve_workers(workers, keys.len());
+    if workers <= 1 {
+        let mut ctx = init(0)?;
+        return keys.iter().enumerate().map(|(i, k)| work(&mut ctx, i, k)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let abort = AtomicBool::new(false);
+    let slots: Mutex<Vec<Option<T>>> = Mutex::new((0..keys.len()).map(|_| None).collect());
+    let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+    let fail = |e: anyhow::Error| {
+        let mut fe = first_err.lock().unwrap();
+        if fe.is_none() {
+            *fe = Some(e);
+        }
+        abort.store(true, Ordering::SeqCst);
+    };
+
+    std::thread::scope(|scope| {
+        for wid in 0..workers {
+            let (init, work, fail) = (&init, &work, &fail);
+            let (cursor, abort, slots) = (&cursor, &abort, &slots);
+            scope.spawn(move || {
+                let mut ctx = match init(wid) {
+                    Ok(c) => c,
+                    Err(e) => return fail(e.context(format!("initialising worker {wid}"))),
+                };
+                loop {
+                    if abort.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let i = cursor.fetch_add(1, Ordering::SeqCst);
+                    if i >= keys.len() {
+                        return;
+                    }
+                    match work(&mut ctx, i, &keys[i]) {
+                        Ok(t) => slots.lock().unwrap()[i] = Some(t),
+                        Err(e) => return fail(e),
+                    }
+                }
+            });
+        }
+    });
+
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| anyhow!("cell {i} was never executed")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_workers_caps_and_autos() {
+        assert_eq!(resolve_workers(4, 10), 4);
+        assert_eq!(resolve_workers(16, 3), 3);
+        assert_eq!(resolve_workers(0, 2), available_threads().min(2));
+        assert_eq!(resolve_workers(0, 0), available_threads().min(1));
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        let keys: Vec<usize> = Vec::new();
+        let out = execute_sharded(
+            &keys,
+            4,
+            |_| Ok(()),
+            |_: &mut (), _, _: &usize| -> Result<usize> { unreachable!() },
+        )
+        .unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn init_failure_surfaces() {
+        let keys = vec![1usize, 2, 3];
+        let err = execute_sharded(
+            &keys,
+            2,
+            |wid| -> Result<()> { Err(anyhow!("no runtime for worker {wid}")) },
+            |_: &mut (), _, k: &usize| -> Result<usize> { Ok(*k) },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no runtime"), "{err}");
+    }
+}

@@ -1,0 +1,36 @@
+//! Execution-and-measurement harness — the layer between the coordinator
+//! and the kernels that fans work out and writes structured results back.
+//!
+//! Two halves share one record model:
+//!
+//! * **Sharded execution** ([`shard`] + [`executor`]): a (method x
+//!   sparsity) sweep grid is expanded into independent cells
+//!   ([`shard::plan_cells`]), executed on a scoped-thread worker pool
+//!   where every worker owns its own context — for sweeps, its own
+//!   `Runtime`, created inside the worker thread because runtimes are not
+//!   `Send` ([`executor::execute_sharded`]) — and merged back in grid
+//!   order, so the output is identical to the sequential path no matter
+//!   how the scheduler interleaved the cells.  Completed cells checkpoint
+//!   to a JSONL [`shard::Journal`], so an interrupted sweep resumes
+//!   without recomputation.
+//!
+//! * **Bench telemetry** ([`telemetry`] + [`baseline`]): every bench
+//!   target serialises its rows as a [`telemetry::BenchReport`]
+//!   (`BENCH_<name>.json`, via the in-tree `util::json` — no serde), and
+//!   [`baseline::compare`] diffs two reports on p50 so `padst
+//!   bench-compare` can gate CI on perf regressions.
+//!
+//! The executor is deliberately generic over the cell/result types: the
+//! determinism, error-propagation, and resume behaviour are all testable
+//! with synthetic cells (`tests/harness.rs`) — no artifacts or PJRT
+//! backend required.
+
+pub mod baseline;
+pub mod executor;
+pub mod shard;
+pub mod telemetry;
+
+pub use baseline::{compare, Comparison};
+pub use executor::{execute_sharded, resolve_workers};
+pub use shard::{plan_cells, CellKey, Journal};
+pub use telemetry::{BenchRecord, BenchReport};

@@ -1,0 +1,134 @@
+//! Grid planning and the resume journal.
+//!
+//! [`plan_cells`] expands a (method x sparsity) grid into the flat,
+//! deterministic cell list the executor shards — the same order the
+//! sequential sweep walks, so merged results compare byte-for-byte.
+//!
+//! [`Journal`] is a JSONL checkpoint: one line per completed cell,
+//! appended and flushed as cells finish (safe to call from any worker
+//! thread).  Reopening the journal returns the completed cells so a killed
+//! sweep resumes without recomputation; a line truncated by the kill is
+//! detected, sealed, and skipped.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One cell of a sweep grid.  The `id` string (`"method@sparsity"`) keys
+/// the journal; `f64` Display round-trips exactly, so ids are stable
+/// across runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellKey {
+    pub method: String,
+    pub sparsity: f64,
+}
+
+impl CellKey {
+    pub fn id(&self) -> String {
+        format!("{}@{}", self.method, self.sparsity)
+    }
+}
+
+/// Expand (method x sparsity) into the flat cell list, in sequential-sweep
+/// order.  Each method name is paired with whether it has a sparsity axis;
+/// a method without one (Dense) contributes exactly one cell, at the first
+/// sparsity.
+pub fn plan_cells(methods: &[(&str, bool)], sparsities: &[f64]) -> Vec<CellKey> {
+    let mut cells = Vec::new();
+    for &(name, has_axis) in methods {
+        for &sp in sparsities {
+            cells.push(CellKey { method: name.to_string(), sparsity: sp });
+            if !has_axis {
+                break;
+            }
+        }
+    }
+    cells
+}
+
+/// Append-only JSONL checkpoint of completed cells.
+///
+/// Line format: `{"cell": <value>, "key": "<id>"}` — one line per cell,
+/// flushed on write so at most the in-flight record is lost on a kill.
+/// Shareable across worker threads (`record` locks internally).
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl Journal {
+    /// Open `path` (creating parent directories and the file as needed)
+    /// and read back the cells completed by a previous — possibly
+    /// interrupted — run.  A truncated trailing line is sealed with a
+    /// newline so subsequent appends stay parseable, and skipped.
+    pub fn open(path: &Path) -> Result<(Journal, BTreeMap<String, Json>)> {
+        crate::util::fs::create_parent_dirs(path)?;
+        let mut done = BTreeMap::new();
+        let mut needs_seal = false;
+        if path.exists() {
+            let content = std::fs::read_to_string(path)
+                .with_context(|| format!("reading journal {}", path.display()))?;
+            needs_seal = !content.is_empty() && !content.ends_with('\n');
+            for line in content.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                // A line that doesn't parse is the torn tail of a killed
+                // run; its cell simply re-runs.
+                let Ok(v) = Json::parse(line) else { continue };
+                if let (Some(k), Some(cell)) = (v.get("key").and_then(Json::as_str), v.get("cell"))
+                {
+                    done.insert(k.to_string(), cell.clone());
+                }
+            }
+        }
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {} for append", path.display()))?;
+        if needs_seal {
+            writeln!(file).with_context(|| format!("sealing journal {}", path.display()))?;
+        }
+        Ok((Journal { path: path.to_path_buf(), file: Mutex::new(file) }, done))
+    }
+
+    /// Append one completed cell and flush.
+    pub fn record(&self, key: &str, cell: &Json) -> Result<()> {
+        // The compact serializer emits no newlines, so one value = one line.
+        let line = json::obj(vec![("key", json::s(key)), ("cell", cell.clone())]);
+        let mut f = self.file.lock().unwrap();
+        writeln!(f, "{}", line.to_string_pretty())
+            .and_then(|()| f.flush())
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_ids_are_stable() {
+        let k = CellKey { method: "DynaDiag+PA".into(), sparsity: 0.95 };
+        assert_eq!(k.id(), "DynaDiag+PA@0.95");
+    }
+
+    #[test]
+    fn plan_cells_order_and_dense_break() {
+        let cells = plan_cells(&[("A", true), ("Dense", false), ("B", true)], &[0.6, 0.9]);
+        let ids: Vec<String> = cells.iter().map(CellKey::id).collect();
+        assert_eq!(ids, ["A@0.6", "A@0.9", "Dense@0.6", "B@0.6", "B@0.9"]);
+    }
+}

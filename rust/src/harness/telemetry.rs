@@ -1,0 +1,223 @@
+//! Machine-readable bench telemetry: the `BENCH_<name>.json` schema.
+//!
+//! Every bench target emits one [`BenchReport`] alongside its human table
+//! so perf trajectories can be tracked across PRs and regressions gate CI
+//! (`padst bench-compare`, [`super::baseline`]).  Serialisation goes
+//! through the in-tree `util::json` — no serde in this offline build.
+//!
+//! Schema (version 1):
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "bench": "kernels",
+//!   "threads": 8,
+//!   "records": [
+//!     {"group": "microbench", "name": "gather(64,768,768) d=0.1",
+//!      "n": 57, "mean_s": 1.1e-4, "p50_s": 1.0e-4, "p95_s": 1.3e-4,
+//!      "min_s": 9.0e-5, "max_s": 2.0e-4,
+//!      "metrics": {"gflops": 12.5, "vs_naive": 2.1}}
+//!   ]
+//! }
+//! ```
+//!
+//! A record with `n == 0` is *value-only* (e.g. the memory tables): its
+//! timing fields are zero, `metrics` carries the payload, and the
+//! regression gate skips it.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::stats::Summary;
+
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// One bench row.  `(group, name)` must be unique within a report — it is
+/// the identity the baseline comparison matches on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub group: String,
+    pub name: String,
+    /// Timed samples behind the quantiles; 0 for value-only records.
+    pub n: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    /// Free-form numeric side channel (gflops, speedups, MB, ...).
+    pub metrics: BTreeMap<String, f64>,
+}
+
+impl BenchRecord {
+    /// A timed record from the offline bench harness's [`Summary`].
+    pub fn from_summary(group: &str, name: &str, s: &Summary) -> BenchRecord {
+        BenchRecord {
+            group: group.to_string(),
+            name: name.to_string(),
+            n: s.n,
+            mean_s: s.mean,
+            p50_s: s.p50,
+            p95_s: s.p95,
+            min_s: s.min,
+            max_s: s.max,
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    /// A value-only record (no timing): the payload goes in `metrics`.
+    pub fn value(group: &str, name: &str) -> BenchRecord {
+        BenchRecord {
+            group: group.to_string(),
+            name: name.to_string(),
+            n: 0,
+            mean_s: 0.0,
+            p50_s: 0.0,
+            p95_s: 0.0,
+            min_s: 0.0,
+            max_s: 0.0,
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    /// Builder-style metric attachment.
+    pub fn with_metric(mut self, key: &str, v: f64) -> BenchRecord {
+        self.metrics.insert(key.to_string(), v);
+        self
+    }
+
+    /// The identity the baseline comparison matches on.
+    pub fn id(&self) -> String {
+        format!("{}/{}", self.group, self.name)
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("group", json::s(&self.group)),
+            ("name", json::s(&self.name)),
+            ("n", json::num(self.n as f64)),
+            ("mean_s", json::num(self.mean_s)),
+            ("p50_s", json::num(self.p50_s)),
+            ("p95_s", json::num(self.p95_s)),
+            ("min_s", json::num(self.min_s)),
+            ("max_s", json::num(self.max_s)),
+            (
+                "metrics",
+                Json::Obj(
+                    self.metrics.iter().map(|(k, &v)| (k.clone(), json::num(v))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<BenchRecord> {
+        let str_field = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("bench record: missing string {k:?}"))
+        };
+        // Non-finite values serialise as JSON null; read them back as NaN.
+        let num_field = |k: &str| -> Result<f64> {
+            let x = v.get(k).ok_or_else(|| anyhow!("bench record: missing number {k:?}"))?;
+            Ok(x.as_f64().unwrap_or(f64::NAN))
+        };
+        let mut metrics = BTreeMap::new();
+        if let Some(m) = v.get("metrics").and_then(Json::as_obj) {
+            for (k, mv) in m {
+                metrics.insert(k.clone(), mv.as_f64().unwrap_or(f64::NAN));
+            }
+        }
+        Ok(BenchRecord {
+            group: str_field("group")?,
+            name: str_field("name")?,
+            n: num_field("n")? as usize,
+            mean_s: num_field("mean_s")?,
+            p50_s: num_field("p50_s")?,
+            p95_s: num_field("p95_s")?,
+            min_s: num_field("min_s")?,
+            max_s: num_field("max_s")?,
+            metrics,
+        })
+    }
+}
+
+/// One bench target's full report.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub schema_version: u32,
+    /// Bench name — the `BENCH_<bench>.json` stem.
+    pub bench: String,
+    /// Resolved worker-thread ceiling the bench ran under.
+    pub threads: usize,
+    pub records: Vec<BenchRecord>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str, threads: usize) -> BenchReport {
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            bench: bench.to_string(),
+            threads,
+            records: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: BenchRecord) {
+        self.records.push(r);
+    }
+
+    pub fn find(&self, group: &str, name: &str) -> Option<&BenchRecord> {
+        self.records.iter().find(|r| r.group == group && r.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema_version", json::num(self.schema_version as f64)),
+            ("bench", json::s(&self.bench)),
+            ("threads", json::num(self.threads as f64)),
+            ("records", Json::Arr(self.records.iter().map(BenchRecord::to_json).collect())),
+        ])
+    }
+
+    pub fn parse(src: &str) -> Result<BenchReport> {
+        let v = Json::parse(src).context("parsing bench report")?;
+        let schema_version = v
+            .get("schema_version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("bench report: missing schema_version"))? as u32;
+        if schema_version != SCHEMA_VERSION {
+            return Err(anyhow!(
+                "bench report schema v{schema_version} != supported v{SCHEMA_VERSION}"
+            ));
+        }
+        let bench = v
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("bench report: missing bench name"))?
+            .to_string();
+        let threads = v.get("threads").and_then(Json::as_usize).unwrap_or(0);
+        let records = v
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("bench report: missing records"))?
+            .iter()
+            .map(BenchRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BenchReport { schema_version, bench, threads, records })
+    }
+
+    /// Atomic write (temp + rename, parent dirs created).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        crate::util::fs::write_atomic(path, &self.to_json().to_string_pretty())
+    }
+
+    pub fn load(path: &Path) -> Result<BenchReport> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench report {}", path.display()))?;
+        BenchReport::parse(&src).with_context(|| path.display().to_string())
+    }
+}

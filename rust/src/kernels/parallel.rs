@@ -29,35 +29,14 @@ use super::csr::{csr_matmul, csr_row_dot, Csr};
 use super::dense::{dense_matmul_blocked, dense_rows_blocked};
 use super::gather::{block_matmul, block_row_matmul, gather_matmul, gather_row_dot};
 
-/// The machine's available parallelism (>= 1).
-pub fn available_threads() -> usize {
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-}
-
-/// Resolve a thread knob: 0 = auto (available parallelism).
-pub fn resolve_threads(threads: usize) -> usize {
-    if threads == 0 {
-        available_threads()
-    } else {
-        threads
-    }
-}
+pub use crate::util::cli::{available_threads, resolve_threads};
 
 /// Thread count for benches: `--threads N` argv (cargo bench forwards args
-/// after `--`), else `PADST_THREADS`, else available parallelism.
+/// after `--`), else `PADST_THREADS`, else available parallelism.  The
+/// scanning itself lives in [`crate::util::cli`], shared with the CLI and
+/// the sweep executor's `--workers` flag.
 pub fn threads_from_env_or_args() -> usize {
-    let argv: Vec<String> = std::env::args().collect();
-    if let Some(p) = argv.iter().position(|a| a == "--threads") {
-        if let Some(n) = argv.get(p + 1).and_then(|v| v.parse::<usize>().ok()) {
-            return resolve_threads(n);
-        }
-    }
-    if let Ok(v) = std::env::var("PADST_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return resolve_threads(n);
-        }
-    }
-    available_threads()
+    resolve_threads(crate::util::cli::thread_knob())
 }
 
 /// Split `y` into at most `threads` contiguous chunks aligned to `unit`

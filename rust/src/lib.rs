@@ -9,9 +9,11 @@
 //! * **L2** — JAX model fwd/bwd + DST updates, AOT-lowered to HLO text.
 //! * **L3** — this crate: the training coordinator (DST schedule, per-layer
 //!   permutation hardening, metrics), the PJRT runtime that executes the
-//!   artifacts, and the native CPU sparse kernels — with a scoped-thread
+//!   artifacts, the native CPU sparse kernels — with a scoped-thread
 //!   parallel execution layer ([`kernels::parallel`]) — used to reproduce
-//!   the paper's inference-speedup results.
+//!   the paper's inference-speedup results, and the [`harness`] that
+//!   shards sweep grids across per-worker runtimes and records bench
+//!   telemetry (`BENCH_*.json`) for the CI perf gate.
 //!
 //! See `docs/ARCHITECTURE.md` for the full layer stack and the README for
 //! the paper-artifact ↔ command map.
@@ -30,4 +32,5 @@ pub mod nlr;
 pub mod kernels;
 pub mod data;
 pub mod models;
+pub mod harness;
 pub mod coordinator;

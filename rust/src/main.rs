@@ -1,20 +1,24 @@
 //! `padst` CLI — the leader entrypoint of the L3 coordinator.
 //!
 //! Subcommands:
-//!   train   — one PA-DST training run (model/structure/density/perm flags)
-//!   sweep   — method x sparsity grid (Fig. 2 / Tbl. 11-12 analogue)
-//!   nlr     — expressivity bound tables (Table 1, Apdx B/C.1)
-//!   list    — artifacts available in the manifest
+//!   train          — one PA-DST training run (model/structure/density/perm flags)
+//!   sweep          — method x sparsity grid (Fig. 2 / Tbl. 11-12 analogue);
+//!                    `--workers N` shards cells across per-worker runtimes
+//!   nlr            — expressivity bound tables (Table 1, Apdx B/C.1)
+//!   list           — artifacts available in the manifest
+//!   bench-compare  — diff two BENCH_*.json reports; exits non-zero on a
+//!                    p50 regression beyond the threshold (the CI perf gate)
 //!
 //! Benches (Fig. 3, Tbl. 5) live under `cargo bench`; analysis examples
 //! (Fig. 4-6) under `cargo run --example`.
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
 use padst::coordinator::{sweep, GrowMode, RunConfig, Trainer};
+use padst::harness::{baseline, telemetry::BenchReport};
 use padst::nlr;
 use padst::runtime::Runtime;
 use padst::sparsity::patterns::Structure;
@@ -73,6 +77,7 @@ fn usage() -> ! {
         "padst — Permutation-Augmented Dynamic Structured Sparse Training
 
 USAGE: padst <train|sweep|nlr|list> [--flag value ...]
+       padst bench-compare <old.json> <new.json> [--threshold PCT]
 
 train:
   --model vit_tiny|gpt_tiny|mixer_tiny|gpt_small   (default vit_tiny)
@@ -87,12 +92,20 @@ train:
 
 sweep:
   --model ...  --steps N  --sparsities 0.6,0.9  --methods RigL,DynaDiag+PA
-  --csv PATH              dump results as CSV
-  --threads N             worker threads shared by every cell
+  --csv PATH              dump results as CSV (atomic write)
+  --threads N             global native-kernel budget, divided across workers
+  --workers N             sweep cells in parallel, one runtime per worker
+                          (default 1 = sequential; 0 = auto)
+  --journal PATH          JSONL checkpoint; an interrupted sweep resumes
+                          from it without re-running completed cells
 
 nlr:
   --d0 1024 --widths 4096,1024x24 --density 0.05   Table-1 style bounds
   --threads N             parallel bound evaluation (default: auto)
+
+bench-compare:
+  padst bench-compare BENCH_old.json BENCH_new.json [--threshold 10]
+  exits 1 if any record's p50 regressed more than the threshold percent
 "
     );
     std::process::exit(2);
@@ -144,9 +157,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 0)?; // 0 = auto
-    let mut rt = Runtime::open_with_threads(&artifacts_dir(args), threads)?;
+    let workers = args.get_usize("workers", 1)?; // 1 = sequential, 0 = auto
+    let journal = args.flags.get("journal").map(PathBuf::from);
+    let dir = artifacts_dir(args);
     let model = args.get("model", "vit_tiny");
     let steps = args.get_usize("steps", 150)?;
+    let seed = args.get_usize("seed", 0)? as u64;
     let sparsities: Vec<f64> = args
         .get("sparsities", "0.6,0.9")
         .split(',')
@@ -157,21 +173,26 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .split(',')
         .map(|n| sweep::method_by_name(n).ok_or_else(|| anyhow!("unknown method {n:?}")))
         .collect::<Result<_>>()?;
-    let cells = sweep::run_sweep(
-        &mut rt,
-        &model,
-        &methods,
-        &sparsities,
-        steps,
-        args.get_usize("seed", 0)? as u64,
-        true,
-        threads,
-    )?;
-    let kind = rt.manifest.models[&model].kind.clone();
+    let opts = sweep::SweepShardOpts { workers, threads, journal, verbose: true };
+    let (cells, kind) =
+        sweep::run_sweep_auto(&dir, &model, &methods, &sparsities, steps, seed, &opts)?;
     sweep::print_table(&model, &kind, &cells, &sparsities);
     if let Some(csv) = args.flags.get("csv") {
-        sweep::write_csv(std::path::Path::new(csv), &cells)?;
+        sweep::write_csv(Path::new(csv), &cells)?;
         eprintln!("[padst] wrote {csv}");
+    }
+    Ok(())
+}
+
+/// Diff two bench reports; exit 1 on a gating p50 regression.
+fn cmd_bench_compare(old: &str, new: &str, args: &Args) -> Result<()> {
+    let threshold = args.get_f64("threshold", 10.0)?;
+    let old_report = BenchReport::load(Path::new(old))?;
+    let new_report = BenchReport::load(Path::new(new))?;
+    let cmp = baseline::compare(&old_report, &new_report, threshold);
+    baseline::print_comparison(&cmp);
+    if cmp.regressed() {
+        std::process::exit(1);
     }
     Ok(())
 }
@@ -227,6 +248,14 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         usage();
+    }
+    if argv[0] == "bench-compare" {
+        // Positional form: bench-compare <old.json> <new.json> [--flags].
+        if argv.len() < 3 || argv[1].starts_with("--") || argv[2].starts_with("--") {
+            usage();
+        }
+        let args = Args::parse(&argv[3..])?;
+        return cmd_bench_compare(&argv[1], &argv[2], &args);
     }
     let args = Args::parse(&argv[1..])?;
     match argv[0].as_str() {

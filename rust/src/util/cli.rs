@@ -1,0 +1,152 @@
+//! Shared CLI/env knob parsing.
+//!
+//! One worker-thread convention flows through the whole crate (`0` = auto
+//! = available parallelism, `1` = serial, `n` = at most n workers), and
+//! before this module each bench target hand-rolled its own argv scanning
+//! around `kernels::parallel::threads_from_env_or_args`.  The scanning
+//! lives here now — the CLI, the five benches, the examples, and the sweep
+//! executor's `--workers` flag all parse through the same helpers.
+
+use std::path::PathBuf;
+
+/// The machine's available parallelism (>= 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a thread knob: 0 = auto (available parallelism).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        available_threads()
+    } else {
+        threads
+    }
+}
+
+/// `--key value` scan over an argv slice; `None` if absent or value-less.
+pub fn arg_value_in(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).cloned()
+}
+
+/// Presence check for a bare `--flag`.
+pub fn has_flag_in(args: &[String], key: &str) -> bool {
+    args.iter().any(|a| a == key)
+}
+
+fn argv() -> Vec<String> {
+    std::env::args().collect()
+}
+
+/// Raw thread knob from an argv slice: `--threads N`, else the
+/// `PADST_THREADS` env var, else 0 (= auto).  Unparseable values fall
+/// through to the next source.
+pub fn thread_knob_in(args: &[String]) -> usize {
+    if let Some(n) = arg_value_in(args, "--threads").and_then(|v| v.parse().ok()) {
+        return n;
+    }
+    if let Ok(v) = std::env::var("PADST_THREADS") {
+        if let Ok(n) = v.parse() {
+            return n;
+        }
+    }
+    0
+}
+
+/// [`thread_knob_in`] over the process argv (cargo bench forwards
+/// arguments after `--` to the bench binary).
+pub fn thread_knob() -> usize {
+    thread_knob_in(&argv())
+}
+
+/// Where a bench's machine-readable report goes: `PADST_BENCH_DIR` if set,
+/// else the current directory, always named `BENCH_<bench>.json`.
+pub fn bench_json_path(bench: &str) -> PathBuf {
+    let file = format!("BENCH_{bench}.json");
+    match std::env::var("PADST_BENCH_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d).join(file),
+        _ => PathBuf::from(file),
+    }
+}
+
+/// Options shared by every bench target, parsed from argv + environment in
+/// one place.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    /// Bench name (the `BENCH_<name>.json` stem).
+    pub bench: String,
+    /// Resolved worker-thread ceiling (>= 1).
+    pub threads: usize,
+    /// Short mode (`--short` or `PADST_BENCH_SHORT=1`): CI-sized sample
+    /// budgets via [`BenchOpts::budget`].
+    pub short: bool,
+    /// Where the JSON report is written (`--json PATH` overrides
+    /// [`bench_json_path`]).
+    pub json_path: PathBuf,
+}
+
+impl BenchOpts {
+    pub fn parse(bench: &str) -> BenchOpts {
+        let args = argv();
+        let short = has_flag_in(&args, "--short")
+            || std::env::var("PADST_BENCH_SHORT")
+                .map(|v| !v.is_empty() && v != "0")
+                .unwrap_or(false);
+        let json_path = arg_value_in(&args, "--json")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| bench_json_path(bench));
+        BenchOpts {
+            bench: bench.to_string(),
+            threads: resolve_threads(thread_knob_in(&args)),
+            short,
+            json_path,
+        }
+    }
+
+    /// Scale a call site's `(warmup, min_iters, min_time_s)` budget down
+    /// for short mode; identity otherwise.
+    pub fn budget(&self, warmup: usize, min_iters: usize, min_time_s: f64) -> (usize, usize, f64) {
+        if self.short {
+            (warmup.min(1), min_iters.min(2), min_time_s.min(0.02))
+        } else {
+            (warmup, min_iters, min_time_s)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn arg_scanning() {
+        let a = args(&["bench", "--threads", "4", "--short"]);
+        assert_eq!(arg_value_in(&a, "--threads").as_deref(), Some("4"));
+        assert_eq!(arg_value_in(&a, "--json"), None);
+        assert!(has_flag_in(&a, "--short"));
+        assert!(!has_flag_in(&a, "--full"));
+        assert_eq!(thread_knob_in(&a), 4);
+    }
+
+    #[test]
+    fn resolve_zero_is_auto() {
+        assert_eq!(resolve_threads(0), available_threads());
+        assert_eq!(resolve_threads(5), 5);
+    }
+
+    #[test]
+    fn short_budget_caps() {
+        let mut o = BenchOpts {
+            bench: "x".into(),
+            threads: 1,
+            short: true,
+            json_path: PathBuf::from("BENCH_x.json"),
+        };
+        assert_eq!(o.budget(2, 5, 0.3), (1, 2, 0.02));
+        o.short = false;
+        assert_eq!(o.budget(2, 5, 0.3), (2, 5, 0.3));
+    }
+}

@@ -1,0 +1,72 @@
+//! Filesystem helpers for result writers: parent-directory creation and
+//! atomic (temp-file + rename) writes.
+//!
+//! Every file the harness and coordinator emit — sweep CSVs, bench
+//! telemetry JSON, journals — goes through here, so an interrupted run
+//! never leaves a truncated file behind and writing into a not-yet-created
+//! output directory just works.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Create the missing parent directories of `path`, if any.
+pub fn create_parent_dirs(path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating directory {}", parent.display()))?;
+        }
+    }
+    Ok(())
+}
+
+/// Write `contents` to `path` atomically: the bytes land in a sibling temp
+/// file which is then renamed over the target, so readers never observe a
+/// half-written file and a mid-write crash leaves any previous content
+/// intact.  Parent directories are created as needed.
+pub fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    create_parent_dirs(path)?;
+    let tmp = tmp_sibling(path);
+    std::fs::write(&tmp, contents).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// A temp path in the same directory as `path` (rename must not cross a
+/// filesystem boundary), unique per process.
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "out".into());
+    path.with_file_name(format!(".{name}.tmp.{}", std::process::id()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("padst_fs_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn write_atomic_creates_parents_and_replaces() {
+        let dir = scratch("atomic");
+        let path = dir.join("a").join("b").join("out.csv");
+        write_atomic(&path, "one\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "one\n");
+        write_atomic(&path, "two\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "two\n");
+        // No temp droppings left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -99,7 +99,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no Infinity/NaN literal; emit null so the
+                    // output always re-parses (readers treat it as NaN).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -361,5 +365,14 @@ mod tests {
     fn nested_depth() {
         let src = "[".repeat(50) + &"]".repeat(50);
         assert!(Json::parse(&src).is_ok());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let s = Json::Num(bad).to_string_pretty();
+            assert_eq!(s, "null");
+            assert_eq!(Json::parse(&s).unwrap(), Json::Null);
+        }
     }
 }

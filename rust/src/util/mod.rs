@@ -2,6 +2,8 @@
 //! lightweight timing harness used by the benches (this build is fully
 //! offline, so `rand`/`criterion` are hand-rolled here).
 
+pub mod cli;
+pub mod fs;
 pub mod json;
 pub mod stats;
 

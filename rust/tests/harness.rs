@@ -1,0 +1,326 @@
+//! Harness subsystem contract tests — all runnable without artifacts or a
+//! PJRT backend, because the executor/journal/telemetry layers are generic
+//! over the cell type:
+//!
+//! * sharded execution returns results in input order, identical to the
+//!   sequential (1-worker) path, for any worker count;
+//! * every cell runs exactly once, per-worker contexts are built once per
+//!   worker, and errors abort the pool;
+//! * a killed sweep resumes from the JSONL journal without re-running
+//!   completed cells, including a torn (mid-write) trailing record;
+//! * `BenchRecord`/`BenchReport` round-trip through `util::json`, and the
+//!   baseline diff flags an injected p50 regression.
+//!
+//! The end-to-end shard-vs-sequential sweep equality (real `run_sweep` vs
+//! `run_sweep_sharded` through artifacts) lives at the bottom and skips
+//! when `artifacts/manifest.json` is absent, like the other integration
+//! tests.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use padst::coordinator::sweep::{self, SweepShardOpts};
+use padst::harness::baseline::compare;
+use padst::harness::executor::execute_sharded;
+use padst::harness::shard::{plan_cells, CellKey, Journal};
+use padst::harness::telemetry::{BenchRecord, BenchReport};
+use padst::runtime::Runtime;
+use padst::util::json;
+use padst::util::stats::summarize;
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("padst_harness_{tag}_{}", std::process::id()))
+}
+
+// ---------------------------------------------------------------- executor
+
+#[test]
+fn sharded_matches_sequential_for_any_worker_count() {
+    let keys: Vec<usize> = (0..23).collect();
+    let work = |_: &mut (), i: usize, k: &usize| -> anyhow::Result<(usize, usize)> {
+        Ok((i, k * k))
+    };
+    let seq = execute_sharded(&keys, 1, |_| Ok(()), work).unwrap();
+    assert_eq!(seq.len(), keys.len());
+    for workers in [2, 4, 16, 64] {
+        let par = execute_sharded(&keys, workers, |_| Ok(()), work).unwrap();
+        assert_eq!(par, seq, "workers={workers}");
+    }
+}
+
+#[test]
+fn every_cell_runs_exactly_once_on_its_own_worker_context() {
+    let keys: Vec<usize> = (0..50).collect();
+    let runs = AtomicUsize::new(0);
+    let inits = AtomicUsize::new(0);
+    let out = execute_sharded(
+        &keys,
+        8,
+        |wid| -> anyhow::Result<usize> {
+            inits.fetch_add(1, Ordering::SeqCst);
+            Ok(wid)
+        },
+        |wid: &mut usize, _i: usize, k: &usize| -> anyhow::Result<(usize, usize)> {
+            runs.fetch_add(1, Ordering::SeqCst);
+            Ok((*wid, *k))
+        },
+    )
+    .unwrap();
+    assert_eq!(runs.load(Ordering::SeqCst), keys.len());
+    assert_eq!(inits.load(Ordering::SeqCst), 8);
+    // Results are in key order regardless of which worker computed them.
+    assert_eq!(out.iter().map(|&(_, k)| k).collect::<Vec<_>>(), keys);
+    // Every worker id that pulled cells was a real pool member.
+    assert!(out.iter().all(|&(w, _)| w < 8));
+}
+
+#[test]
+fn worker_error_aborts_and_surfaces() {
+    let keys: Vec<usize> = (0..64).collect();
+    let err = execute_sharded(
+        &keys,
+        4,
+        |_| Ok(()),
+        |_: &mut (), _i: usize, k: &usize| -> anyhow::Result<usize> {
+            if *k == 17 {
+                anyhow::bail!("cell {k} exploded");
+            }
+            Ok(*k)
+        },
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("exploded"), "{err}");
+}
+
+// ----------------------------------------------------------------- journal
+
+#[test]
+fn journal_resume_skips_completed_cells_and_survives_torn_writes() {
+    let dir = scratch("journal");
+    std::fs::remove_dir_all(&dir).ok();
+    // Parent directories don't exist yet — Journal::open must create them.
+    let path = dir.join("nested").join("sweep.jsonl");
+
+    // First run: two cells complete, then the process dies mid-write.
+    {
+        let (j, done) = Journal::open(&path).unwrap();
+        assert!(done.is_empty());
+        j.record("A@0.6", &json::num(1.0)).unwrap();
+        j.record("A@0.9", &json::num(2.0)).unwrap();
+    }
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        write!(f, "{{\"key\":\"B@0.6\",\"cell\":").unwrap(); // torn record
+    }
+
+    // Resume: the torn record is discarded, the completed cells are back.
+    let (j, done) = Journal::open(&path).unwrap();
+    assert_eq!(done.len(), 2);
+    assert_eq!(done["A@0.6"].as_f64(), Some(1.0));
+    assert_eq!(done["A@0.9"].as_f64(), Some(2.0));
+
+    // Only the missing cells are pending.
+    let all = plan_cells(&[("A", true), ("B", true)], &[0.6, 0.9]);
+    let pending: Vec<String> = all
+        .iter()
+        .map(CellKey::id)
+        .filter(|id| !done.contains_key(id))
+        .collect();
+    assert_eq!(pending, ["B@0.6", "B@0.9"]);
+
+    // Appending after the torn tail still yields parseable lines.
+    j.record("B@0.6", &json::num(3.0)).unwrap();
+    let (_j2, done2) = Journal::open(&path).unwrap();
+    assert_eq!(done2.len(), 3);
+    assert_eq!(done2["B@0.6"].as_f64(), Some(3.0));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn journal_records_safely_from_worker_threads() {
+    let dir = scratch("journal_mt");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("sweep.jsonl");
+    let (j, _) = Journal::open(&path).unwrap();
+    let jref = &j;
+    let keys: Vec<usize> = (0..40).collect();
+    execute_sharded(
+        &keys,
+        8,
+        |_| Ok(()),
+        |_: &mut (), _i: usize, k: &usize| -> anyhow::Result<()> {
+            jref.record(&format!("cell@{k}"), &json::num(*k as f64))
+        },
+    )
+    .unwrap();
+    let (_j2, done) = Journal::open(&path).unwrap();
+    assert_eq!(done.len(), 40);
+    for k in 0..40 {
+        assert_eq!(done[&format!("cell@{k}")].as_f64(), Some(k as f64));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// --------------------------------------------------------------- telemetry
+
+#[test]
+fn bench_report_roundtrips_through_json_text() {
+    let s = summarize(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+    let mut report = BenchReport::new("kernels", 4);
+    report.push(
+        BenchRecord::from_summary("microbench", "gather(64,768,768) d=0.1", &s)
+            .with_metric("gflops", 12.5)
+            .with_metric("vs_naive", 2.0),
+    );
+    report.push(BenchRecord::value("memory", "vit_tiny/+PA-DST").with_metric("state_mb", 1.25));
+    let text = report.to_json().to_string_pretty();
+    let back = BenchReport::parse(&text).unwrap();
+    assert_eq!(back, report);
+}
+
+#[test]
+fn bench_report_write_load_creates_parents_and_replaces_atomically() {
+    let dir = scratch("bench");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("deep").join("BENCH_x.json");
+    let mut report = BenchReport::new("x", 1);
+    report.push(BenchRecord::value("g", "n").with_metric("v", 1.0));
+    report.write(&path).unwrap();
+    assert_eq!(BenchReport::load(&path).unwrap(), report);
+    report.push(BenchRecord::value("g", "n2").with_metric("v", 2.0));
+    report.write(&path).unwrap();
+    assert_eq!(BenchReport::load(&path).unwrap(), report);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bench_compare_gates_on_injected_regression() {
+    let with_p50 = |p50: f64| {
+        let mut r = BenchReport::new("kernels", 2);
+        r.push(BenchRecord::from_summary("microbench", "hot", &summarize(&[p50, p50])));
+        r
+    };
+    let old = with_p50(1.0);
+    assert!(!compare(&old, &with_p50(1.04), 10.0).regressed());
+    let c = compare(&old, &with_p50(1.5), 10.0); // injected +50% regression
+    assert!(c.regressed());
+    assert_eq!(c.regressions[0].id, "microbench/hot");
+    assert!((c.regressions[0].pct - 50.0).abs() < 1e-9);
+}
+
+/// The sweep journal is parameter-checked: a journal written under one
+/// (model, steps, seed) must refuse to resume a different sweep.  Runs
+/// without artifacts — the metadata check happens before any runtime is
+/// opened (the first call fails at manifest load, *after* writing the
+/// journal header).
+#[test]
+fn sweep_journal_refuses_other_parameters() {
+    let dir = scratch("journal_meta");
+    std::fs::remove_dir_all(&dir).ok();
+    let no_artifacts = dir.join("no_artifacts_here");
+    let journal = dir.join("journal.jsonl");
+    let methods = vec![sweep::method_by_name("DynaDiag").unwrap()];
+    let opts = SweepShardOpts {
+        workers: 1,
+        threads: 1,
+        journal: Some(journal.clone()),
+        verbose: false,
+    };
+    // First run: header is journaled, then the missing manifest errors.
+    let e1 = sweep::run_sweep_sharded(&no_artifacts, "vit_tiny", &methods, &[0.9], 10, 7, &opts)
+        .unwrap_err();
+    assert!(e1.to_string().contains("manifest"), "{e1}");
+    assert!(journal.exists());
+    // Same parameters: resumes past the header, fails at the manifest again.
+    let e2 = sweep::run_sweep_sharded(&no_artifacts, "vit_tiny", &methods, &[0.9], 10, 7, &opts)
+        .unwrap_err();
+    assert!(e2.to_string().contains("manifest"), "{e2}");
+    // Different steps: refused before any execution.
+    let e3 = sweep::run_sweep_sharded(&no_artifacts, "vit_tiny", &methods, &[0.9], 20, 7, &opts)
+        .unwrap_err();
+    assert!(e3.to_string().contains("different sweep"), "{e3}");
+    // Different model: also refused.
+    let e4 = sweep::run_sweep_sharded(&no_artifacts, "gpt_tiny", &methods, &[0.9], 10, 7, &opts)
+        .unwrap_err();
+    assert!(e4.to_string().contains("different sweep"), "{e4}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------- end-to-end (needs PJRT)
+
+/// `run_sweep` with 1 worker and N workers must produce identical cell
+/// results on a small grid.  Requires artifacts + the real backend; skips
+/// (passes trivially) otherwise, like the other integration tests.
+#[test]
+fn sweep_sharded_equals_sequential_on_small_grid() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let methods: Vec<_> = ["DynaDiag", "DynaDiag+PA", "Dense"]
+        .iter()
+        .map(|n| sweep::method_by_name(n).unwrap())
+        .collect();
+    let sparsities = [0.8, 0.95];
+    let steps = 20;
+
+    let mut rt = Runtime::open(&dir).unwrap();
+    let seq = sweep::run_sweep(&mut rt, "vit_tiny", &methods, &sparsities, steps, 7, false, 1)
+        .unwrap();
+
+    let journal = scratch("sweep_equality").join("journal.jsonl");
+    std::fs::remove_file(&journal).ok();
+    let opts = SweepShardOpts {
+        workers: 3,
+        threads: 3,
+        journal: Some(journal.clone()),
+        verbose: false,
+    };
+    let par =
+        sweep::run_sweep_sharded(&dir, "vit_tiny", &methods, &sparsities, steps, 7, &opts).unwrap();
+
+    assert_eq!(seq.len(), par.len());
+    for (a, b) in seq.iter().zip(&par) {
+        assert_eq!(a.method, b.method);
+        assert_eq!(a.sparsity, b.sparsity);
+        // Deterministic fields must agree bitwise; train_seconds is
+        // wall-clock and legitimately differs.
+        assert_eq!(a.result.losses, b.result.losses, "{}@{}", a.method, a.sparsity);
+        assert_eq!(a.result.final_eval_loss, b.result.final_eval_loss);
+        assert_eq!(a.result.final_eval_acc, b.result.final_eval_acc);
+        assert_eq!(a.result.final_ppl, b.result.final_ppl);
+        assert_eq!(a.result.harden_step, b.result.harden_step);
+    }
+
+    // Re-running with the journal present recomputes nothing (the journal
+    // already covers the whole grid) and still returns the same cells.
+    // Line count = one metadata header + one line per cell.
+    let runs_before = std::fs::read_to_string(&journal).unwrap().lines().count();
+    assert_eq!(runs_before, par.len() + 1);
+    let resumed =
+        sweep::run_sweep_sharded(&dir, "vit_tiny", &methods, &sparsities, steps, 7, &opts).unwrap();
+    let runs_after = std::fs::read_to_string(&journal).unwrap().lines().count();
+    assert_eq!(runs_after, runs_before, "resume re-ran journaled cells");
+    for (a, b) in par.iter().zip(&resumed) {
+        assert_eq!(a.result.final_eval_loss, b.result.final_eval_loss);
+    }
+    std::fs::remove_dir_all(scratch("sweep_equality")).ok();
+}
+
+// A compile-time guard: the executor accepts non-Send worker contexts
+// (what lets sweep workers own a `Runtime`, which holds `Rc`s).
+#[test]
+fn executor_accepts_non_send_worker_contexts() {
+    use std::rc::Rc;
+    let keys = vec![1usize, 2, 3];
+    let out = execute_sharded(
+        &keys,
+        2,
+        |_| Ok(Rc::new(10usize)),
+        |ctx: &mut Rc<usize>, _i: usize, k: &usize| -> anyhow::Result<usize> { Ok(**ctx + *k) },
+    )
+    .unwrap();
+    assert_eq!(out, [11, 12, 13]);
+}
