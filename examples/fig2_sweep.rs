@@ -6,16 +6,20 @@
 //! `--full` for the whole method zoo and all five sparsities (budget ~1 h)
 //! and `--model gpt_tiny` / `mixer_tiny` for the other panels.
 //! `--workers N` shards the grid across N runtimes (~N x wall-clock cut);
-//! `--journal PATH` checkpoints completed cells so a killed sweep resumes.
+//! `--journal PATH` checkpoints completed cells so a killed sweep resumes;
+//! `--shard i/n` runs one cluster shard of the grid (combine the per-shard
+//! journals with `padst journal-merge`); `--backend scalar|tiled|simd`
+//! selects the native-kernel microkernel backend.
 //!
 //! Run: `cargo run --release --example fig2_sweep -- [--full] [--model M]
 //!       [--steps N] [--csv PATH] [--threads N] [--workers N]
-//!       [--journal PATH]`
+//!       [--journal PATH] [--shard i/n] [--backend B]`
 
 use padst::coordinator::sweep::{
     method_by_name, print_table, run_sweep_auto, write_csv, SweepShardOpts, METHODS,
 };
-use padst::util::cli::{arg_value_in, has_flag_in};
+use padst::harness::shard::parse_shard;
+use padst::util::cli::{arg_value_in, backend_knob_in, has_flag_in};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -26,7 +30,12 @@ fn main() -> anyhow::Result<()> {
 
     let threads: usize = get("--threads", "0").parse()?; // 0 = auto
     let workers: usize = get("--workers", "1").parse()?; // 1 = sequential
+    let backend = backend_knob_in(&args);
     let journal = arg_value_in(&args, "--journal").map(std::path::PathBuf::from);
+    let shard = match arg_value_in(&args, "--shard") {
+        Some(s) => Some(parse_shard(&s)?),
+        None => None,
+    };
     let dir = std::path::Path::new("artifacts");
 
     let (methods, sparsities): (Vec<_>, Vec<f64>) = if full {
@@ -46,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         methods.len(),
         sparsities
     );
-    let opts = SweepShardOpts { workers, threads, journal, verbose: true };
+    let opts = SweepShardOpts { workers, threads, backend, shard, journal, verbose: true };
     let (cells, kind) = run_sweep_auto(dir, &model, &methods, &sparsities, steps, 0, &opts)?;
     print_table(&model, &kind, &cells, &sparsities);
 

@@ -23,8 +23,8 @@
 
 use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::kernels::{
-    block_matmul_mt, csr_from_mask, csr_matmul_mt, dense_matmul_blocked_mt, gather_matmul_mt,
-    shuffle_rows,
+    block_matmul_mt_with, csr_from_mask, csr_matmul_mt_with, dense_matmul_blocked_mt_with,
+    gather_matmul_mt_with, shuffle_rows,
 };
 use padst::models::PAPER_LAYERS;
 use padst::sparsity::compress::{compress_blocks, compress_rows};
@@ -38,7 +38,8 @@ const BATCH: usize = 64; // tokens in flight, ~ViT-B/16 sequence dimension
 fn main() -> anyhow::Result<()> {
     let opts = BenchOpts::parse("fig3_inference");
     let threads = opts.threads;
-    let mut report = BenchReport::new("fig3_inference", threads);
+    let backend = opts.backend;
+    let mut report = BenchReport::new("fig3_inference", threads).with_backend(backend);
     let sparsities = [0.6, 0.7, 0.8, 0.9, 0.95];
     let structures = [
         Structure::Diag,
@@ -47,7 +48,11 @@ fn main() -> anyhow::Result<()> {
         Structure::Butterfly,
         Structure::Unstructured,
     ];
-    println!("# Fig. 3 (inference): y = x@W^T, batch={BATCH}, threads={threads}, times per call");
+    println!(
+        "# Fig. 3 (inference): y = x@W^T, batch={BATCH}, threads={threads}, backend {}, \
+         times per call",
+        backend.name()
+    );
     println!("# speedup = dense_time / variant_time at the same geometry");
 
     // Representative layer: ViT-B/16 FFN up-projection (3072 x 768) — the
@@ -66,7 +71,7 @@ fn main() -> anyhow::Result<()> {
 
         let (bw, bi, bt) = opts.budget(2, 5, 0.4);
         let dense = bench(
-            || dense_matmul_blocked_mt(&x, &w, BATCH, rows, cols, &mut y, threads),
+            || dense_matmul_blocked_mt_with(&x, &w, BATCH, rows, cols, &mut y, threads, backend),
             bw,
             bi,
             bt,
@@ -98,15 +103,30 @@ fn main() -> anyhow::Result<()> {
                 let t_none = match st {
                     Structure::Block => {
                         let bc = compress_blocks(&w, &mask, 16);
-                        bench(|| block_matmul_mt(&x, &bc, BATCH, &mut y, threads), bw, bi, bt)
+                        bench(
+                            || block_matmul_mt_with(&x, &bc, BATCH, &mut y, threads, backend),
+                            bw,
+                            bi,
+                            bt,
+                        )
                     }
                     Structure::Unstructured => {
                         let csr = csr_from_mask(&w, &mask);
-                        bench(|| csr_matmul_mt(&x, &csr, BATCH, &mut y, threads), bw, bi, bt)
+                        bench(
+                            || csr_matmul_mt_with(&x, &csr, BATCH, &mut y, threads, backend),
+                            bw,
+                            bi,
+                            bt,
+                        )
                     }
                     _ => {
                         let rc = compress_rows(&w, &mask, k, None);
-                        bench(|| gather_matmul_mt(&x, &rc, BATCH, &mut y, threads), bw, bi, bt)
+                        bench(
+                            || gather_matmul_mt_with(&x, &rc, BATCH, &mut y, threads, backend),
+                            bw,
+                            bi,
+                            bt,
+                        )
                     }
                 };
 
@@ -115,7 +135,6 @@ fn main() -> anyhow::Result<()> {
                 // blocks, so blocks fall back to row-gather form there).
                 let t_reindex = match st {
                     Structure::Unstructured => {
-                        let mut wp = vec![0.0f32; rows * cols];
                         // Fold the permutation into CSR column indices.
                         let csr = {
                             let mut c = csr_from_mask(&w, &mask);
@@ -124,12 +143,21 @@ fn main() -> anyhow::Result<()> {
                             }
                             c
                         };
-                        let _ = &mut wp;
-                        bench(|| csr_matmul_mt(&x, &csr, BATCH, &mut y, threads), bw, bi, bt)
+                        bench(
+                            || csr_matmul_mt_with(&x, &csr, BATCH, &mut y, threads, backend),
+                            bw,
+                            bi,
+                            bt,
+                        )
                     }
                     _ => {
                         let rc = compress_rows(&w, &mask, k, Some(&perm));
-                        bench(|| gather_matmul_mt(&x, &rc, BATCH, &mut y, threads), bw, bi, bt)
+                        bench(
+                            || gather_matmul_mt_with(&x, &rc, BATCH, &mut y, threads, backend),
+                            bw,
+                            bi,
+                            bt,
+                        )
                     }
                 };
 
@@ -141,7 +169,7 @@ fn main() -> anyhow::Result<()> {
                         bench(
                             || {
                                 shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
-                                block_matmul_mt(&xp, &bc, BATCH, &mut y, threads);
+                                block_matmul_mt_with(&xp, &bc, BATCH, &mut y, threads, backend);
                             },
                             bw,
                             bi,
@@ -153,7 +181,7 @@ fn main() -> anyhow::Result<()> {
                         bench(
                             || {
                                 shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
-                                csr_matmul_mt(&xp, &csr, BATCH, &mut y, threads);
+                                csr_matmul_mt_with(&xp, &csr, BATCH, &mut y, threads, backend);
                             },
                             bw,
                             bi,
@@ -165,7 +193,7 @@ fn main() -> anyhow::Result<()> {
                         bench(
                             || {
                                 shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
-                                gather_matmul_mt(&xp, &rc, BATCH, &mut y, threads);
+                                gather_matmul_mt_with(&xp, &rc, BATCH, &mut y, threads, backend);
                             },
                             bw,
                             bi,

@@ -32,7 +32,9 @@ fn main() -> anyhow::Result<()> {
     }
     let opts = BenchOpts::parse("fig3_training");
     let threads = opts.threads;
-    let mut report = BenchReport::new("fig3_training", threads);
+    // Artifact execution is backend-blind, but the report records the knob
+    // for provenance like every other bench.
+    let mut report = BenchReport::new("fig3_training", threads).with_backend(opts.backend);
     let mut rt = Runtime::open_with_threads(dir, threads)?;
     println!("# Fig. 3 (training) / Tbl. 5: seconds per train step via PJRT (threads={threads})");
     println!(

@@ -2,22 +2,32 @@
 //! and densities — the profiling substrate for the §Perf iteration loop
 //! (EXPERIMENTS.md).  Run with `cargo bench --bench kernels`.
 //!
-//! The second half is the serial-vs-parallel comparison for the scoped-
-//! thread execution layer: each kernel at 1/2/4/max threads, speedup
-//! relative to its own serial path.  Thread ceiling: `--threads N` after
-//! `--`, or `PADST_THREADS`, else available parallelism.
+//! Three sections:
+//! 1. the per-kernel microbench on the selected backend (`--backend` after
+//!    `--`, or `PADST_BACKEND`, default tiled) — record names are
+//!    backend-free, so two runs under different backends diff cleanly with
+//!    `padst bench-compare`;
+//! 2. the backend matrix: gather/block/dense at the headline geometry for
+//!    *every* backend compiled into this binary, single thread — the
+//!    tiled-beats-scalar evidence in one report;
+//! 3. serial-vs-parallel scaling for the scoped-thread execution layer:
+//!    each kernel at 1/2/4/max threads, speedup relative to its own serial
+//!    path.  Thread ceiling: `--threads N` after `--`, or `PADST_THREADS`,
+//!    else available parallelism.
 //!
 //! Alongside the human tables the run writes `BENCH_kernels.json`
-//! (schema: `padst::harness::telemetry`); `padst bench-compare` diffs two
-//! such reports for the CI perf gate.  `--short` (or
-//! `PADST_BENCH_SHORT=1`) shrinks sample budgets to CI size.
+//! (schema: `padst::harness::telemetry`; the report and every record carry
+//! the backend); `padst bench-compare` diffs two such reports for the CI
+//! perf gate.  `--short` (or `PADST_BENCH_SHORT=1`) shrinks sample budgets
+//! to CI size.
 
 use padst::harness::telemetry::{BenchRecord, BenchReport};
+use padst::kernels::micro::Backend;
 use padst::kernels::parallel::available_threads;
 use padst::kernels::{
-    block_matmul, block_matmul_mt, csr_from_mask, csr_matmul, csr_matmul_mt, dense_matmul,
-    dense_matmul_blocked, dense_matmul_blocked_mt, gather_matmul, gather_matmul_batched,
-    gather_matmul_mt, spmm_flops,
+    block_matmul_mt_with, block_matmul_with, csr_from_mask, csr_matmul_mt_with, csr_matmul_with,
+    dense_matmul, dense_matmul_blocked_mt_with, dense_matmul_blocked_with,
+    gather_matmul_batched_with, gather_matmul_mt_with, gather_matmul_with, spmm_flops,
 };
 use padst::sparsity::compress::{compress_blocks, compress_rows};
 use padst::sparsity::patterns::{make_mask, Structure};
@@ -27,11 +37,12 @@ use padst::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     let opts = BenchOpts::parse("kernels");
+    let backend = opts.backend;
     let (bw, bi, bt) = opts.budget(1, 3, 0.3);
-    let mut report = BenchReport::new("kernels", opts.threads);
+    let mut report = BenchReport::new("kernels", opts.threads).with_backend(backend);
 
     let shapes = [(64usize, 768usize, 768usize), (64, 3072, 768), (8, 256, 256)];
-    println!("# kernel microbench: p50 / GFLOPs");
+    println!("# kernel microbench: p50 / GFLOPs (backend {})", backend.name());
     println!(
         "{:<26} {:>12} {:>9} {:>10}",
         "kernel(batch,rows,cols)", "p50", "GFLOP/s", "vs naive"
@@ -62,7 +73,7 @@ fn main() -> anyhow::Result<()> {
 
         let naive = bench(|| dense_matmul(&x, &w, batch, rows, cols, &mut y), bw, bi, bt);
         let blocked = bench(
-            || dense_matmul_blocked(&x, &w, batch, rows, cols, &mut y),
+            || dense_matmul_blocked_with(&x, &w, batch, rows, cols, &mut y, backend),
             bw,
             bi,
             bt,
@@ -75,26 +86,32 @@ fn main() -> anyhow::Result<()> {
             let k = (0..mask.rows).map(|i| mask.row_nnz(i)).max().unwrap();
             let rc = compress_rows(&w, &mask, k, None);
             let flops = spmm_flops(batch, mask.nnz());
-            let g1 = bench(|| gather_matmul(&x, &rc, batch, &mut y), bw, bi, bt);
-            let g2 = bench(|| gather_matmul_batched(&x, &rc, batch, &mut y), bw, bi, bt);
+            let g1 = bench(|| gather_matmul_with(&x, &rc, batch, &mut y, backend), bw, bi, bt);
+            let g2 = bench(
+                || gather_matmul_batched_with(&x, &rc, batch, &mut y, backend),
+                bw,
+                bi,
+                bt,
+            );
             row(&format!("gather{shape} d={density}"), &g1, flops, naive.p50);
             row(&format!("gather_batched{shape} d={density}"), &g2, flops, naive.p50);
 
             let bmask = make_mask(Structure::Block, rows, cols, density, &mut rng);
             let bc = compress_blocks(&w, &bmask, 16);
             let bflops = spmm_flops(batch, bmask.nnz());
-            let b = bench(|| block_matmul(&x, &bc, batch, &mut y), bw, bi, bt);
+            let b = bench(|| block_matmul_with(&x, &bc, batch, &mut y, backend), bw, bi, bt);
             row(&format!("block{shape} d={density}"), &b, bflops, naive.p50);
 
             let umask = make_mask(Structure::Unstructured, rows, cols, density, &mut rng);
             let csr = csr_from_mask(&w, &umask);
             let uflops = spmm_flops(batch, umask.nnz());
-            let c = bench(|| csr_matmul(&x, &csr, batch, &mut y), bw, bi, bt);
+            let c = bench(|| csr_matmul_with(&x, &csr, batch, &mut y, backend), bw, bi, bt);
             row(&format!("csr{shape} d={density}"), &c, uflops, naive.p50);
         }
         println!();
     }
 
+    backend_matrix(&opts, &mut report);
     parallel_scaling(&opts, &mut report);
 
     report.write(&opts.json_path)?;
@@ -102,13 +119,69 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Every compiled backend on the headline layer (ViT-B/16 FFN geometry),
+/// single thread: the scalar-vs-tiled(-vs-simd) GFLOP/s comparison the
+/// microkernel refactor exists for, in one report.  Record names carry the
+/// backend (stable across runs, so `bench-compare` still matches them).
+fn backend_matrix(opts: &BenchOpts, report: &mut BenchReport) {
+    let (bw, bi, bt) = opts.budget(1, 3, 0.3);
+    let (batch, rows, cols) = (64usize, 3072usize, 768usize);
+    let density = 0.1;
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0f32; batch * rows];
+
+    let dmask = make_mask(Structure::Diag, rows, cols, density, &mut rng);
+    let k = (0..dmask.rows).map(|i| dmask.row_nnz(i)).max().unwrap();
+    let rc = compress_rows(&w, &dmask, k, None);
+    let gflops = spmm_flops(batch, dmask.nnz());
+    let bmask = make_mask(Structure::Block, rows, cols, density, &mut rng);
+    let bc = compress_blocks(&w, &bmask, 16);
+    let bflops = spmm_flops(batch, bmask.nnz());
+    let dflops = 2 * batch * rows * cols;
+
+    println!("# backend matrix ({batch},{rows},{cols}) d={density}, single thread");
+    println!("{:<26} {:>8} {:>12} {:>9}", "kernel", "backend", "p50", "GFLOP/s");
+    for &b in Backend::all() {
+        let mut row = |name: &str, s: &Summary, flops: usize| {
+            println!(
+                "{:<26} {:>8} {:>12} {:>9.2}",
+                name,
+                b.name(),
+                fmt_time(s.p50),
+                flops as f64 / s.p50 / 1e9
+            );
+            report.push(
+                BenchRecord::from_summary("backend_matrix", &format!("{name} [{}]", b.name()), s)
+                    .with_backend(b)
+                    .with_metric("gflops", flops as f64 / s.p50 / 1e9),
+            );
+        };
+        let g = bench(|| gather_matmul_with(&x, &rc, batch, &mut y, b), bw, bi, bt);
+        row("gather", &g, gflops);
+        let bl = bench(|| block_matmul_with(&x, &bc, batch, &mut y, b), bw, bi, bt);
+        row("block", &bl, bflops);
+        let d = bench(
+            || dense_matmul_blocked_with(&x, &w, batch, rows, cols, &mut y, b),
+            bw,
+            bi,
+            bt,
+        );
+        row("dense_blocked", &d, dflops);
+    }
+    println!();
+}
+
 /// Serial vs parallel at the ViT-B/16 FFN geometry (the Fig. 3 headline
-/// layer): every `_mt` kernel across thread counts, speedup vs its own
-/// serial path.  The gather/block paths should clear 1x comfortably from
-/// 4 threads up; CSR is indirection-bound and scales worst — which is the
-/// paper's structured >> unstructured ordering, now with a thread axis.
+/// layer): every `_mt` kernel across thread counts on the selected
+/// backend, speedup vs its own serial path.  The gather/block paths should
+/// clear 1x comfortably from 4 threads up; CSR is indirection-bound and
+/// scales worst — which is the paper's structured >> unstructured
+/// ordering, now with a thread axis.
 fn parallel_scaling(opts: &BenchOpts, report: &mut BenchReport) {
     let max_threads = opts.threads;
+    let backend = opts.backend;
     let (bw, bi, bt) = opts.budget(1, 3, 0.3);
     let mut counts = vec![1usize, 2, 4];
     counts.retain(|&t| t <= max_threads);
@@ -132,7 +205,9 @@ fn parallel_scaling(opts: &BenchOpts, report: &mut BenchReport) {
     let csr = csr_from_mask(&w, &umask);
 
     println!(
-        "# parallel scaling ({batch},{rows},{cols}) d={density}, ceiling {max_threads} threads"
+        "# parallel scaling ({batch},{rows},{cols}) d={density}, ceiling {max_threads} threads, \
+         backend {}",
+        backend.name()
     );
     println!("{:<26} {:>8} {:>12} {:>10}", "kernel", "threads", "p50", "vs serial");
 
@@ -153,21 +228,21 @@ fn parallel_scaling(opts: &BenchOpts, report: &mut BenchReport) {
 
     let mut serial = 0.0f64;
     for &t in &counts {
-        let s = bench(|| gather_matmul_mt(&x, &rc, batch, &mut y, t), bw, bi, bt);
+        let s = bench(|| gather_matmul_mt_with(&x, &rc, batch, &mut y, t, backend), bw, bi, bt);
         if t == 1 {
             serial = s.p50;
         }
         row("gather", t, &s, serial);
     }
     for &t in &counts {
-        let s = bench(|| block_matmul_mt(&x, &bc, batch, &mut y, t), bw, bi, bt);
+        let s = bench(|| block_matmul_mt_with(&x, &bc, batch, &mut y, t, backend), bw, bi, bt);
         if t == 1 {
             serial = s.p50;
         }
         row("block", t, &s, serial);
     }
     for &t in &counts {
-        let s = bench(|| csr_matmul_mt(&x, &csr, batch, &mut y, t), bw, bi, bt);
+        let s = bench(|| csr_matmul_mt_with(&x, &csr, batch, &mut y, t, backend), bw, bi, bt);
         if t == 1 {
             serial = s.p50;
         }
@@ -175,7 +250,7 @@ fn parallel_scaling(opts: &BenchOpts, report: &mut BenchReport) {
     }
     for &t in &counts {
         let s = bench(
-            || dense_matmul_blocked_mt(&x, &w, batch, rows, cols, &mut y, t),
+            || dense_matmul_blocked_mt_with(&x, &w, batch, rows, cols, &mut y, t, backend),
             bw,
             bi,
             bt,

@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     // --- Table 1 at the paper's ViT-L/16 surrogate geometry -------------
     let opts = BenchOpts::parse("table1_nlr");
     let threads = opts.threads;
-    let mut report = BenchReport::new("table1_nlr", threads);
+    let mut report = BenchReport::new("table1_nlr", threads).with_backend(opts.backend);
     let d0 = 1024;
     let widths: Vec<usize> = (0..48).map(|i| if i % 2 == 0 { 4096 } else { 1024 }).collect();
     println!(

@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let opts = BenchOpts::parse("table5_overhead");
-    let mut report = BenchReport::new("table5_overhead", opts.threads);
+    let mut report = BenchReport::new("table5_overhead", opts.threads).with_backend(opts.backend);
     let manifest = Manifest::load(path)?;
 
     println!("# Tbl. 2-5 analogue: training-state memory by permutation method");

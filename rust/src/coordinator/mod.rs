@@ -27,6 +27,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::{TaskData, TextTask, VisionTask};
+use crate::kernels::micro::Backend;
 use crate::models::init_params;
 use crate::perm;
 use crate::runtime::{Program, Runtime};
@@ -74,6 +75,10 @@ pub struct RunConfig {
     /// artifact execution runs under PJRT's own pool until the intra-op
     /// wiring lands (ROADMAP).
     pub threads: usize,
+    /// Microkernel backend for the native kernel paths (CLI `--backend`,
+    /// else `PADST_BACKEND`, else tiled).  Propagated to the `Runtime`
+    /// alongside `threads`; artifact execution is backend-blind.
+    pub backend: Backend,
 }
 
 impl Default for RunConfig {
@@ -95,6 +100,7 @@ impl Default for RunConfig {
             seed: 0,
             verbose: false,
             threads: 0,
+            backend: Backend::default_backend(),
         }
     }
 }
@@ -163,9 +169,11 @@ pub struct Trainer<'rt> {
 
 impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt mut Runtime, cfg: RunConfig) -> Trainer<'rt> {
-        // The run's thread budget wins over whatever the runtime was opened
-        // with, so sweep cells with different --threads behave as asked.
+        // The run's thread budget and backend win over whatever the
+        // runtime was opened with, so sweep cells with different
+        // --threads/--backend behave as asked.
         rt.set_threads(cfg.threads);
+        rt.set_backend(cfg.backend);
         Trainer { rt, cfg }
     }
 

@@ -29,7 +29,8 @@ use anyhow::{anyhow, bail, Result};
 
 use super::{GrowMode, RunConfig, RunResult, Trainer};
 use crate::harness::executor;
-use crate::harness::shard::{plan_cells, CellKey, Journal};
+use crate::harness::shard::{in_shard, plan_cells, CellKey, Journal, META_KEY};
+use crate::kernels::micro::Backend;
 use crate::runtime::Runtime;
 use crate::sparsity::patterns::Structure;
 use crate::util::cli::resolve_threads;
@@ -110,6 +111,7 @@ fn run_cell(
     seed: u64,
     verbose: bool,
     threads: usize,
+    backend: Backend,
 ) -> Result<SweepCell> {
     let density = if m.structure == Structure::Dense { 1.0 } else { 1.0 - sparsity };
     let cfg = RunConfig {
@@ -122,6 +124,7 @@ fn run_cell(
         seed,
         verbose,
         threads,
+        backend,
         ..Default::default()
     };
     let mut tr = Trainer::new(rt, cfg);
@@ -142,11 +145,11 @@ fn run_cell(
 
 /// Run `methods` x `sparsities` on `model` sequentially against one shared
 /// runtime; returns all cells.  `threads` is the per-run worker budget
-/// (0 = auto), recorded on every cell's `RunConfig` and pushed to the
-/// shared `Runtime` so all cells advertise the same budget.  Note:
-/// artifact execution currently runs under PJRT's own thread pool
-/// (intra-op wiring is a ROADMAP item); today the knob governs the native
-/// parallel-kernel paths.
+/// (0 = auto) and `backend` the microkernel backend, recorded on every
+/// cell's `RunConfig` and pushed to the shared `Runtime` so all cells
+/// advertise the same budget.  Note: artifact execution currently runs
+/// under PJRT's own thread pool (intra-op wiring is a ROADMAP item);
+/// today the knobs govern the native parallel-kernel paths.
 #[allow(clippy::too_many_arguments)]
 pub fn run_sweep(
     rt: &mut Runtime,
@@ -157,19 +160,16 @@ pub fn run_sweep(
     seed: u64,
     verbose: bool,
     threads: usize,
+    backend: Backend,
 ) -> Result<Vec<SweepCell>> {
     grid(methods, sparsities)
         .into_iter()
-        .map(|(m, sp)| run_cell(rt, model, m, sp, steps, seed, verbose, threads))
+        .map(|(m, sp)| run_cell(rt, model, m, sp, steps, seed, verbose, threads, backend))
         .collect()
 }
 
-/// Journal line holding the sweep parameters; a journal only resumes a
-/// sweep with identical (model, steps, seed).
-const JOURNAL_META_KEY: &str = "__meta__";
-
 /// Options for the sharded sweep path.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct SweepShardOpts {
     /// Worker count: 0 = auto (min(cores, cells)), 1 = the sequential
     /// path on the calling thread.  Always clamped to the resolved
@@ -178,10 +178,30 @@ pub struct SweepShardOpts {
     /// Global native-kernel thread budget (0 = auto), divided across
     /// workers so total parallelism stays bounded at the budget.
     pub threads: usize,
+    /// Microkernel backend recorded on every cell's `RunConfig`.
+    pub backend: Backend,
+    /// Process-level grid shard `(i, n)`: this invocation only runs cells
+    /// whose grid slot satisfies `slot % n == i`.  Pair with `journal`
+    /// (one path per shard) and `padst journal-merge` to fan a Fig. 2
+    /// regeneration out across machines.
+    pub shard: Option<(usize, usize)>,
     /// JSONL checkpoint: completed cells are appended as they finish and
     /// skipped on the next invocation (resume).
     pub journal: Option<PathBuf>,
     pub verbose: bool,
+}
+
+impl Default for SweepShardOpts {
+    fn default() -> Self {
+        SweepShardOpts {
+            workers: 0,
+            threads: 0,
+            backend: Backend::default_backend(),
+            shard: None,
+            journal: None,
+            verbose: false,
+        }
+    }
 }
 
 /// The sweep front door shared by the CLI and the fig2 example: one
@@ -206,7 +226,7 @@ pub fn run_sweep_auto(
             .kind
             .clone())
     };
-    if opts.workers == 1 && opts.journal.is_none() {
+    if opts.workers == 1 && opts.journal.is_none() && opts.shard.is_none() {
         let mut rt = Runtime::open_with_threads(artifacts_dir, opts.threads)?;
         let kind = kind_of(&rt.manifest)?;
         let cells = run_sweep(
@@ -218,6 +238,7 @@ pub fn run_sweep_auto(
             seed,
             opts.verbose,
             opts.threads,
+            opts.backend,
         )?;
         Ok((cells, kind))
     } else {
@@ -253,6 +274,9 @@ pub fn run_sweep_sharded(
     // "method@sparsity", so the journal carries a metadata header and
     // refuses to resume a sweep with different (model, steps, seed) —
     // otherwise stale cells would silently masquerade as this run's.
+    // The header is deliberately shard-blind: every shard of one sweep
+    // writes the same header, which is what lets `padst journal-merge`
+    // verify the shards belong together.
     let meta = json::obj(vec![
         ("model", json::s(model)),
         ("steps", json::num(steps as f64)),
@@ -262,7 +286,7 @@ pub fn run_sweep_sharded(
     let journal = match &opts.journal {
         Some(path) => {
             let (j, mut prior) = Journal::open(path)?;
-            match prior.remove(JOURNAL_META_KEY) {
+            match prior.remove(META_KEY) {
                 Some(m) if m != meta => bail!(
                     "journal {} belongs to a different sweep ({}); this run is {} — \
                      pass a fresh --journal path",
@@ -271,9 +295,9 @@ pub fn run_sweep_sharded(
                     meta.to_string_pretty()
                 ),
                 Some(_) => {}
-                None if prior.is_empty() => j.record(JOURNAL_META_KEY, &meta)?,
+                None if prior.is_empty() => j.record(META_KEY, &meta)?,
                 None => bail!(
-                    "journal {} has cells but no {JOURNAL_META_KEY} header; refusing to resume",
+                    "journal {} has cells but no {META_KEY} header; refusing to resume",
                     path.display()
                 ),
             }
@@ -289,9 +313,18 @@ pub fn run_sweep_sharded(
         .iter()
         .cloned()
         .enumerate()
-        .filter(|(_, k)| !done.contains_key(&k.id()))
+        .filter(|(slot, k)| in_shard(*slot, opts.shard) && !done.contains_key(&k.id()))
         .collect();
-    if opts.verbose && pending.len() < keys.len() {
+    if let Some((i, n)) = opts.shard {
+        if opts.verbose {
+            eprintln!(
+                "[sweep] shard {i}/{n}: {} of {} cells owned by this shard, {} pending",
+                keys.iter().enumerate().filter(|(s, _)| in_shard(*s, opts.shard)).count(),
+                keys.len(),
+                pending.len()
+            );
+        }
+    } else if opts.verbose && pending.len() < keys.len() {
         eprintln!(
             "[sweep] resuming: {}/{} cells restored from journal",
             keys.len() - pending.len(),
@@ -313,7 +346,9 @@ pub fn run_sweep_sharded(
         |_wid| Runtime::open_with_threads(artifacts_dir, cell_threads),
         |rt, _slot, (cell_i, key)| {
             let (m, sp) = cells_ref[*cell_i];
-            let cell = run_cell(rt, model, m, sp, steps, seed, opts.verbose, cell_threads)?;
+            let cell = run_cell(
+                rt, model, m, sp, steps, seed, opts.verbose, cell_threads, opts.backend,
+            )?;
             if let Some(j) = journal_ref {
                 j.record(&key.id(), &cell_to_json(&cell))?;
             }
@@ -325,17 +360,20 @@ pub fn run_sweep_sharded(
     // key on the grid *slot*, not the cell id: a grid with duplicate
     // (method, sparsity) entries (the CLI doesn't forbid them) has
     // distinct slots but colliding ids, and each slot must get a result.
+    // Under `--shard i/n` the slots owned by other shards are legitimately
+    // absent (their journals get combined later via `padst
+    // journal-merge`); without sharding a missing slot is a bug.
     let mut fresh_by_slot: HashMap<usize, SweepCell> =
         pending.iter().map(|&(slot, _)| slot).zip(fresh).collect();
-    keys.iter()
-        .enumerate()
-        .map(|(slot, k)| {
-            fresh_by_slot
-                .remove(&slot)
-                .or_else(|| done.get(&k.id()).cloned())
-                .ok_or_else(|| anyhow!("sweep cell {} missing after merge", k.id()))
-        })
-        .collect()
+    let mut out = Vec::with_capacity(keys.len());
+    for (slot, k) in keys.iter().enumerate() {
+        match fresh_by_slot.remove(&slot).or_else(|| done.get(&k.id()).cloned()) {
+            Some(cell) => out.push(cell),
+            None if opts.shard.is_some() => {}
+            None => bail!("sweep cell {} missing after merge", k.id()),
+        }
+    }
+    Ok(out)
 }
 
 /// What a method *does* — detects a [`METHODS`] entry whose definition

@@ -9,6 +9,13 @@
 //! thread).  Reopening the journal returns the completed cells so a killed
 //! sweep resumes without recomputation; a line truncated by the kill is
 //! detected, sealed, and skipped.
+//!
+//! [`parse_shard`] / [`in_shard`] and [`merge_journals`] turn the journal
+//! format into a cluster fan-out mechanism: `padst sweep --shard i/n`
+//! runs only the grid slots owned by shard `i`, each machine journals its
+//! own cells under the same metadata header, and `padst journal-merge`
+//! combines the shards into one journal a final `--journal` run resumes
+//! from without recomputing anything.
 
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
@@ -16,9 +23,46 @@ use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::{self, Json};
+
+/// Journal line holding the sweep parameters; a journal only resumes (or
+/// merges with) a sweep whose metadata matches this header exactly.
+pub const META_KEY: &str = "__meta__";
+
+/// Parse a `--shard i/n` value into (index, count): `i` zero-based,
+/// `i < n`, `n >= 1`.
+pub fn parse_shard(s: &str) -> Result<(usize, usize)> {
+    let (i, n) = s
+        .split_once('/')
+        .ok_or_else(|| anyhow!("--shard wants i/n (e.g. 0/4), got {s:?}"))?;
+    let i: usize =
+        i.trim().parse().map_err(|_| anyhow!("--shard index {i:?} is not a number"))?;
+    let n: usize =
+        n.trim().parse().map_err(|_| anyhow!("--shard count {n:?} is not a number"))?;
+    if n == 0 {
+        bail!("--shard count must be >= 1");
+    }
+    if i >= n {
+        bail!("--shard index {i} out of range 0..{n}");
+    }
+    Ok((i, n))
+}
+
+/// Whether grid slot `slot` belongs to shard `(i, n)` (`None` = no
+/// sharding, every slot belongs).  Round-robin by slot id — simple and
+/// deterministic, but note the alignment hazard: the grid is laid out
+/// method-major with sparsities innermost, so a shard count equal to (or
+/// sharing a factor with) the sparsity count assigns each shard a fixed
+/// sparsity column, and cell cost correlates with density.  Pick `n`
+/// coprime with the sparsity count when load balance matters.
+pub fn in_shard(slot: usize, shard: Option<(usize, usize)>) -> bool {
+    match shard {
+        Some((i, n)) => slot % n == i,
+        None => true,
+    }
+}
 
 /// One cell of a sweep grid.  The `id` string (`"method@sparsity"`) keys
 /// the journal; `f64` Display round-trips exactly, so ids are stable
@@ -75,18 +119,7 @@ impl Journal {
             let content = std::fs::read_to_string(path)
                 .with_context(|| format!("reading journal {}", path.display()))?;
             needs_seal = !content.is_empty() && !content.ends_with('\n');
-            for line in content.lines() {
-                if line.trim().is_empty() {
-                    continue;
-                }
-                // A line that doesn't parse is the torn tail of a killed
-                // run; its cell simply re-runs.
-                let Ok(v) = Json::parse(line) else { continue };
-                if let (Some(k), Some(cell)) = (v.get("key").and_then(Json::as_str), v.get("cell"))
-                {
-                    done.insert(k.to_string(), cell.clone());
-                }
-            }
+            done = parse_journal_lines(&content);
         }
         let mut file = OpenOptions::new()
             .create(true)
@@ -101,10 +134,9 @@ impl Journal {
 
     /// Append one completed cell and flush.
     pub fn record(&self, key: &str, cell: &Json) -> Result<()> {
-        // The compact serializer emits no newlines, so one value = one line.
-        let line = json::obj(vec![("key", json::s(key)), ("cell", cell.clone())]);
+        let line = journal_line(key, cell);
         let mut f = self.file.lock().unwrap();
-        writeln!(f, "{}", line.to_string_pretty())
+        writeln!(f, "{line}")
             .and_then(|()| f.flush())
             .with_context(|| format!("appending to journal {}", self.path.display()))?;
         Ok(())
@@ -113,6 +145,82 @@ impl Journal {
     pub fn path(&self) -> &Path {
         &self.path
     }
+}
+
+/// Parse journal text into its record map.  A line that doesn't parse is
+/// the torn tail of a killed run; its cell simply re-runs.
+fn parse_journal_lines(content: &str) -> BTreeMap<String, Json> {
+    let mut done = BTreeMap::new();
+    for line in content.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Ok(v) = Json::parse(line) else { continue };
+        if let (Some(k), Some(cell)) = (v.get("key").and_then(Json::as_str), v.get("cell")) {
+            done.insert(k.to_string(), cell.clone());
+        }
+    }
+    done
+}
+
+/// Read a journal without opening it for append (the file must exist).
+/// Returns the full record map, [`META_KEY`] header included.
+pub fn read_journal(path: &Path) -> Result<BTreeMap<String, Json>> {
+    let content = std::fs::read_to_string(path)
+        .with_context(|| format!("reading journal {}", path.display()))?;
+    Ok(parse_journal_lines(&content))
+}
+
+/// One serialized journal line (what [`Journal::record`] appends): the
+/// compact serializer emits no newlines, so one record = one line.
+fn journal_line(key: &str, cell: &Json) -> String {
+    json::obj(vec![("key", json::s(key)), ("cell", cell.clone())]).to_string_pretty()
+}
+
+/// Merge shard journals into one resumable journal.
+///
+/// Every input must carry a [`META_KEY`] header and all headers must be
+/// identical — the cross-machine analogue of the resume check, refusing
+/// to splice cells from different sweeps.  Cells are unioned; when the
+/// same cell id appears in several inputs the first occurrence wins (two
+/// completions of one cell differ only in wall-clock fields).  The merged
+/// journal is written atomically: header first, then cells in sorted id
+/// order.  Returns the number of distinct cells written.
+pub fn merge_journals(inputs: &[PathBuf], out: &Path) -> Result<usize> {
+    if inputs.is_empty() {
+        bail!("journal-merge needs at least one input journal");
+    }
+    let mut meta: Option<Json> = None;
+    let mut cells: BTreeMap<String, Json> = BTreeMap::new();
+    for path in inputs {
+        let mut records = read_journal(path)?;
+        let this_meta = records.remove(META_KEY).ok_or_else(|| {
+            anyhow!("journal {} has no {META_KEY} header; refusing to merge", path.display())
+        })?;
+        match &meta {
+            Some(prev) if *prev != this_meta => bail!(
+                "journal {} belongs to a different sweep ({}); the first input was {}",
+                path.display(),
+                this_meta.to_string_pretty(),
+                prev.to_string_pretty()
+            ),
+            Some(_) => {}
+            None => meta = Some(this_meta),
+        }
+        for (k, v) in records {
+            cells.entry(k).or_insert(v);
+        }
+    }
+    let meta = meta.expect("non-empty inputs always set meta");
+    let mut text = String::new();
+    text.push_str(&journal_line(META_KEY, &meta));
+    text.push('\n');
+    for (k, v) in &cells {
+        text.push_str(&journal_line(k, v));
+        text.push('\n');
+    }
+    crate::util::fs::write_atomic(out, &text)?;
+    Ok(cells.len())
 }
 
 #[cfg(test)]
@@ -130,5 +238,26 @@ mod tests {
         let cells = plan_cells(&[("A", true), ("Dense", false), ("B", true)], &[0.6, 0.9]);
         let ids: Vec<String> = cells.iter().map(CellKey::id).collect();
         assert_eq!(ids, ["A@0.6", "A@0.9", "Dense@0.6", "B@0.6", "B@0.9"]);
+    }
+
+    #[test]
+    fn parse_shard_accepts_and_rejects() {
+        assert_eq!(parse_shard("0/4").unwrap(), (0, 4));
+        assert_eq!(parse_shard("3/4").unwrap(), (3, 4));
+        assert_eq!(parse_shard("0/1").unwrap(), (0, 1));
+        assert!(parse_shard("4/4").is_err(), "index == count");
+        assert!(parse_shard("0/0").is_err(), "zero count");
+        assert!(parse_shard("1").is_err(), "no slash");
+        assert!(parse_shard("a/b").is_err(), "not numbers");
+    }
+
+    #[test]
+    fn shards_partition_every_slot_exactly_once() {
+        let n = 3;
+        for slot in 0..20 {
+            let owners = (0..n).filter(|&i| in_shard(slot, Some((i, n)))).count();
+            assert_eq!(owners, 1, "slot {slot}");
+            assert!(in_shard(slot, None));
+        }
     }
 }

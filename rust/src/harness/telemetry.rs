@@ -12,8 +12,10 @@
 //!   "schema_version": 1,
 //!   "bench": "kernels",
 //!   "threads": 8,
+//!   "backend": "tiled",
 //!   "records": [
 //!     {"group": "microbench", "name": "gather(64,768,768) d=0.1",
+//!      "backend": "tiled",
 //!      "n": 57, "mean_s": 1.1e-4, "p50_s": 1.0e-4, "p95_s": 1.3e-4,
 //!      "min_s": 9.0e-5, "max_s": 2.0e-4,
 //!      "metrics": {"gflops": 12.5, "vs_naive": 2.1}}
@@ -24,12 +26,20 @@
 //! A record with `n == 0` is *value-only* (e.g. the memory tables): its
 //! timing fields are zero, `metrics` carries the payload, and the
 //! regression gate skips it.
+//!
+//! `backend` (report-level and per-record) names the microkernel backend
+//! the numbers were measured under — what makes a before/after
+//! `bench-compare` of `BENCH_kernels.json` across `--backend scalar` vs
+//! `--backend tiled` self-describing.  It is *not* part of the record
+//! identity, so reports from different backends still match
+//! record-by-record.  Absent in pre-backend reports (read back as `""`).
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::kernels::micro::Backend;
 use crate::util::json::{self, Json};
 use crate::util::stats::Summary;
 
@@ -41,6 +51,9 @@ pub const SCHEMA_VERSION: u32 = 1;
 pub struct BenchRecord {
     pub group: String,
     pub name: String,
+    /// Microkernel backend the row was measured under ("" = unknown /
+    /// pre-backend report).  Metadata only — never part of [`BenchRecord::id`].
+    pub backend: String,
     /// Timed samples behind the quantiles; 0 for value-only records.
     pub n: usize,
     pub mean_s: f64,
@@ -58,6 +71,7 @@ impl BenchRecord {
         BenchRecord {
             group: group.to_string(),
             name: name.to_string(),
+            backend: String::new(),
             n: s.n,
             mean_s: s.mean,
             p50_s: s.p50,
@@ -73,6 +87,7 @@ impl BenchRecord {
         BenchRecord {
             group: group.to_string(),
             name: name.to_string(),
+            backend: String::new(),
             n: 0,
             mean_s: 0.0,
             p50_s: 0.0,
@@ -89,15 +104,27 @@ impl BenchRecord {
         self
     }
 
+    /// Builder-style backend stamp (rows measured under a backend other
+    /// than the report's, e.g. the kernels bench backend matrix).
+    pub fn with_backend(mut self, backend: Backend) -> BenchRecord {
+        self.backend = backend.name().to_string();
+        self
+    }
+
     /// The identity the baseline comparison matches on.
     pub fn id(&self) -> String {
         format!("{}/{}", self.group, self.name)
     }
 
     fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut pairs = vec![
             ("group", json::s(&self.group)),
             ("name", json::s(&self.name)),
+        ];
+        if !self.backend.is_empty() {
+            pairs.push(("backend", json::s(&self.backend)));
+        }
+        pairs.extend(vec![
             ("n", json::num(self.n as f64)),
             ("mean_s", json::num(self.mean_s)),
             ("p50_s", json::num(self.p50_s)),
@@ -110,7 +137,8 @@ impl BenchRecord {
                     self.metrics.iter().map(|(k, &v)| (k.clone(), json::num(v))).collect(),
                 ),
             ),
-        ])
+        ]);
+        json::obj(pairs)
     }
 
     fn from_json(v: &Json) -> Result<BenchRecord> {
@@ -134,6 +162,11 @@ impl BenchRecord {
         Ok(BenchRecord {
             group: str_field("group")?,
             name: str_field("name")?,
+            backend: v
+                .get("backend")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
             n: num_field("n")? as usize,
             mean_s: num_field("mean_s")?,
             p50_s: num_field("p50_s")?,
@@ -153,6 +186,10 @@ pub struct BenchReport {
     pub bench: String,
     /// Resolved worker-thread ceiling the bench ran under.
     pub threads: usize,
+    /// Microkernel backend the bench ran under ("" for pre-backend
+    /// reports).  Defaults to [`Backend::default_backend`]; override with
+    /// [`BenchReport::with_backend`] when a `--backend` flag was parsed.
+    pub backend: String,
     pub records: Vec<BenchRecord>,
 }
 
@@ -162,11 +199,23 @@ impl BenchReport {
             schema_version: SCHEMA_VERSION,
             bench: bench.to_string(),
             threads,
+            backend: Backend::default_backend().name().to_string(),
             records: Vec::new(),
         }
     }
 
-    pub fn push(&mut self, r: BenchRecord) {
+    /// Builder-style backend stamp for the whole report.
+    pub fn with_backend(mut self, backend: Backend) -> BenchReport {
+        self.backend = backend.name().to_string();
+        self
+    }
+
+    /// Append a record, stamping the report's backend onto it unless the
+    /// record already carries its own.
+    pub fn push(&mut self, mut r: BenchRecord) {
+        if r.backend.is_empty() {
+            r.backend = self.backend.clone();
+        }
         self.records.push(r);
     }
 
@@ -175,12 +224,19 @@ impl BenchReport {
     }
 
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut pairs = vec![
             ("schema_version", json::num(self.schema_version as f64)),
             ("bench", json::s(&self.bench)),
             ("threads", json::num(self.threads as f64)),
-            ("records", Json::Arr(self.records.iter().map(BenchRecord::to_json).collect())),
-        ])
+        ];
+        if !self.backend.is_empty() {
+            pairs.push(("backend", json::s(&self.backend)));
+        }
+        pairs.push((
+            "records",
+            Json::Arr(self.records.iter().map(BenchRecord::to_json).collect()),
+        ));
+        json::obj(pairs)
     }
 
     pub fn parse(src: &str) -> Result<BenchReport> {
@@ -200,6 +256,7 @@ impl BenchReport {
             .ok_or_else(|| anyhow!("bench report: missing bench name"))?
             .to_string();
         let threads = v.get("threads").and_then(Json::as_usize).unwrap_or(0);
+        let backend = v.get("backend").and_then(Json::as_str).unwrap_or("").to_string();
         let records = v
             .get("records")
             .and_then(Json::as_arr)
@@ -207,7 +264,7 @@ impl BenchReport {
             .iter()
             .map(BenchRecord::from_json)
             .collect::<Result<Vec<_>>>()?;
-        Ok(BenchReport { schema_version, bench, threads, records })
+        Ok(BenchReport { schema_version, bench, threads, backend, records })
     }
 
     /// Atomic write (temp + rename, parent dirs created).

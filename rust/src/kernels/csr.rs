@@ -6,6 +6,7 @@
 //! which is exactly why unstructured DST wins accuracy but loses the
 //! speedup race, on GPU and CPU alike.
 
+use super::micro::{self, Backend};
 use crate::sparsity::patterns::Mask;
 
 #[derive(Clone, Debug)]
@@ -42,20 +43,24 @@ pub fn csr_from_mask(w: &[f32], mask: &Mask) -> Csr {
     Csr { rows, cols, row_ptr, col_idx, vals }
 }
 
-/// One CSR row's dot product.  Shared by the serial and parallel paths so
-/// the reduction order — and the f32 result — is identical in both.
+/// One CSR row's dot product — a ragged slice of the same gather
+/// microkernel the structured kernels run.  Shared by the serial and
+/// parallel paths so the reduction order — and the f32 result — is
+/// identical in both for a given backend.
 #[inline(always)]
-pub(crate) fn csr_row_dot(csr: &Csr, i: usize, xb: &[f32]) -> f32 {
+pub(crate) fn csr_row_dot(csr: &Csr, i: usize, xb: &[f32], backend: Backend) -> f32 {
     let (s, e) = (csr.row_ptr[i], csr.row_ptr[i + 1]);
-    let mut acc = 0.0f32;
-    for nz in s..e {
-        acc += csr.vals[nz] * xb[csr.col_idx[nz] as usize];
-    }
-    acc
+    micro::dot_gather(&csr.vals[s..e], &csr.col_idx[s..e], xb, backend)
 }
 
-/// y[b, i] = sum_{nz in row i} vals[nz] * x[b, col_idx[nz]].
+/// y[b, i] = sum_{nz in row i} vals[nz] * x[b, col_idx[nz]], default
+/// backend.
 pub fn csr_matmul(x: &[f32], csr: &Csr, batch: usize, y: &mut [f32]) {
+    csr_matmul_with(x, csr, batch, y, Backend::default_backend());
+}
+
+/// [`csr_matmul`] with an explicit microkernel backend.
+pub fn csr_matmul_with(x: &[f32], csr: &Csr, batch: usize, y: &mut [f32], backend: Backend) {
     let (rows, cols) = (csr.rows, csr.cols);
     debug_assert_eq!(x.len(), batch * cols);
     debug_assert_eq!(y.len(), batch * rows);
@@ -63,7 +68,7 @@ pub fn csr_matmul(x: &[f32], csr: &Csr, batch: usize, y: &mut [f32]) {
         let xb = &x[b * cols..(b + 1) * cols];
         let yb = &mut y[b * rows..(b + 1) * rows];
         for (i, yv) in yb.iter_mut().enumerate() {
-            *yv = csr_row_dot(csr, i, xb);
+            *yv = csr_row_dot(csr, i, xb, backend);
         }
     }
 }

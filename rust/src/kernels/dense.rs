@@ -1,9 +1,13 @@
 //! Dense GEMM baselines + the explicit permutation-shuffle pass.
 //!
-//! `dense_matmul` is the naive triple loop (kept as a correctness oracle);
-//! `dense_matmul_blocked` is the production baseline: 8x-unrolled dot with
-//! register-blocked accumulation over 4 output rows, which is what the
-//! sparse kernels must beat for the Fig. 3 speedup curves to be honest.
+//! `dense_matmul` is the naive triple loop (kept as a backend-free
+//! correctness oracle); `dense_matmul_blocked` is the production baseline
+//! the sparse kernels must beat for the Fig. 3 speedup curves to be
+//! honest: a thin driver blocking 4 output rows per
+//! [`micro::dot_rows4`](super::micro::dot_rows4) call, with the inner
+//! summation owned by the selected [`Backend`].
+
+use super::micro::{self, Backend};
 
 /// y[b, i] = sum_j w[i, j] * x[b, j]  — naive, correctness oracle.
 pub fn dense_matmul(
@@ -31,28 +35,33 @@ pub fn dense_matmul(
 }
 
 /// Register-blocked panel: `y_out[i] = dot(w_rows[i], xb)` for a contiguous
-/// run of output rows, 4 rows per register block.  Each output element is a
-/// single accumulator walked in `j` order, so results do not depend on the
-/// blocking phase — sharding a row range across threads and re-running this
-/// panel on each chunk reproduces the serial numbers bit-for-bit.
+/// run of output rows, 4 rows per microkernel call.  Each output element's
+/// summation order is fixed by the microkernel alone (row `i` of
+/// `dot_rows4` == the single-row `dot`, bit-for-bit), so results do not
+/// depend on the blocking phase — sharding a row range across threads and
+/// re-running this panel on each chunk reproduces the serial numbers
+/// bit-for-bit for any backend.
 #[inline(always)]
-pub(crate) fn dense_rows_blocked(xb: &[f32], w_rows: &[f32], cols: usize, y_out: &mut [f32]) {
+pub(crate) fn dense_rows_blocked(
+    xb: &[f32],
+    w_rows: &[f32],
+    cols: usize,
+    y_out: &mut [f32],
+    backend: Backend,
+) {
     const RB: usize = 4;
     let rows = y_out.len();
     debug_assert_eq!(w_rows.len(), rows * cols);
     let mut i = 0;
     while i + RB <= rows {
-        let w0 = &w_rows[i * cols..(i + 1) * cols];
-        let w1 = &w_rows[(i + 1) * cols..(i + 2) * cols];
-        let w2 = &w_rows[(i + 2) * cols..(i + 3) * cols];
-        let w3 = &w_rows[(i + 3) * cols..(i + 4) * cols];
-        let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        for (j, &xv) in xb.iter().enumerate() {
-            a0 += w0[j] * xv;
-            a1 += w1[j] * xv;
-            a2 += w2[j] * xv;
-            a3 += w3[j] * xv;
-        }
+        let [a0, a1, a2, a3] = micro::dot_rows4(
+            &w_rows[i * cols..(i + 1) * cols],
+            &w_rows[(i + 1) * cols..(i + 2) * cols],
+            &w_rows[(i + 2) * cols..(i + 3) * cols],
+            &w_rows[(i + 3) * cols..(i + 4) * cols],
+            xb,
+            backend,
+        );
         y_out[i] = a0;
         y_out[i + 1] = a1;
         y_out[i + 2] = a2;
@@ -60,18 +69,13 @@ pub(crate) fn dense_rows_blocked(xb: &[f32], w_rows: &[f32], cols: usize, y_out:
         i += RB;
     }
     while i < rows {
-        let wi = &w_rows[i * cols..(i + 1) * cols];
-        let mut acc = 0.0f32;
-        for (wv, xv) in wi.iter().zip(xb) {
-            acc += wv * xv;
-        }
-        y_out[i] = acc;
+        y_out[i] = micro::dot(&w_rows[i * cols..(i + 1) * cols], xb, backend);
         i += 1;
     }
 }
 
-/// Production dense baseline: 4-row register blocking + 8-wide unrolled
-/// inner loop (auto-vectorises to SSE/AVX on x86).
+/// Production dense baseline: 4-row register blocking over the selected
+/// microkernel, default backend.
 pub fn dense_matmul_blocked(
     x: &[f32],
     w: &[f32],
@@ -80,12 +84,25 @@ pub fn dense_matmul_blocked(
     cols: usize,
     y: &mut [f32],
 ) {
+    dense_matmul_blocked_with(x, w, batch, rows, cols, y, Backend::default_backend());
+}
+
+/// [`dense_matmul_blocked`] with an explicit microkernel backend.
+pub fn dense_matmul_blocked_with(
+    x: &[f32],
+    w: &[f32],
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    y: &mut [f32],
+    backend: Backend,
+) {
     debug_assert_eq!(x.len(), batch * cols);
     debug_assert_eq!(w.len(), rows * cols);
     debug_assert_eq!(y.len(), batch * rows);
     for b in 0..batch {
         let xb = &x[b * cols..(b + 1) * cols];
-        dense_rows_blocked(xb, w, cols, &mut y[b * rows..(b + 1) * rows]);
+        dense_rows_blocked(xb, w, cols, &mut y[b * rows..(b + 1) * rows], backend);
     }
 }
 
@@ -130,21 +147,23 @@ mod tests {
     use crate::util::Rng;
 
     #[test]
-    fn blocked_matches_naive() {
+    fn blocked_matches_naive_per_backend() {
         let mut rng = Rng::new(30);
         for (b, r, c) in [(1, 7, 13), (3, 64, 96), (2, 33, 65)] {
             let x: Vec<f32> = (0..b * c).map(|_| rng.normal()).collect();
             let w: Vec<f32> = (0..r * c).map(|_| rng.normal()).collect();
             let mut y1 = vec![0.0; b * r];
-            let mut y2 = vec![0.0; b * r];
             dense_matmul(&x, &w, b, r, c, &mut y1);
-            dense_matmul_blocked(&x, &w, b, r, c, &mut y2);
-            let d = y1
-                .iter()
-                .zip(&y2)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0.0f32, f32::max);
-            assert!(d < 1e-4, "({b},{r},{c}): {d}");
+            for &backend in Backend::all() {
+                let mut y2 = vec![0.0; b * r];
+                dense_matmul_blocked_with(&x, &w, b, r, c, &mut y2, backend);
+                let d = y1
+                    .iter()
+                    .zip(&y2)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(d < 1e-4, "({b},{r},{c}) {}: {d}", backend.name());
+            }
         }
     }
 

@@ -1,4 +1,4 @@
-//! Structured sparse GEMM kernels over the compressed forms.
+//! Structured sparse GEMM drivers over the compressed forms.
 //!
 //! [`gather_matmul`] is the CPU twin of the L1 Pallas `gather_spmm` kernel:
 //! per output row, a fixed-width panel of (value, input-index) pairs —
@@ -8,34 +8,29 @@
 //! [`block_matmul`] is the DSB/Pixelated-Butterfly form: dense bs x bs
 //! panels, contiguous in both W and x, which is the friendliest layout for
 //! the CPU's vector units (as it is for tensor cores in the paper).
+//!
+//! Both are thin drivers: every reduction body lives in the
+//! [`micro`](super::micro) layer and is selected by [`Backend`].  The
+//! plain entry points run [`Backend::default_backend`]; the `_with`
+//! variants take the backend explicitly (what the benches, tests, and the
+//! `_mt` shards use).
 
+use super::micro::{self, Backend};
 use crate::sparsity::compress::{BlockCompressed, RowCompressed};
 
-/// One output row's gather dot product, 4-wide unrolled (the index stream
-/// is the only indirection).  Shared by the serial and parallel paths so
-/// their reduction order — and therefore their f32 results — are
-/// bit-identical by construction.
-#[inline(always)]
-pub(crate) fn gather_row_dot(vals: &[f32], idx: &[i32], xb: &[f32]) -> f32 {
-    let k = vals.len();
-    debug_assert_eq!(idx.len(), k);
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut s = 0;
-    while s + 4 <= k {
-        acc0 += vals[s] * xb[idx[s] as usize] + vals[s + 1] * xb[idx[s + 1] as usize];
-        acc1 += vals[s + 2] * xb[idx[s + 2] as usize] + vals[s + 3] * xb[idx[s + 3] as usize];
-        s += 4;
-    }
-    while s < k {
-        acc0 += vals[s] * xb[idx[s] as usize];
-        s += 1;
-    }
-    acc0 + acc1
+/// y[b, i] = sum_s vals[i, s] * x[b, idx[i, s]], on the default backend.
+pub fn gather_matmul(x: &[f32], rc: &RowCompressed, batch: usize, y: &mut [f32]) {
+    gather_matmul_with(x, rc, batch, y, Backend::default_backend());
 }
 
-/// y[b, i] = sum_s vals[i, s] * x[b, idx[i, s]].
-pub fn gather_matmul(x: &[f32], rc: &RowCompressed, batch: usize, y: &mut [f32]) {
+/// [`gather_matmul`] with an explicit microkernel backend.
+pub fn gather_matmul_with(
+    x: &[f32],
+    rc: &RowCompressed,
+    batch: usize,
+    y: &mut [f32],
+    backend: Backend,
+) {
     let (rows, cols, k) = (rc.rows, rc.cols, rc.k);
     debug_assert_eq!(x.len(), batch * cols);
     debug_assert_eq!(y.len(), batch * rows);
@@ -43,7 +38,12 @@ pub fn gather_matmul(x: &[f32], rc: &RowCompressed, batch: usize, y: &mut [f32])
         let xb = &x[b * cols..(b + 1) * cols];
         let yb = &mut y[b * rows..(b + 1) * rows];
         for (i, yv) in yb.iter_mut().enumerate() {
-            *yv = gather_row_dot(&rc.vals[i * k..(i + 1) * k], &rc.idx[i * k..(i + 1) * k], xb);
+            *yv = micro::dot_gather(
+                &rc.vals[i * k..(i + 1) * k],
+                &rc.idx[i * k..(i + 1) * k],
+                xb,
+                backend,
+            );
         }
     }
 }
@@ -52,6 +52,17 @@ pub fn gather_matmul(x: &[f32], rc: &RowCompressed, batch: usize, y: &mut [f32])
 /// the indirection across the batch (the CPU analogue of the paper's
 /// "activation reuse across the batch" on GPU).  Preferred when batch >= 4.
 pub fn gather_matmul_batched(x: &[f32], rc: &RowCompressed, batch: usize, y: &mut [f32]) {
+    gather_matmul_batched_with(x, rc, batch, y, Backend::default_backend());
+}
+
+/// [`gather_matmul_batched`] with an explicit microkernel backend.
+pub fn gather_matmul_batched_with(
+    x: &[f32],
+    rc: &RowCompressed,
+    batch: usize,
+    y: &mut [f32],
+    backend: Backend,
+) {
     let (rows, cols, k) = (rc.rows, rc.cols, rc.k);
     debug_assert_eq!(x.len(), batch * cols);
     debug_assert_eq!(y.len(), batch * rows);
@@ -64,15 +75,7 @@ pub fn gather_matmul_batched(x: &[f32], rc: &RowCompressed, batch: usize, y: &mu
         for i in 0..rows {
             let vals = &rc.vals[i * k..(i + 1) * k];
             let idx = &rc.idx[i * k..(i + 1) * k];
-            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for s in 0..k {
-                let j = idx[s] as usize;
-                let v = vals[s];
-                a0 += v * x0[j];
-                a1 += v * x1[j];
-                a2 += v * x2[j];
-                a3 += v * x3[j];
-            }
+            let [a0, a1, a2, a3] = micro::dot_gather4(vals, idx, x0, x1, x2, x3, backend);
             y[b * rows + i] = a0;
             y[(b + 1) * rows + i] = a1;
             y[(b + 2) * rows + i] = a2;
@@ -82,17 +85,24 @@ pub fn gather_matmul_batched(x: &[f32], rc: &RowCompressed, batch: usize, y: &mu
     }
     if b < batch {
         let rem = batch - b;
-        gather_matmul(&x[b * cols..], rc, rem, &mut y[b * rows..]);
+        gather_matmul_with(&x[b * cols..], rc, rem, &mut y[b * rows..], backend);
     }
 }
 
 /// One block-row of the block-sparse product: `ys` (length `bs`) receives
 /// the contributions of block-row `bi` against the single batch row `xb`.
-/// Active blocks accumulate in storage order, so any scheduling that calls
-/// this per (batch, block-row) unit — serial or sharded across threads —
-/// produces bit-identical sums.
+/// Active blocks accumulate in storage order and every per-row dot runs
+/// the same microkernel, so any scheduling that calls this per
+/// (batch, block-row) unit — serial or sharded across threads — produces
+/// bit-identical sums for a given backend.
 #[inline(always)]
-pub(crate) fn block_row_matmul(xb: &[f32], bc: &BlockCompressed, bi: usize, ys: &mut [f32]) {
+pub(crate) fn block_row_matmul(
+    xb: &[f32],
+    bc: &BlockCompressed,
+    bi: usize,
+    ys: &mut [f32],
+    backend: Backend,
+) {
     let (bs, nab) = (bc.bs, bc.nab);
     debug_assert_eq!(ys.len(), bs);
     ys.fill(0.0);
@@ -103,19 +113,45 @@ pub(crate) fn block_row_matmul(xb: &[f32], bc: &BlockCompressed, bi: usize, ys: 
         }
         let xs = &xb[jb as usize * bs..(jb as usize + 1) * bs];
         let blk = &bc.blocks[(bi * nab + a) * bs * bs..(bi * nab + a + 1) * bs * bs];
-        for (r, yv) in ys.iter_mut().enumerate() {
-            let wr = &blk[r * bs..(r + 1) * bs];
-            let mut acc = 0.0f32;
-            for (wv, xv) in wr.iter().zip(xs) {
-                acc += wv * xv;
-            }
-            *yv += acc;
+        // 4 block rows per microkernel call share the xs loads; the row
+        // tail (bs % 4) goes through the single-row dot, which is
+        // bit-identical per row by the microkernel contract.
+        let mut r = 0;
+        while r + 4 <= bs {
+            let [d0, d1, d2, d3] = micro::dot_rows4(
+                &blk[r * bs..(r + 1) * bs],
+                &blk[(r + 1) * bs..(r + 2) * bs],
+                &blk[(r + 2) * bs..(r + 3) * bs],
+                &blk[(r + 3) * bs..(r + 4) * bs],
+                xs,
+                backend,
+            );
+            ys[r] += d0;
+            ys[r + 1] += d1;
+            ys[r + 2] += d2;
+            ys[r + 3] += d3;
+            r += 4;
+        }
+        while r < bs {
+            ys[r] += micro::dot(&blk[r * bs..(r + 1) * bs], xs, backend);
+            r += 1;
         }
     }
 }
 
-/// Block-sparse y = x @ W^T over [`BlockCompressed`].
+/// Block-sparse y = x @ W^T over [`BlockCompressed`], default backend.
 pub fn block_matmul(x: &[f32], bc: &BlockCompressed, batch: usize, y: &mut [f32]) {
+    block_matmul_with(x, bc, batch, y, Backend::default_backend());
+}
+
+/// [`block_matmul`] with an explicit microkernel backend.
+pub fn block_matmul_with(
+    x: &[f32],
+    bc: &BlockCompressed,
+    batch: usize,
+    y: &mut [f32],
+    backend: Backend,
+) {
     let (rows, cols, bs) = (bc.rows, bc.cols, bc.bs);
     let br = rows / bs;
     debug_assert_eq!(x.len(), batch * cols);
@@ -124,7 +160,7 @@ pub fn block_matmul(x: &[f32], bc: &BlockCompressed, batch: usize, y: &mut [f32]
         let xb = &x[b * cols..(b + 1) * cols];
         let yb = &mut y[b * rows..(b + 1) * rows];
         for bi in 0..br {
-            block_row_matmul(xb, bc, bi, &mut yb[bi * bs..(bi + 1) * bs]);
+            block_row_matmul(xb, bc, bi, &mut yb[bi * bs..(bi + 1) * bs], backend);
         }
     }
 }
@@ -137,18 +173,23 @@ mod tests {
     use crate::util::Rng;
 
     #[test]
-    fn batched_matches_plain() {
+    fn batched_matches_plain_bitwise_per_backend() {
         let mut rng = Rng::new(40);
         let (batch, rows, cols) = (7, 32, 64); // odd batch exercises the tail
         let mask = make_nm_mask(rows, cols, 4, 16, &mut rng);
         let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
         let rc = compress_rows(&w, &mask, 16, None);
         let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
-        let mut y1 = vec![0.0; batch * rows];
-        let mut y2 = vec![0.0; batch * rows];
-        gather_matmul(&x, &rc, batch, &mut y1);
-        gather_matmul_batched(&x, &rc, batch, &mut y2);
-        let d = y1.iter().zip(&y2).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
-        assert!(d < 1e-4);
+        for &backend in Backend::all() {
+            let mut y1 = vec![0.0; batch * rows];
+            let mut y2 = vec![0.0; batch * rows];
+            gather_matmul_with(&x, &rc, batch, &mut y1, backend);
+            gather_matmul_batched_with(&x, &rc, batch, &mut y2, backend);
+            // dot_gather4 row i must reproduce dot_gather exactly, so the
+            // batched driver is bit-identical to the plain one.
+            for (a, b) in y1.iter().zip(&y2) {
+                assert_eq!(a.to_bits(), b.to_bits(), "backend {}", backend.name());
+            }
+        }
     }
 }

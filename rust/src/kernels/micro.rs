@@ -1,0 +1,617 @@
+//! Microkernel layer: the innermost reduction bodies every matmul driver
+//! in this module tree is a thin loop over, selected at runtime through
+//! [`Backend`].
+//!
+//! The split exists because the Fig. 3 speedup argument is only as strong
+//! as the GFLOP/s of the inner loops: the drivers (`gather_matmul`,
+//! `block_matmul`, `csr_matmul`, `dense_matmul_blocked` and their `_mt`
+//! shards) own *which* dot products are computed, while a [`MicroKernel`]
+//! owns *how one dot product is summed*.  Three implementations:
+//!
+//! * **Scalar** — single-accumulator loops in strict index order.  The
+//!   reference: slow, but the summation every other backend is compared
+//!   against (within tolerance) and the fallback CI keeps honest via
+//!   `PADST_BACKEND=scalar`.
+//! * **Tiled** (default) — hand-tiled 8-wide lane accumulators with
+//!   explicit tail handling, on stable Rust.  The independent lanes break
+//!   the f32 add dependency chain, which is what lets the compiler keep
+//!   the loop in vector registers (and an out-of-order core overlap the
+//!   multiplies even where it cannot vectorise the gather loads).
+//! * **Simd** — the same shapes expressed in `std::simd` (`f32x8`),
+//!   compiled only with `--features nightly-simd` on a nightly toolchain.
+//!   Without the feature a Simd request degrades to Tiled.
+//!
+//! **Bit-identity contract.**  Each implementation fixes one summation
+//! order per dot shape, and the multi-row shapes (`dot_rows4`,
+//! `dot_gather4`) are required to reproduce the single-row shapes
+//! *bit-for-bit* per row (pinned by `tests/microkernels.rs`).  Drivers
+//! guarantee that a serial kernel and its `_mt` shard run the *same*
+//! microkernel for every output element, so results are bit-identical
+//! across thread counts for any backend — the contract
+//! `tests/parallel_kernels.rs` enforces per backend.  Across *backends*
+//! the summation order legitimately differs; equivalence is 1e-4-level,
+//! not bitwise.
+
+use std::sync::OnceLock;
+
+/// Lane width of the tiled/SIMD microkernels (f32x8 = one AVX2 register).
+pub const LANES: usize = 8;
+
+/// Which microkernel implementation the drivers dispatch to.
+///
+/// Resolution order for the process default ([`Backend::default_backend`]):
+/// the `PADST_BACKEND` env var (`scalar` | `tiled` | `simd`), else
+/// [`Backend::Tiled`].  CLI front-ends layer an explicit `--backend` flag
+/// on top via [`Backend::resolve`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// Strict-order single-accumulator reference loops.
+    Scalar,
+    /// Hand-tiled 8-lane accumulators on stable Rust (the default).
+    #[default]
+    Tiled,
+    /// `std::simd` f32x8 (requires the `nightly-simd` feature; degrades to
+    /// Tiled otherwise).
+    Simd,
+}
+
+impl Backend {
+    /// Parse a knob value (case-insensitive); `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(Backend::Scalar),
+            "tiled" => Some(Backend::Tiled),
+            "simd" => Some(Backend::Simd),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Tiled => "tiled",
+            Backend::Simd => "simd",
+        }
+    }
+
+    /// Whether the `std::simd` implementation was compiled in.
+    pub fn simd_compiled() -> bool {
+        cfg!(feature = "nightly-simd")
+    }
+
+    /// The backend that will actually run: Simd degrades to Tiled when the
+    /// `nightly-simd` feature is not compiled in.
+    pub fn effective(self) -> Backend {
+        if self == Backend::Simd && !Self::simd_compiled() {
+            Backend::Tiled
+        } else {
+            self
+        }
+    }
+
+    /// Every backend runnable in this build, Scalar first.  Test sweeps
+    /// and the bench backend matrix iterate this.
+    pub fn all() -> &'static [Backend] {
+        if Self::simd_compiled() {
+            &[Backend::Scalar, Backend::Tiled, Backend::Simd]
+        } else {
+            &[Backend::Scalar, Backend::Tiled]
+        }
+    }
+
+    /// Resolve the backend knob: an explicit value (CLI `--backend`) wins
+    /// over `PADST_BACKEND`, else the default (Tiled).  Unknown names and
+    /// a Simd request in a build without `nightly-simd` warn on stderr and
+    /// degrade rather than abort — benches and env-driven test runs should
+    /// not die over a knob.  CLI front-ends that prefer a hard error parse
+    /// the flag themselves via [`Backend::parse`].
+    pub fn resolve(explicit: Option<&str>) -> Backend {
+        let src = match explicit {
+            Some(s) => Some(s.to_string()),
+            None => std::env::var("PADST_BACKEND").ok(),
+        };
+        match src {
+            Some(s) if !s.is_empty() => match Backend::parse(&s) {
+                Some(b) => {
+                    let eff = b.effective();
+                    if eff != b {
+                        eprintln!(
+                            "[padst] backend {s:?} needs a build with --features nightly-simd; \
+                             using {}",
+                            eff.name()
+                        );
+                    }
+                    eff
+                }
+                None => {
+                    eprintln!(
+                        "[padst] unknown backend {s:?} (expected scalar|tiled|simd); using {}",
+                        Backend::default().name()
+                    );
+                    Backend::default()
+                }
+            },
+            _ => Backend::default(),
+        }
+    }
+
+    /// `PADST_BACKEND`-resolved backend (uncached form of
+    /// [`Backend::default_backend`]).
+    pub fn from_env() -> Backend {
+        Backend::resolve(None)
+    }
+
+    /// The process-wide default backend, resolved from `PADST_BACKEND`
+    /// once and cached.  The plain kernel entry points (`gather_matmul`,
+    /// `block_matmul`, ...) and `RunConfig::default` use this, which is
+    /// what lets CI run the whole default test suite under
+    /// `PADST_BACKEND=scalar`.
+    pub fn default_backend() -> Backend {
+        static CACHE: OnceLock<Backend> = OnceLock::new();
+        *CACHE.get_or_init(Backend::from_env)
+    }
+}
+
+/// One microkernel implementation: a fixed summation order for each dot
+/// shape the drivers need.
+///
+/// Invariant (pinned by `tests/microkernels.rs`): row `i` of
+/// [`MicroKernel::dot_rows4`] / [`MicroKernel::dot_gather4`] is
+/// bit-identical to the corresponding single-row call.  The `_mt` drivers
+/// rely on this — a sharded chunk boundary may fall anywhere inside a
+/// 4-row register block, and the split must not change any output bit.
+pub trait MicroKernel {
+    /// Contiguous dot product: `sum_j a[j] * b[j]` (lengths must match).
+    fn dot(a: &[f32], b: &[f32]) -> f32;
+
+    /// Gather dot product: `sum_s vals[s] * x[idx[s]]` (the row form of
+    /// every index-stream kernel; any permutation is pre-composed into
+    /// `idx`).
+    fn dot_gather(vals: &[f32], idx: &[i32], x: &[f32]) -> f32;
+
+    /// Four gather dots sharing one index stream (batch amortisation).
+    /// Default: four independent [`MicroKernel::dot_gather`] calls.
+    fn dot_gather4(
+        vals: &[f32],
+        idx: &[i32],
+        x0: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+    ) -> [f32; 4] {
+        [
+            Self::dot_gather(vals, idx, x0),
+            Self::dot_gather(vals, idx, x1),
+            Self::dot_gather(vals, idx, x2),
+            Self::dot_gather(vals, idx, x3),
+        ]
+    }
+
+    /// Four contiguous dots against one shared `x` (register blocking
+    /// over output rows).  Default: four independent [`MicroKernel::dot`]
+    /// calls.
+    fn dot_rows4(w0: &[f32], w1: &[f32], w2: &[f32], w3: &[f32], x: &[f32]) -> [f32; 4] {
+        [Self::dot(w0, x), Self::dot(w1, x), Self::dot(w2, x), Self::dot(w3, x)]
+    }
+}
+
+/// Pairwise reduction of the 8 lane accumulators — one fixed tree, shared
+/// by every Tiled shape so multi-row and single-row results agree bitwise.
+#[inline(always)]
+fn reduce8(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Strict-order reference loops.
+pub struct ScalarKernel;
+
+impl MicroKernel for ScalarKernel {
+    #[inline(always)]
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0.0f32;
+        for (x, y) in a.iter().zip(b) {
+            acc += x * y;
+        }
+        acc
+    }
+
+    #[inline(always)]
+    fn dot_gather(vals: &[f32], idx: &[i32], x: &[f32]) -> f32 {
+        debug_assert_eq!(vals.len(), idx.len());
+        let mut acc = 0.0f32;
+        for (v, &j) in vals.iter().zip(idx) {
+            acc += v * x[j as usize];
+        }
+        acc
+    }
+}
+
+/// Hand-tiled stable-Rust implementation: 8 independent lane accumulators
+/// walked over `chunks_exact(8)` panels, explicit scalar tail, pairwise
+/// lane reduction ([`reduce8`]).
+pub struct TiledKernel;
+
+impl MicroKernel for TiledKernel {
+    #[inline(always)]
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut lanes = [0.0f32; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        let mut cb = b.chunks_exact(LANES);
+        for (pa, pb) in (&mut ca).zip(&mut cb) {
+            for s in 0..LANES {
+                lanes[s] += pa[s] * pb[s];
+            }
+        }
+        let mut tail = 0.0f32;
+        for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+            tail += x * y;
+        }
+        reduce8(&lanes) + tail
+    }
+
+    #[inline(always)]
+    fn dot_gather(vals: &[f32], idx: &[i32], x: &[f32]) -> f32 {
+        debug_assert_eq!(vals.len(), idx.len());
+        let mut lanes = [0.0f32; LANES];
+        let mut cv = vals.chunks_exact(LANES);
+        let mut ci = idx.chunks_exact(LANES);
+        for (pv, pi) in (&mut cv).zip(&mut ci) {
+            for s in 0..LANES {
+                lanes[s] += pv[s] * x[pi[s] as usize];
+            }
+        }
+        let mut tail = 0.0f32;
+        for (v, &j) in cv.remainder().iter().zip(ci.remainder()) {
+            tail += v * x[j as usize];
+        }
+        reduce8(&lanes) + tail
+    }
+
+    #[inline(always)]
+    fn dot_gather4(
+        vals: &[f32],
+        idx: &[i32],
+        x0: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+    ) -> [f32; 4] {
+        debug_assert_eq!(vals.len(), idx.len());
+        // Four batch rows share every index fetch; per row the lane walk
+        // and tail are exactly `dot_gather`'s, so each output bit matches
+        // the single-row call.
+        let mut lanes = [[0.0f32; LANES]; 4];
+        let mut cv = vals.chunks_exact(LANES);
+        let mut ci = idx.chunks_exact(LANES);
+        for (pv, pi) in (&mut cv).zip(&mut ci) {
+            for s in 0..LANES {
+                let j = pi[s] as usize;
+                let v = pv[s];
+                lanes[0][s] += v * x0[j];
+                lanes[1][s] += v * x1[j];
+                lanes[2][s] += v * x2[j];
+                lanes[3][s] += v * x3[j];
+            }
+        }
+        let mut tail = [0.0f32; 4];
+        for (v, &ji) in cv.remainder().iter().zip(ci.remainder()) {
+            let j = ji as usize;
+            tail[0] += v * x0[j];
+            tail[1] += v * x1[j];
+            tail[2] += v * x2[j];
+            tail[3] += v * x3[j];
+        }
+        [
+            reduce8(&lanes[0]) + tail[0],
+            reduce8(&lanes[1]) + tail[1],
+            reduce8(&lanes[2]) + tail[2],
+            reduce8(&lanes[3]) + tail[3],
+        ]
+    }
+
+    #[inline(always)]
+    fn dot_rows4(w0: &[f32], w1: &[f32], w2: &[f32], w3: &[f32], x: &[f32]) -> [f32; 4] {
+        let n = x.len();
+        debug_assert!(
+            w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n,
+            "dot_rows4: row length mismatch"
+        );
+        // Four rows share every x load; per row this is exactly `dot`'s
+        // lane walk + tail, so splitting a 4-row block apart (as the `_mt`
+        // shards may) cannot change any output bit.
+        let mut lanes = [[0.0f32; LANES]; 4];
+        let mut i = 0;
+        while i + LANES <= n {
+            for s in 0..LANES {
+                let xv = x[i + s];
+                lanes[0][s] += w0[i + s] * xv;
+                lanes[1][s] += w1[i + s] * xv;
+                lanes[2][s] += w2[i + s] * xv;
+                lanes[3][s] += w3[i + s] * xv;
+            }
+            i += LANES;
+        }
+        let mut tail = [0.0f32; 4];
+        while i < n {
+            let xv = x[i];
+            tail[0] += w0[i] * xv;
+            tail[1] += w1[i] * xv;
+            tail[2] += w2[i] * xv;
+            tail[3] += w3[i] * xv;
+            i += 1;
+        }
+        [
+            reduce8(&lanes[0]) + tail[0],
+            reduce8(&lanes[1]) + tail[1],
+            reduce8(&lanes[2]) + tail[2],
+            reduce8(&lanes[3]) + tail[3],
+        ]
+    }
+}
+
+#[cfg(feature = "nightly-simd")]
+mod simd_impl {
+    //! `std::simd` twin of [`TiledKernel`](super::TiledKernel): the lane
+    //! accumulator array
+    //! becomes one `f32x8`, the pairwise lane reduction becomes
+    //! `reduce_sum()`.  Per shape the chunking and tail order mirror the
+    //! tiled code exactly, so the rows4/gather4 == single-row bit contract
+    //! holds here too (`reduce_sum`'s internal tree is fixed per type).
+
+    use std::simd::f32x8;
+    use std::simd::num::SimdFloat;
+
+    use super::{MicroKernel, LANES};
+
+    pub struct SimdKernel;
+
+    impl MicroKernel for SimdKernel {
+        #[inline(always)]
+        fn dot(a: &[f32], b: &[f32]) -> f32 {
+            debug_assert_eq!(a.len(), b.len());
+            let mut acc = f32x8::splat(0.0);
+            let mut ca = a.chunks_exact(LANES);
+            let mut cb = b.chunks_exact(LANES);
+            for (pa, pb) in (&mut ca).zip(&mut cb) {
+                acc += f32x8::from_slice(pa) * f32x8::from_slice(pb);
+            }
+            let mut tail = 0.0f32;
+            for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+                tail += x * y;
+            }
+            acc.reduce_sum() + tail
+        }
+
+        #[inline(always)]
+        fn dot_gather(vals: &[f32], idx: &[i32], x: &[f32]) -> f32 {
+            debug_assert_eq!(vals.len(), idx.len());
+            let mut acc = f32x8::splat(0.0);
+            let mut cv = vals.chunks_exact(LANES);
+            let mut ci = idx.chunks_exact(LANES);
+            for (pv, pi) in (&mut cv).zip(&mut ci) {
+                let g = f32x8::from_array([
+                    x[pi[0] as usize],
+                    x[pi[1] as usize],
+                    x[pi[2] as usize],
+                    x[pi[3] as usize],
+                    x[pi[4] as usize],
+                    x[pi[5] as usize],
+                    x[pi[6] as usize],
+                    x[pi[7] as usize],
+                ]);
+                acc += f32x8::from_slice(pv) * g;
+            }
+            let mut tail = 0.0f32;
+            for (v, &j) in cv.remainder().iter().zip(ci.remainder()) {
+                tail += v * x[j as usize];
+            }
+            acc.reduce_sum() + tail
+        }
+
+        #[inline(always)]
+        fn dot_gather4(
+            vals: &[f32],
+            idx: &[i32],
+            x0: &[f32],
+            x1: &[f32],
+            x2: &[f32],
+            x3: &[f32],
+        ) -> [f32; 4] {
+            debug_assert_eq!(vals.len(), idx.len());
+            // Four batch rows share every index fetch, like the tiled
+            // twin; per row the accumulation order is exactly
+            // `dot_gather`'s, preserving the bitwise row contract.
+            let mut acc = [f32x8::splat(0.0); 4];
+            let mut cv = vals.chunks_exact(LANES);
+            let mut ci = idx.chunks_exact(LANES);
+            for (pv, pi) in (&mut cv).zip(&mut ci) {
+                let vv = f32x8::from_slice(pv);
+                let gather = |x: &[f32]| {
+                    f32x8::from_array([
+                        x[pi[0] as usize],
+                        x[pi[1] as usize],
+                        x[pi[2] as usize],
+                        x[pi[3] as usize],
+                        x[pi[4] as usize],
+                        x[pi[5] as usize],
+                        x[pi[6] as usize],
+                        x[pi[7] as usize],
+                    ])
+                };
+                acc[0] += vv * gather(x0);
+                acc[1] += vv * gather(x1);
+                acc[2] += vv * gather(x2);
+                acc[3] += vv * gather(x3);
+            }
+            let mut tail = [0.0f32; 4];
+            for (v, &ji) in cv.remainder().iter().zip(ci.remainder()) {
+                let j = ji as usize;
+                tail[0] += v * x0[j];
+                tail[1] += v * x1[j];
+                tail[2] += v * x2[j];
+                tail[3] += v * x3[j];
+            }
+            [
+                acc[0].reduce_sum() + tail[0],
+                acc[1].reduce_sum() + tail[1],
+                acc[2].reduce_sum() + tail[2],
+                acc[3].reduce_sum() + tail[3],
+            ]
+        }
+
+        #[inline(always)]
+        fn dot_rows4(w0: &[f32], w1: &[f32], w2: &[f32], w3: &[f32], x: &[f32]) -> [f32; 4] {
+            let n = x.len();
+            debug_assert!(w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n);
+            let mut acc = [f32x8::splat(0.0); 4];
+            let mut i = 0;
+            while i + LANES <= n {
+                let xv = f32x8::from_slice(&x[i..i + LANES]);
+                acc[0] += f32x8::from_slice(&w0[i..i + LANES]) * xv;
+                acc[1] += f32x8::from_slice(&w1[i..i + LANES]) * xv;
+                acc[2] += f32x8::from_slice(&w2[i..i + LANES]) * xv;
+                acc[3] += f32x8::from_slice(&w3[i..i + LANES]) * xv;
+                i += LANES;
+            }
+            let mut tail = [0.0f32; 4];
+            while i < n {
+                let xv = x[i];
+                tail[0] += w0[i] * xv;
+                tail[1] += w1[i] * xv;
+                tail[2] += w2[i] * xv;
+                tail[3] += w3[i] * xv;
+                i += 1;
+            }
+            [
+                acc[0].reduce_sum() + tail[0],
+                acc[1].reduce_sum() + tail[1],
+                acc[2].reduce_sum() + tail[2],
+                acc[3].reduce_sum() + tail[3],
+            ]
+        }
+    }
+}
+
+#[cfg(feature = "nightly-simd")]
+pub use simd_impl::SimdKernel;
+
+// ------------------------------------------------------------------ dispatch
+//
+// One `match` per dot shape; drivers call these with a `Backend` value.
+// `effective()` maps Simd to Tiled in builds without the feature, so the
+// `cfg(not(...))` arms below are unreachable but keep the match total.
+
+/// Dispatching [`MicroKernel::dot`].
+#[inline]
+pub fn dot(a: &[f32], b: &[f32], backend: Backend) -> f32 {
+    match backend.effective() {
+        Backend::Scalar => ScalarKernel::dot(a, b),
+        Backend::Tiled => TiledKernel::dot(a, b),
+        #[cfg(feature = "nightly-simd")]
+        Backend::Simd => SimdKernel::dot(a, b),
+        #[cfg(not(feature = "nightly-simd"))]
+        Backend::Simd => TiledKernel::dot(a, b),
+    }
+}
+
+/// Dispatching [`MicroKernel::dot_gather`].
+#[inline]
+pub fn dot_gather(vals: &[f32], idx: &[i32], x: &[f32], backend: Backend) -> f32 {
+    match backend.effective() {
+        Backend::Scalar => ScalarKernel::dot_gather(vals, idx, x),
+        Backend::Tiled => TiledKernel::dot_gather(vals, idx, x),
+        #[cfg(feature = "nightly-simd")]
+        Backend::Simd => SimdKernel::dot_gather(vals, idx, x),
+        #[cfg(not(feature = "nightly-simd"))]
+        Backend::Simd => TiledKernel::dot_gather(vals, idx, x),
+    }
+}
+
+/// Dispatching [`MicroKernel::dot_gather4`].
+#[inline]
+pub fn dot_gather4(
+    vals: &[f32],
+    idx: &[i32],
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+    backend: Backend,
+) -> [f32; 4] {
+    match backend.effective() {
+        Backend::Scalar => ScalarKernel::dot_gather4(vals, idx, x0, x1, x2, x3),
+        Backend::Tiled => TiledKernel::dot_gather4(vals, idx, x0, x1, x2, x3),
+        #[cfg(feature = "nightly-simd")]
+        Backend::Simd => SimdKernel::dot_gather4(vals, idx, x0, x1, x2, x3),
+        #[cfg(not(feature = "nightly-simd"))]
+        Backend::Simd => TiledKernel::dot_gather4(vals, idx, x0, x1, x2, x3),
+    }
+}
+
+/// Dispatching [`MicroKernel::dot_rows4`].
+#[inline]
+pub fn dot_rows4(
+    w0: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    w3: &[f32],
+    x: &[f32],
+    backend: Backend,
+) -> [f32; 4] {
+    match backend.effective() {
+        Backend::Scalar => ScalarKernel::dot_rows4(w0, w1, w2, w3, x),
+        Backend::Tiled => TiledKernel::dot_rows4(w0, w1, w2, w3, x),
+        #[cfg(feature = "nightly-simd")]
+        Backend::Simd => SimdKernel::dot_rows4(w0, w1, w2, w3, x),
+        #[cfg(not(feature = "nightly-simd"))]
+        Backend::Simd => TiledKernel::dot_rows4(w0, w1, w2, w3, x),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for &b in Backend::all() {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+        assert_eq!(Backend::parse("TILED"), Some(Backend::Tiled));
+        assert_eq!(Backend::parse("avx512"), None);
+    }
+
+    #[test]
+    fn resolve_explicit_wins_and_degrades() {
+        assert_eq!(Backend::resolve(Some("scalar")), Backend::Scalar);
+        assert_eq!(Backend::resolve(Some("nonsense")), Backend::Tiled);
+        // Simd resolves to itself when compiled, Tiled otherwise.
+        assert_eq!(Backend::resolve(Some("simd")), Backend::Simd.effective());
+    }
+
+    #[test]
+    fn all_contains_scalar_and_tiled() {
+        let all = Backend::all();
+        assert!(all.contains(&Backend::Scalar));
+        assert!(all.contains(&Backend::Tiled));
+        assert_eq!(all.contains(&Backend::Simd), Backend::simd_compiled());
+    }
+
+    #[test]
+    fn reduce8_is_a_fixed_tree() {
+        let l = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        assert_eq!(reduce8(&l), 36.0);
+    }
+
+    #[test]
+    fn tiled_dot_matches_scalar_closely() {
+        // Deterministic non-trivial vectors covering a tail (len 19).
+        let a: Vec<f32> = (0..19).map(|i| (i as f32 * 0.37).sin()).collect();
+        let b: Vec<f32> = (0..19).map(|i| (i as f32 * 0.73).cos()).collect();
+        let s = ScalarKernel::dot(&a, &b);
+        let t = TiledKernel::dot(&a, &b);
+        assert!((s - t).abs() < 1e-5, "{s} vs {t}");
+    }
+}

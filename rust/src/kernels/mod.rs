@@ -16,18 +16,33 @@
 //! pass (the strawman the paper compares against), and a `*_mt` variant
 //! (see [`parallel`]) that shards the output across scoped threads with
 //! bit-identical results.
+//!
+//! Since the microkernel refactor every matmul is a thin *driver* over the
+//! [`micro`] layer: the inner reductions are selected at runtime through
+//! [`Backend`] (`scalar` reference loops, hand-tiled `tiled` default, or
+//! `std::simd` behind `--features nightly-simd`).  Plain entry points run
+//! [`Backend::default_backend`] (the `PADST_BACKEND` env knob); `_with` /
+//! `_mt_with` variants take the backend explicitly.
 
 pub mod csr;
 pub mod dense;
 pub mod gather;
+pub mod micro;
 pub mod parallel;
 
-pub use csr::{csr_from_mask, csr_matmul, Csr};
-pub use dense::{dense_matmul, dense_matmul_blocked, shuffle_rows};
-pub use gather::{block_matmul, gather_matmul, gather_matmul_batched};
+pub use csr::{csr_from_mask, csr_matmul, csr_matmul_with, Csr};
+pub use dense::{
+    dense_matmul, dense_matmul_blocked, dense_matmul_blocked_with, shuffle_rows,
+};
+pub use gather::{
+    block_matmul, block_matmul_with, gather_matmul, gather_matmul_batched,
+    gather_matmul_batched_with, gather_matmul_with,
+};
+pub use micro::Backend;
 pub use parallel::{
-    available_threads, block_matmul_mt, csr_matmul_mt, dense_matmul_blocked_mt,
-    gather_matmul_mt, parallel_map, resolve_threads,
+    available_threads, block_matmul_mt, block_matmul_mt_with, csr_matmul_mt, csr_matmul_mt_with,
+    dense_matmul_blocked_mt, dense_matmul_blocked_mt_with, gather_matmul_mt,
+    gather_matmul_mt_with, parallel_map, resolve_threads,
 };
 
 /// FLOPs of one sparse GEMM at the given geometry (2 * batch * nnz).
@@ -65,46 +80,48 @@ mod tests {
     }
 
     #[test]
-    fn all_kernels_match_oracle() {
+    fn all_kernels_match_oracle_on_every_backend() {
         let mut rng = Rng::new(20);
         let (batch, rows, cols) = (4, 64, 96);
         let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
         let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
 
-        // diag via gather kernel
         let dm = make_diag_mask(rows, cols, 9, &mut rng);
         let want = oracle(&x, &w, &dm, batch);
         let rc = compress_rows(&w, &dm, 9, None);
-        let mut y = vec![0.0f32; batch * rows];
-        gather_matmul(&x, &rc, batch, &mut y);
-        assert!(max_diff(&y, &want) < 1e-4, "gather kernel mismatch");
-
-        // csr
         let wm: Vec<f32> = (0..rows * cols)
             .map(|p| if dm.bits[p] > 0.5 { w[p] } else { 0.0 })
             .collect();
         let csr = csr_from_mask(&wm, &dm);
-        let mut y2 = vec![0.0f32; batch * rows];
-        csr_matmul(&x, &csr, batch, &mut y2);
-        assert!(max_diff(&y2, &want) < 1e-4, "csr kernel mismatch");
-
-        // block
         let bm = make_block_mask(rows, 96, 0.25, 16, &mut rng);
         let want_b = oracle(&x, &w, &bm, batch);
         let bc = compress_blocks(&w, &bm, 16);
-        let mut y3 = vec![0.0f32; batch * rows];
-        block_matmul(&x, &bc, batch, &mut y3);
-        assert!(max_diff(&y3, &want_b) < 1e-4, "block kernel mismatch");
-
-        // dense with a ones mask
         let ones = Mask::ones(rows, cols);
         let want_d = oracle(&x, &w, &ones, batch);
+
+        for &backend in Backend::all() {
+            let name = backend.name();
+            let mut y = vec![0.0f32; batch * rows];
+            gather_matmul_with(&x, &rc, batch, &mut y, backend);
+            assert!(max_diff(&y, &want) < 1e-4, "gather kernel mismatch [{name}]");
+
+            let mut y2 = vec![0.0f32; batch * rows];
+            csr_matmul_with(&x, &csr, batch, &mut y2, backend);
+            assert!(max_diff(&y2, &want) < 1e-4, "csr kernel mismatch [{name}]");
+
+            let mut y3 = vec![0.0f32; batch * rows];
+            block_matmul_with(&x, &bc, batch, &mut y3, backend);
+            assert!(max_diff(&y3, &want_b) < 1e-4, "block kernel mismatch [{name}]");
+
+            let mut y5 = vec![0.0f32; batch * rows];
+            dense_matmul_blocked_with(&x, &w, batch, rows, cols, &mut y5, backend);
+            assert!(max_diff(&y5, &want_d) < 1e-3, "blocked dense mismatch [{name}]");
+        }
+
+        // The naive dense oracle itself (backend-free).
         let mut y4 = vec![0.0f32; batch * rows];
         dense_matmul(&x, &w, batch, rows, cols, &mut y4);
         assert!(max_diff(&y4, &want_d) < 1e-3, "dense kernel mismatch");
-        let mut y5 = vec![0.0f32; batch * rows];
-        dense_matmul_blocked(&x, &w, batch, rows, cols, &mut y5);
-        assert!(max_diff(&y5, &want_d) < 1e-3, "blocked dense mismatch");
     }
 
     #[test]

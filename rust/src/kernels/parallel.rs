@@ -3,31 +3,39 @@
 //! The paper's speedup story ("trains up to 1.21x and infers up to 2.9x
 //! faster") assumes the structured kernels exploit hardware parallelism;
 //! the serial kernels in this module's siblings leave every core but one
-//! idle.  This layer shards the four hot GEMMs — [`gather_matmul`],
-//! [`csr_matmul`], [`block_matmul`] and [`dense_matmul_blocked`] — across
+//! idle.  This layer shards the four hot GEMMs —
+//! [`gather_matmul`](super::gather_matmul),
+//! [`csr_matmul`](super::csr_matmul),
+//! [`block_matmul`](super::block_matmul) and
+//! [`dense_matmul_blocked`](super::dense_matmul_blocked) — across
 //! output rows x batch using `std::thread::scope` (no extra dependencies,
 //! no persistent pool to manage).
 //!
 //! **Determinism contract:** every output element is a per-row reduction
-//! whose accumulation order is fixed by the shared row helpers
-//! (`gather_row_dot`, `csr_row_dot`, `dense_rows_blocked`,
-//! `block_row_matmul`).  Sharding only changes *which thread* computes an
-//! element, never the order of the f32 additions inside it, so the
-//! parallel results are bit-identical to the serial kernels for any thread
-//! count.  `tests/parallel_kernels.rs` pins this with `to_bits` equality.
+//! whose accumulation order is fixed by the selected microkernel
+//! ([`super::micro`]); the serial kernel and its `_mt` shard run the same
+//! microkernel for every element.  Sharding only changes *which thread*
+//! computes an element, never the order of the f32 additions inside it,
+//! so the parallel results are bit-identical to the serial kernels for
+//! any thread count and any [`Backend`].  `tests/parallel_kernels.rs`
+//! pins this with `to_bits` equality per backend.
 //!
 //! Thread-count convention used across the crate (CLI `--threads`,
 //! `RunConfig::threads`, `Runtime::threads`, `PADST_THREADS`): `0` means
 //! "auto" (available parallelism), `1` forces the serial path, `n > 1`
 //! spawns at most `n` workers (never more than there are shard units).
+//! The backend convention mirrors it: the plain `_mt` entry points run
+//! [`Backend::default_backend`], the `_mt_with` variants take it
+//! explicitly.
 
 use std::thread;
 
 use crate::sparsity::compress::{BlockCompressed, RowCompressed};
 
-use super::csr::{csr_matmul, csr_row_dot, Csr};
-use super::dense::{dense_matmul_blocked, dense_rows_blocked};
-use super::gather::{block_matmul, block_row_matmul, gather_matmul, gather_row_dot};
+use super::csr::{csr_matmul_with, csr_row_dot, Csr};
+use super::dense::{dense_matmul_blocked_with, dense_rows_blocked};
+use super::gather::{block_matmul_with, block_row_matmul, gather_matmul_with};
+use super::micro::{self, Backend};
 
 pub use crate::util::cli::{available_threads, resolve_threads};
 
@@ -71,8 +79,9 @@ where
     });
 }
 
-/// Parallel [`gather_matmul`]: output elements sharded across
-/// `batch * rows`.  Bit-identical to the serial kernel.
+/// Parallel [`gather_matmul`](super::gather_matmul): output elements
+/// sharded across `batch * rows`, default backend.  Bit-identical to the
+/// serial kernel.
 pub fn gather_matmul_mt(
     x: &[f32],
     rc: &RowCompressed,
@@ -80,9 +89,21 @@ pub fn gather_matmul_mt(
     y: &mut [f32],
     threads: usize,
 ) {
+    gather_matmul_mt_with(x, rc, batch, y, threads, Backend::default_backend());
+}
+
+/// [`gather_matmul_mt`] with an explicit microkernel backend.
+pub fn gather_matmul_mt_with(
+    x: &[f32],
+    rc: &RowCompressed,
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+    backend: Backend,
+) {
     let threads = resolve_threads(threads);
     if threads <= 1 {
-        gather_matmul(x, rc, batch, y);
+        gather_matmul_with(x, rc, batch, y, backend);
         return;
     }
     let (rows, cols, k) = (rc.rows, rc.cols, rc.k);
@@ -99,8 +120,12 @@ pub fn gather_matmul_mt(
             let xb = &x[b * cols..(b + 1) * cols];
             for (d, yv) in chunk[off..off + take].iter_mut().enumerate() {
                 let i = i0 + d;
-                *yv =
-                    gather_row_dot(&rc.vals[i * k..(i + 1) * k], &rc.idx[i * k..(i + 1) * k], xb);
+                *yv = micro::dot_gather(
+                    &rc.vals[i * k..(i + 1) * k],
+                    &rc.idx[i * k..(i + 1) * k],
+                    xb,
+                    backend,
+                );
             }
             p += take;
             off += take;
@@ -108,12 +133,25 @@ pub fn gather_matmul_mt(
     });
 }
 
-/// Parallel [`csr_matmul`]: output elements sharded across `batch * rows`.
-/// Bit-identical to the serial kernel.
+/// Parallel [`csr_matmul`](super::csr_matmul): output elements sharded
+/// across `batch * rows`, default backend.  Bit-identical to the serial
+/// kernel.
 pub fn csr_matmul_mt(x: &[f32], csr: &Csr, batch: usize, y: &mut [f32], threads: usize) {
+    csr_matmul_mt_with(x, csr, batch, y, threads, Backend::default_backend());
+}
+
+/// [`csr_matmul_mt`] with an explicit microkernel backend.
+pub fn csr_matmul_mt_with(
+    x: &[f32],
+    csr: &Csr,
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+    backend: Backend,
+) {
     let threads = resolve_threads(threads);
     if threads <= 1 {
-        csr_matmul(x, csr, batch, y);
+        csr_matmul_with(x, csr, batch, y, backend);
         return;
     }
     let (rows, cols) = (csr.rows, csr.cols);
@@ -127,7 +165,7 @@ pub fn csr_matmul_mt(x: &[f32], csr: &Csr, batch: usize, y: &mut [f32], threads:
             let take = (rows - i0).min(chunk.len() - off);
             let xb = &x[b * cols..(b + 1) * cols];
             for (d, yv) in chunk[off..off + take].iter_mut().enumerate() {
-                *yv = csr_row_dot(csr, i0 + d, xb);
+                *yv = csr_row_dot(csr, i0 + d, xb, backend);
             }
             p += take;
             off += take;
@@ -135,9 +173,11 @@ pub fn csr_matmul_mt(x: &[f32], csr: &Csr, batch: usize, y: &mut [f32], threads:
     });
 }
 
-/// Parallel [`block_matmul`]: sharded across `batch * block_rows`, chunk
-/// boundaries aligned to whole block-rows.  Bit-identical to the serial
-/// kernel (each block-row accumulates its active blocks in storage order).
+/// Parallel [`block_matmul`](super::block_matmul): sharded across
+/// `batch * block_rows`, chunk boundaries aligned to whole block-rows,
+/// default backend.  Bit-identical to the serial kernel (each block-row
+/// accumulates its active blocks in storage order through the same
+/// microkernel).
 pub fn block_matmul_mt(
     x: &[f32],
     bc: &BlockCompressed,
@@ -145,9 +185,21 @@ pub fn block_matmul_mt(
     y: &mut [f32],
     threads: usize,
 ) {
+    block_matmul_mt_with(x, bc, batch, y, threads, Backend::default_backend());
+}
+
+/// [`block_matmul_mt`] with an explicit microkernel backend.
+pub fn block_matmul_mt_with(
+    x: &[f32],
+    bc: &BlockCompressed,
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+    backend: Backend,
+) {
     let threads = resolve_threads(threads);
     if threads <= 1 {
-        block_matmul(x, bc, batch, y);
+        block_matmul_with(x, bc, batch, y, backend);
         return;
     }
     let (rows, cols, bs) = (bc.rows, bc.cols, bc.bs);
@@ -158,15 +210,17 @@ pub fn block_matmul_mt(
         for (d, ys) in chunk.chunks_mut(bs).enumerate() {
             let u = u0 + d;
             let (b, bi) = (u / br, u % br);
-            block_row_matmul(&x[b * cols..(b + 1) * cols], bc, bi, ys);
+            block_row_matmul(&x[b * cols..(b + 1) * cols], bc, bi, ys, backend);
         }
     });
 }
 
-/// Parallel [`dense_matmul_blocked`]: output elements sharded across
-/// `batch * rows`; each chunk is decomposed into per-batch row panels and
-/// handed to the same register-blocked inner loop as the serial kernel, so
-/// results are bit-identical.
+/// Parallel [`dense_matmul_blocked`](super::dense_matmul_blocked): output
+/// elements sharded across `batch * rows`, default backend; each chunk is
+/// decomposed into
+/// per-batch row panels and handed to the same register-blocked driver as
+/// the serial kernel, so results are bit-identical (the microkernel fixes
+/// each element's summation order regardless of the blocking phase).
 pub fn dense_matmul_blocked_mt(
     x: &[f32],
     w: &[f32],
@@ -176,9 +230,23 @@ pub fn dense_matmul_blocked_mt(
     y: &mut [f32],
     threads: usize,
 ) {
+    dense_matmul_blocked_mt_with(x, w, batch, rows, cols, y, threads, Backend::default_backend());
+}
+
+/// [`dense_matmul_blocked_mt`] with an explicit microkernel backend.
+pub fn dense_matmul_blocked_mt_with(
+    x: &[f32],
+    w: &[f32],
+    batch: usize,
+    rows: usize,
+    cols: usize,
+    y: &mut [f32],
+    threads: usize,
+    backend: Backend,
+) {
     let threads = resolve_threads(threads);
     if threads <= 1 {
-        dense_matmul_blocked(x, w, batch, rows, cols, y);
+        dense_matmul_blocked_with(x, w, batch, rows, cols, y, backend);
         return;
     }
     debug_assert_eq!(x.len(), batch * cols);
@@ -196,6 +264,7 @@ pub fn dense_matmul_blocked_mt(
                 &w[i0 * cols..(i0 + take) * cols],
                 cols,
                 &mut chunk[off..off + take],
+                backend,
             );
             p += take;
             off += take;
@@ -245,6 +314,7 @@ where
 mod tests {
     use super::*;
     use crate::kernels::csr_from_mask;
+    use crate::kernels::{block_matmul, csr_matmul, dense_matmul_blocked, gather_matmul};
     use crate::sparsity::compress::{compress_blocks, compress_rows};
     use crate::sparsity::patterns::{make_block_mask, make_diag_mask, make_unstructured_mask};
     use crate::util::Rng;
@@ -278,8 +348,8 @@ mod tests {
         }
     }
 
-    /// Smoke-level bitwise check (the exhaustive sweep lives in
-    /// tests/parallel_kernels.rs).
+    /// Smoke-level bitwise check on the default-backend entry points (the
+    /// exhaustive per-backend sweep lives in tests/parallel_kernels.rs).
     #[test]
     fn mt_kernels_match_serial_bitwise() {
         let mut rng = Rng::new(77);

@@ -22,6 +22,10 @@
 // fight that idiom without improving it.
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
+// The std::simd microkernel backend (kernels::micro::SimdKernel) rides the
+// portable-simd nightly feature; stable builds compile without it and the
+// Simd backend degrades to Tiled at runtime.
+#![cfg_attr(feature = "nightly-simd", feature(portable_simd))]
 
 pub mod tensor;
 pub mod util;

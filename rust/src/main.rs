@@ -3,7 +3,10 @@
 //! Subcommands:
 //!   train          — one PA-DST training run (model/structure/density/perm flags)
 //!   sweep          — method x sparsity grid (Fig. 2 / Tbl. 11-12 analogue);
-//!                    `--workers N` shards cells across per-worker runtimes
+//!                    `--workers N` shards cells across per-worker runtimes,
+//!                    `--shard i/n` runs one process-level shard of the grid
+//!   journal-merge  — combine per-shard sweep journals into one resumable
+//!                    journal (cluster fan-out of Fig. 2 regeneration)
 //!   nlr            — expressivity bound tables (Table 1, Apdx B/C.1)
 //!   list           — artifacts available in the manifest
 //!   bench-compare  — diff two BENCH_*.json reports; exits non-zero on a
@@ -18,7 +21,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Result};
 
 use padst::coordinator::{sweep, GrowMode, RunConfig, Trainer};
-use padst::harness::{baseline, telemetry::BenchReport};
+use padst::harness::{baseline, shard, telemetry::BenchReport};
+use padst::kernels::micro::Backend;
 use padst::nlr;
 use padst::runtime::Runtime;
 use padst::sparsity::patterns::Structure;
@@ -72,12 +76,35 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get("artifacts", "artifacts"))
 }
 
+/// Strict `--backend` parse: an explicit bad value is a CLI error (the
+/// env knob `PADST_BACKEND` stays lenient via [`Backend::from_env`]).
+/// A Simd request in a build without `nightly-simd` degrades to Tiled —
+/// loudly, so nobody believes they trained under simd when they did not.
+fn backend_flag(args: &Args) -> Result<Backend> {
+    match args.flags.get("backend") {
+        Some(s) => {
+            let b = Backend::parse(s)
+                .ok_or_else(|| anyhow!("bad --backend {s:?} (scalar|tiled|simd)"))?;
+            let eff = b.effective();
+            if eff != b {
+                eprintln!(
+                    "[padst] --backend {s}: this build lacks --features nightly-simd; using {}",
+                    eff.name()
+                );
+            }
+            Ok(eff)
+        }
+        None => Ok(Backend::from_env()),
+    }
+}
+
 fn usage() -> ! {
     eprintln!(
         "padst — Permutation-Augmented Dynamic Structured Sparse Training
 
 USAGE: padst <train|sweep|nlr|list> [--flag value ...]
        padst bench-compare <old.json> <new.json> [--threshold PCT]
+       padst journal-merge <a.jsonl> <b.jsonl> ... -o <out.jsonl>
 
 train:
   --model vit_tiny|gpt_tiny|mixer_tiny|gpt_small   (default vit_tiny)
@@ -89,15 +116,26 @@ train:
   --grow rigl|set|mest    unstructured grow rule
   --artifacts DIR         artifact directory (default artifacts)
   --threads N             worker threads (default: available parallelism)
+  --backend scalar|tiled|simd   native-kernel microkernel backend
+                          (default: PADST_BACKEND, else tiled)
 
 sweep:
   --model ...  --steps N  --sparsities 0.6,0.9  --methods RigL,DynaDiag+PA
   --csv PATH              dump results as CSV (atomic write)
   --threads N             global native-kernel budget, divided across workers
+  --backend B             microkernel backend for every cell
   --workers N             sweep cells in parallel, one runtime per worker
                           (default 1 = sequential; 0 = auto)
   --journal PATH          JSONL checkpoint; an interrupted sweep resumes
                           from it without re-running completed cells
+  --shard i/n             run only grid slots with slot % n == i (cluster
+                          fan-out; give each shard its own --journal and
+                          combine them with `padst journal-merge`)
+
+journal-merge:
+  padst journal-merge shard0.jsonl shard1.jsonl ... -o merged.jsonl
+  inputs must come from the same sweep (identical journal headers); a
+  final `padst sweep --journal merged.jsonl` resumes with every cell done
 
 nlr:
   --d0 1024 --widths 4096,1024x24 --density 0.05   Table-1 style bounds
@@ -113,6 +151,7 @@ bench-compare:
 
 fn cmd_train(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 0)?; // 0 = auto
+    let backend = backend_flag(args)?;
     let mut rt = Runtime::open_with_threads(&artifacts_dir(args), threads)?;
     let sparsity = args.get_f64("sparsity", 0.9)?;
     let structure = Structure::parse(&args.get("structure", "diag"))
@@ -138,6 +177,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.get_usize("seed", 0)? as u64,
         verbose: true,
         threads,
+        backend,
         ..Default::default()
     };
     eprintln!("[padst] {cfg:?}");
@@ -158,7 +198,12 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_sweep(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 0)?; // 0 = auto
     let workers = args.get_usize("workers", 1)?; // 1 = sequential, 0 = auto
+    let backend = backend_flag(args)?;
     let journal = args.flags.get("journal").map(PathBuf::from);
+    let shard_spec = match args.flags.get("shard") {
+        Some(s) => Some(shard::parse_shard(s)?),
+        None => None,
+    };
     let dir = artifacts_dir(args);
     let model = args.get("model", "vit_tiny");
     let steps = args.get_usize("steps", 150)?;
@@ -173,14 +218,55 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .split(',')
         .map(|n| sweep::method_by_name(n).ok_or_else(|| anyhow!("unknown method {n:?}")))
         .collect::<Result<_>>()?;
-    let opts = sweep::SweepShardOpts { workers, threads, journal, verbose: true };
+    let opts = sweep::SweepShardOpts {
+        workers,
+        threads,
+        backend,
+        shard: shard_spec,
+        journal,
+        verbose: true,
+    };
     let (cells, kind) =
         sweep::run_sweep_auto(&dir, &model, &methods, &sparsities, steps, seed, &opts)?;
     sweep::print_table(&model, &kind, &cells, &sparsities);
+    if let Some((i, n)) = shard_spec {
+        eprintln!(
+            "[padst] shard {i}/{n}: table covers this shard's (+ journaled) cells only; \
+             merge shard journals with `padst journal-merge` for the full grid"
+        );
+    }
     if let Some(csv) = args.flags.get("csv") {
         sweep::write_csv(Path::new(csv), &cells)?;
         eprintln!("[padst] wrote {csv}");
     }
+    Ok(())
+}
+
+/// Combine per-shard sweep journals into one resumable journal.
+fn cmd_journal_merge(argv: &[String]) -> Result<()> {
+    let mut inputs: Vec<PathBuf> = Vec::new();
+    let mut out: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "-o" | "--out" => {
+                out = Some(PathBuf::from(
+                    argv.get(i + 1).ok_or_else(|| anyhow!("{} needs a path", argv[i]))?,
+                ));
+                i += 2;
+            }
+            a if a.starts_with('-') => {
+                bail!("unexpected flag {a:?} (journal-merge takes input paths and -o OUT)")
+            }
+            a => {
+                inputs.push(PathBuf::from(a));
+                i += 1;
+            }
+        }
+    }
+    let out = out.ok_or_else(|| anyhow!("journal-merge needs -o <out.jsonl>"))?;
+    let n = shard::merge_journals(&inputs, &out)?;
+    eprintln!("[padst] merged {} journals -> {} ({n} cells)", inputs.len(), out.display());
     Ok(())
 }
 
@@ -256,6 +342,10 @@ fn main() -> Result<()> {
         }
         let args = Args::parse(&argv[3..])?;
         return cmd_bench_compare(&argv[1], &argv[2], &args);
+    }
+    if argv[0] == "journal-merge" {
+        // Positional form: journal-merge <in.jsonl> ... -o <out.jsonl>.
+        return cmd_journal_merge(&argv[1..]);
     }
     let args = Args::parse(&argv[1..])?;
     match argv[0].as_str() {

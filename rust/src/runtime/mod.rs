@@ -24,6 +24,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::kernels::micro::Backend;
 use crate::kernels::parallel::available_threads;
 use crate::tensor::{DType, Data, Tensor};
 use manifest::{Manifest, ProgramSpec};
@@ -48,6 +49,12 @@ pub struct Runtime {
     /// parallelism is a ROADMAP open item.  Defaults to the machine's
     /// available parallelism; 1 means serial.
     pub threads: usize,
+    /// Microkernel backend advertised to consumers of this runtime, next
+    /// to the thread budget: honoured by the native kernel paths
+    /// ([`crate::kernels::micro`]); artifact execution is backend-blind.
+    /// Defaults to [`Backend::default_backend`] (`PADST_BACKEND`, else
+    /// tiled).
+    pub backend: Backend,
     dir: PathBuf,
     cache: HashMap<String, std::rc::Rc<Program>>,
 }
@@ -70,6 +77,7 @@ impl Runtime {
             client,
             manifest,
             threads,
+            backend: Backend::default_backend(),
             dir: dir.to_path_buf(),
             cache: HashMap::new(),
         })
@@ -80,6 +88,12 @@ impl Runtime {
     /// unaffected (PJRT pins its pool at client creation).
     pub fn set_threads(&mut self, threads: usize) {
         self.threads = if threads == 0 { available_threads() } else { threads };
+    }
+
+    /// Re-select the microkernel backend advertised by this runtime (a
+    /// Simd request degrades to Tiled in builds without `nightly-simd`).
+    pub fn set_backend(&mut self, backend: Backend) {
+        self.backend = backend.effective();
     }
 
     /// Compile (or fetch from cache) an artifact by name.

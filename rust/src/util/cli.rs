@@ -6,8 +6,15 @@
 //! around `kernels::parallel::threads_from_env_or_args`.  The scanning
 //! lives here now — the CLI, the five benches, the examples, and the sweep
 //! executor's `--workers` flag all parse through the same helpers.
+//!
+//! The microkernel backend knob (`--backend` / `PADST_BACKEND`) follows
+//! the same pattern.  [`kernels::micro`](crate::kernels::micro) is a leaf
+//! module (std only), so pulling its [`Backend`] type in here keeps the
+//! layering acyclic.
 
 use std::path::PathBuf;
+
+use crate::kernels::micro::Backend;
 
 /// The machine's available parallelism (>= 1).
 pub fn available_threads() -> usize {
@@ -58,6 +65,14 @@ pub fn thread_knob() -> usize {
     thread_knob_in(&argv())
 }
 
+/// Resolve the microkernel backend from an argv slice: `--backend NAME`
+/// wins, else the `PADST_BACKEND` env var, else Tiled.  Unknown names
+/// warn and fall back (see [`Backend::resolve`]); the `padst` CLI parses
+/// its own flag strictly instead.
+pub fn backend_knob_in(args: &[String]) -> Backend {
+    Backend::resolve(arg_value_in(args, "--backend").as_deref())
+}
+
 /// Where a bench's machine-readable report goes: `PADST_BENCH_DIR` if set,
 /// else the current directory, always named `BENCH_<bench>.json`.
 pub fn bench_json_path(bench: &str) -> PathBuf {
@@ -76,6 +91,9 @@ pub struct BenchOpts {
     pub bench: String,
     /// Resolved worker-thread ceiling (>= 1).
     pub threads: usize,
+    /// Resolved microkernel backend (`--backend` / `PADST_BACKEND`,
+    /// default Tiled).
+    pub backend: Backend,
     /// Short mode (`--short` or `PADST_BENCH_SHORT=1`): CI-sized sample
     /// budgets via [`BenchOpts::budget`].
     pub short: bool,
@@ -97,6 +115,7 @@ impl BenchOpts {
         BenchOpts {
             bench: bench.to_string(),
             threads: resolve_threads(thread_knob_in(&args)),
+            backend: backend_knob_in(&args),
             short,
             json_path,
         }
@@ -138,10 +157,21 @@ mod tests {
     }
 
     #[test]
+    fn backend_knob_explicit_flag_wins() {
+        let a = args(&["bench", "--backend", "scalar"]);
+        assert_eq!(backend_knob_in(&a), Backend::Scalar);
+        // Unknown names warn and fall back instead of erroring (benches
+        // should not die over a knob).
+        let bad = args(&["bench", "--backend", "gpu"]);
+        assert_eq!(backend_knob_in(&bad), Backend::Tiled);
+    }
+
+    #[test]
     fn short_budget_caps() {
         let mut o = BenchOpts {
             bench: "x".into(),
             threads: 1,
+            backend: Backend::Tiled,
             short: true,
             json_path: PathBuf::from("BENCH_x.json"),
         };

@@ -22,8 +22,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use padst::coordinator::sweep::{self, SweepShardOpts};
 use padst::harness::baseline::compare;
 use padst::harness::executor::execute_sharded;
-use padst::harness::shard::{plan_cells, CellKey, Journal};
+use padst::harness::shard::{merge_journals, plan_cells, read_journal, CellKey, Journal, META_KEY};
 use padst::harness::telemetry::{BenchRecord, BenchReport};
+use padst::kernels::micro::Backend;
 use padst::runtime::Runtime;
 use padst::util::json;
 use padst::util::stats::summarize;
@@ -162,6 +163,87 @@ fn journal_records_safely_from_worker_threads() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+// ----------------------------------------------------------- journal-merge
+
+/// Two shard journals with the same header merge into one journal that a
+/// resume run can consume: header preserved, cells unioned, duplicate
+/// cell ids resolved first-wins.
+#[test]
+fn journal_merge_combines_shards() {
+    let dir = scratch("journal_merge");
+    std::fs::remove_dir_all(&dir).ok();
+    let meta = json::obj(vec![("model", json::s("vit_tiny")), ("steps", json::num(10.0))]);
+
+    let shard0 = dir.join("shard0.jsonl");
+    {
+        let (j, _) = Journal::open(&shard0).unwrap();
+        j.record(META_KEY, &meta).unwrap();
+        j.record("A@0.6", &json::num(1.0)).unwrap();
+        j.record("B@0.6", &json::num(2.0)).unwrap();
+    }
+    let shard1 = dir.join("shard1.jsonl");
+    {
+        let (j, _) = Journal::open(&shard1).unwrap();
+        j.record(META_KEY, &meta).unwrap();
+        j.record("A@0.9", &json::num(3.0)).unwrap();
+        // Duplicate of shard0's cell with a different payload: the first
+        // input's copy must win.
+        j.record("A@0.6", &json::num(99.0)).unwrap();
+    }
+
+    let out = dir.join("merged.jsonl");
+    let n = merge_journals(&[shard0.clone(), shard1.clone()], &out).unwrap();
+    assert_eq!(n, 3);
+
+    let merged = read_journal(&out).unwrap();
+    assert_eq!(merged[META_KEY], meta);
+    assert_eq!(merged["A@0.6"].as_f64(), Some(1.0), "first occurrence wins");
+    assert_eq!(merged["B@0.6"].as_f64(), Some(2.0));
+    assert_eq!(merged["A@0.9"].as_f64(), Some(3.0));
+
+    // The merged journal reopens through the normal Journal path (what a
+    // final `padst sweep --journal merged.jsonl` run does).
+    let (_j, done) = Journal::open(&out).unwrap();
+    assert_eq!(done.len(), 4); // 3 cells + header
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn journal_merge_refuses_mismatched_or_headerless_inputs() {
+    let dir = scratch("journal_merge_bad");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let a = dir.join("a.jsonl");
+    {
+        let (j, _) = Journal::open(&a).unwrap();
+        j.record(META_KEY, &json::obj(vec![("model", json::s("vit_tiny"))])).unwrap();
+        j.record("A@0.6", &json::num(1.0)).unwrap();
+    }
+    let b = dir.join("b.jsonl");
+    {
+        let (j, _) = Journal::open(&b).unwrap();
+        j.record(META_KEY, &json::obj(vec![("model", json::s("gpt_tiny"))])).unwrap();
+    }
+    let headerless = dir.join("c.jsonl");
+    {
+        let (j, _) = Journal::open(&headerless).unwrap();
+        j.record("A@0.9", &json::num(2.0)).unwrap();
+    }
+    let out = dir.join("merged.jsonl");
+
+    let e = merge_journals(&[a.clone(), b], &out).unwrap_err();
+    assert!(e.to_string().contains("different sweep"), "{e}");
+    let e = merge_journals(&[a.clone(), headerless], &out).unwrap_err();
+    assert!(e.to_string().contains("no __meta__ header"), "{e}");
+    let e = merge_journals(&[a], &dir.join("m2.jsonl"));
+    assert!(e.is_ok(), "single-input merge is a normalising copy");
+    let e = merge_journals(&[], &out).unwrap_err();
+    assert!(e.to_string().contains("at least one"), "{e}");
+    let e = merge_journals(&[dir.join("missing.jsonl")], &out).unwrap_err();
+    assert!(e.to_string().contains("reading journal"), "{e}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 // --------------------------------------------------------------- telemetry
 
 #[test]
@@ -226,6 +308,7 @@ fn sweep_journal_refuses_other_parameters() {
         threads: 1,
         journal: Some(journal.clone()),
         verbose: false,
+        ..Default::default()
     };
     // First run: header is journaled, then the missing manifest errors.
     let e1 = sweep::run_sweep_sharded(&no_artifacts, "vit_tiny", &methods, &[0.9], 10, 7, &opts)
@@ -267,8 +350,18 @@ fn sweep_sharded_equals_sequential_on_small_grid() {
     let steps = 20;
 
     let mut rt = Runtime::open(&dir).unwrap();
-    let seq = sweep::run_sweep(&mut rt, "vit_tiny", &methods, &sparsities, steps, 7, false, 1)
-        .unwrap();
+    let seq = sweep::run_sweep(
+        &mut rt,
+        "vit_tiny",
+        &methods,
+        &sparsities,
+        steps,
+        7,
+        false,
+        1,
+        Backend::default_backend(),
+    )
+    .unwrap();
 
     let journal = scratch("sweep_equality").join("journal.jsonl");
     std::fs::remove_file(&journal).ok();
@@ -277,6 +370,7 @@ fn sweep_sharded_equals_sequential_on_small_grid() {
         threads: 3,
         journal: Some(journal.clone()),
         verbose: false,
+        ..Default::default()
     };
     let par =
         sweep::run_sweep_sharded(&dir, "vit_tiny", &methods, &sparsities, steps, 7, &opts).unwrap();

@@ -1,0 +1,301 @@
+//! Microkernel-layer property tests (`padst::kernels::micro`):
+//!
+//! * every dot shape matches a strict-order naive reference across widths
+//!   1..=33 — every tail length relative to the 8-lane tile — for every
+//!   backend compiled into this binary;
+//! * the multi-row shapes (`dot_rows4`, `dot_gather4`) reproduce the
+//!   single-row shapes bit-for-bit per row (what lets `_mt` shards split
+//!   register blocks anywhere without changing an output bit);
+//! * the full drivers match the masked-dense oracle on every backend at
+//!   panel widths 1..=33;
+//! * the backends agree with each other within 1e-4;
+//! * NaN and infinity propagate through the tiled reduction — including
+//!   when the poisoned element sits in the tail — instead of being masked
+//!   by lane padding.
+
+use padst::kernels::micro::{self, Backend};
+use padst::kernels::{
+    block_matmul_with, csr_from_mask, csr_matmul_with, dense_matmul_blocked_with,
+    gather_matmul_with,
+};
+use padst::sparsity::compress::{compress_blocks, compress_rows};
+use padst::sparsity::patterns::{make_block_mask, make_diag_mask, make_unstructured_mask, Mask};
+use padst::util::Rng;
+
+/// Strict-order reference dot in f64 (tight enough at these widths that a
+/// 1e-4 band holds for any summation order).
+fn naive_dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum::<f64>() as f32
+}
+
+fn naive_gather(vals: &[f32], idx: &[i32], x: &[f32]) -> f32 {
+    vals.iter()
+        .zip(idx)
+        .map(|(&v, &j)| v as f64 * x[j as usize] as f64)
+        .sum::<f64>() as f32
+}
+
+/// Masked-dense oracle for the full drivers.
+fn oracle(x: &[f32], w: &[f32], mask: &Mask, batch: usize) -> Vec<f32> {
+    let (rows, cols) = (mask.rows, mask.cols);
+    let mut y = vec![0.0f32; batch * rows];
+    for b in 0..batch {
+        for i in 0..rows {
+            let mut acc = 0.0f64;
+            for j in 0..cols {
+                if mask.get(i, j) {
+                    acc += w[i * cols + j] as f64 * x[b * cols + j] as f64;
+                }
+            }
+            y[b * rows + i] = acc as f32;
+        }
+    }
+    y
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+// ------------------------------------------------------- dot shapes 1..=33
+
+#[test]
+fn dot_matches_naive_for_every_width_and_backend() {
+    let mut rng = Rng::new(0xD07);
+    for width in 1..=33usize {
+        let a: Vec<f32> = (0..width).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..width).map(|_| rng.normal()).collect();
+        let want = naive_dot(&a, &b);
+        for &backend in Backend::all() {
+            let got = micro::dot(&a, &b, backend);
+            assert!(
+                (got - want).abs() < 1e-4,
+                "dot width {width} [{}]: {got} vs {want}",
+                backend.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_gather_matches_naive_for_every_width_and_backend() {
+    let mut rng = Rng::new(0x6A0);
+    let n = 64;
+    for width in 1..=33usize {
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let vals: Vec<f32> = (0..width).map(|_| rng.normal()).collect();
+        let idx: Vec<i32> = (0..width).map(|_| rng.below(n) as i32).collect();
+        let want = naive_gather(&vals, &idx, &x);
+        for &backend in Backend::all() {
+            let got = micro::dot_gather(&vals, &idx, &x, backend);
+            assert!(
+                (got - want).abs() < 1e-4,
+                "dot_gather width {width} [{}]: {got} vs {want}",
+                backend.name()
+            );
+        }
+    }
+}
+
+/// The `_mt` bit-identity contract rests on this: row i of a multi-row
+/// microkernel call must equal the single-row call to the bit, at every
+/// tail length.
+#[test]
+fn multi_row_shapes_reproduce_single_row_bitwise() {
+    let mut rng = Rng::new(0x404);
+    let n = 64;
+    for width in 1..=33usize {
+        let ws: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..width).map(|_| rng.normal()).collect()).collect();
+        let x: Vec<f32> = (0..width).map(|_| rng.normal()).collect();
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let vals: Vec<f32> = (0..width).map(|_| rng.normal()).collect();
+        let idx: Vec<i32> = (0..width).map(|_| rng.below(n) as i32).collect();
+        for &backend in Backend::all() {
+            let rows = micro::dot_rows4(&ws[0], &ws[1], &ws[2], &ws[3], &x, backend);
+            for (r, w) in ws.iter().enumerate() {
+                let single = micro::dot(w, &x, backend);
+                assert_eq!(
+                    rows[r].to_bits(),
+                    single.to_bits(),
+                    "dot_rows4 row {r} width {width} [{}]",
+                    backend.name()
+                );
+            }
+            let g4 = micro::dot_gather4(&vals, &idx, &xs[0], &xs[1], &xs[2], &xs[3], backend);
+            for (r, xr) in xs.iter().enumerate() {
+                let single = micro::dot_gather(&vals, &idx, xr, backend);
+                assert_eq!(
+                    g4[r].to_bits(),
+                    single.to_bits(),
+                    "dot_gather4 row {r} width {width} [{}]",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------- full drivers vs oracle 1..=33
+
+/// Gather driver at every panel width 1..=33 (diag-K masks with K = the
+/// width): all tail lengths of the row microkernel, against the
+/// masked-dense oracle, for every backend.
+#[test]
+fn gather_driver_matches_oracle_at_every_panel_width() {
+    let mut meta = Rng::new(0x9A7);
+    let (batch, rows, cols) = (3usize, 16usize, 40usize);
+    for k in 1..=33usize {
+        let seed = meta.next_u64();
+        let mut rng = Rng::new(seed);
+        let mask = make_diag_mask(rows, cols, k.min(cols), &mut rng);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+        let kk = (0..rows).map(|i| mask.row_nnz(i)).max().unwrap();
+        let rc = compress_rows(&w, &mask, kk, None);
+        let want = oracle(&x, &w, &mask, batch);
+        for &backend in Backend::all() {
+            let mut y = vec![0.0f32; batch * rows];
+            gather_matmul_with(&x, &rc, batch, &mut y, backend);
+            let d = max_diff(&y, &want);
+            assert!(d < 1e-4, "k={k} seed {seed} [{}]: {d}", backend.name());
+        }
+    }
+}
+
+#[test]
+fn all_backends_agree_on_every_kernel() {
+    let mut rng = Rng::new(0xE0);
+    let (batch, rows, cols) = (5usize, 64usize, 96usize);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+
+    let dm = make_diag_mask(rows, cols, 11, &mut rng);
+    let rc = compress_rows(&w, &dm, 11, None);
+    let um = make_unstructured_mask(rows, cols, 0.2, &mut rng);
+    let csr = csr_from_mask(&w, &um);
+    let bm = make_block_mask(rows, cols, 0.25, 16, &mut rng);
+    let bc = compress_blocks(&w, &bm, 16);
+
+    let run = |backend: Backend| -> [Vec<f32>; 4] {
+        let mut yg = vec![0.0f32; batch * rows];
+        gather_matmul_with(&x, &rc, batch, &mut yg, backend);
+        let mut yc = vec![0.0f32; batch * rows];
+        csr_matmul_with(&x, &csr, batch, &mut yc, backend);
+        let mut yb = vec![0.0f32; batch * rows];
+        block_matmul_with(&x, &bc, batch, &mut yb, backend);
+        let mut yd = vec![0.0f32; batch * rows];
+        dense_matmul_blocked_with(&x, &w, batch, rows, cols, &mut yd, backend);
+        [yg, yc, yb, yd]
+    };
+
+    let reference = run(Backend::Scalar);
+    for &backend in Backend::all() {
+        let got = run(backend);
+        for (which, (a, b)) in reference.iter().zip(&got).enumerate() {
+            let d = max_diff(a, b);
+            assert!(
+                d < 1e-4,
+                "kernel {which} scalar vs {}: max diff {d}",
+                backend.name()
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------ non-finite inputs
+
+/// NaN in the weights must surface in the output — in the 8-lane body and
+/// in the tail — for every backend.  Lane padding or reordering must never
+/// mask a poisoned element.
+#[test]
+fn nan_propagates_through_every_backend() {
+    let mut rng = Rng::new(0xAA);
+    for width in [1usize, 7, 8, 9, 16, 19, 33] {
+        for poison_slot in [0, width / 2, width - 1] {
+            let mut a: Vec<f32> = (0..width).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..width).map(|_| rng.normal()).collect();
+            a[poison_slot] = f32::NAN;
+            for &backend in Backend::all() {
+                let d = micro::dot(&a, &b, backend);
+                assert!(
+                    d.is_nan(),
+                    "dot width {width} poison {poison_slot} [{}]: {d}",
+                    backend.name()
+                );
+                let idx: Vec<i32> = (0..width as i32).collect();
+                let g = micro::dot_gather(&a, &idx, &b, backend);
+                assert!(
+                    g.is_nan(),
+                    "dot_gather width {width} poison {poison_slot} [{}]: {g}",
+                    backend.name()
+                );
+            }
+        }
+    }
+}
+
+/// NaN in the *activations* at a gathered index propagates too (the index
+/// stream must not skip it), and infinities survive the tiled reduction.
+#[test]
+fn nan_in_x_and_infinities_propagate() {
+    let mut rng = Rng::new(0xAB);
+    let n = 32;
+    let width = 13; // 8-lane body + 5-tail
+    let vals: Vec<f32> = (0..width).map(|_| rng.normal().abs() + 0.125).collect();
+    let idx: Vec<i32> = (0..width as i32).collect();
+    let mut x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    x[10] = f32::NAN; // gathered by idx slot 10
+
+    for &backend in Backend::all() {
+        let g = micro::dot_gather(&vals, &idx, &x, backend);
+        assert!(g.is_nan(), "NaN x [{}]: {g}", backend.name());
+    }
+    x[10] = f32::INFINITY;
+    for &backend in Backend::all() {
+        let g = micro::dot_gather(&vals, &idx, &x, backend);
+        assert!(
+            g.is_infinite() && g > 0.0,
+            "inf x (positive vals) [{}]: {g}",
+            backend.name()
+        );
+    }
+    // Inf in the tail slot (index 12 >= 8) as well.
+    x[10] = 1.0;
+    x[12] = f32::NEG_INFINITY;
+    for &backend in Backend::all() {
+        let g = micro::dot_gather(&vals, &idx, &x, backend);
+        assert!(
+            g.is_infinite() && g < 0.0,
+            "-inf tail [{}]: {g}",
+            backend.name()
+        );
+    }
+}
+
+/// NaN weights poison the full block driver output (the tiled reduction
+/// inside `block_row_matmul` must not drop it).
+#[test]
+fn nan_propagates_through_block_driver() {
+    let mut rng = Rng::new(0xAC);
+    let (batch, rows, cols) = (2usize, 32usize, 32usize);
+    let mask = make_block_mask(rows, cols, 0.5, 16, &mut rng);
+    let mut w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+    // Poison one weight inside an active block.
+    let (pi, pj) = (0..rows)
+        .flat_map(|i| (0..cols).map(move |j| (i, j)))
+        .find(|&(i, j)| mask.get(i, j))
+        .expect("mask has an active block");
+    w[pi * cols + pj] = f32::NAN;
+    let bc = compress_blocks(&w, &mask, 16);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    for &backend in Backend::all() {
+        let mut y = vec![0.0f32; batch * rows];
+        block_matmul_with(&x, &bc, batch, &mut y, backend);
+        assert!(
+            y[pi].is_nan(),
+            "block output row {pi} should be NaN [{}]",
+            backend.name()
+        );
+    }
+}

@@ -1,18 +1,23 @@
 //! Property tests for the scoped-thread kernel execution layer
-//! (`padst::kernels::parallel`): for every structure family and random
-//! geometry, the parallel kernels must reproduce the serial kernels
-//! **bit-for-bit** (`f32::to_bits` equality, not epsilon closeness) at 1,
-//! 2, and 8 threads.  This is the determinism contract that lets the
-//! Fig. 3 benches and the coordinator switch thread counts without
-//! changing a single reproduced number.
+//! (`padst::kernels::parallel`): for every structure family, every
+//! microkernel backend compiled into this binary, and random geometry,
+//! the parallel kernels must reproduce the serial kernels **bit-for-bit**
+//! (`f32::to_bits` equality, not epsilon closeness) at 1, 2, and 8
+//! threads.  This is the determinism contract that lets the Fig. 3
+//! benches and the coordinator switch thread counts without changing a
+//! single reproduced number — per backend; *across* backends the
+//! summation order legitimately differs (tests/microkernels.rs covers
+//! that equivalence at tolerance).
 //!
 //! Hand-rolled generator pattern (no proptest in the offline build): every
 //! case prints its seed on failure for reproduction, mirroring
 //! tests/prop_invariants.rs.
 
+use padst::kernels::micro::Backend;
 use padst::kernels::{
-    block_matmul, block_matmul_mt, csr_from_mask, csr_matmul, csr_matmul_mt, dense_matmul_blocked,
-    dense_matmul_blocked_mt, gather_matmul, gather_matmul_mt,
+    block_matmul_mt_with, block_matmul_with, csr_from_mask, csr_matmul_mt_with, csr_matmul_with,
+    dense_matmul_blocked_mt_with, dense_matmul_blocked_with, gather_matmul_mt_with,
+    gather_matmul_with,
 };
 use padst::sparsity::compress::{compress_blocks, compress_rows};
 use padst::sparsity::patterns::{make_mask, Structure};
@@ -42,7 +47,7 @@ fn assert_bits_eq(serial: &[f32], parallel: &[f32], what: &str) {
 }
 
 #[test]
-fn prop_gather_matmul_mt_bit_identical() {
+fn prop_gather_matmul_mt_bit_identical_per_backend() {
     let mut meta = Rng::new(0x6A7);
     for case in 0..CASES {
         let seed = meta.next_u64();
@@ -57,22 +62,29 @@ fn prop_gather_matmul_mt_bit_identical() {
         let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
         let rc = compress_rows(&w, &mask, k, None);
 
-        let mut ys = vec![0.0f32; batch * rows];
-        gather_matmul(&x, &rc, batch, &mut ys);
-        for threads in THREADS {
-            let mut ym = vec![f32::NAN; batch * rows]; // NaN poison: every element must be written
-            gather_matmul_mt(&x, &rc, batch, &mut ym, threads);
-            assert_bits_eq(
-                &ys,
-                &ym,
-                &format!("case {case} seed {seed} {} t={threads}", st.name()),
-            );
+        for &backend in Backend::all() {
+            let mut ys = vec![0.0f32; batch * rows];
+            gather_matmul_with(&x, &rc, batch, &mut ys, backend);
+            for threads in THREADS {
+                // NaN poison: every element must be written.
+                let mut ym = vec![f32::NAN; batch * rows];
+                gather_matmul_mt_with(&x, &rc, batch, &mut ym, threads, backend);
+                assert_bits_eq(
+                    &ys,
+                    &ym,
+                    &format!(
+                        "case {case} seed {seed} {} [{}] t={threads}",
+                        st.name(),
+                        backend.name()
+                    ),
+                );
+            }
         }
     }
 }
 
 #[test]
-fn prop_csr_matmul_mt_bit_identical() {
+fn prop_csr_matmul_mt_bit_identical_per_backend() {
     let mut meta = Rng::new(0xC58);
     for case in 0..CASES {
         let seed = meta.next_u64();
@@ -84,18 +96,27 @@ fn prop_csr_matmul_mt_bit_identical() {
         let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
         let csr = csr_from_mask(&w, &mask);
 
-        let mut ys = vec![0.0f32; batch * rows];
-        csr_matmul(&x, &csr, batch, &mut ys);
-        for threads in THREADS {
-            let mut ym = vec![f32::NAN; batch * rows];
-            csr_matmul_mt(&x, &csr, batch, &mut ym, threads);
-            assert_bits_eq(&ys, &ym, &format!("case {case} seed {seed} csr t={threads}"));
+        for &backend in Backend::all() {
+            let mut ys = vec![0.0f32; batch * rows];
+            csr_matmul_with(&x, &csr, batch, &mut ys, backend);
+            for threads in THREADS {
+                let mut ym = vec![f32::NAN; batch * rows];
+                csr_matmul_mt_with(&x, &csr, batch, &mut ym, threads, backend);
+                assert_bits_eq(
+                    &ys,
+                    &ym,
+                    &format!(
+                        "case {case} seed {seed} csr [{}] t={threads}",
+                        backend.name()
+                    ),
+                );
+            }
         }
     }
 }
 
 #[test]
-fn prop_block_matmul_mt_bit_identical() {
+fn prop_block_matmul_mt_bit_identical_per_backend() {
     let mut meta = Rng::new(0xB70);
     for case in 0..CASES {
         let seed = meta.next_u64();
@@ -107,44 +128,56 @@ fn prop_block_matmul_mt_bit_identical() {
         let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
         let bc = compress_blocks(&w, &mask, 16);
 
-        let mut ys = vec![0.0f32; batch * rows];
-        block_matmul(&x, &bc, batch, &mut ys);
-        for threads in THREADS {
-            let mut ym = vec![f32::NAN; batch * rows];
-            block_matmul_mt(&x, &bc, batch, &mut ym, threads);
-            assert_bits_eq(
-                &ys,
-                &ym,
-                &format!("case {case} seed {seed} block t={threads}"),
-            );
+        for &backend in Backend::all() {
+            let mut ys = vec![0.0f32; batch * rows];
+            block_matmul_with(&x, &bc, batch, &mut ys, backend);
+            for threads in THREADS {
+                let mut ym = vec![f32::NAN; batch * rows];
+                block_matmul_mt_with(&x, &bc, batch, &mut ym, threads, backend);
+                assert_bits_eq(
+                    &ys,
+                    &ym,
+                    &format!(
+                        "case {case} seed {seed} block [{}] t={threads}",
+                        backend.name()
+                    ),
+                );
+            }
         }
     }
 }
 
 #[test]
-fn prop_dense_matmul_blocked_mt_bit_identical() {
+fn prop_dense_matmul_blocked_mt_bit_identical_per_backend() {
     let mut meta = Rng::new(0xDE5E);
     for case in 0..CASES {
         let seed = meta.next_u64();
         let mut rng = Rng::new(seed);
         // Dense has no block-size constraint: also draw odd row counts to
-        // exercise register-block tails at chunk boundaries.
+        // exercise register-block tails at chunk boundaries (a chunk split
+        // may land mid-4-row-block; the microkernel row contract makes
+        // that safe).
         let batch = [1usize, 2, 5, 64][rng.below(4)];
         let rows = [7usize, 16, 33, 64, 97][rng.below(5)];
         let cols = [13usize, 32, 65, 96][rng.below(4)];
         let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
         let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
 
-        let mut ys = vec![0.0f32; batch * rows];
-        dense_matmul_blocked(&x, &w, batch, rows, cols, &mut ys);
-        for threads in THREADS {
-            let mut ym = vec![f32::NAN; batch * rows];
-            dense_matmul_blocked_mt(&x, &w, batch, rows, cols, &mut ym, threads);
-            assert_bits_eq(
-                &ys,
-                &ym,
-                &format!("case {case} seed {seed} dense t={threads}"),
-            );
+        for &backend in Backend::all() {
+            let mut ys = vec![0.0f32; batch * rows];
+            dense_matmul_blocked_with(&x, &w, batch, rows, cols, &mut ys, backend);
+            for threads in THREADS {
+                let mut ym = vec![f32::NAN; batch * rows];
+                dense_matmul_blocked_mt_with(&x, &w, batch, rows, cols, &mut ym, threads, backend);
+                assert_bits_eq(
+                    &ys,
+                    &ym,
+                    &format!(
+                        "case {case} seed {seed} dense [{}] t={threads}",
+                        backend.name()
+                    ),
+                );
+            }
         }
     }
 }
@@ -159,11 +192,13 @@ fn oversubscribed_threads_are_clamped() {
     let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
     let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
     let bc = compress_blocks(&w, &mask, 16);
-    let mut ys = vec![0.0f32; batch * rows];
-    let mut ym = vec![f32::NAN; batch * rows];
-    block_matmul(&x, &bc, batch, &mut ys);
-    block_matmul_mt(&x, &bc, batch, &mut ym, 1000);
-    for (a, b) in ys.iter().zip(&ym) {
-        assert_eq!(a.to_bits(), b.to_bits());
+    for &backend in Backend::all() {
+        let mut ys = vec![0.0f32; batch * rows];
+        let mut ym = vec![f32::NAN; batch * rows];
+        block_matmul_with(&x, &bc, batch, &mut ys, backend);
+        block_matmul_mt_with(&x, &bc, batch, &mut ym, 1000, backend);
+        for (a, b) in ys.iter().zip(&ym) {
+            assert_eq!(a.to_bits(), b.to_bits(), "[{}]", backend.name());
+        }
     }
 }
