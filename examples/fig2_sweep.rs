@@ -5,6 +5,9 @@
 //! Default is a reduced grid that finishes in minutes on one core; pass
 //! `--full` for the whole method zoo and all five sparsities (budget ~1 h)
 //! and `--model gpt_tiny` / `mixer_tiny` for the other panels.
+//! `--patterns block:4,nm:1:4` appends one structured-DST grid row per
+//! pattern spec — the recommended Fig. 2 extension for sweeping pattern
+//! hyper-parameters (block size, M-group) as first-class axes.
 //! `--workers N` shards the grid across N runtimes (~N x wall-clock cut);
 //! `--journal PATH` checkpoints completed cells so a killed sweep resumes;
 //! `--shard i/n` runs one cluster shard of the grid (combine the per-shard
@@ -16,7 +19,8 @@
 //!       [--journal PATH] [--shard i/n] [--backend B]`
 
 use padst::coordinator::sweep::{
-    method_by_name, print_table, run_sweep_auto, write_csv, SweepShardOpts, METHODS,
+    method_by_name, methods, print_table, resolve_method, run_sweep_auto, write_csv, Method,
+    SweepShardOpts,
 };
 use padst::harness::shard::parse_shard;
 use padst::util::cli::{arg_value_in, backend_knob_in, has_flag_in};
@@ -38,8 +42,8 @@ fn main() -> anyhow::Result<()> {
     };
     let dir = std::path::Path::new("artifacts");
 
-    let (methods, sparsities): (Vec<_>, Vec<f64>) = if full {
-        (METHODS.iter().collect(), vec![0.6, 0.7, 0.8, 0.9, 0.95])
+    let (mut grid_methods, sparsities): (Vec<Method>, Vec<f64>) = if full {
+        (methods().to_vec(), vec![0.6, 0.7, 0.8, 0.9, 0.95])
     } else {
         (
             ["RigL", "DynaDiag", "DynaDiag+Rand", "DynaDiag+PA", "SRigL", "SRigL+PA", "Dense"]
@@ -49,14 +53,21 @@ fn main() -> anyhow::Result<()> {
             vec![0.8, 0.95],
         )
     };
+    // Extra grid rows from pattern specs: `--patterns block:4,nm:1:4` adds
+    // one structured-DST method per spec — the pattern-hyper-param axis.
+    if let Some(specs) = arg_value_in(&args, "--patterns") {
+        for spec in specs.split(',').filter(|s| !s.is_empty()) {
+            grid_methods.push(resolve_method(spec)?);
+        }
+    }
 
     eprintln!(
         "[fig2] model={model} methods={} sparsities={:?} steps={steps} workers={workers}",
-        methods.len(),
+        grid_methods.len(),
         sparsities
     );
     let opts = SweepShardOpts { workers, threads, backend, shard, journal, verbose: true };
-    let (cells, kind) = run_sweep_auto(dir, &model, &methods, &sparsities, steps, 0, &opts)?;
+    let (cells, kind) = run_sweep_auto(dir, &model, &grid_methods, &sparsities, steps, 0, &opts)?;
     print_table(&model, &kind, &cells, &sparsities);
 
     // The paper's qualitative claims, checked programmatically where the

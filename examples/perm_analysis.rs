@@ -12,7 +12,7 @@
 
 use padst::coordinator::{RunConfig, Trainer};
 use padst::runtime::Runtime;
-use padst::sparsity::patterns::Structure;
+use padst::sparsity::pattern::resolve_pattern;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
     let mut rt = Runtime::open(dir)?;
     let cfg = RunConfig {
         model: "vit_tiny".into(),
-        structure: Structure::Diag,
+        pattern: resolve_pattern("diag")?,
         density: 0.10,
         perm_mode: "learned".into(),
         steps,

@@ -8,7 +8,7 @@
 
 use padst::coordinator::{RunConfig, Trainer};
 use padst::runtime::Runtime;
-use padst::sparsity::patterns::Structure;
+use padst::sparsity::pattern::resolve_pattern;
 
 fn main() -> anyhow::Result<()> {
     let dir = std::path::Path::new("artifacts");
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = RunConfig {
         model: "vit_tiny".into(),
-        structure: Structure::Diag, // DynaDiag-style dynamic diagonals
+        pattern: resolve_pattern("diag")?, // DynaDiag-style dynamic diagonals
         density: 0.10,              // 90 % sparsity
         perm_mode: "learned".into(),
         steps: 300,

@@ -15,7 +15,7 @@
 
 use padst::coordinator::{RunConfig, Trainer};
 use padst::runtime::Runtime;
-use padst::sparsity::patterns::Structure;
+use padst::sparsity::pattern::resolve_pattern;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = RunConfig {
         model: "gpt_small".into(),
-        structure: Structure::Diag,
+        pattern: resolve_pattern("diag")?,
         density: 1.0 - sparsity,
         perm_mode: "learned".into(),
         steps,

@@ -11,26 +11,29 @@
 //! the structured >> unstructured(CSR) ordering can be checked directly.
 //! Run: `cargo bench --bench fig3_inference` (offline criterion stand-in).
 //!
+//! Structure families resolve through the `PatternRegistry`, and each
+//! family's [`SparsePattern::compress`] picks its kernel plan — the bench
+//! dispatches on the *plan* (gather/block/CSR/dense drivers), never on the
+//! family, so `PADST_FIG3_STRUCTURES` can name any registered spec
+//! (`diag`, `block:8`, `nm:1:4`, ...) and new families need no bench
+//! changes.  Each telemetry record carries its spec string.
+//!
 //! Every path — dense baseline included — runs through the scoped-thread
 //! execution layer under the same worker budget (`--threads N` after `--`,
 //! or `PADST_THREADS`, default available parallelism), so the speedup
-//! ratios stay like-for-like at any thread count.  Methodology note: the
-//! gather paths use the sharded row-gather kernel at *every* thread count,
-//! not the serial batch-amortised `gather_matmul_batched` this bench used
-//! before the parallel layer landed — so `--threads 1` absolute times for
-//! diag/N:M/butterfly differ slightly from previously recorded runs (the
-//! batched serial variant is still timed in `cargo bench --bench kernels`).
+//! ratios stay like-for-like at any thread count.  Methodology notes: the
+//! gather paths use the sharded row-gather kernel at *every* thread count
+//! (the batch-amortised serial variant is timed in `cargo bench --bench
+//! kernels`), and for block structure the permutation cannot fold into
+//! dense panels, so its reindex treatment falls back to the row-gather
+//! form (that fallback now lives in `BlockPattern::compress`).
 
 use padst::harness::telemetry::{BenchRecord, BenchReport};
-use padst::kernels::{
-    block_matmul_mt_with, csr_from_mask, csr_matmul_mt_with, dense_matmul_blocked_mt_with,
-    gather_matmul_mt_with, shuffle_rows,
-};
+use padst::kernels::{dense_matmul_blocked_mt_with, run_plan_mt, shuffle_rows};
 use padst::models::PAPER_LAYERS;
-use padst::sparsity::compress::{compress_blocks, compress_rows};
-use padst::sparsity::patterns::{make_mask, Structure};
+use padst::sparsity::pattern::resolve_pattern;
 use padst::util::cli::BenchOpts;
-use padst::util::stats::{bench, fmt_time};
+use padst::util::stats::{bench, fmt_time, Summary};
 use padst::util::Rng;
 
 const BATCH: usize = 64; // tokens in flight, ~ViT-B/16 sequence dimension
@@ -41,13 +44,10 @@ fn main() -> anyhow::Result<()> {
     let backend = opts.backend;
     let mut report = BenchReport::new("fig3_inference", threads).with_backend(backend);
     let sparsities = [0.6, 0.7, 0.8, 0.9, 0.95];
-    let structures = [
-        Structure::Diag,
-        Structure::NM,
-        Structure::Block,
-        Structure::Butterfly,
-        Structure::Unstructured,
-    ];
+    let default_specs = "diag,nm,block,butterfly,unstructured".to_string();
+    let specs_csv =
+        std::env::var("PADST_FIG3_STRUCTURES").unwrap_or(default_specs);
+    let specs: Vec<&str> = specs_csv.split(',').filter(|s| !s.is_empty()).collect();
     println!(
         "# Fig. 3 (inference): y = x@W^T, batch={BATCH}, threads={threads}, backend {}, \
          times per call",
@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
         // Full structure x sparsity sweep on the headline layer (ViT-B/16
         // FFN up-projection); a diag@90% spot-check on the rest.
         let full = layer.model == "vit_b16" && layer.site == "fc1";
-        let structures: &[Structure] = if full { &structures } else { &[Structure::Diag] };
+        let specs: &[&str] = if full { &specs } else { &["diag"] };
         let sparsities: &[f64] = if full { &sparsities } else { &[0.9] };
         let (rows, cols) = (layer.rows, layer.cols);
         let mut rng = Rng::new(1);
@@ -90,121 +90,48 @@ fn main() -> anyhow::Result<()> {
             "structure", "s%", "none", "spdup", "reindex", "spdup", "shuffle", "spdup"
         );
 
-        for &st in structures {
+        for &spec in specs {
+            let pattern = resolve_pattern(spec)?;
             for &sp in sparsities {
                 let density = 1.0 - sp;
                 let mut mrng = Rng::new(7);
-                let mask = make_mask(st, rows, cols, density, &mut mrng);
-                let k = mask_k(&mask);
+                let mask = pattern.init_mask(rows, cols, density, &mut mrng)?;
                 let perm: Vec<i32> =
                     mrng.permutation(cols).iter().map(|&p| p as i32).collect();
 
-                // none
-                let t_none = match st {
-                    Structure::Block => {
-                        let bc = compress_blocks(&w, &mask, 16);
-                        bench(
-                            || block_matmul_mt_with(&x, &bc, BATCH, &mut y, threads, backend),
-                            bw,
-                            bi,
-                            bt,
-                        )
-                    }
-                    Structure::Unstructured => {
-                        let csr = csr_from_mask(&w, &mask);
-                        bench(
-                            || csr_matmul_mt_with(&x, &csr, BATCH, &mut y, threads, backend),
-                            bw,
-                            bi,
-                            bt,
-                        )
-                    }
-                    _ => {
-                        let rc = compress_rows(&w, &mask, k, None);
-                        bench(
-                            || gather_matmul_mt_with(&x, &rc, BATCH, &mut y, threads, backend),
-                            bw,
-                            bi,
-                            bt,
-                        )
-                    }
-                };
+                // none: the family's own kernel plan.
+                let plan_none = pattern.compress(&w, &mask, None);
+                let t_none = bench(
+                    || run_plan_mt(&plan_none, &x, BATCH, &mut y, threads, backend),
+                    bw,
+                    bi,
+                    bt,
+                );
 
-                // reindex: permutation folded into the index stream (for
-                // block structure the permutation cannot fold into dense
-                // blocks, so blocks fall back to row-gather form there).
-                let t_reindex = match st {
-                    Structure::Unstructured => {
-                        // Fold the permutation into CSR column indices.
-                        let csr = {
-                            let mut c = csr_from_mask(&w, &mask);
-                            for ci in c.col_idx.iter_mut() {
-                                *ci = perm[*ci as usize];
-                            }
-                            c
-                        };
-                        bench(
-                            || csr_matmul_mt_with(&x, &csr, BATCH, &mut y, threads, backend),
-                            bw,
-                            bi,
-                            bt,
-                        )
-                    }
-                    _ => {
-                        let rc = compress_rows(&w, &mask, k, Some(&perm));
-                        bench(
-                            || gather_matmul_mt_with(&x, &rc, BATCH, &mut y, threads, backend),
-                            bw,
-                            bi,
-                            bt,
-                        )
-                    }
-                };
+                // reindex: permutation folded into the index stream.
+                let plan_reindex = pattern.compress(&w, &mask, Some(&perm));
+                let t_reindex = bench(
+                    || run_plan_mt(&plan_reindex, &x, BATCH, &mut y, threads, backend),
+                    bw,
+                    bi,
+                    bt,
+                );
 
-                // shuffle: explicit permutation pass, then the same kernel.
+                // shuffle: explicit permutation pass, then the plain plan.
                 let mut xp = vec![0.0f32; BATCH * cols];
-                let t_shuffle = match st {
-                    Structure::Block => {
-                        let bc = compress_blocks(&w, &mask, 16);
-                        bench(
-                            || {
-                                shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
-                                block_matmul_mt_with(&xp, &bc, BATCH, &mut y, threads, backend);
-                            },
-                            bw,
-                            bi,
-                            bt,
-                        )
-                    }
-                    Structure::Unstructured => {
-                        let csr = csr_from_mask(&w, &mask);
-                        bench(
-                            || {
-                                shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
-                                csr_matmul_mt_with(&xp, &csr, BATCH, &mut y, threads, backend);
-                            },
-                            bw,
-                            bi,
-                            bt,
-                        )
-                    }
-                    _ => {
-                        let rc = compress_rows(&w, &mask, k, None);
-                        bench(
-                            || {
-                                shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
-                                gather_matmul_mt_with(&xp, &rc, BATCH, &mut y, threads, backend);
-                            },
-                            bw,
-                            bi,
-                            bt,
-                        )
-                    }
-                };
+                let t_shuffle = bench(
+                    || {
+                        shuffle_rows(&x, &perm, BATCH, cols, &mut xp);
+                        run_plan_mt(&plan_none, &xp, BATCH, &mut y, threads, backend);
+                    },
+                    bw,
+                    bi,
+                    bt,
+                );
 
                 println!(
                     "{:<14} {:>5.0} {:>12} {:>8.2}x {:>12} {:>8.2}x {:>12} {:>8.2}x",
-                    st.name(),
+                    pattern.spec(),
                     sp * 100.0,
                     fmt_time(t_none.p50),
                     dense.p50 / t_none.p50,
@@ -213,15 +140,16 @@ fn main() -> anyhow::Result<()> {
                     fmt_time(t_shuffle.p50),
                     dense.p50 / t_shuffle.p50,
                 );
-                for (variant, s) in
-                    [("none", &t_none), ("reindex", &t_reindex), ("shuffle", &t_shuffle)]
-                {
+                let variants: [(&str, &Summary); 3] =
+                    [("none", &t_none), ("reindex", &t_reindex), ("shuffle", &t_shuffle)];
+                for (variant, s) in variants {
                     report.push(
                         BenchRecord::from_summary(
                             "inference",
-                            &format!("{site_id} {} s{sp} {variant}", st.name()),
+                            &format!("{site_id} {} s{sp} {variant}", pattern.spec()),
                             s,
                         )
+                        .with_pattern(&pattern.spec())
                         .with_metric("speedup_vs_dense", dense.p50 / s.p50),
                     );
                 }
@@ -232,8 +160,4 @@ fn main() -> anyhow::Result<()> {
     println!("# wrote {}", opts.json_path.display());
     println!("\n# done (see EXPERIMENTS.md §Fig3 for the recorded run)");
     Ok(())
-}
-
-fn mask_k(mask: &padst::sparsity::patterns::Mask) -> usize {
-    (0..mask.rows).map(|i| mask.row_nnz(i)).max().unwrap_or(1)
 }

@@ -19,7 +19,7 @@ use std::collections::HashMap;
 use padst::coordinator::{make_batch_buffers, RunConfig, Trainer};
 use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::runtime::Runtime;
-use padst::sparsity::patterns::Structure;
+use padst::sparsity::pattern::resolve_pattern;
 use padst::tensor::Tensor;
 use padst::util::cli::BenchOpts;
 use padst::util::stats::{bench, fmt_time, Summary};
@@ -93,7 +93,7 @@ fn time_variant(
     };
     let cfg = RunConfig {
         model: model.to_string(),
-        structure: Structure::Diag,
+        pattern: resolve_pattern("diag")?,
         density: 0.1,
         perm_mode: perm_mode.to_string(),
         steps: 0,

@@ -30,7 +30,7 @@ use padst::kernels::{
     gather_matmul_batched_with, gather_matmul_mt_with, gather_matmul_with, spmm_flops,
 };
 use padst::sparsity::compress::{compress_blocks, compress_rows};
-use padst::sparsity::patterns::{make_mask, Structure};
+use padst::sparsity::pattern::resolve_pattern;
 use padst::util::cli::BenchOpts;
 use padst::util::stats::{bench, fmt_time, Summary};
 use padst::util::Rng;
@@ -82,7 +82,8 @@ fn main() -> anyhow::Result<()> {
         row(&format!("dense_blocked{shape}"), &blocked, dense_flops, naive.p50);
 
         for density in [0.1f64, 0.05] {
-            let mask = make_mask(Structure::Diag, rows, cols, density, &mut rng);
+            let mask =
+                resolve_pattern("diag")?.init_mask(rows, cols, density, &mut rng)?;
             let k = (0..mask.rows).map(|i| mask.row_nnz(i)).max().unwrap();
             let rc = compress_rows(&w, &mask, k, None);
             let flops = spmm_flops(batch, mask.nnz());
@@ -96,13 +97,15 @@ fn main() -> anyhow::Result<()> {
             row(&format!("gather{shape} d={density}"), &g1, flops, naive.p50);
             row(&format!("gather_batched{shape} d={density}"), &g2, flops, naive.p50);
 
-            let bmask = make_mask(Structure::Block, rows, cols, density, &mut rng);
+            let bmask =
+                resolve_pattern("block")?.init_mask(rows, cols, density, &mut rng)?;
             let bc = compress_blocks(&w, &bmask, 16);
             let bflops = spmm_flops(batch, bmask.nnz());
             let b = bench(|| block_matmul_with(&x, &bc, batch, &mut y, backend), bw, bi, bt);
             row(&format!("block{shape} d={density}"), &b, bflops, naive.p50);
 
-            let umask = make_mask(Structure::Unstructured, rows, cols, density, &mut rng);
+            let umask =
+                resolve_pattern("unstructured")?.init_mask(rows, cols, density, &mut rng)?;
             let csr = csr_from_mask(&w, &umask);
             let uflops = spmm_flops(batch, umask.nnz());
             let c = bench(|| csr_matmul_with(&x, &csr, batch, &mut y, backend), bw, bi, bt);
@@ -132,11 +135,13 @@ fn backend_matrix(opts: &BenchOpts, report: &mut BenchReport) {
     let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
     let mut y = vec![0.0f32; batch * rows];
 
-    let dmask = make_mask(Structure::Diag, rows, cols, density, &mut rng);
+    let dmask =
+        resolve_pattern("diag").unwrap().init_mask(rows, cols, density, &mut rng).unwrap();
     let k = (0..dmask.rows).map(|i| dmask.row_nnz(i)).max().unwrap();
     let rc = compress_rows(&w, &dmask, k, None);
     let gflops = spmm_flops(batch, dmask.nnz());
-    let bmask = make_mask(Structure::Block, rows, cols, density, &mut rng);
+    let bmask =
+        resolve_pattern("block").unwrap().init_mask(rows, cols, density, &mut rng).unwrap();
     let bc = compress_blocks(&w, &bmask, 16);
     let bflops = spmm_flops(batch, bmask.nnz());
     let dflops = 2 * batch * rows * cols;
@@ -196,12 +201,15 @@ fn parallel_scaling(opts: &BenchOpts, report: &mut BenchReport) {
     let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
     let mut y = vec![0.0f32; batch * rows];
 
-    let dmask = make_mask(Structure::Diag, rows, cols, density, &mut rng);
+    let dmask =
+        resolve_pattern("diag").unwrap().init_mask(rows, cols, density, &mut rng).unwrap();
     let k = (0..dmask.rows).map(|i| dmask.row_nnz(i)).max().unwrap();
     let rc = compress_rows(&w, &dmask, k, None);
-    let bmask = make_mask(Structure::Block, rows, cols, density, &mut rng);
+    let bmask =
+        resolve_pattern("block").unwrap().init_mask(rows, cols, density, &mut rng).unwrap();
     let bc = compress_blocks(&w, &bmask, 16);
-    let umask = make_mask(Structure::Unstructured, rows, cols, density, &mut rng);
+    let umask =
+        resolve_pattern("unstructured").unwrap().init_mask(rows, cols, density, &mut rng).unwrap();
     let csr = csr_from_mask(&w, &umask);
 
     println!(

@@ -7,9 +7,10 @@
 
 use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::nlr::{
-    effective_dims_var, layer_factor_u128, log10_nlr_bound, nlr_bound_u128, table1_rows_mt,
-    Setting,
+    effective_dims_var, layer_factor_u128, log10_nlr_bound, nlr_bound_u128, pattern_rows,
+    table1_rows_mt, Setting,
 };
+use padst::sparsity::pattern::resolve_pattern;
 use padst::util::cli::BenchOpts;
 use padst::util::stats::{bench, fmt_time};
 
@@ -38,6 +39,20 @@ fn main() -> anyhow::Result<()> {
         report.push(
             BenchRecord::value("table1", &row.setting).with_metric("log10_nlr", row.log10_nlr),
         );
+    }
+
+    // --- registry-derived rows: caps from typed pattern params ----------
+    println!("\n# pattern-spec rows (r from SparsePattern::rank_cap, not the density guess):");
+    for spec in ["diag:51", "nm:1:20"] {
+        let p = resolve_pattern(spec)?;
+        for row in pattern_rows(p.as_ref(), d0, &widths, 0.05) {
+            println!("{:<40} {:>14.1}", row.setting, row.log10_nlr);
+            report.push(
+                BenchRecord::value("table1_pattern", &row.setting)
+                    .with_pattern(spec)
+                    .with_metric("log10_nlr", row.log10_nlr),
+            );
+        }
     }
 
     // --- Apdx B: alternating caps 51/205, catch-up at 4 blocks ----------

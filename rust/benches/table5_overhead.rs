@@ -11,6 +11,7 @@
 use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::models::memory_footprint;
 use padst::runtime::manifest::Manifest;
+use padst::sparsity::pattern::resolve_pattern;
 use padst::util::cli::BenchOpts;
 
 fn main() -> anyhow::Result<()> {
@@ -28,8 +29,13 @@ fn main() -> anyhow::Result<()> {
         "{:<12} {:<16} {:>12} {:>10}",
         "model", "method", "state (MB)", "overhead"
     );
+    // The mask term is the family's own accounting (every family stores
+    // the dense f32 mask tensor during training, so the reference pattern
+    // here is representative; the trait hook exists for families that
+    // later specialise it).
+    let pattern = resolve_pattern("diag")?;
     for (model, entry) in &manifest.models {
-        let base = memory_footprint(entry, "none", false) as f64;
+        let base = memory_footprint(entry, pattern.as_ref(), "none", false) as f64;
         for (label, mode, hardened) in [
             ("baseline", "none", false),
             ("+FixedRandPerm", "random", false),
@@ -37,7 +43,7 @@ fn main() -> anyhow::Result<()> {
             ("+PA-DST(hard)", "learned", true),
             ("+Kaleidoscope", "kaleidoscope", false),
         ] {
-            let m = memory_footprint(entry, mode, hardened) as f64;
+            let m = memory_footprint(entry, pattern.as_ref(), mode, hardened) as f64;
             let state_mb = m / (1024.0 * 1024.0);
             let overhead_pct = (m / base - 1.0) * 100.0;
             println!(
@@ -46,6 +52,7 @@ fn main() -> anyhow::Result<()> {
             );
             report.push(
                 BenchRecord::value("memory", &format!("{model}/{label}"))
+                    .with_pattern(&pattern.spec())
                     .with_metric("state_mb", state_mb)
                     .with_metric("overhead_pct", overhead_pct),
             );

@@ -32,7 +32,7 @@ use crate::models::init_params;
 use crate::perm;
 use crate::runtime::{Program, Runtime};
 use crate::sparsity::dst::cosine_update_frac;
-use crate::sparsity::patterns::{make_mask, validate_structure, Structure};
+use crate::sparsity::pattern::{resolve_pattern, PatternHandle};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 use perm_ctrl::PermController;
@@ -50,7 +50,10 @@ pub enum GrowMode {
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub model: String,
-    pub structure: Structure,
+    /// The structure family object (trait dispatch for mask init, DST
+    /// rule, validation, compression).  Resolve one from a spec string —
+    /// `"diag"`, `"block:8"`, `"nm:2:8"` — via [`resolve_pattern`].
+    pub pattern: PatternHandle,
     pub density: f64,
     /// "none" | "random" | "learned" | "kaleidoscope"
     pub perm_mode: String,
@@ -85,7 +88,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             model: "vit_tiny".into(),
-            structure: Structure::Diag,
+            pattern: resolve_pattern("diag").expect("default pattern spec"),
             density: 0.1,
             perm_mode: "learned".into(),
             steps: 200,
@@ -118,6 +121,11 @@ pub struct RunResult {
     /// delta(P) identity distance per site at the end (Fig. 4).
     pub identity_distance: Vec<f64>,
     pub site_names: Vec<String>,
+    /// Compiled DST updates rejected (mask left the pattern's family or
+    /// broke the budget) and rolled back.  Nonzero throughout a run means
+    /// DST effectively never applied — expected when a parameterised spec
+    /// (e.g. `nm:1:4`) runs against a family-default `dst_update` artifact.
+    pub dst_rejected: usize,
     pub train_seconds: f64,
     pub final_eval_loss: f32,
     pub final_eval_acc: f32,
@@ -185,15 +193,27 @@ impl<'rt> Trainer<'rt> {
         }
     }
 
+    /// DST artifacts are compiled per *family* with the default template
+    /// (the AOT export predates parameterised specs), so a typed spec runs
+    /// the family-default update: outputs that violate the typed geometry
+    /// are rejected by `validate_masks` and rolled back (counted in
+    /// [`RunResult::dst_rejected`]).  Warn up front so a sweep over e.g.
+    /// `nm:1:4` is never silently mistaken for spec-true DST.
     fn dst_artifact(&self) -> Option<String> {
-        if self.cfg.dst_every == 0 || !self.cfg.structure.is_dynamic() {
+        if self.cfg.dst_every == 0 || !self.cfg.pattern.is_dynamic() {
             return None;
         }
-        Some(format!(
-            "{}_dst_{}",
-            self.cfg.model,
-            self.cfg.structure.name()
-        ))
+        let family = self.cfg.pattern.family().name();
+        if self.cfg.pattern.spec() != family {
+            eprintln!(
+                "[dst] pattern {} uses the family-default `{}_dst_{family}` artifact; \
+                 updates that leave the {} geometry are rolled back (see dst_rejected)",
+                self.cfg.pattern.spec(),
+                self.cfg.model,
+                self.cfg.pattern.spec()
+            );
+        }
+        Some(format!("{}_dst_{family}", self.cfg.model))
     }
 
     /// Build the initial state: params (host init), Adam zeros, masks from
@@ -222,7 +242,10 @@ impl<'rt> Trainer<'rt> {
         for site in &entry.sites {
             site_names.push(site.name.clone());
             let mut mrng = rng.fork(site_names.len() as u64);
-            let mask = make_mask(cfg.structure, site.rows, site.cols, cfg.density, &mut mrng);
+            let mask = cfg
+                .pattern
+                .init_mask(site.rows, site.cols, cfg.density, &mut mrng)
+                .map_err(|e| anyhow!("site {:?}: {e}", site.name))?;
             budgets.push(mask.nnz());
             vals.insert(
                 format!("mask.{}", site.name),
@@ -416,6 +439,7 @@ impl<'rt> Trainer<'rt> {
                     let outs = dp.run(&inputs)?;
                     Self::scatter_outputs(dp, &mut state, outs);
                     if let Err(e) = self.validate_masks(&state) {
+                        result.dst_rejected += 1;
                         if cfg.verbose {
                             eprintln!(
                                 "[dst] step {step}: rejected compiled update ({e}); rolled back"
@@ -507,7 +531,9 @@ impl<'rt> Trainer<'rt> {
                 cols: t.shape[1],
                 bits: t.f32s().to_vec(),
             };
-            validate_structure(&mask, self.cfg.structure)
+            self.cfg
+                .pattern
+                .validate(&mask)
                 .map_err(|e| anyhow!("mask {name} left its family after DST: {e}"))?;
             // DST must preserve the nnz budget fixed at init exactly.
             let want = state.budgets[i];

@@ -24,6 +24,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -32,50 +33,98 @@ use crate::harness::executor;
 use crate::harness::shard::{in_shard, plan_cells, CellKey, Journal, META_KEY};
 use crate::kernels::micro::Backend;
 use crate::runtime::Runtime;
-use crate::sparsity::patterns::Structure;
+use crate::sparsity::pattern::resolve_pattern;
 use crate::util::cli::resolve_threads;
 use crate::util::json::{self, Json};
 
-/// One method row of Fig. 2 / Tbl. 11–12.
-#[derive(Clone, Debug)]
+/// One method row of Fig. 2 / Tbl. 11–12: a pattern spec (resolved through
+/// the `PatternRegistry` — bare family names or parameterised forms like
+/// `"block:8"`) plus the permutation and grow treatments.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Method {
-    pub name: &'static str,
-    pub structure: Structure,
-    pub perm_mode: &'static str,
+    pub name: String,
+    /// Pattern spec string — the structure axis of the grid.
+    pub pattern: String,
+    pub perm_mode: String,
     pub grow_mode: GrowMode,
 }
 
-/// The paper's method zoo, mapped onto this testbed.
-pub const METHODS: &[Method] = &[
-    // Unstructured DST baselines (upper accuracy bound).
-    Method { name: "RigL", structure: Structure::Unstructured, perm_mode: "none", grow_mode: GrowMode::RigL },
-    Method { name: "SET", structure: Structure::Unstructured, perm_mode: "none", grow_mode: GrowMode::Set },
-    Method { name: "MEST", structure: Structure::Unstructured, perm_mode: "none", grow_mode: GrowMode::Mest },
-    // Structured DST without permutations.
-    Method { name: "DynaDiag", structure: Structure::Diag, perm_mode: "none", grow_mode: GrowMode::RigL },
-    Method { name: "SRigL", structure: Structure::NM, perm_mode: "none", grow_mode: GrowMode::RigL },
-    Method { name: "DSB", structure: Structure::Block, perm_mode: "none", grow_mode: GrowMode::RigL },
-    Method { name: "PixelatedBFly", structure: Structure::Butterfly, perm_mode: "none", grow_mode: GrowMode::RigL },
-    // + fixed random permutations (Tbl. 11 'Random' rows).
-    Method { name: "DynaDiag+Rand", structure: Structure::Diag, perm_mode: "random", grow_mode: GrowMode::RigL },
-    Method { name: "SRigL+Rand", structure: Structure::NM, perm_mode: "random", grow_mode: GrowMode::RigL },
-    Method { name: "DSB+Rand", structure: Structure::Block, perm_mode: "random", grow_mode: GrowMode::RigL },
-    // + learned permutations (PA-DST, the paper's contribution).
-    Method { name: "DynaDiag+PA", structure: Structure::Diag, perm_mode: "learned", grow_mode: GrowMode::RigL },
-    Method { name: "SRigL+PA", structure: Structure::NM, perm_mode: "learned", grow_mode: GrowMode::RigL },
-    Method { name: "DSB+PA", structure: Structure::Block, perm_mode: "learned", grow_mode: GrowMode::RigL },
-    Method { name: "PBFly+PA", structure: Structure::Butterfly, perm_mode: "learned", grow_mode: GrowMode::RigL },
-    // Dense reference.
-    Method { name: "Dense", structure: Structure::Dense, perm_mode: "none", grow_mode: GrowMode::RigL },
-];
+impl Method {
+    fn zoo(name: &str, pattern: &str, perm_mode: &str, grow_mode: GrowMode) -> Method {
+        Method {
+            name: name.to_string(),
+            pattern: pattern.to_string(),
+            perm_mode: perm_mode.to_string(),
+            grow_mode,
+        }
+    }
 
-pub fn method_by_name(name: &str) -> Option<&'static Method> {
-    METHODS.iter().find(|m| m.name == name)
+    /// Dense reference cells collapse the sparsity axis.
+    pub fn is_dense(&self) -> bool {
+        self.pattern == "dense"
+    }
+}
+
+/// The paper's method zoo, mapped onto this testbed.  Pattern specs are
+/// the bare family names, so journals from before the registry still
+/// fingerprint-match.
+pub fn methods() -> &'static [Method] {
+    static ZOO: OnceLock<Vec<Method>> = OnceLock::new();
+    ZOO.get_or_init(|| {
+        vec![
+            // Unstructured DST baselines (upper accuracy bound).
+            Method::zoo("RigL", "unstructured", "none", GrowMode::RigL),
+            Method::zoo("SET", "unstructured", "none", GrowMode::Set),
+            Method::zoo("MEST", "unstructured", "none", GrowMode::Mest),
+            // Structured DST without permutations.
+            Method::zoo("DynaDiag", "diag", "none", GrowMode::RigL),
+            Method::zoo("SRigL", "nm", "none", GrowMode::RigL),
+            Method::zoo("DSB", "block", "none", GrowMode::RigL),
+            Method::zoo("PixelatedBFly", "butterfly", "none", GrowMode::RigL),
+            // + fixed random permutations (Tbl. 11 'Random' rows).
+            Method::zoo("DynaDiag+Rand", "diag", "random", GrowMode::RigL),
+            Method::zoo("SRigL+Rand", "nm", "random", GrowMode::RigL),
+            Method::zoo("DSB+Rand", "block", "random", GrowMode::RigL),
+            // + learned permutations (PA-DST, the paper's contribution).
+            Method::zoo("DynaDiag+PA", "diag", "learned", GrowMode::RigL),
+            Method::zoo("SRigL+PA", "nm", "learned", GrowMode::RigL),
+            Method::zoo("DSB+PA", "block", "learned", GrowMode::RigL),
+            Method::zoo("PBFly+PA", "butterfly", "learned", GrowMode::RigL),
+            // Dense reference.
+            Method::zoo("Dense", "dense", "none", GrowMode::RigL),
+        ]
+    })
+}
+
+/// Resolve a method name — a zoo entry, or a pattern spec (`"block:4"`,
+/// `"nm:1:4"`, or any bare family name not shadowed by a zoo entry), which
+/// synthesizes a structured-DST method (no permutation, RigL grow).  This
+/// is what makes pattern hyper-params a first-class grid axis:
+/// `--methods RigL,block:4,block:8` sweeps block sizes.  A name that is
+/// neither keeps the registry's descriptive parse error (`nm:3:2` reports
+/// "N <= M", not just "unknown method").
+pub fn resolve_method(name: &str) -> Result<Method> {
+    if let Some(m) = methods().iter().find(|m| m.name == name) {
+        return Ok(m.clone());
+    }
+    match resolve_pattern(name) {
+        Ok(p) => Ok(Method::zoo(name, &p.spec(), "none", GrowMode::RigL)),
+        Err(e) => Err(anyhow!(
+            "{name:?} is not a sweep method ({}) and not a pattern spec: {e}",
+            methods().iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join("|")
+        )),
+    }
+}
+
+/// [`resolve_method`] as an `Option` — for lookups where a missing name is
+/// handled by the caller rather than reported.
+pub fn method_by_name(name: &str) -> Option<Method> {
+    resolve_method(name).ok()
 }
 
 #[derive(Clone, Debug)]
 pub struct SweepCell {
-    pub method: &'static str,
+    pub method: String,
     pub sparsity: f64,
     pub result: RunResult,
 }
@@ -85,16 +134,16 @@ pub struct SweepCell {
 /// paths walk exactly this list, which is what makes their outputs merge
 /// identically.  The expansion itself is `harness::shard::plan_cells` —
 /// one source of truth for cell order shared with the executor tests.
-fn grid(methods: &[&'static Method], sparsities: &[f64]) -> Vec<(&'static Method, f64)> {
+pub fn plan_grid(methods: &[Method], sparsities: &[f64]) -> Vec<(Method, f64)> {
     let axes: Vec<(&str, bool)> = methods
         .iter()
-        .map(|m| (m.name, m.structure != Structure::Dense))
+        .map(|m| (m.name.as_str(), !m.is_dense()))
         .collect();
     plan_cells(&axes, sparsities)
         .into_iter()
         .map(|k| {
             // The name came out of `methods` one line up; the find is total.
-            let m = *methods.iter().find(|m| m.name == k.method).unwrap();
+            let m = methods.iter().find(|m| m.name == k.method).unwrap().clone();
             (m, k.sparsity)
         })
         .collect()
@@ -105,7 +154,7 @@ fn grid(methods: &[&'static Method], sparsities: &[f64]) -> Vec<(&'static Method
 fn run_cell(
     rt: &mut Runtime,
     model: &str,
-    m: &'static Method,
+    m: &Method,
     sparsity: f64,
     steps: usize,
     seed: u64,
@@ -113,12 +162,12 @@ fn run_cell(
     threads: usize,
     backend: Backend,
 ) -> Result<SweepCell> {
-    let density = if m.structure == Structure::Dense { 1.0 } else { 1.0 - sparsity };
+    let density = if m.is_dense() { 1.0 } else { 1.0 - sparsity };
     let cfg = RunConfig {
         model: model.to_string(),
-        structure: m.structure,
+        pattern: resolve_pattern(&m.pattern)?,
         density,
-        perm_mode: m.perm_mode.to_string(),
+        perm_mode: m.perm_mode.clone(),
         steps,
         grow_mode: m.grow_mode,
         seed,
@@ -140,7 +189,7 @@ fn run_cell(
             result.train_seconds
         );
     }
-    Ok(SweepCell { method: m.name, sparsity, result })
+    Ok(SweepCell { method: m.name.clone(), sparsity, result })
 }
 
 /// Run `methods` x `sparsities` on `model` sequentially against one shared
@@ -154,7 +203,7 @@ fn run_cell(
 pub fn run_sweep(
     rt: &mut Runtime,
     model: &str,
-    methods: &[&'static Method],
+    methods: &[Method],
     sparsities: &[f64],
     steps: usize,
     seed: u64,
@@ -162,9 +211,9 @@ pub fn run_sweep(
     threads: usize,
     backend: Backend,
 ) -> Result<Vec<SweepCell>> {
-    grid(methods, sparsities)
+    plan_grid(methods, sparsities)
         .into_iter()
-        .map(|(m, sp)| run_cell(rt, model, m, sp, steps, seed, verbose, threads, backend))
+        .map(|(m, sp)| run_cell(rt, model, &m, sp, steps, seed, verbose, threads, backend))
         .collect()
 }
 
@@ -212,7 +261,7 @@ impl Default for SweepShardOpts {
 pub fn run_sweep_auto(
     artifacts_dir: &Path,
     model: &str,
-    methods: &[&'static Method],
+    methods: &[Method],
     sparsities: &[f64],
     steps: usize,
     seed: u64,
@@ -257,16 +306,16 @@ pub fn run_sweep_auto(
 pub fn run_sweep_sharded(
     artifacts_dir: &Path,
     model: &str,
-    methods: &[&'static Method],
+    methods: &[Method],
     sparsities: &[f64],
     steps: usize,
     seed: u64,
     opts: &SweepShardOpts,
 ) -> Result<Vec<SweepCell>> {
-    let cells = grid(methods, sparsities);
+    let cells = plan_grid(methods, sparsities);
     let keys: Vec<CellKey> = cells
         .iter()
-        .map(|&(m, sp)| CellKey { method: m.name.to_string(), sparsity: sp })
+        .map(|(m, sp)| CellKey { method: m.name.clone(), sparsity: *sp })
         .collect();
 
     // Resume: cells already journaled by a previous (interrupted) run are
@@ -345,9 +394,9 @@ pub fn run_sweep_sharded(
         workers,
         |_wid| Runtime::open_with_threads(artifacts_dir, cell_threads),
         |rt, _slot, (cell_i, key)| {
-            let (m, sp) = cells_ref[*cell_i];
+            let (m, sp) = &cells_ref[*cell_i];
             let cell = run_cell(
-                rt, model, m, sp, steps, seed, opts.verbose, cell_threads, opts.backend,
+                rt, model, m, *sp, steps, seed, opts.verbose, cell_threads, opts.backend,
             )?;
             if let Some(j) = journal_ref {
                 j.record(&key.id(), &cell_to_json(&cell))?;
@@ -376,10 +425,14 @@ pub fn run_sweep_sharded(
     Ok(out)
 }
 
-/// What a method *does* — detects a [`METHODS`] entry whose definition
-/// changed between the run that wrote a journal and the run resuming it.
-fn method_fingerprint(m: &Method) -> String {
-    format!("{}|{}|{:?}", m.structure.name(), m.perm_mode, m.grow_mode)
+/// What a method *does* — the cell fingerprint carried by the journal.
+/// The first component is the pattern *spec*, so parameterised grid axes
+/// (`block:4` vs `block:8`) fingerprint differently, and a zoo entry whose
+/// definition changed between the run that wrote a journal and the run
+/// resuming it is refused.  Bare-name specs render exactly as the
+/// pre-registry `structure.name()` did, so old journals still match.
+pub fn method_fingerprint(m: &Method) -> String {
+    format!("{}|{}|{:?}", m.pattern, m.perm_mode, m.grow_mode)
 }
 
 /// Serialise one cell (full `RunResult` fidelity) for the resume journal.
@@ -395,12 +448,22 @@ pub fn cell_to_json(c: &SweepCell) -> Json {
         )
     }
     let r = &c.result;
+    let entry = method_by_name(&c.method);
     json::obj(vec![
-        ("method", json::s(c.method)),
+        ("method", json::s(&c.method)),
         (
             "method_config",
-            match method_by_name(c.method) {
+            match &entry {
                 Some(m) => json::s(&method_fingerprint(m)),
+                None => Json::Null,
+            },
+        ),
+        // The pattern spec alone, for downstream tooling (the fingerprint
+        // above is what resume integrity checks).
+        (
+            "pattern",
+            match &entry {
+                Some(m) => json::s(&m.pattern),
                 None => Json::Null,
             },
         ),
@@ -426,6 +489,7 @@ pub fn cell_to_json(c: &SweepCell) -> Json {
             Json::Arr(r.identity_distance.iter().map(|&d| json::num(d)).collect()),
         ),
         ("site_names", Json::Arr(r.site_names.iter().map(|s| json::s(s)).collect())),
+        ("dst_rejected", json::num(r.dst_rejected as f64)),
         ("train_seconds", json::num(r.train_seconds)),
         ("final_eval_loss", json::num(r.final_eval_loss as f64)),
         ("final_eval_acc", json::num(r.final_eval_acc as f64)),
@@ -433,11 +497,11 @@ pub fn cell_to_json(c: &SweepCell) -> Json {
     ])
 }
 
-/// Inverse of [`cell_to_json`].  The method name must still exist in
-/// [`METHODS`], and the journaled `method_config` fingerprint must match
-/// the current definition — a cell trained under an edited method
-/// (different structure/perm/grow) is refused rather than silently
-/// merged into this run's results.
+/// Inverse of [`cell_to_json`].  The method name must still resolve —
+/// through the zoo or as a pattern spec — and the journaled
+/// `method_config` fingerprint must match the current definition: a cell
+/// trained under an edited method (different pattern spec/perm/grow) is
+/// refused rather than silently merged into this run's results.
 pub fn cell_from_json(v: &Json) -> Result<SweepCell> {
     // Non-finite values (a diverged run's ppl) serialise as JSON null and
     // come back as NaN; a missing key is still an error.
@@ -466,10 +530,10 @@ pub fn cell_from_json(v: &Json) -> Result<SweepCell> {
         .get("method")
         .and_then(Json::as_str)
         .ok_or_else(|| anyhow!("journal cell: missing method"))?;
-    let entry = method_by_name(name)
-        .ok_or_else(|| anyhow!("journal cell: unknown method {name:?}"))?;
+    let entry =
+        resolve_method(name).map_err(|e| anyhow!("journal cell: {e}"))?;
     if let Some(fp) = v.get("method_config").and_then(Json::as_str) {
-        let want = method_fingerprint(entry);
+        let want = method_fingerprint(&entry);
         if fp != want {
             bail!(
                 "journal cell for {name:?} was trained under method config {fp:?} but the \
@@ -498,6 +562,9 @@ pub fn cell_from_json(v: &Json) -> Result<SweepCell> {
             .iter()
             .map(|s| s.as_str().unwrap_or("").to_string())
             .collect(),
+        // Absent in pre-PR4 journals: those cells ran zoo methods whose
+        // family-default DST never triggered the rollback counter.
+        dst_rejected: v.get("dst_rejected").and_then(Json::as_usize).unwrap_or(0),
         train_seconds: num("train_seconds")?,
         final_eval_loss: num("final_eval_loss")? as f32,
         final_eval_acc: num("final_eval_acc")? as f32,
@@ -515,14 +582,20 @@ pub fn print_table(model: &str, kind: &str, cells: &[SweepCell], sparsities: &[f
         print!("{:>10}", format!("{:.0}%", s * 100.0));
     }
     println!();
-    // Rows in METHODS declaration order: cell encounter order is not a
-    // stable row order once cells arrive shard-merged or journal-resumed.
-    let methods: Vec<&str> = METHODS
+    // Rows in zoo declaration order, then any spec-synthesized methods in
+    // first-encounter order: cell encounter order alone is not stable once
+    // cells arrive shard-merged or journal-resumed.
+    let mut rows: Vec<String> = methods()
         .iter()
-        .map(|m| m.name)
-        .filter(|name| cells.iter().any(|c| c.method == *name))
+        .map(|m| m.name.clone())
+        .filter(|name| cells.iter().any(|c| &c.method == name))
         .collect();
-    for m in methods {
+    for c in cells {
+        if !rows.contains(&c.method) {
+            rows.push(c.method.clone());
+        }
+    }
+    for m in rows {
         print!("{m:<16}");
         for &s in sparsities {
             let cell = cells
@@ -565,10 +638,10 @@ mod tests {
 
     #[test]
     fn grid_matches_sequential_order() {
-        let methods: Vec<&'static Method> =
+        let methods: Vec<Method> =
             ["RigL", "Dense", "DynaDiag+PA"].iter().map(|n| method_by_name(n).unwrap()).collect();
-        let cells = grid(&methods, &[0.6, 0.9]);
-        let ids: Vec<(&str, f64)> = cells.iter().map(|&(m, sp)| (m.name, sp)).collect();
+        let cells = plan_grid(&methods, &[0.6, 0.9]);
+        let ids: Vec<(&str, f64)> = cells.iter().map(|(m, sp)| (m.name.as_str(), *sp)).collect();
         assert_eq!(
             ids,
             [
@@ -579,6 +652,41 @@ mod tests {
                 ("DynaDiag+PA", 0.9)
             ]
         );
+    }
+
+    #[test]
+    fn pattern_specs_are_first_class_methods() {
+        // A spec string is a method: synthesized as structured DST without
+        // permutation, fingerprinted by its canonical spec.
+        let m = method_by_name("block:4").unwrap();
+        assert_eq!(m.pattern, "block:4");
+        assert_eq!(m.perm_mode, "none");
+        assert_eq!(method_fingerprint(&m), "block:4|none|RigL");
+        // Defaults canonicalise: block:16 is the bare family.
+        assert_eq!(method_by_name("block:16").unwrap().pattern, "block");
+        // Zoo fingerprints keep the pre-registry bare-name form.
+        let zoo = method_by_name("DynaDiag").unwrap();
+        assert_eq!(method_fingerprint(&zoo), "diag|none|RigL");
+        // Garbage still fails.
+        assert!(method_by_name("nosuchmethod").is_none());
+        assert!(method_by_name("block:0").is_none());
+        // ... and keeps the registry's descriptive error: a bad spec of a
+        // known family reports the actual constraint, not just "unknown".
+        let err = resolve_method("nm:3:2").unwrap_err().to_string();
+        assert!(err.contains("N <= M"), "{err}");
+    }
+
+    #[test]
+    fn spec_method_cells_roundtrip_through_journal() {
+        let cell = SweepCell {
+            method: "nm:1:4".to_string(),
+            sparsity: 0.75,
+            result: RunResult::default(),
+        };
+        let j = cell_to_json(&cell);
+        assert_eq!(j.get("pattern").and_then(Json::as_str), Some("nm:1:4"));
+        let back = cell_from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.method, "nm:1:4");
     }
 
     #[test]
@@ -594,6 +702,7 @@ mod tests {
                 harden_step: vec![Some(42), None],
                 identity_distance: vec![0.75, 0.0],
                 site_names: vec!["l0.fc1".into(), "l1.fc1".into()],
+                dst_rejected: 3,
                 train_seconds: 12.5,
                 final_eval_loss: 1.0,
                 final_eval_acc: 0.5,
@@ -612,6 +721,7 @@ mod tests {
         assert_eq!(back.result.harden_step, cell.result.harden_step);
         assert_eq!(back.result.identity_distance, cell.result.identity_distance);
         assert_eq!(back.result.site_names, cell.result.site_names);
+        assert_eq!(back.result.dst_rejected, cell.result.dst_rejected);
         assert_eq!(back.result.train_seconds, cell.result.train_seconds);
         assert_eq!(back.result.final_eval_loss, cell.result.final_eval_loss);
         assert_eq!(back.result.final_eval_acc, cell.result.final_eval_acc);

@@ -33,6 +33,11 @@
 //! `--backend tiled` self-describing.  It is *not* part of the record
 //! identity, so reports from different backends still match
 //! record-by-record.  Absent in pre-backend reports (read back as `""`).
+//!
+//! `pattern` (per-record) carries the structure-family spec string the row
+//! was measured under (`"diag"`, `"block:8"`, ...), resolved through the
+//! `PatternRegistry`.  Like `backend` it is provenance metadata, not
+//! identity, and is absent (read back as `""`) when a row has no pattern.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -54,6 +59,9 @@ pub struct BenchRecord {
     /// Microkernel backend the row was measured under ("" = unknown /
     /// pre-backend report).  Metadata only — never part of [`BenchRecord::id`].
     pub backend: String,
+    /// Structure-family spec the row was measured under ("" = not
+    /// pattern-specific).  Metadata only — never part of [`BenchRecord::id`].
+    pub pattern: String,
     /// Timed samples behind the quantiles; 0 for value-only records.
     pub n: usize,
     pub mean_s: f64,
@@ -72,6 +80,7 @@ impl BenchRecord {
             group: group.to_string(),
             name: name.to_string(),
             backend: String::new(),
+            pattern: String::new(),
             n: s.n,
             mean_s: s.mean,
             p50_s: s.p50,
@@ -88,6 +97,7 @@ impl BenchRecord {
             group: group.to_string(),
             name: name.to_string(),
             backend: String::new(),
+            pattern: String::new(),
             n: 0,
             mean_s: 0.0,
             p50_s: 0.0,
@@ -111,6 +121,13 @@ impl BenchRecord {
         self
     }
 
+    /// Builder-style pattern-spec stamp (rows measured under a specific
+    /// structure family, e.g. the Fig. 3 structure sweep).
+    pub fn with_pattern(mut self, spec: &str) -> BenchRecord {
+        self.pattern = spec.to_string();
+        self
+    }
+
     /// The identity the baseline comparison matches on.
     pub fn id(&self) -> String {
         format!("{}/{}", self.group, self.name)
@@ -123,6 +140,9 @@ impl BenchRecord {
         ];
         if !self.backend.is_empty() {
             pairs.push(("backend", json::s(&self.backend)));
+        }
+        if !self.pattern.is_empty() {
+            pairs.push(("pattern", json::s(&self.pattern)));
         }
         pairs.extend(vec![
             ("n", json::num(self.n as f64)),
@@ -164,6 +184,11 @@ impl BenchRecord {
             name: str_field("name")?,
             backend: v
                 .get("backend")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            pattern: v
+                .get("pattern")
                 .and_then(Json::as_str)
                 .unwrap_or("")
                 .to_string(),

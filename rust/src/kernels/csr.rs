@@ -7,41 +7,11 @@
 //! speedup race, on GPU and CPU alike.
 
 use super::micro::{self, Backend};
-use crate::sparsity::patterns::Mask;
-
-#[derive(Clone, Debug)]
-pub struct Csr {
-    pub rows: usize,
-    pub cols: usize,
-    pub row_ptr: Vec<usize>,
-    pub col_idx: Vec<i32>,
-    pub vals: Vec<f32>,
-}
-
-impl Csr {
-    pub fn nnz(&self) -> usize {
-        self.vals.len()
-    }
-}
-
-pub fn csr_from_mask(w: &[f32], mask: &Mask) -> Csr {
-    let (rows, cols) = (mask.rows, mask.cols);
-    assert_eq!(w.len(), rows * cols);
-    let mut row_ptr = Vec::with_capacity(rows + 1);
-    let mut col_idx = Vec::new();
-    let mut vals = Vec::new();
-    row_ptr.push(0);
-    for i in 0..rows {
-        for j in 0..cols {
-            if mask.get(i, j) {
-                col_idx.push(j as i32);
-                vals.push(w[i * cols + j]);
-            }
-        }
-        row_ptr.push(col_idx.len());
-    }
-    Csr { rows, cols, row_ptr, col_idx, vals }
-}
+// The layout (and builder) live in the sparsity layer so the pattern
+// objects can emit CSR kernel plans without importing upward; the drivers
+// here re-export them for the historical `kernels::{Csr, csr_from_mask}`
+// paths.
+pub use crate::sparsity::compress::{csr_from_mask, Csr};
 
 /// One CSR row's dot product — a ragged slice of the same gather
 /// microkernel the structured kernels run.  Shared by the serial and

@@ -50,6 +50,48 @@ pub fn spmm_flops(batch: usize, nnz: usize) -> usize {
     2 * batch * nnz
 }
 
+/// Execute a pattern's [`KernelPlan`](crate::sparsity::pattern::KernelPlan)
+/// on the serial driver it selects — the single plan→driver dispatch
+/// point (benches and tests must not hand-roll this match: a new plan
+/// variant then only has one execution site to extend).
+pub fn run_plan(
+    plan: &crate::sparsity::pattern::KernelPlan,
+    x: &[f32],
+    batch: usize,
+    y: &mut [f32],
+    backend: Backend,
+) {
+    use crate::sparsity::pattern::KernelPlan;
+    match plan {
+        KernelPlan::Rows(rc) => gather_matmul_with(x, rc, batch, y, backend),
+        KernelPlan::Blocks(bc) => block_matmul_with(x, bc, batch, y, backend),
+        KernelPlan::Csr(csr) => csr_matmul_with(x, csr, batch, y, backend),
+        KernelPlan::Dense { rows, cols, w } => {
+            dense_matmul_blocked_with(x, w, batch, *rows, *cols, y, backend)
+        }
+    }
+}
+
+/// [`run_plan`] on the scoped-thread `_mt` drivers.
+pub fn run_plan_mt(
+    plan: &crate::sparsity::pattern::KernelPlan,
+    x: &[f32],
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+    backend: Backend,
+) {
+    use crate::sparsity::pattern::KernelPlan;
+    match plan {
+        KernelPlan::Rows(rc) => gather_matmul_mt_with(x, rc, batch, y, threads, backend),
+        KernelPlan::Blocks(bc) => block_matmul_mt_with(x, bc, batch, y, threads, backend),
+        KernelPlan::Csr(csr) => csr_matmul_mt_with(x, csr, batch, y, threads, backend),
+        KernelPlan::Dense { rows, cols, w } => {
+            dense_matmul_blocked_mt_with(x, w, batch, *rows, *cols, y, threads, backend)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,13 +1,18 @@
 //! `padst` CLI — the leader entrypoint of the L3 coordinator.
 //!
 //! Subcommands:
-//!   train          — one PA-DST training run (model/structure/density/perm flags)
+//!   train          — one PA-DST training run (model/structure/density/perm flags;
+//!                    `--structure` takes a pattern spec, e.g. `block:8`)
 //!   sweep          — method x sparsity grid (Fig. 2 / Tbl. 11-12 analogue);
+//!                    `--methods` accepts pattern specs as grid axes,
 //!                    `--workers N` shards cells across per-worker runtimes,
 //!                    `--shard i/n` runs one process-level shard of the grid
+//!   patterns       — list the registered structure families with their spec
+//!                    grammar, defaults, dynamic/static flag, and rank cap
 //!   journal-merge  — combine per-shard sweep journals into one resumable
 //!                    journal (cluster fan-out of Fig. 2 regeneration)
-//!   nlr            — expressivity bound tables (Table 1, Apdx B/C.1)
+//!   nlr            — expressivity bound tables (Table 1, Apdx B/C.1);
+//!                    `--structure SPEC` adds registry-derived cap rows
 //!   list           — artifacts available in the manifest
 //!   bench-compare  — diff two BENCH_*.json reports; exits non-zero on a
 //!                    p50 regression beyond the threshold (the CI perf gate)
@@ -25,7 +30,7 @@ use padst::harness::{baseline, shard, telemetry::BenchReport};
 use padst::kernels::micro::Backend;
 use padst::nlr;
 use padst::runtime::Runtime;
-use padst::sparsity::patterns::Structure;
+use padst::sparsity::pattern::{registry, resolve_pattern, Structure};
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -102,13 +107,16 @@ fn usage() -> ! {
     eprintln!(
         "padst — Permutation-Augmented Dynamic Structured Sparse Training
 
-USAGE: padst <train|sweep|nlr|list> [--flag value ...]
+USAGE: padst <train|sweep|patterns|nlr|list> [--flag value ...]
        padst bench-compare <old.json> <new.json> [--threshold PCT]
        padst journal-merge <a.jsonl> <b.jsonl> ... -o <out.jsonl>
 
 train:
   --model vit_tiny|gpt_tiny|mixer_tiny|gpt_small   (default vit_tiny)
-  --structure diag|block|nm|butterfly|unstructured|dense (default diag)
+  --structure SPEC        pattern spec: a family name (diag|banded|block|nm|
+                          butterfly|unstructured|dense, default diag) or a
+                          parameterised form — diag:K, banded:B, block:BS,
+                          nm:N:M (see `padst patterns` for the grammar)
   --sparsity 0.9          target sparsity (density = 1 - sparsity)
   --perm none|random|learned|kaleidoscope          (default learned)
   --steps 200  --lr 1e-3  --lambda 5e-3  --seed 0
@@ -121,6 +129,11 @@ train:
 
 sweep:
   --model ...  --steps N  --sparsities 0.6,0.9  --methods RigL,DynaDiag+PA
+  --methods ...           zoo names and/or pattern specs — a spec like
+                          block:4 or nm:1:4 becomes a structured-DST grid
+                          row of its own (pattern hyper-params as axes)
+  --dry-run               plan the grid and print each cell's fingerprint
+                          without opening a runtime (no artifacts needed)
   --csv PATH              dump results as CSV (atomic write)
   --threads N             global native-kernel budget, divided across workers
   --backend B             microkernel backend for every cell
@@ -137,8 +150,14 @@ journal-merge:
   inputs must come from the same sweep (identical journal headers); a
   final `padst sweep --journal merged.jsonl` resumes with every cell done
 
+patterns:
+  list the registered structure families: spec grammar, bare-name
+  defaults, dynamic/static flag, and rank-cap formula (from the registry)
+
 nlr:
   --d0 1024 --widths 4096,1024x24 --density 0.05   Table-1 style bounds
+  --structure SPEC        also print rows whose structural cap r comes
+                          from the pattern's typed params (e.g. diag:51)
   --threads N             parallel bound evaluation (default: auto)
 
 bench-compare:
@@ -154,18 +173,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let backend = backend_flag(args)?;
     let mut rt = Runtime::open_with_threads(&artifacts_dir(args), threads)?;
     let sparsity = args.get_f64("sparsity", 0.9)?;
-    let structure = Structure::parse(&args.get("structure", "diag"))
-        .ok_or_else(|| anyhow!("bad --structure"))?;
+    let pattern = resolve_pattern(&args.get("structure", "diag"))?;
     let grow_mode = match args.get("grow", "rigl").as_str() {
         "rigl" => GrowMode::RigL,
         "set" => GrowMode::Set,
         "mest" => GrowMode::Mest,
         g => bail!("bad --grow {g:?}"),
     };
+    let density = if pattern.family() == Structure::Dense { 1.0 } else { 1.0 - sparsity };
     let cfg = RunConfig {
         model: args.get("model", "vit_tiny"),
-        structure,
-        density: if structure == Structure::Dense { 1.0 } else { 1.0 - sparsity },
+        pattern,
+        density,
         perm_mode: args.get("perm", "learned"),
         steps: args.get_usize("steps", 200)?,
         lr: args.get_f64("lr", 1e-3)? as f32,
@@ -214,10 +233,29 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .map(|s| s.parse().unwrap())
         .collect();
     let method_names = args.get("methods", "RigL,DynaDiag,DynaDiag+PA,SRigL,SRigL+PA");
-    let methods: Vec<_> = method_names
+    let methods: Vec<sweep::Method> = method_names
         .split(',')
-        .map(|n| sweep::method_by_name(n).ok_or_else(|| anyhow!("unknown method {n:?}")))
+        .map(sweep::resolve_method)
         .collect::<Result<_>>()?;
+    if args.flags.contains_key("dry-run") {
+        // Plan-only: resolve every method/spec, expand the grid, and show
+        // the cell fingerprints the journal would carry.  No runtime (and
+        // no artifacts) needed — this is the CI smoke path for
+        // parameterised specs.
+        let cells = sweep::plan_grid(&methods, &sparsities);
+        println!("# sweep dry run: model={model} steps={steps} seed={seed} ({} cells)", cells.len());
+        println!("{:<16} {:<22} {:>9}  fingerprint", "method", "pattern", "sparsity");
+        for (m, sp) in &cells {
+            println!(
+                "{:<16} {:<22} {:>8.0}%  {}",
+                m.name,
+                m.pattern,
+                sp * 100.0,
+                sweep::method_fingerprint(m)
+            );
+        }
+        return Ok(());
+    }
     let opts = sweep::SweepShardOpts {
         workers,
         threads,
@@ -283,6 +321,28 @@ fn cmd_bench_compare(old: &str, new: &str, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// List the registered structure families — the table is rendered from
+/// the `PatternRegistry` itself, so it can never drift from the impls.
+fn cmd_patterns(_args: &Args) -> Result<()> {
+    println!(
+        "{:<14} {:<14} {:<34} {:<8} {}",
+        "family", "spec grammar", "bare-name defaults", "dst", "rank cap r_struct"
+    );
+    for f in registry().families() {
+        println!(
+            "{:<14} {:<14} {:<34} {:<8} {}",
+            f.name,
+            f.grammar,
+            f.defaults,
+            if f.dynamic { "dynamic" } else { "static" },
+            f.rank_cap
+        );
+    }
+    println!("\nexamples: --structure block:8 | nm:2:8 | diag:4 | banded:16");
+    println!("bare names keep the historical density-derived defaults.");
+    Ok(())
+}
+
 fn cmd_nlr(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 0)?; // 0 = auto
     let d0 = args.get_usize("d0", 1024)?;
@@ -297,7 +357,14 @@ fn cmd_nlr(args: &Args) -> Result<()> {
     let widths: Vec<usize> = (0..reps).flat_map(|_| base.iter().copied()).collect();
     println!("NLR lower bounds (log10), d0={d0}, density={density}, L={}:", widths.len());
     println!("{:<36} {:>14} {:>12}", "setting", "log10 NLR", "overhead");
-    for row in nlr::table1_rows_mt(d0, &widths, density, threads) {
+    let mut rows = nlr::table1_rows_mt(d0, &widths, density, threads);
+    if let Some(spec) = args.flags.get("structure") {
+        // Registry-derived rows: the structural cap r comes from the
+        // pattern's typed params instead of the uniform density guess.
+        let pattern = resolve_pattern(spec)?;
+        rows.extend(nlr::pattern_rows(pattern.as_ref(), d0, &widths, density));
+    }
+    for row in rows {
         println!(
             "{:<36} {:>14.1} {:>12}",
             row.setting,
@@ -351,6 +418,7 @@ fn main() -> Result<()> {
     match argv[0].as_str() {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
+        "patterns" => cmd_patterns(&args),
         "nlr" => cmd_nlr(&args),
         "list" => cmd_list(&args),
         _ => usage(),

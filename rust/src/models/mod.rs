@@ -3,6 +3,7 @@
 //! accounting for the Tbl. 2–5 overhead reports.
 
 use crate::runtime::manifest::ModelEntry;
+use crate::sparsity::pattern::SparsePattern;
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -67,14 +68,25 @@ pub const PAPER_LAYERS: &[PaperLayer] = &[
 ];
 
 /// Bytes of state a training run holds per method, for the Tbl. 2–5 memory
-/// overhead analogue.  `perm_mode` in {"none","random","learned",
-/// "kaleidoscope"}; learned soft perms cost an N x N f32 logits matrix per
-/// site (+ nothing at inference after hardening), kaleidoscope costs
-/// log2(N) x N angles, random costs one index map.
-pub fn memory_footprint(entry: &ModelEntry, perm_mode: &str, hardened: bool) -> usize {
+/// overhead analogue.  The mask term comes from the structure family's own
+/// [`SparsePattern::memory_footprint`] accounting; `perm_mode` in
+/// {"none","random","learned","kaleidoscope"}; learned soft perms cost an
+/// N x N f32 logits matrix per site (+ nothing at inference after
+/// hardening), kaleidoscope costs log2(N) x N angles, random costs one
+/// index map.
+pub fn memory_footprint(
+    entry: &ModelEntry,
+    pattern: &dyn SparsePattern,
+    perm_mode: &str,
+    hardened: bool,
+) -> usize {
     let params: usize = entry.n_params() * 4;
     let adam = 2 * params;
-    let masks: usize = entry.sites.iter().map(|s| s.rows * s.cols * 4).sum();
+    let masks: usize = entry
+        .sites
+        .iter()
+        .map(|s| pattern.memory_footprint(s.rows, s.cols))
+        .sum();
     let perm: usize = entry
         .sites
         .iter()
@@ -139,11 +151,12 @@ mod tests {
         // Paper Tbl. 2–5 ordering: learned (PA-DST) > kaleidoscope >
         // random > none, and hardening collapses learned to ~random.
         let e = toy_entry();
-        let none = memory_footprint(&e, "none", false);
-        let rand = memory_footprint(&e, "random", false);
-        let kal = memory_footprint(&e, "kaleidoscope", false);
-        let learned = memory_footprint(&e, "learned", false);
-        let hard = memory_footprint(&e, "learned", true);
+        let p = crate::sparsity::pattern::resolve_pattern("diag").unwrap();
+        let none = memory_footprint(&e, p.as_ref(), "none", false);
+        let rand = memory_footprint(&e, p.as_ref(), "random", false);
+        let kal = memory_footprint(&e, p.as_ref(), "kaleidoscope", false);
+        let learned = memory_footprint(&e, p.as_ref(), "learned", false);
+        let hard = memory_footprint(&e, p.as_ref(), "learned", true);
         assert!(none < rand && rand < kal && kal < learned);
         assert_eq!(hard, rand);
     }

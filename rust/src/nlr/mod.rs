@@ -227,6 +227,28 @@ pub fn table1_rows(d0: usize, widths: &[usize], density: f64) -> Vec<BoundRow> {
         .collect()
 }
 
+/// Table-1 rows for one *registered pattern*: the structural cap r comes
+/// from [`rank_cap`](crate::sparsity::pattern::SparsePattern::rank_cap) —
+/// i.e. the family's typed params (`diag:51`, `nm:1:20`) — instead of the
+/// uniform `round(density * d0)` guess.  Two rows per pattern: without
+/// and with the learned permutation.
+pub fn pattern_rows(
+    pattern: &dyn crate::sparsity::pattern::SparsePattern,
+    d0: usize,
+    widths: &[usize],
+    density: f64,
+) -> Vec<BoundRow> {
+    let r = pattern.rank_cap(density, d0).clamp(1, d0);
+    [Setting::StructNoPerm { r }, Setting::StructPerm { r }]
+        .into_iter()
+        .map(|s| {
+            let mut row = bound_row(s, d0, widths);
+            row.setting = format!("{} [{}]", row.setting, pattern.spec());
+            row
+        })
+        .collect()
+}
+
 /// [`table1_rows`] with the per-setting bound evaluations fanned out
 /// across worker threads (0 = auto).  Each row is an independent log-space
 /// sum over the layer stack, so this is a pure fork-join; row order is
@@ -347,6 +369,18 @@ mod tests {
                 assert_eq!(x.depth_overhead, y.depth_overhead);
             }
         }
+    }
+
+    #[test]
+    fn pattern_rows_use_typed_caps() {
+        // diag:51 at any density must pin r = 51 — the Apdx B ViT-L cap.
+        let p = crate::sparsity::pattern::resolve_pattern("diag:51").unwrap();
+        let widths = vec![4096usize, 1024];
+        let rows = pattern_rows(p.as_ref(), 1024, &widths, 0.5);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].setting.contains("r=51") && rows[0].setting.contains("diag:51"));
+        assert_eq!(rows[0].ks, vec![51, 51], "no-perm stalls at the cap");
+        assert_eq!(rows[1].ks, vec![51, 102], "perm grows the span by r per layer");
     }
 
     #[test]

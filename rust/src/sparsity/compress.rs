@@ -1,11 +1,14 @@
 //! Dense (W, mask) -> kernel-compressed forms, with the learned permutation
 //! *folded into the index maps* (the paper's re-indexing trick, Eqn. 16/18).
 //!
-//! Two forms, matching the L1 kernels and the native CPU kernels:
+//! Three forms, matching the L1 kernels and the native CPU kernels:
 //! * [`RowCompressed`] — per-row (vals, idx) panels, fixed nnz budget k;
 //!   covers diagonal-K, N:M, butterfly, and padded unstructured rows.
 //! * [`BlockCompressed`] — per-block-row active bs x bs blocks (DSB /
 //!   Pixelated-Butterfly layouts).
+//! * [`Csr`] — ragged compressed sparse rows, the unstructured comparator
+//!   (the drivers live in `kernels::csr`; the *layout* lives here so the
+//!   pattern layer can emit every kernel plan without importing upward).
 
 use super::patterns::Mask;
 
@@ -101,6 +104,42 @@ pub fn compress_blocks(w: &[f32], mask: &Mask, bs: usize) -> BlockCompressed {
         }
     }
     BlockCompressed { rows, cols, bs, nab, blocks, block_cols }
+}
+
+/// Ragged CSR — the unstructured-mask layout (what cuSparse executes for
+/// RigL/SET-style free masks in the paper's timing section).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<i32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+pub fn csr_from_mask(w: &[f32], mask: &Mask) -> Csr {
+    let (rows, cols) = (mask.rows, mask.cols);
+    assert_eq!(w.len(), rows * cols);
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    let mut col_idx = Vec::new();
+    let mut vals = Vec::new();
+    row_ptr.push(0);
+    for i in 0..rows {
+        for j in 0..cols {
+            if mask.get(i, j) {
+                col_idx.push(j as i32);
+                vals.push(w[i * cols + j]);
+            }
+        }
+        row_ptr.push(col_idx.len());
+    }
+    Csr { rows, cols, row_ptr, col_idx, vals }
 }
 
 /// Reconstruct the dense masked weight from a row-compressed form — test

@@ -169,9 +169,9 @@ pub fn block_prune_grow(w: &[f32], mask: &Mask, grad: &[f32], bs: usize, frac: f
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparsity::pattern::resolve_pattern;
     use crate::sparsity::patterns::{
         make_block_mask, make_diag_mask, make_nm_mask, make_unstructured_mask,
-        validate_structure, Structure,
     };
     use crate::util::Rng;
 
@@ -201,7 +201,7 @@ mod tests {
         let g: Vec<f32> = (0..1024).map(|_| rng.normal()).collect();
         let new = diag_prune_grow(&w, &mask, &g, 0.5);
         assert_eq!(new.nnz(), mask.nnz());
-        assert!(validate_structure(&new, Structure::Diag).is_ok());
+        assert!(resolve_pattern("diag").unwrap().validate(&new).is_ok());
     }
 
     #[test]
@@ -212,7 +212,7 @@ mod tests {
         let g: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
         let new = nm_prune_grow(&w, &mask, &g, 16, 0.3);
         assert_eq!(new.nnz(), mask.nnz());
-        assert!(validate_structure(&new, Structure::NM).is_ok());
+        assert!(resolve_pattern("nm").unwrap().validate(&new).is_ok());
     }
 
     #[test]
@@ -223,7 +223,7 @@ mod tests {
         let g: Vec<f32> = (0..2048).map(|_| rng.normal()).collect();
         let new = block_prune_grow(&w, &mask, &g, 16, 0.5);
         assert_eq!(new.nnz(), mask.nnz());
-        assert!(validate_structure(&new, Structure::Block).is_ok());
+        assert!(resolve_pattern("block").unwrap().validate(&new).is_ok());
     }
 
     #[test]

@@ -7,15 +7,34 @@
 //! `infer` artifacts, and (iii) verifying — via unit + property tests —
 //! the invariants the DST update programs must preserve (budget, family
 //! membership).
+//!
+//! The module is layered: [`patterns`] holds the mask primitive and the
+//! pure parameter-explicit builders, [`compress`] the kernel layouts,
+//! [`dst`] the prune/grow rules — and [`pattern`] binds one of each into a
+//! first-class [`pattern::SparsePattern`] object per family, resolved by
+//! name or parameterised spec through [`pattern::PatternRegistry`].  All
+//! family dispatch lives in `pattern`; everything else is family-blind.
 
 pub mod compress;
 pub mod dst;
+pub mod pattern;
 pub mod patterns;
 
-pub use compress::{compress_blocks, compress_rows, BlockCompressed, RowCompressed};
-pub use patterns::{make_mask, Mask, Structure};
+pub use compress::{
+    compress_blocks, compress_rows, csr_from_mask, BlockCompressed, Csr, RowCompressed,
+};
+pub use pattern::{
+    registry, resolve_pattern, KernelPlan, PatternHandle, PatternRegistry, SparsePattern,
+    Structure,
+};
+pub use patterns::Mask;
 
 /// Apdx A: map a per-layer density to structural parameters.
+///
+/// This is the *paper's* worked mapping, kept for the expressivity
+/// walkthrough (`examples/expressivity.rs`).  Runtime dispatch no longer
+/// goes through it: each [`pattern::SparsePattern`] impl carries its own
+/// typed params (spec-provided or density-derived) with validated edges.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PatternParams {
     /// Diagonal count K = round(density * n_in).

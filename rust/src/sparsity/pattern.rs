@@ -1,0 +1,1052 @@
+//! The pattern layer: one first-class object per structure family.
+//!
+//! The paper's whole argument is that the *structure family* is the unit of
+//! design (Sec. 3.4): each family carries its own mask init, DST prune/grow
+//! rule, compressed kernel layout, structural rank cap, and memory
+//! footprint.  [`SparsePattern`] makes that a trait — one impl per family,
+//! each with a typed params struct instead of the old `density_to_params`
+//! guesses — and [`PatternRegistry`] resolves parameterised spec strings
+//! (`"block:8"`, `"nm:2:8"`, `"diag:4"`, `"banded:16"`) into trait objects.
+//! Bare family names (`"block"`, `"nm"`, ...) keep the historical defaults,
+//! so every CLI flag, manifest string, and sweep journal written before
+//! this layer existed still parses — and produces bit-identical masks on
+//! every geometry the family accepts.  Infeasible geometry (a block size
+//! or M-group not dividing the layer dims, K or band wider than the
+//! layer) is now a descriptive `Err` where the old builders panicked or
+//! silently built ragged masks the compressed kernels could not execute.
+//!
+//! All family dispatch lives here.  The coordinator, sweep grid, CLI,
+//! benches, and examples hold a [`PatternHandle`] and call trait methods;
+//! none of them match on a family enum.  Adding a family means adding one
+//! impl and one registry entry — every dispatch site picks it up for free.
+
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::compress::{
+    compress_blocks, compress_rows, csr_from_mask, BlockCompressed, Csr, RowCompressed,
+};
+use super::dst::{block_prune_grow, diag_prune_grow, nm_prune_grow, unstructured_prune_grow};
+use super::patterns::{
+    make_banded_mask, make_block_mask, make_butterfly_mask, make_diag_mask, make_nm_mask,
+    make_unstructured_mask, row_col_base, Mask,
+};
+use crate::util::Rng;
+
+/// Family tag — one variant per [`SparsePattern`] impl.  String forms match
+/// the manifest / Python side and name the family's `dst_update` artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Structure {
+    Diag,
+    Banded,
+    Block,
+    NM,
+    Butterfly,
+    Unstructured,
+    Dense,
+}
+
+impl Structure {
+    pub fn parse(s: &str) -> Option<Structure> {
+        Some(match s {
+            "diag" => Structure::Diag,
+            "banded" => Structure::Banded,
+            "block" => Structure::Block,
+            "nm" => Structure::NM,
+            "butterfly" => Structure::Butterfly,
+            "unstructured" => Structure::Unstructured,
+            "dense" => Structure::Dense,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Structure::Diag => "diag",
+            Structure::Banded => "banded",
+            Structure::Block => "block",
+            Structure::NM => "nm",
+            Structure::Butterfly => "butterfly",
+            Structure::Unstructured => "unstructured",
+            Structure::Dense => "dense",
+        }
+    }
+}
+
+/// What a pattern compresses into: the kernel-form the `Backend`-dispatched
+/// native drivers execute (`gather_matmul*`, `block_matmul*`, `csr_matmul*`,
+/// `dense_matmul_blocked*`).  Callers match on the *plan*, never on the
+/// family.
+#[derive(Clone, Debug)]
+pub enum KernelPlan {
+    /// Per-row (vals, idx) panels — the row-gather drivers.
+    Rows(RowCompressed),
+    /// Dense bs x bs panels — the block drivers.
+    Blocks(BlockCompressed),
+    /// Ragged CSR — the unstructured comparator drivers.
+    Csr(Csr),
+    /// No compression: the dense drivers run the weights as-is.
+    Dense { rows: usize, cols: usize, w: Vec<f32> },
+}
+
+impl KernelPlan {
+    /// Short driver name for telemetry/debug output.
+    pub fn driver(&self) -> &'static str {
+        match self {
+            KernelPlan::Rows(_) => "gather",
+            KernelPlan::Blocks(_) => "block",
+            KernelPlan::Csr(_) => "csr",
+            KernelPlan::Dense { .. } => "dense",
+        }
+    }
+}
+
+/// Everything a structure family knows, as one object (paper Sec. 3.4).
+///
+/// Contract shared by all impls:
+/// * `init_mask` consumes the RNG exactly as the historical `make_mask`
+///   dispatch did for bare-name specs, so seed masks are bit-identical.
+/// * `prune_grow` preserves the nnz budget exactly and stays in-family
+///   (`validate(prune_grow(..)) == Ok`); `None` marks a static SST family.
+/// * `compress` expects a mask this pattern produced (same family,
+///   divisibility already enforced by `init_mask`).
+pub trait SparsePattern: fmt::Debug + Send + Sync {
+    /// Family tag (one per impl).
+    fn family(&self) -> Structure;
+
+    /// Canonical spec string; [`PatternRegistry::resolve`] parses it back
+    /// to an equal pattern.  Patterns at family defaults print the bare
+    /// name, so journals/fingerprints written pre-registry still match.
+    fn spec(&self) -> String;
+
+    /// Is the mask updated by DST? (butterfly/banded are static — SST.)
+    fn is_dynamic(&self) -> bool;
+
+    /// Build the init mask for a `rows x cols` site at `density`.
+    /// Descriptive `Err` on infeasible geometry (K > cols, band wider than
+    /// the layer, block size or M-group not dividing the dims) instead of
+    /// the old panics/silent rounding.
+    fn init_mask(&self, rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Result<Mask>;
+
+    /// One host-side DST prune/grow step (the mirror of the family's
+    /// `dst_update` artifact rule): score active units by |w|, candidates
+    /// by the grow signal, move up to `frac` of the budget.  Families whose
+    /// rule re-selects the full template each step (N:M) ignore `frac` —
+    /// their churn is governed by the family's own score weighting.
+    /// `None` = static family, mask never changes.
+    fn prune_grow(&self, w: &[f32], mask: &Mask, grow: &[f32], frac: f64) -> Option<Mask>;
+
+    /// Family-membership check — the defence the coordinator runs against
+    /// every compiled DST update.
+    fn validate(&self, mask: &Mask) -> std::result::Result<(), String>;
+
+    /// Compress dense masked weights into this family's kernel plan.
+    /// `perm`, if given, is folded into the index stream (Eqn. 16/18);
+    /// families without an index stream (block panels) fall back to the
+    /// row-gather form so the fold is still free.
+    fn compress(&self, w: &[f32], mask: &Mask, perm: Option<&[i32]>) -> KernelPlan;
+
+    /// The paper's structural rank cap r_struct (Sec. 3.4) for a layer
+    /// with `n_in` inputs — typed params win over the density guess.
+    fn rank_cap(&self, density: f64, n_in: usize) -> usize;
+
+    /// Bytes of mask/pattern state one training run holds for a
+    /// `rows x cols` site (the trainer stores the dense f32 mask tensor).
+    fn memory_footprint(&self, rows: usize, cols: usize) -> usize {
+        rows * cols * 4
+    }
+}
+
+/// Shared, cheaply clonable pattern handle — what `RunConfig` and the
+/// sweep grid carry.
+pub type PatternHandle = Arc<dyn SparsePattern>;
+
+/// Resolve a spec string against the global registry.
+pub fn resolve_pattern(spec: &str) -> Result<PatternHandle> {
+    registry().resolve(spec)
+}
+
+// ---------------------------------------------------------------------------
+// Shared derivations + validation helpers
+// ---------------------------------------------------------------------------
+
+fn check_geometry(rows: usize, cols: usize, density: f64, spec: &str) -> Result<()> {
+    if rows == 0 || cols == 0 {
+        bail!("{spec}: degenerate layer {rows}x{cols}");
+    }
+    if !(density > 0.0 && density <= 1.0) {
+        bail!("{spec}: density {density} out of (0, 1]");
+    }
+    Ok(())
+}
+
+/// Historical diagonal-count derivation: K = round(density * cols),
+/// clamped into [1, cols].
+fn derived_k(density: f64, cols: usize) -> usize {
+    ((density * cols as f64).round() as usize).clamp(1, cols)
+}
+
+/// Historical band-width derivation: nearest odd >= round(density * cols),
+/// capped at cols.
+fn derived_band(density: f64, cols: usize) -> usize {
+    let mut band = ((density * cols as f64).round() as usize).max(1);
+    band += (band + 1) % 2;
+    band.min(cols)
+}
+
+/// Offset-family membership: every row's nnz sits at base(i)+o for a
+/// row-independent offset set (diag / banded / butterfly).
+fn validate_offset_family(mask: &Mask) -> std::result::Result<(), String> {
+    let base = row_col_base(mask.rows, mask.cols);
+    let offsets_of_row = |i: usize| -> Vec<usize> {
+        (0..mask.cols)
+            .filter(|&j| mask.get(i, j))
+            .map(|j| (j + mask.cols - base[i] % mask.cols) % mask.cols)
+            .collect::<Vec<_>>()
+    };
+    let mut first = offsets_of_row(0);
+    first.sort_unstable();
+    for i in 1..mask.rows {
+        let mut o = offsets_of_row(i);
+        o.sort_unstable();
+        if o != first {
+            return Err(format!("row {i} offsets differ from row 0"));
+        }
+    }
+    Ok(())
+}
+
+/// Widest row nnz — the panel width k of the row-gather form.
+fn panel_k(mask: &Mask) -> usize {
+    (0..mask.rows).map(|i| mask.row_nnz(i)).max().unwrap_or(1).max(1)
+}
+
+fn compress_to_rows(w: &[f32], mask: &Mask, perm: Option<&[i32]>) -> KernelPlan {
+    KernelPlan::Rows(compress_rows(w, mask, panel_k(mask), perm))
+}
+
+// ---------------------------------------------------------------------------
+// Family impls
+// ---------------------------------------------------------------------------
+
+/// DynaDiag-style union of K cyclic diagonals.  `k: None` derives K from
+/// the density (the historical default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DiagPattern {
+    pub k: Option<usize>,
+}
+
+impl SparsePattern for DiagPattern {
+    fn family(&self) -> Structure {
+        Structure::Diag
+    }
+
+    fn spec(&self) -> String {
+        match self.k {
+            Some(k) => format!("diag:{k}"),
+            None => "diag".into(),
+        }
+    }
+
+    fn is_dynamic(&self) -> bool {
+        true
+    }
+
+    fn init_mask(&self, rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Result<Mask> {
+        check_geometry(rows, cols, density, &self.spec())?;
+        let k = self.k.unwrap_or_else(|| derived_k(density, cols));
+        if k > cols {
+            bail!("{}: K={k} exceeds layer cols={cols}", self.spec());
+        }
+        Ok(make_diag_mask(rows, cols, k, rng))
+    }
+
+    fn prune_grow(&self, w: &[f32], mask: &Mask, grow: &[f32], frac: f64) -> Option<Mask> {
+        Some(diag_prune_grow(w, mask, grow, frac))
+    }
+
+    fn validate(&self, mask: &Mask) -> std::result::Result<(), String> {
+        validate_offset_family(mask)
+    }
+
+    fn compress(&self, w: &[f32], mask: &Mask, perm: Option<&[i32]>) -> KernelPlan {
+        compress_to_rows(w, mask, perm)
+    }
+
+    fn rank_cap(&self, density: f64, n_in: usize) -> usize {
+        self.k.unwrap_or_else(|| ((density * n_in as f64).round() as usize).max(1))
+    }
+}
+
+/// Static banded pattern of width 2b+1 cyclic diagonals.  `half: None`
+/// derives the (odd) width from the density.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BandedPattern {
+    /// Half-bandwidth b; total width 2b+1.
+    pub half: Option<usize>,
+}
+
+impl BandedPattern {
+    fn width(&self, density: f64, cols: usize) -> Result<usize> {
+        match self.half {
+            Some(b) => {
+                let w = 2 * b + 1;
+                if w > cols {
+                    bail!("{}: band width {w} exceeds layer cols={cols}", self.spec());
+                }
+                Ok(w)
+            }
+            None => Ok(derived_band(density, cols)),
+        }
+    }
+}
+
+impl SparsePattern for BandedPattern {
+    fn family(&self) -> Structure {
+        Structure::Banded
+    }
+
+    fn spec(&self) -> String {
+        match self.half {
+            Some(b) => format!("banded:{b}"),
+            None => "banded".into(),
+        }
+    }
+
+    fn is_dynamic(&self) -> bool {
+        false
+    }
+
+    fn init_mask(&self, rows: usize, cols: usize, density: f64, _rng: &mut Rng) -> Result<Mask> {
+        check_geometry(rows, cols, density, &self.spec())?;
+        Ok(make_banded_mask(rows, cols, self.width(density, cols)?))
+    }
+
+    fn prune_grow(&self, _w: &[f32], _mask: &Mask, _grow: &[f32], _frac: f64) -> Option<Mask> {
+        None
+    }
+
+    fn validate(&self, mask: &Mask) -> std::result::Result<(), String> {
+        validate_offset_family(mask)
+    }
+
+    fn compress(&self, w: &[f32], mask: &Mask, perm: Option<&[i32]>) -> KernelPlan {
+        compress_to_rows(w, mask, perm)
+    }
+
+    fn rank_cap(&self, density: f64, n_in: usize) -> usize {
+        match self.half {
+            Some(b) => (2 * b + 1).min(n_in),
+            None => ((density * n_in as f64).round() as usize).max(1),
+        }
+    }
+}
+
+/// DSB-style block sparsity with bs x bs panels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockPattern {
+    pub bs: usize,
+}
+
+pub const DEFAULT_BLOCK_SIZE: usize = 16;
+
+impl SparsePattern for BlockPattern {
+    fn family(&self) -> Structure {
+        Structure::Block
+    }
+
+    fn spec(&self) -> String {
+        if self.bs == DEFAULT_BLOCK_SIZE {
+            "block".into()
+        } else {
+            format!("block:{}", self.bs)
+        }
+    }
+
+    fn is_dynamic(&self) -> bool {
+        true
+    }
+
+    fn init_mask(&self, rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Result<Mask> {
+        check_geometry(rows, cols, density, &self.spec())?;
+        if rows % self.bs != 0 || cols % self.bs != 0 {
+            bail!(
+                "{}: block size {} does not divide layer dims {rows}x{cols}",
+                self.spec(),
+                self.bs
+            );
+        }
+        Ok(make_block_mask(rows, cols, density, self.bs, rng))
+    }
+
+    fn prune_grow(&self, w: &[f32], mask: &Mask, grow: &[f32], frac: f64) -> Option<Mask> {
+        Some(block_prune_grow(w, mask, grow, self.bs, frac))
+    }
+
+    fn validate(&self, mask: &Mask) -> std::result::Result<(), String> {
+        let bs = self.bs;
+        for bi in 0..mask.rows.div_ceil(bs) {
+            for bj in 0..mask.cols.div_ceil(bs) {
+                let mut any = false;
+                let mut all = true;
+                for i in bi * bs..((bi + 1) * bs).min(mask.rows) {
+                    for j in bj * bs..((bj + 1) * bs).min(mask.cols) {
+                        if mask.get(i, j) {
+                            any = true;
+                        } else {
+                            all = false;
+                        }
+                    }
+                }
+                if any && !all {
+                    return Err(format!("partial {bs}x{bs} block at ({bi},{bj})"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn compress(&self, w: &[f32], mask: &Mask, perm: Option<&[i32]>) -> KernelPlan {
+        match perm {
+            // A permutation cannot fold into dense panels; fall back to the
+            // row-gather form so re-indexing stays free (Fig. 3 methodology).
+            Some(_) => compress_to_rows(w, mask, perm),
+            None => KernelPlan::Blocks(compress_blocks(w, mask, self.bs)),
+        }
+    }
+
+    fn rank_cap(&self, density: f64, n_in: usize) -> usize {
+        ((density * n_in as f64).round() as usize).max(1)
+    }
+}
+
+/// N:M sparsity — N survivors per group of M columns.  `n: None` derives
+/// N from the density (tied template, alpha = N/M ~ density).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NMPattern {
+    pub n: Option<usize>,
+    pub m: usize,
+    /// Grow-score weight in the SRigL-style update (|w| vs gamma * |grad|).
+    pub gamma: f32,
+}
+
+pub const DEFAULT_NM_GROUP: usize = 16;
+
+impl NMPattern {
+    fn n_of(&self, density: f64) -> usize {
+        self.n
+            .unwrap_or_else(|| ((density * self.m as f64).round() as usize).max(1))
+            .min(self.m)
+    }
+}
+
+impl SparsePattern for NMPattern {
+    fn family(&self) -> Structure {
+        Structure::NM
+    }
+
+    fn spec(&self) -> String {
+        match self.n {
+            Some(n) => format!("nm:{n}:{}", self.m),
+            None if self.m == DEFAULT_NM_GROUP => "nm".into(),
+            // Density-derived N over a custom M-group: the empty-N spec
+            // form, which `parse_nm` round-trips.
+            None => format!("nm::{}", self.m),
+        }
+    }
+
+    fn is_dynamic(&self) -> bool {
+        true
+    }
+
+    fn init_mask(&self, rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Result<Mask> {
+        check_geometry(rows, cols, density, &self.spec())?;
+        if cols % self.m != 0 {
+            bail!(
+                "{}: M-group {} does not divide layer cols={cols}",
+                self.spec(),
+                self.m
+            );
+        }
+        Ok(make_nm_mask(rows, cols, self.n_of(density), self.m, rng))
+    }
+
+    fn prune_grow(&self, w: &[f32], mask: &Mask, grow: &[f32], _frac: f64) -> Option<Mask> {
+        Some(nm_prune_grow(w, mask, grow, self.m, self.gamma))
+    }
+
+    fn validate(&self, mask: &Mask) -> std::result::Result<(), String> {
+        let m = self.m;
+        if mask.cols % m != 0 {
+            return Err(format!("cols not divisible by M={m}"));
+        }
+        let n0 = (0..m).filter(|&j| mask.get(0, j)).count();
+        for i in 0..mask.rows {
+            for g in 0..mask.cols / m {
+                let n = (g * m..(g + 1) * m).filter(|&j| mask.get(i, j)).count();
+                if n != n0 {
+                    return Err(format!("group ({i},{g}) has {n} nnz, expected {n0}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn compress(&self, w: &[f32], mask: &Mask, perm: Option<&[i32]>) -> KernelPlan {
+        compress_to_rows(w, mask, perm)
+    }
+
+    fn rank_cap(&self, density: f64, n_in: usize) -> usize {
+        // Tied N:M: r_struct = alpha * d0 with alpha = N/M.
+        let alpha = match self.n {
+            Some(n) => n as f64 / self.m as f64,
+            None => density,
+        };
+        ((alpha * n_in as f64).round() as usize).max(1)
+    }
+}
+
+/// Pixelated-Butterfly style static support: power-of-two stride diagonals
+/// up to the per-row budget.  Deterministic — an SST pattern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ButterflyPattern;
+
+impl SparsePattern for ButterflyPattern {
+    fn family(&self) -> Structure {
+        Structure::Butterfly
+    }
+
+    fn spec(&self) -> String {
+        "butterfly".into()
+    }
+
+    fn is_dynamic(&self) -> bool {
+        false
+    }
+
+    fn init_mask(&self, rows: usize, cols: usize, density: f64, _rng: &mut Rng) -> Result<Mask> {
+        check_geometry(rows, cols, density, "butterfly")?;
+        Ok(make_butterfly_mask(rows, cols, density))
+    }
+
+    fn prune_grow(&self, _w: &[f32], _mask: &Mask, _grow: &[f32], _frac: f64) -> Option<Mask> {
+        None
+    }
+
+    fn validate(&self, mask: &Mask) -> std::result::Result<(), String> {
+        validate_offset_family(mask)
+    }
+
+    fn compress(&self, w: &[f32], mask: &Mask, perm: Option<&[i32]>) -> KernelPlan {
+        compress_to_rows(w, mask, perm)
+    }
+
+    fn rank_cap(&self, density: f64, n_in: usize) -> usize {
+        ((density * n_in as f64).round() as usize).max(1)
+    }
+}
+
+/// Free masks — the RigL/SET/MEST comparator family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UnstructuredPattern;
+
+impl SparsePattern for UnstructuredPattern {
+    fn family(&self) -> Structure {
+        Structure::Unstructured
+    }
+
+    fn spec(&self) -> String {
+        "unstructured".into()
+    }
+
+    fn is_dynamic(&self) -> bool {
+        true
+    }
+
+    fn init_mask(&self, rows: usize, cols: usize, density: f64, rng: &mut Rng) -> Result<Mask> {
+        check_geometry(rows, cols, density, "unstructured")?;
+        Ok(make_unstructured_mask(rows, cols, density, rng))
+    }
+
+    fn prune_grow(&self, w: &[f32], mask: &Mask, grow: &[f32], frac: f64) -> Option<Mask> {
+        let scores: Vec<f32> = grow.iter().map(|x| x.abs()).collect();
+        Some(unstructured_prune_grow(w, mask, &scores, frac))
+    }
+
+    fn validate(&self, _mask: &Mask) -> std::result::Result<(), String> {
+        Ok(())
+    }
+
+    fn compress(&self, w: &[f32], mask: &Mask, perm: Option<&[i32]>) -> KernelPlan {
+        let mut csr = csr_from_mask(w, mask);
+        if let Some(p) = perm {
+            for ci in csr.col_idx.iter_mut() {
+                *ci = p[*ci as usize];
+            }
+        }
+        KernelPlan::Csr(csr)
+    }
+
+    fn rank_cap(&self, _density: f64, n_in: usize) -> usize {
+        n_in
+    }
+}
+
+/// The dense reference — mask of ones, no compression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DensePattern;
+
+impl SparsePattern for DensePattern {
+    fn family(&self) -> Structure {
+        Structure::Dense
+    }
+
+    fn spec(&self) -> String {
+        "dense".into()
+    }
+
+    fn is_dynamic(&self) -> bool {
+        false
+    }
+
+    fn init_mask(&self, rows: usize, cols: usize, density: f64, _rng: &mut Rng) -> Result<Mask> {
+        check_geometry(rows, cols, density, "dense")?;
+        Ok(Mask::ones(rows, cols))
+    }
+
+    fn prune_grow(&self, _w: &[f32], _mask: &Mask, _grow: &[f32], _frac: f64) -> Option<Mask> {
+        None
+    }
+
+    fn validate(&self, _mask: &Mask) -> std::result::Result<(), String> {
+        Ok(())
+    }
+
+    fn compress(&self, w: &[f32], mask: &Mask, _perm: Option<&[i32]>) -> KernelPlan {
+        // No index stream to fold a permutation into: the dense drivers
+        // take the explicit-shuffle path (the Fig. 3 strawman) instead.
+        KernelPlan::Dense { rows: mask.rows, cols: mask.cols, w: w.to_vec() }
+    }
+
+    fn rank_cap(&self, _density: f64, n_in: usize) -> usize {
+        n_in
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// One registered family: spec grammar, defaults, and the parser that
+/// turns spec arguments into a pattern object.  The `padst patterns`
+/// subcommand renders exactly this table.
+pub struct FamilyEntry {
+    pub name: &'static str,
+    /// Spec grammar, e.g. `block[:BS]`.
+    pub grammar: &'static str,
+    /// Defaults a bare name resolves to.
+    pub defaults: &'static str,
+    /// Whether DST updates the mask (pulled from the default instance).
+    pub dynamic: bool,
+    /// Human-readable r_struct formula (paper Sec. 3.4).
+    pub rank_cap: &'static str,
+    parse: fn(&[&str]) -> Result<PatternHandle>,
+}
+
+/// Named registry of every structure family.  `resolve` accepts both bare
+/// family names (historical defaults) and parameterised specs.
+pub struct PatternRegistry {
+    families: Vec<FamilyEntry>,
+}
+
+impl PatternRegistry {
+    pub fn families(&self) -> &[FamilyEntry] {
+        &self.families
+    }
+
+    /// Resolve `"family[:arg[:arg]]"` into a pattern object.
+    pub fn resolve(&self, spec: &str) -> Result<PatternHandle> {
+        let mut parts = spec.split(':');
+        let fam = parts.next().unwrap_or("");
+        let args: Vec<&str> = parts.collect();
+        let entry = self
+            .families
+            .iter()
+            .find(|f| f.name == fam)
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown structure family {fam:?} in spec {spec:?} (known: {})",
+                    self.families.iter().map(|f| f.name).collect::<Vec<_>>().join("|")
+                )
+            })?;
+        (entry.parse)(&args).map_err(|e| anyhow!("bad pattern spec {spec:?}: {e}"))
+    }
+}
+
+fn parse_usize(what: &str, s: &str) -> Result<usize> {
+    s.parse::<usize>().map_err(|_| anyhow!("{what} must be a non-negative integer, got {s:?}"))
+}
+
+fn parse_diag(args: &[&str]) -> Result<PatternHandle> {
+    match args {
+        [] => Ok(Arc::new(DiagPattern { k: None })),
+        [k] => {
+            let k = parse_usize("K", k)?;
+            if k == 0 {
+                bail!("diag:K needs K >= 1");
+            }
+            Ok(Arc::new(DiagPattern { k: Some(k) }))
+        }
+        _ => bail!("grammar is diag[:K]"),
+    }
+}
+
+fn parse_banded(args: &[&str]) -> Result<PatternHandle> {
+    match args {
+        [] => Ok(Arc::new(BandedPattern { half: None })),
+        [b] => {
+            let b = parse_usize("B", b)?;
+            Ok(Arc::new(BandedPattern { half: Some(b) }))
+        }
+        _ => bail!("grammar is banded[:B] (B = half-bandwidth, width 2B+1)"),
+    }
+}
+
+fn parse_block(args: &[&str]) -> Result<PatternHandle> {
+    match args {
+        [] => Ok(Arc::new(BlockPattern { bs: DEFAULT_BLOCK_SIZE })),
+        [bs] => {
+            let bs = parse_usize("BS", bs)?;
+            if bs == 0 {
+                bail!("block:BS needs BS >= 1");
+            }
+            Ok(Arc::new(BlockPattern { bs }))
+        }
+        _ => bail!("grammar is block[:BS]"),
+    }
+}
+
+fn parse_nm(args: &[&str]) -> Result<PatternHandle> {
+    match args {
+        [] => Ok(Arc::new(NMPattern { n: None, m: DEFAULT_NM_GROUP, gamma: 0.3 })),
+        // Empty N ("nm::8") keeps the density-derived N over a custom
+        // M-group — the form `NMPattern::spec` prints for that state.
+        [n, m] => {
+            let m = parse_usize("M", m)?;
+            if m == 0 {
+                bail!("nm:N:M needs M >= 1");
+            }
+            if n.is_empty() {
+                return Ok(Arc::new(NMPattern { n: None, m, gamma: 0.3 }));
+            }
+            let n = parse_usize("N", n)?;
+            if n == 0 {
+                bail!("nm:N:M needs N >= 1");
+            }
+            if n > m {
+                bail!("nm:N:M needs N <= M (got {n}:{m})");
+            }
+            Ok(Arc::new(NMPattern { n: Some(n), m, gamma: 0.3 }))
+        }
+        _ => bail!("grammar is nm[:N:M] (empty N = density-derived)"),
+    }
+}
+
+fn parse_noargs<T: SparsePattern + 'static>(
+    name: &str,
+    args: &[&str],
+    p: T,
+) -> Result<PatternHandle> {
+    if !args.is_empty() {
+        bail!("{name} takes no parameters");
+    }
+    Ok(Arc::new(p))
+}
+
+fn parse_butterfly(args: &[&str]) -> Result<PatternHandle> {
+    parse_noargs("butterfly", args, ButterflyPattern)
+}
+
+fn parse_unstructured(args: &[&str]) -> Result<PatternHandle> {
+    parse_noargs("unstructured", args, UnstructuredPattern)
+}
+
+fn parse_dense(args: &[&str]) -> Result<PatternHandle> {
+    parse_noargs("dense", args, DensePattern)
+}
+
+fn family_entry(
+    name: &'static str,
+    grammar: &'static str,
+    defaults: &'static str,
+    rank_cap: &'static str,
+    parse: fn(&[&str]) -> Result<PatternHandle>,
+) -> FamilyEntry {
+    FamilyEntry {
+        name,
+        grammar,
+        defaults,
+        // The flag is a family property: read it off the default instance
+        // so the table can never drift from the impls.
+        dynamic: parse(&[]).expect("default spec must parse").is_dynamic(),
+        rank_cap,
+        parse,
+    }
+}
+
+/// The global registry (built once).
+pub fn registry() -> &'static PatternRegistry {
+    static REG: OnceLock<PatternRegistry> = OnceLock::new();
+    REG.get_or_init(|| PatternRegistry {
+        families: vec![
+            family_entry(
+                "diag",
+                "diag[:K]",
+                "K = round(density*cols)",
+                "K, else round(density*n_in)",
+                parse_diag,
+            ),
+            family_entry(
+                "banded",
+                "banded[:B]",
+                "width = odd round(density*cols)",
+                "2B+1, else round(density*n_in)",
+                parse_banded,
+            ),
+            family_entry("block", "block[:BS]", "BS = 16", "round(density*n_in)", parse_block),
+            family_entry(
+                "nm",
+                "nm[:N:M]",
+                "M = 16, N = round(density*M)",
+                "round(N/M * n_in)",
+                parse_nm,
+            ),
+            family_entry("butterfly", "butterfly", "-", "round(density*n_in)", parse_butterfly),
+            family_entry("unstructured", "unstructured", "-", "n_in", parse_unstructured),
+            family_entry("dense", "dense", "-", "n_in", parse_dense),
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(42)
+    }
+
+    #[test]
+    fn bare_names_resolve_and_roundtrip() {
+        for name in ["diag", "banded", "block", "nm", "butterfly", "unstructured", "dense"] {
+            let p = resolve_pattern(name).unwrap();
+            assert_eq!(p.spec(), name, "bare spec must print back as itself");
+            assert_eq!(p.family().name(), name);
+            // Round-trip: parse(print(parse(s))) is the same pattern.
+            let q = resolve_pattern(&p.spec()).unwrap();
+            assert_eq!(q.spec(), p.spec());
+        }
+    }
+
+    #[test]
+    fn parameterised_specs_roundtrip() {
+        for spec in ["diag:4", "banded:16", "block:8", "block:4", "nm:2:8", "nm:1:4", "nm::8"] {
+            let p = resolve_pattern(spec).unwrap();
+            assert_eq!(p.spec(), spec, "canonical spec must round-trip");
+        }
+        // Defaults canonicalise to the bare name.
+        assert_eq!(resolve_pattern("block:16").unwrap().spec(), "block");
+        assert_eq!(resolve_pattern("nm::16").unwrap().spec(), "nm");
+        // Every impl state prints a spec that parses back (the trait's
+        // round-trip contract) — including density-derived N over a
+        // custom M-group.
+        let hand_built = NMPattern { n: None, m: 8, gamma: 0.3 };
+        assert_eq!(resolve_pattern(&hand_built.spec()).unwrap().spec(), hand_built.spec());
+    }
+
+    #[test]
+    fn bad_specs_are_descriptive_errors() {
+        for bad in [
+            "diag:0",        // k = 0 diagonals
+            "nm:3:2",        // n > m
+            "nm:0:4",        // n = 0
+            "block:0",       // zero block
+            "nm:4",          // wrong arity
+            "diag:2:3",      // wrong arity
+            "butterfly:2",   // family takes no params
+            "nosuchfamily",  // unknown family
+            "diag:x",        // non-numeric
+        ] {
+            let err = resolve_pattern(bad).unwrap_err().to_string();
+            assert!(!err.is_empty(), "{bad} must fail");
+        }
+    }
+
+    #[test]
+    fn infeasible_geometry_is_err_not_panic() {
+        let mut r = rng();
+        // K wider than the layer.
+        assert!(resolve_pattern("diag:65").unwrap().init_mask(8, 64, 0.1, &mut r).is_err());
+        // Band wider than the layer.
+        assert!(resolve_pattern("banded:40").unwrap().init_mask(8, 64, 0.1, &mut r).is_err());
+        // Block size not dividing the dims.
+        assert!(resolve_pattern("block:5").unwrap().init_mask(32, 32, 0.25, &mut r).is_err());
+        // M-group not dividing cols.
+        assert!(resolve_pattern("nm:1:5").unwrap().init_mask(8, 32, 0.25, &mut r).is_err());
+        // Degenerate density.
+        assert!(resolve_pattern("diag").unwrap().init_mask(8, 8, 0.0, &mut r).is_err());
+    }
+
+    #[test]
+    fn registry_masks_match_legacy_builders_bit_identically() {
+        // The historical `make_mask` derivations, reproduced: bare-name
+        // patterns must consume the RNG identically and emit the same bits.
+        let (rows, cols, density) = (96usize, 128usize, 0.1f64);
+        for (spec, legacy) in [
+            ("diag", {
+                let k = ((density * cols as f64).round() as usize).clamp(1, cols);
+                make_diag_mask(rows, cols, k, &mut Rng::new(7))
+            }),
+            ("banded", {
+                let mut band = ((density * cols as f64).round() as usize).max(1);
+                band += (band + 1) % 2;
+                make_banded_mask(rows, cols, band.min(cols))
+            }),
+            ("block", make_block_mask(rows, cols, density, 16, &mut Rng::new(7))),
+            ("nm", {
+                let n = ((density * 16.0).round() as usize).max(1);
+                make_nm_mask(rows, cols, n, 16, &mut Rng::new(7))
+            }),
+            ("butterfly", make_butterfly_mask(rows, cols, density)),
+            ("unstructured", make_unstructured_mask(rows, cols, density, &mut Rng::new(7))),
+            ("dense", Mask::ones(rows, cols)),
+        ] {
+            let p = resolve_pattern(spec).unwrap();
+            let got = p.init_mask(rows, cols, density, &mut Rng::new(7)).unwrap();
+            assert_eq!(got, legacy, "{spec}: registry mask differs from legacy builder");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_cross_family_masks() {
+        let mut r = rng();
+        let diag = resolve_pattern("diag").unwrap();
+        let block = resolve_pattern("block").unwrap();
+        let nm = resolve_pattern("nm").unwrap();
+
+        let dmask = diag.init_mask(64, 64, 0.1, &mut r).unwrap();
+        let bmask = block.init_mask(64, 64, 0.25, &mut r).unwrap();
+
+        assert!(diag.validate(&dmask).is_ok());
+        assert!(block.validate(&bmask).is_ok());
+        // A diagonal mask is not blocky; a block mask is not a
+        // row-independent offset union; neither is a valid 16-group N:M.
+        assert!(block.validate(&dmask).is_err());
+        assert!(diag.validate(&bmask).is_err());
+        assert!(nm.validate(&dmask).is_err());
+    }
+
+    #[test]
+    fn validate_respects_typed_params() {
+        let mut r = rng();
+        // A 4x4-blocky mask is valid for block:4 but not (generally) for
+        // the 16-block default.
+        let b4 = resolve_pattern("block:4").unwrap();
+        let mask = b4.init_mask(32, 32, 0.25, &mut r).unwrap();
+        assert!(b4.validate(&mask).is_ok());
+        assert!(resolve_pattern("block").unwrap().validate(&mask).is_err());
+
+        // nm:1:4 masks carry 1 nnz per 4-group; the 16-group default sees
+        // uniform counts only by accident — build one that breaks it.
+        let nm14 = resolve_pattern("nm:1:4").unwrap();
+        let m = nm14.init_mask(8, 32, 0.25, &mut r).unwrap();
+        assert!(nm14.validate(&m).is_ok());
+        for i in 0..8 {
+            assert_eq!(m.row_nnz(i), 8, "1 of every 4 columns");
+        }
+    }
+
+    #[test]
+    fn prune_grow_stays_in_family_for_parameterised_specs() {
+        let mut r = rng();
+        for spec in ["diag:4", "block:4", "block:8", "nm:1:4", "nm:2:8", "unstructured"] {
+            let p = resolve_pattern(spec).unwrap();
+            let (rows, cols) = (32usize, 64usize);
+            let mask = p.init_mask(rows, cols, 0.25, &mut r).unwrap();
+            let w: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+            let g: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+            let new = p.prune_grow(&w, &mask, &g, 0.3).expect("dynamic family");
+            assert_eq!(new.nnz(), mask.nnz(), "{spec}: budget changed");
+            assert!(p.validate(&new).is_ok(), "{spec}: left family");
+        }
+        // Static families report None.
+        for spec in ["banded", "butterfly", "dense"] {
+            let p = resolve_pattern(spec).unwrap();
+            assert!(p.prune_grow(&[], &Mask::ones(4, 4), &[], 0.3).is_none(), "{spec}");
+            assert!(!p.is_dynamic(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn compress_plans_pick_the_right_driver() {
+        let mut r = rng();
+        let (rows, cols) = (32usize, 64usize);
+        let w: Vec<f32> = (0..rows * cols).map(|_| r.normal()).collect();
+        for (spec, driver) in [
+            ("diag", "gather"),
+            ("banded", "gather"),
+            ("nm", "gather"),
+            ("butterfly", "gather"),
+            ("block", "block"),
+            ("unstructured", "csr"),
+            ("dense", "dense"),
+        ] {
+            let p = resolve_pattern(spec).unwrap();
+            let mask = p.init_mask(rows, cols, 0.25, &mut r).unwrap();
+            assert_eq!(p.compress(&w, &mask, None).driver(), driver, "{spec}");
+        }
+        // Folding a permutation into block panels falls back to row-gather.
+        let block = resolve_pattern("block").unwrap();
+        let mask = block.init_mask(rows, cols, 0.25, &mut r).unwrap();
+        let perm: Vec<i32> = (0..cols as i32).rev().collect();
+        assert_eq!(block.compress(&w, &mask, Some(&perm)).driver(), "gather");
+    }
+
+    #[test]
+    fn rank_caps_follow_typed_params() {
+        // Typed K wins over the density guess.
+        assert_eq!(resolve_pattern("diag:51").unwrap().rank_cap(0.5, 1024), 51);
+        assert_eq!(resolve_pattern("diag").unwrap().rank_cap(0.05, 1024), 51);
+        // Tied N:M alpha = N/M.
+        assert_eq!(resolve_pattern("nm:1:4").unwrap().rank_cap(0.9, 1024), 256);
+        // Free families cap at n_in.
+        assert_eq!(resolve_pattern("unstructured").unwrap().rank_cap(0.1, 1024), 1024);
+        assert_eq!(resolve_pattern("dense").unwrap().rank_cap(0.1, 1024), 1024);
+    }
+
+    #[test]
+    fn default_specs_hit_target_density() {
+        let mut r = rng();
+        for spec in ["diag", "block", "nm", "butterfly", "unstructured"] {
+            let p = resolve_pattern(spec).unwrap();
+            let m = p.init_mask(128, 128, 0.1, &mut r).unwrap();
+            let d = m.density();
+            assert!((d - 0.1).abs() < 0.06, "{spec}: density {d} too far from 0.1");
+            assert!(p.validate(&m).is_ok(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn registry_table_is_complete() {
+        let reg = registry();
+        assert_eq!(reg.families().len(), 7);
+        for f in reg.families() {
+            // Each family's default must resolve and agree on dynamics.
+            let p = reg.resolve(f.name).unwrap();
+            assert_eq!(p.is_dynamic(), f.dynamic, "{}", f.name);
+            assert!(!f.grammar.is_empty() && !f.rank_cap.is_empty());
+        }
+    }
+}

@@ -1,70 +1,13 @@
-//! Mask builders for every structure family in the paper (Sec. 3.4, Apdx A):
-//! diagonal-K, banded-b, block-B, N:M, butterfly (static), unstructured.
+//! Mask primitives: the dense 0/1 [`Mask`] plus the pure per-family
+//! builders (diagonal-K, banded-b, block-B, N:M, butterfly, unstructured).
 //!
-//! These mirror `python/compile/sparsity.py` builder-for-builder; the
-//! property tests in `rust/tests/prop_sparsity.rs` check the same
-//! invariants hypothesis checks on the Python side.
+//! These mirror `python/compile/sparsity.py` builder-for-builder.  Family
+//! *dispatch* — which builder runs, with which parameters, and which
+//! invariants the result must keep — lives one level up in
+//! [`super::pattern`]: the builders here are deliberately parameter-explicit
+//! and never inspect a family tag.
 
 use crate::util::Rng;
-
-/// Structure families.  String forms match the manifest / Python side.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub enum Structure {
-    Diag,
-    Banded,
-    Block,
-    NM,
-    Butterfly,
-    Unstructured,
-    Dense,
-}
-
-impl Structure {
-    pub fn parse(s: &str) -> Option<Structure> {
-        Some(match s {
-            "diag" => Structure::Diag,
-            "banded" => Structure::Banded,
-            "block" => Structure::Block,
-            "nm" => Structure::NM,
-            "butterfly" => Structure::Butterfly,
-            "unstructured" => Structure::Unstructured,
-            "dense" => Structure::Dense,
-            _ => return None,
-        })
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            Structure::Diag => "diag",
-            Structure::Banded => "banded",
-            Structure::Block => "block",
-            Structure::NM => "nm",
-            Structure::Butterfly => "butterfly",
-            Structure::Unstructured => "unstructured",
-            Structure::Dense => "dense",
-        }
-    }
-
-    /// Is the mask updated by DST? (butterfly/banded are static — SST.)
-    pub fn is_dynamic(self) -> bool {
-        matches!(
-            self,
-            Structure::Diag | Structure::Block | Structure::NM | Structure::Unstructured
-        )
-    }
-
-    /// The paper's structural rank cap r_struct (Sec. 3.4) for a layer with
-    /// `n_in` inputs at `density` — used by the NLR module.
-    pub fn rank_cap(self, density: f64, n_in: usize) -> usize {
-        let k = ((density * n_in as f64).round() as usize).max(1);
-        match self {
-            Structure::Diag | Structure::Banded | Structure::Block | Structure::Butterfly => k,
-            // Tied N:M: r_struct = alpha * d0 with alpha = N/M = density.
-            Structure::NM => ((density * n_in as f64).round() as usize).max(1),
-            Structure::Unstructured | Structure::Dense => n_in,
-        }
-    }
-}
 
 /// Dense 0/1 mask, row-major `rows x cols`.
 #[derive(Clone, Debug, PartialEq)]
@@ -214,106 +157,6 @@ pub fn make_unstructured_mask(rows: usize, cols: usize, density: f64, rng: &mut 
     m
 }
 
-/// Dispatch matching `sparsity.make_mask` on the Python side.
-pub fn make_mask(
-    structure: Structure,
-    rows: usize,
-    cols: usize,
-    density: f64,
-    rng: &mut Rng,
-) -> Mask {
-    const BS: usize = 16;
-    const M: usize = 16;
-    match structure {
-        Structure::Diag => {
-            let k = ((density * cols as f64).round() as usize).clamp(1, cols);
-            make_diag_mask(rows, cols, k, rng)
-        }
-        Structure::Banded => {
-            let mut band = ((density * cols as f64).round() as usize).max(1);
-            band += (band + 1) % 2;
-            make_banded_mask(rows, cols, band.min(cols))
-        }
-        Structure::Block => make_block_mask(rows, cols, density, BS, rng),
-        Structure::NM => {
-            let n = ((density * M as f64).round() as usize).max(1);
-            make_nm_mask(rows, cols, n, M, rng)
-        }
-        Structure::Butterfly => make_butterfly_mask(rows, cols, density),
-        Structure::Unstructured => make_unstructured_mask(rows, cols, density, rng),
-        Structure::Dense => Mask::ones(rows, cols),
-    }
-}
-
-/// Check that `mask` belongs to the structure family — used by tests and by
-/// the coordinator to validate DST-updated masks returned from the AOT
-/// program (defence against compile-path regressions).
-pub fn validate_structure(mask: &Mask, structure: Structure) -> Result<(), String> {
-    match structure {
-        Structure::Dense => Ok(()),
-        Structure::Unstructured => Ok(()),
-        Structure::Diag | Structure::Banded | Structure::Butterfly => {
-            // Every row's nnz must sit at base(i)+o for a *row-independent*
-            // offset set.
-            let base = row_col_base(mask.rows, mask.cols);
-            let offsets_of_row = |i: usize| -> Vec<usize> {
-                (0..mask.cols)
-                    .filter(|&j| mask.get(i, j))
-                    .map(|j| (j + mask.cols - base[i] % mask.cols) % mask.cols)
-                    .collect::<Vec<_>>()
-            };
-            let mut first = offsets_of_row(0);
-            first.sort_unstable();
-            for i in 1..mask.rows {
-                let mut o = offsets_of_row(i);
-                o.sort_unstable();
-                if o != first {
-                    return Err(format!("row {i} offsets differ from row 0"));
-                }
-            }
-            Ok(())
-        }
-        Structure::Block => {
-            const BS: usize = 16;
-            for bi in 0..mask.rows.div_ceil(BS) {
-                for bj in 0..mask.cols.div_ceil(BS) {
-                    let mut any = false;
-                    let mut all = true;
-                    for i in bi * BS..((bi + 1) * BS).min(mask.rows) {
-                        for j in bj * BS..((bj + 1) * BS).min(mask.cols) {
-                            if mask.get(i, j) {
-                                any = true;
-                            } else {
-                                all = false;
-                            }
-                        }
-                    }
-                    if any && !all {
-                        return Err(format!("partial block at ({bi},{bj})"));
-                    }
-                }
-            }
-            Ok(())
-        }
-        Structure::NM => {
-            const M: usize = 16;
-            if mask.cols % M != 0 {
-                return Err("cols not divisible by M".into());
-            }
-            let n0 = (0..M).filter(|&j| mask.get(0, j)).count();
-            for i in 0..mask.rows {
-                for g in 0..mask.cols / M {
-                    let n = (g * M..(g + 1) * M).filter(|&j| mask.get(i, j)).count();
-                    if n != n0 {
-                        return Err(format!("group ({i},{g}) has {n} nnz, expected {n0}"));
-                    }
-                }
-            }
-            Ok(())
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,7 +171,6 @@ mod tests {
         for i in 0..96 {
             assert_eq!(m.row_nnz(i), 7);
         }
-        assert!(validate_structure(&m, Structure::Diag).is_ok());
     }
 
     #[test]
@@ -337,21 +179,34 @@ mod tests {
         assert_eq!(m.row_nnz(0), 5);
         assert!(m.get(0, 0) && m.get(0, 1) && m.get(0, 2));
         assert!(m.get(0, 63) && m.get(0, 62)); // wrap-around
-        assert!(validate_structure(&m, Structure::Banded).is_ok());
     }
 
     #[test]
     fn block_is_blocky() {
         let m = make_block_mask(64, 64, 0.25, 16, &mut rng());
-        assert!(validate_structure(&m, Structure::Block).is_ok());
         assert_eq!(m.nnz(), 64 * 16); // 1 of 4 block-cols per block-row
+        // Every 16x16 block is all-or-nothing.
+        for bi in 0..4 {
+            for bj in 0..4 {
+                let cnt = (0..16)
+                    .flat_map(|r| (0..16).map(move |c| (bi * 16 + r, bj * 16 + c)))
+                    .filter(|&(r, c)| m.get(r, c))
+                    .count();
+                assert!(cnt == 0 || cnt == 256, "partial block at ({bi},{bj})");
+            }
+        }
     }
 
     #[test]
     fn nm_per_group() {
         let m = make_nm_mask(32, 64, 3, 16, &mut rng());
-        assert!(validate_structure(&m, Structure::NM).is_ok());
         assert_eq!(m.nnz(), 32 * 4 * 3);
+        for i in 0..32 {
+            for g in 0..4 {
+                let n = (g * 16..(g + 1) * 16).filter(|&j| m.get(i, j)).count();
+                assert_eq!(n, 3, "group ({i},{g})");
+            }
+        }
     }
 
     #[test]
@@ -366,33 +221,5 @@ mod tests {
     fn unstructured_budget() {
         let m = make_unstructured_mask(32, 64, 0.1, &mut rng());
         assert_eq!(m.nnz(), (0.1f64 * 32.0 * 64.0).round() as usize);
-    }
-
-    #[test]
-    fn validate_rejects_partial_block() {
-        let mut m = Mask::zeros(32, 32);
-        m.set(0, 0, true); // lone element, not a full 16x16 block
-        assert!(validate_structure(&m, Structure::Block).is_err());
-    }
-
-    #[test]
-    fn dispatch_densities() {
-        let mut r = rng();
-        for st in [
-            Structure::Diag,
-            Structure::Block,
-            Structure::NM,
-            Structure::Butterfly,
-            Structure::Unstructured,
-        ] {
-            let m = make_mask(st, 128, 128, 0.1, &mut r);
-            let d = m.density();
-            assert!(
-                (d - 0.1).abs() < 0.06,
-                "{}: density {d} too far from 0.1",
-                st.name()
-            );
-            assert!(validate_structure(&m, st).is_ok(), "{}", st.name());
-        }
     }
 }

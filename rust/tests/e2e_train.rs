@@ -12,7 +12,7 @@ use std::path::Path;
 
 use padst::coordinator::{RunConfig, Trainer};
 use padst::runtime::Runtime;
-use padst::sparsity::patterns::Structure;
+use padst::sparsity::pattern::resolve_pattern;
 
 fn runtime() -> Option<Runtime> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -23,10 +23,10 @@ fn runtime() -> Option<Runtime> {
     Some(Runtime::open(&dir).unwrap())
 }
 
-fn short_cfg(perm: &str, structure: Structure) -> RunConfig {
+fn short_cfg(perm: &str, spec: &str) -> RunConfig {
     RunConfig {
         model: "vit_tiny".into(),
-        structure,
+        pattern: resolve_pattern(spec).unwrap(),
         density: 0.2,
         perm_mode: perm.into(),
         steps: 30,
@@ -41,7 +41,7 @@ fn short_cfg(perm: &str, structure: Structure) -> RunConfig {
 #[test]
 fn learned_perm_run_trains_and_logs_penalties() {
     let Some(mut rt) = runtime() else { return };
-    let res = Trainer::new(&mut rt, short_cfg("learned", Structure::Diag))
+    let res = Trainer::new(&mut rt, short_cfg("learned", "diag"))
         .run()
         .unwrap();
     assert_eq!(res.losses.len(), 30);
@@ -68,7 +68,7 @@ fn learned_perm_run_trains_and_logs_penalties() {
 
 fn noperm_and_random_modes_run_impl(rt: &mut Runtime) {
     for perm in ["none", "random"] {
-        let res = Trainer::new(rt, short_cfg(perm, Structure::Diag))
+        let res = Trainer::new(rt, short_cfg(perm, "diag"))
             .run()
             .unwrap();
         assert!(res.final_eval_loss.is_finite(), "{perm}");
@@ -78,22 +78,37 @@ fn noperm_and_random_modes_run_impl(rt: &mut Runtime) {
 }
 
 fn dst_runs_impl(rt: &mut Runtime) {
-    for st in [Structure::Diag, Structure::Block, Structure::NM, Structure::Unstructured] {
-        let mut cfg = short_cfg("learned", st);
+    for spec in ["diag", "block", "nm", "unstructured"] {
+        let mut cfg = short_cfg("learned", spec);
         cfg.steps = 22; // crosses two DST events
         let res = Trainer::new(rt, cfg).run().unwrap();
         assert!(
             res.losses.iter().all(|l| l.is_finite()),
-            "{}: non-finite loss",
-            st.name()
+            "{spec}: non-finite loss"
         );
         // (mask family validation happens inside the trainer after every
         // dst_update; reaching here means it passed.)
     }
 }
 
+/// Parameterised specs drive the same end-to-end path: init masks come
+/// from the typed params, and the trainer's per-step validation runs
+/// against the *spec's* geometry (an artifact DST update that falls back
+/// to the default template is rolled back, not crashed on).
+fn parameterised_spec_runs_impl(rt: &mut Runtime) {
+    for spec in ["block:4", "nm:1:4"] {
+        let mut cfg = short_cfg("learned", spec);
+        cfg.steps = 22;
+        let res = Trainer::new(rt, cfg).run().unwrap();
+        assert!(
+            res.losses.iter().all(|l| l.is_finite()),
+            "{spec}: non-finite loss"
+        );
+    }
+}
+
 fn forced_hardening_impl(rt: &mut Runtime) {
-    let mut cfg = short_cfg("learned", Structure::Diag);
+    let mut cfg = short_cfg("learned", "diag");
     // Threshold above any achievable normalised penalty: every layer
     // hardens after the controller's patience (3 observations).
     cfg.harden_threshold = 1e9;
@@ -115,10 +130,10 @@ fn forced_hardening_impl(rt: &mut Runtime) {
 }
 
 fn seeds_reproducible_impl(rt: &mut Runtime) {
-    let a = Trainer::new(rt, short_cfg("learned", Structure::Diag))
+    let a = Trainer::new(rt, short_cfg("learned", "diag"))
         .run()
         .unwrap();
-    let b = Trainer::new(rt, short_cfg("learned", Structure::Diag))
+    let b = Trainer::new(rt, short_cfg("learned", "diag"))
         .run()
         .unwrap();
     assert_eq!(a.losses, b.losses, "same seed must give identical runs");
@@ -131,6 +146,7 @@ fn e2e_scenarios() {
     let Some(mut rt) = runtime() else { return };
     noperm_and_random_modes_run_impl(&mut rt);
     dst_runs_impl(&mut rt);
+    parameterised_spec_runs_impl(&mut rt);
     forced_hardening_impl(&mut rt);
     seeds_reproducible_impl(&mut rt);
 }

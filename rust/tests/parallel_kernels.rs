@@ -20,7 +20,7 @@ use padst::kernels::{
     gather_matmul_with,
 };
 use padst::sparsity::compress::{compress_blocks, compress_rows};
-use padst::sparsity::patterns::{make_mask, Structure};
+use padst::sparsity::pattern::resolve_pattern;
 use padst::util::Rng;
 
 const CASES: usize = 30;
@@ -55,8 +55,11 @@ fn prop_gather_matmul_mt_bit_identical_per_backend() {
         let (batch, rows, cols) = arb_dims(&mut rng);
         let density = [0.05, 0.1, 0.25][rng.below(3)];
         // Diag exercises the row-gather form; N:M and butterfly share it.
-        let st = [Structure::Diag, Structure::NM, Structure::Butterfly][rng.below(3)];
-        let mask = make_mask(st, rows, cols, density, &mut rng);
+        let spec = ["diag", "nm", "butterfly"][rng.below(3)];
+        let mask = resolve_pattern(spec)
+            .unwrap()
+            .init_mask(rows, cols, density, &mut rng)
+            .unwrap();
         let k = (0..rows).map(|i| mask.row_nnz(i)).max().unwrap();
         let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
         let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
@@ -73,8 +76,7 @@ fn prop_gather_matmul_mt_bit_identical_per_backend() {
                     &ys,
                     &ym,
                     &format!(
-                        "case {case} seed {seed} {} [{}] t={threads}",
-                        st.name(),
+                        "case {case} seed {seed} {spec} [{}] t={threads}",
                         backend.name()
                     ),
                 );
@@ -91,7 +93,10 @@ fn prop_csr_matmul_mt_bit_identical_per_backend() {
         let mut rng = Rng::new(seed);
         let (batch, rows, cols) = arb_dims(&mut rng);
         let density = [0.05, 0.1, 0.25][rng.below(3)];
-        let mask = make_mask(Structure::Unstructured, rows, cols, density, &mut rng);
+        let mask = resolve_pattern("unstructured")
+            .unwrap()
+            .init_mask(rows, cols, density, &mut rng)
+            .unwrap();
         let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
         let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
         let csr = csr_from_mask(&w, &mask);
@@ -123,7 +128,10 @@ fn prop_block_matmul_mt_bit_identical_per_backend() {
         let mut rng = Rng::new(seed);
         let (batch, rows, cols) = arb_dims(&mut rng);
         let density = [0.1, 0.25, 0.5][rng.below(3)];
-        let mask = make_mask(Structure::Block, rows, cols, density, &mut rng);
+        let mask = resolve_pattern("block")
+            .unwrap()
+            .init_mask(rows, cols, density, &mut rng)
+            .unwrap();
         let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
         let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
         let bc = compress_blocks(&w, &mask, 16);
@@ -188,7 +196,10 @@ fn prop_dense_matmul_blocked_mt_bit_identical_per_backend() {
 fn oversubscribed_threads_are_clamped() {
     let mut rng = Rng::new(0x05);
     let (batch, rows, cols) = (1usize, 16usize, 32usize);
-    let mask = make_mask(Structure::Block, rows, cols, 0.5, &mut rng);
+    let mask = resolve_pattern("block")
+        .unwrap()
+        .init_mask(rows, cols, 0.5, &mut rng)
+        .unwrap();
     let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
     let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
     let bc = compress_blocks(&w, &mask, 16);

@@ -1,0 +1,148 @@
+//! End-to-end checks for the `SparsePattern` trait API and the spec
+//! registry — the non-artifact half of the pattern-layer contract:
+//!
+//! * spec strings thread through the sweep grid (method synthesis, cell
+//!   fingerprints) exactly as the CLI would drive them;
+//! * every family's kernel plan reproduces the masked-dense oracle on
+//!   every compiled backend — i.e. `compress` really feeds the right
+//!   `Backend`-dispatched driver, including the non-default `block:4` and
+//!   `nm:1:4` specs CI exercises on every PR;
+//! * telemetry records carry the spec string through a JSON round-trip.
+
+use padst::coordinator::sweep::{method_by_name, method_fingerprint, plan_grid};
+use padst::harness::telemetry::{BenchRecord, BenchReport};
+use padst::kernels::micro::Backend;
+use padst::kernels::run_plan;
+use padst::sparsity::pattern::resolve_pattern;
+use padst::sparsity::patterns::Mask;
+use padst::util::Rng;
+
+/// Reference masked-dense matmul.
+fn oracle(x: &[f32], w: &[f32], mask: &Mask, batch: usize) -> Vec<f32> {
+    let (rows, cols) = (mask.rows, mask.cols);
+    let mut y = vec![0.0f32; batch * rows];
+    for b in 0..batch {
+        for i in 0..rows {
+            let mut acc = 0.0;
+            for j in 0..cols {
+                if mask.get(i, j) {
+                    acc += w[i * cols + j] * x[b * cols + j];
+                }
+            }
+            y[b * rows + i] = acc;
+        }
+    }
+    y
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Every family's plan — default and parameterised specs — must match the
+/// masked-dense oracle on every backend.  This is the compile-and-run
+/// check that `block:4` / `nm:1:4` execute end to end on every PR.
+#[test]
+fn kernel_plans_match_oracle_for_every_spec() {
+    let (batch, rows, cols) = (4usize, 32usize, 64usize);
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+
+    for spec in [
+        "diag", "diag:4", "banded", "banded:3", "block", "block:4", "block:8", "nm", "nm:1:4",
+        "nm:2:8", "nm::8", "butterfly", "unstructured", "dense",
+    ] {
+        let pattern = resolve_pattern(spec).unwrap();
+        let mask = pattern.init_mask(rows, cols, 0.25, &mut rng).unwrap();
+        assert!(pattern.validate(&mask).is_ok(), "{spec}: init mask not in-family");
+        let want = oracle(&x, &w, &mask, batch);
+        let plan = pattern.compress(&w, &mask, None);
+        for &backend in Backend::all() {
+            let mut y = vec![f32::NAN; batch * rows];
+            run_plan(&plan, &x, batch, &mut y, backend);
+            assert!(
+                max_diff(&y, &want) < 1e-3,
+                "{spec} [{}]: plan output differs from oracle",
+                backend.name()
+            );
+        }
+    }
+}
+
+/// Folding a permutation into the plan's index stream equals the explicit
+/// shuffle-then-multiply path, for every family (the Eqn. 16/18 trick the
+/// pattern objects now own).
+#[test]
+fn reindex_plans_equal_shuffle_for_every_spec() {
+    let (batch, rows, cols) = (3usize, 32usize, 64usize);
+    let mut rng = Rng::new(12);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+    let perm: Vec<i32> = rng.permutation(cols).iter().map(|&p| p as i32).collect();
+    // Shuffled input: xp[b, i] = x[b, perm[i]].
+    let mut xp = vec![0.0f32; batch * cols];
+    for b in 0..batch {
+        for i in 0..cols {
+            xp[b * cols + i] = x[b * cols + perm[i] as usize];
+        }
+    }
+
+    for spec in ["diag", "diag:4", "block", "block:4", "nm:1:4", "butterfly", "unstructured"] {
+        let pattern = resolve_pattern(spec).unwrap();
+        let mask = pattern.init_mask(rows, cols, 0.25, &mut rng).unwrap();
+        let backend = Backend::default_backend();
+
+        let mut ya = vec![0.0f32; batch * rows];
+        run_plan(&pattern.compress(&w, &mask, None), &xp, batch, &mut ya, backend);
+        let mut yb = vec![0.0f32; batch * rows];
+        run_plan(&pattern.compress(&w, &mask, Some(&perm)), &x, batch, &mut yb, backend);
+        assert!(
+            max_diff(&ya, &yb) < 1e-4,
+            "{spec}: reindexed plan differs from explicit shuffle"
+        );
+    }
+}
+
+/// Specs thread into the sweep grid: spec-synthesized methods expand into
+/// cells whose fingerprints carry the spec, next to zoo methods.
+#[test]
+fn specs_thread_into_sweep_grid_fingerprints() {
+    let methods = ["RigL", "block:4", "nm:1:4"]
+        .iter()
+        .map(|n| method_by_name(n).unwrap())
+        .collect::<Vec<_>>();
+    let cells = plan_grid(&methods, &[0.8]);
+    assert_eq!(cells.len(), 3);
+    let fps: Vec<String> = cells.iter().map(|(m, _)| method_fingerprint(m)).collect();
+    assert_eq!(
+        fps,
+        [
+            "unstructured|none|RigL".to_string(),
+            "block:4|none|RigL".to_string(),
+            "nm:1:4|none|RigL".to_string(),
+        ]
+    );
+}
+
+/// Telemetry: the pattern spec survives a BenchReport JSON round-trip and
+/// stays out of the record identity.
+#[test]
+fn bench_records_carry_pattern_specs() {
+    let mut report = BenchReport::new("pattern_specs_test", 1);
+    report.push(
+        BenchRecord::value("inference", "vit_b16/fc1 block:8 s0.9 none")
+            .with_pattern("block:8")
+            .with_metric("speedup_vs_dense", 2.5),
+    );
+    report.push(BenchRecord::value("memory", "vit_tiny/baseline"));
+    let back = BenchReport::parse(&report.to_json().to_string_pretty()).unwrap();
+    assert_eq!(back, report);
+    assert_eq!(back.records[0].pattern, "block:8");
+    assert_eq!(back.records[1].pattern, "", "absent pattern reads back empty");
+    assert_eq!(
+        back.records[0].id(),
+        "inference/vit_b16/fc1 block:8 s0.9 none",
+        "pattern is provenance, not identity"
+    );
+}

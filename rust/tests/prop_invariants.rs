@@ -6,7 +6,7 @@
 use padst::perm;
 use padst::sparsity::compress::{compress_rows, decompress_rows};
 use padst::sparsity::dst::*;
-use padst::sparsity::patterns::*;
+use padst::sparsity::pattern::resolve_pattern;
 use padst::util::Rng;
 
 const CASES: usize = 60;
@@ -18,7 +18,9 @@ fn arb_dims(rng: &mut Rng) -> (usize, usize) {
 }
 
 /// DST updates preserve the nnz budget and the structure family, for every
-/// family, across random weights/grads/fractions.
+/// dynamic family, across random weights/grads/fractions — driven through
+/// the `SparsePattern` trait (the coordinator's own dispatch), not a
+/// per-family match.
 #[test]
 fn prop_dst_preserves_budget_and_family() {
     let mut meta = Rng::new(0xD57);
@@ -28,30 +30,22 @@ fn prop_dst_preserves_budget_and_family() {
         let (rows, cols) = arb_dims(&mut rng);
         let density = [0.05, 0.1, 0.25][rng.below(3)];
         let frac = [0.1, 0.3, 0.5][rng.below(3)];
-        for st in [Structure::Diag, Structure::Block, Structure::NM, Structure::Unstructured] {
-            let mask = make_mask(st, rows, cols, density, &mut rng);
+        for spec in ["diag", "block", "nm", "unstructured"] {
+            let pattern = resolve_pattern(spec).unwrap();
+            let mask = pattern.init_mask(rows, cols, density, &mut rng).unwrap();
             let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
             let g: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
-            let new = match st {
-                Structure::Diag => diag_prune_grow(&w, &mask, &g, frac),
-                Structure::Block => block_prune_grow(&w, &mask, &g, 16, frac),
-                Structure::NM => nm_prune_grow(&w, &mask, &g, 16, 0.3),
-                Structure::Unstructured => {
-                    let gs: Vec<f32> = g.iter().map(|x| x.abs()).collect();
-                    unstructured_prune_grow(&w, &mask, &gs, frac)
-                }
-                _ => unreachable!(),
-            };
+            let new = pattern
+                .prune_grow(&w, &mask, &g, frac)
+                .expect("dynamic family must implement prune_grow");
             assert_eq!(
                 new.nnz(),
                 mask.nnz(),
-                "case {case} seed {seed} {}: budget changed",
-                st.name()
+                "case {case} seed {seed} {spec}: budget changed"
             );
             assert!(
-                validate_structure(&new, st).is_ok(),
-                "case {case} seed {seed} {}: left family",
-                st.name()
+                pattern.validate(&new).is_ok(),
+                "case {case} seed {seed} {spec}: left family"
             );
         }
     }
@@ -67,8 +61,11 @@ fn prop_compress_perm_roundtrip() {
         let mut rng = Rng::new(seed);
         let (rows, cols) = arb_dims(&mut rng);
         let density = [0.05, 0.1, 0.25][rng.below(3)];
-        let st = [Structure::Diag, Structure::NM, Structure::Butterfly][rng.below(3)];
-        let mask = make_mask(st, rows, cols, density, &mut rng);
+        let spec = ["diag", "nm", "butterfly"][rng.below(3)];
+        let mask = resolve_pattern(spec)
+            .unwrap()
+            .init_mask(rows, cols, density, &mut rng)
+            .unwrap();
         let k = (0..rows).map(|i| mask.row_nnz(i)).max().unwrap();
         let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
         let pidx: Vec<i32> = rng.permutation(cols).iter().map(|&p| p as i32).collect();
@@ -83,8 +80,7 @@ fn prop_compress_perm_roundtrip() {
                 let want = if mask.get(i, j) { w[i * cols + j] } else { 0.0 };
                 assert!(
                     (back[i * cols + j] - want).abs() < 1e-5,
-                    "case {case} seed {seed} {}: ({i},{j})",
-                    st.name()
+                    "case {case} seed {seed} {spec}: ({i},{j})"
                 );
             }
         }
