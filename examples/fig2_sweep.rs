@@ -8,6 +8,9 @@
 //! `--patterns block:4,nm:1:4` appends one structured-DST grid row per
 //! pattern spec — the recommended Fig. 2 extension for sweeping pattern
 //! hyper-parameters (block size, M-group) as first-class axes.
+//! `--perms learned,none,random` crosses every grid row with each perm
+//! spec (rows named `method+spec`), so the structure-granularity axis and
+//! the permutation axis sweep together in one journal-compatible grid.
 //! `--workers N` shards the grid across N runtimes (~N x wall-clock cut);
 //! `--journal PATH` checkpoints completed cells so a killed sweep resumes;
 //! `--shard i/n` runs one cluster shard of the grid (combine the per-shard
@@ -19,8 +22,8 @@
 //!       [--journal PATH] [--shard i/n] [--backend B]`
 
 use padst::coordinator::sweep::{
-    method_by_name, methods, print_table, resolve_method, run_sweep_auto, write_csv, Method,
-    SweepShardOpts,
+    cross_perms, method_by_name, methods, print_table, resolve_method, run_sweep_auto, write_csv,
+    Method, SweepShardOpts,
 };
 use padst::harness::shard::parse_shard;
 use padst::util::cli::{arg_value_in, backend_knob_in, has_flag_in};
@@ -59,6 +62,13 @@ fn main() -> anyhow::Result<()> {
         for spec in specs.split(',').filter(|s| !s.is_empty()) {
             grid_methods.push(resolve_method(spec)?);
         }
+    }
+    // The permutation axis: `--perms learned,none` crosses every row with
+    // each perm spec, completing the Fig. 2 structure x perm grid.
+    if let Some(specs) = arg_value_in(&args, "--perms") {
+        let perms: Vec<String> =
+            specs.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect();
+        grid_methods = cross_perms(&grid_methods, &perms)?;
     }
 
     eprintln!(

@@ -7,10 +7,14 @@
 //!   Fig. 6 — the step at which each layer crossed the hardening
 //!            threshold delta and switched to re-indexing.
 //!
-//! Run: `cargo run --release --example perm_analysis -- [steps] [threshold]`
+//! Run: `cargo run --release --example perm_analysis -- [steps] [threshold]
+//!       [perm-spec]`
+//! (the third positional is a perm spec — default `learned`, e.g.
+//! `learned:sinkhorn=24:tau=0.5` to analyse a tempered projection).
 //! CSVs land in artifacts/analysis/ for plotting.
 
 use padst::coordinator::{RunConfig, Trainer};
+use padst::perm::model::resolve_perm;
 use padst::runtime::Runtime;
 use padst::sparsity::pattern::resolve_pattern;
 
@@ -18,6 +22,7 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
     let threshold: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.22);
+    let perm_spec = args.get(3).cloned().unwrap_or_else(|| "learned".to_string());
 
     let dir = std::path::Path::new("artifacts");
     let mut rt = Runtime::open(dir)?;
@@ -25,7 +30,7 @@ fn main() -> anyhow::Result<()> {
         model: "vit_tiny".into(),
         pattern: resolve_pattern("diag")?,
         density: 0.10,
-        perm_mode: "learned".into(),
+        perm: resolve_perm(&perm_spec)?,
         steps,
         harden_threshold: threshold,
         eval_every: 0,

@@ -7,6 +7,7 @@
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
 use padst::coordinator::{RunConfig, Trainer};
+use padst::perm::model::resolve_perm;
 use padst::runtime::Runtime;
 use padst::sparsity::pattern::resolve_pattern;
 
@@ -22,7 +23,7 @@ fn main() -> anyhow::Result<()> {
         model: "vit_tiny".into(),
         pattern: resolve_pattern("diag")?, // DynaDiag-style dynamic diagonals
         density: 0.10,              // 90 % sparsity
-        perm_mode: "learned".into(),
+        perm: resolve_perm("learned")?,
         steps: 300,
         eval_every: 100,
         verbose: true,

@@ -14,6 +14,7 @@
 //! Recorded run: EXPERIMENTS.md §E2E.
 
 use padst::coordinator::{RunConfig, Trainer};
+use padst::perm::model::resolve_perm;
 use padst::runtime::Runtime;
 use padst::sparsity::pattern::resolve_pattern;
 
@@ -39,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         model: "gpt_small".into(),
         pattern: resolve_pattern("diag")?,
         density: 1.0 - sparsity,
-        perm_mode: "learned".into(),
+        perm: resolve_perm("learned")?,
         steps,
         lr: 3e-4,
         dst_every: 50,

@@ -140,9 +140,14 @@ fn main() -> anyhow::Result<()> {
                     fmt_time(t_shuffle.p50),
                     dense.p50 / t_shuffle.p50,
                 );
-                let variants: [(&str, &Summary); 3] =
-                    [("none", &t_none), ("reindex", &t_reindex), ("shuffle", &t_shuffle)];
-                for (variant, s) in variants {
+                // Perm provenance: the reindex/shuffle treatments fold or
+                // apply a sampled random permutation; "none" has none.
+                let variants: [(&str, &str, &Summary); 3] = [
+                    ("none", "none", &t_none),
+                    ("reindex", "random", &t_reindex),
+                    ("shuffle", "random", &t_shuffle),
+                ];
+                for (variant, perm_spec, s) in variants {
                     report.push(
                         BenchRecord::from_summary(
                             "inference",
@@ -150,6 +155,7 @@ fn main() -> anyhow::Result<()> {
                             s,
                         )
                         .with_pattern(&pattern.spec())
+                        .with_perm(perm_spec)
                         .with_metric("speedup_vs_dense", dense.p50 / s.p50),
                     );
                 }

@@ -18,6 +18,7 @@ use std::collections::HashMap;
 
 use padst::coordinator::{make_batch_buffers, RunConfig, Trainer};
 use padst::harness::telemetry::{BenchRecord, BenchReport};
+use padst::perm::model::resolve_perm;
 use padst::runtime::Runtime;
 use padst::sparsity::pattern::resolve_pattern;
 use padst::tensor::Tensor;
@@ -51,7 +52,7 @@ fn main() -> anyhow::Result<()> {
         ];
         let mut base = f64::NAN;
         for (label, artifact, flags) in variants {
-            let s = time_variant(&mut rt, &opts, model, artifact, *flags)?;
+            let (s, perm_spec) = time_variant(&mut rt, &opts, model, artifact, *flags)?;
             if *label == "noperm" {
                 base = s.p50;
             }
@@ -65,6 +66,7 @@ fn main() -> anyhow::Result<()> {
             );
             report.push(
                 BenchRecord::from_summary("train_step", &format!("{model}/{label}"), &s)
+                    .with_perm(&perm_spec)
                     .with_metric("overhead_pct", overhead_pct),
             );
         }
@@ -77,14 +79,16 @@ fn main() -> anyhow::Result<()> {
 
 /// Time one variant's steady-state step.  Uses the Trainer's own state
 /// initialisation so buffers are exactly what production runs feed.
+/// Returns the summary plus the perm spec the variant ran under (report
+/// provenance).
 fn time_variant(
     rt: &mut Runtime,
     opts: &BenchOpts,
     model: &str,
     artifact: &str,
     hard_flags: f32,
-) -> anyhow::Result<Summary> {
-    let perm_mode = if artifact.ends_with("noperm") {
+) -> anyhow::Result<(Summary, String)> {
+    let perm_spec = if artifact.ends_with("noperm") {
         "none"
     } else if artifact.ends_with("kperm") {
         "kaleidoscope"
@@ -95,7 +99,7 @@ fn time_variant(
         model: model.to_string(),
         pattern: resolve_pattern("diag")?,
         density: 0.1,
-        perm_mode: perm_mode.to_string(),
+        perm: resolve_perm(perm_spec)?,
         steps: 0,
         threads: rt.threads,
         ..Default::default()
@@ -130,5 +134,5 @@ fn time_variant(
 
     let (bw, bi, bt) = opts.budget(2, 5, 1.0);
     let s = bench(|| { let _ = prog.run(&inputs).unwrap(); }, bw, bi, bt);
-    Ok(s)
+    Ok((s, perm_spec.to_string()))
 }

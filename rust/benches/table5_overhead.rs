@@ -2,28 +2,50 @@
 //! computed from the exact buffer inventory a run holds (params + Adam +
 //! masks + permutation state), relative to the no-permutation baseline of
 //! the same structured method — mirroring the paper's "% overhead relative
-//! to DynaDiag/SRigL" columns.
+//! to DynaDiag/SRigL" columns.  The per-mode byte accounting is the
+//! `PermModel::memory_bytes` trait hook, so rows can never drift from the
+//! mode impls.
 //!
-//! Writes `BENCH_table5_overhead.json` with value-only records (metrics
-//! `state_mb` / `overhead_pct`); the bench-compare gate skips them, but
-//! the trajectory is tracked like any timed bench.
+//! Also times the host Sinkhorn projection before/after the
+//! reusable-buffer refactor: `perm::soft_perm` (allocates a fresh n*n
+//! matrix per call) vs `SinkhornScratch::soft_perm` (buffers reused
+//! across calls — the `buffer_reused` metric is 1 only if the scratch's
+//! allocation fingerprint never changed over the timed loop, i.e. the
+//! path allocates nothing per step), plus the f32 path dispatched
+//! through the `Backend` microkernels.
+//!
+//! Writes `BENCH_table5_overhead.json`; the memory rows are value-only
+//! (metrics `state_mb` / `overhead_pct`, skipped by the bench-compare
+//! gate), the sinkhorn rows are timed like any other bench.
 
 use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::models::memory_footprint;
+use padst::perm::{self, model::resolve_perm, SinkhornScratch};
 use padst::runtime::manifest::Manifest;
 use padst::sparsity::pattern::resolve_pattern;
 use padst::util::cli::BenchOpts;
+use padst::util::stats::{bench, fmt_time};
+use padst::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let path = std::path::Path::new("artifacts/manifest.json");
-    if !path.exists() {
-        eprintln!("run `make artifacts` first");
-        return Ok(());
-    }
     let opts = BenchOpts::parse("table5_overhead");
     let mut report = BenchReport::new("table5_overhead", opts.threads).with_backend(opts.backend);
-    let manifest = Manifest::load(path)?;
 
+    let path = std::path::Path::new("artifacts/manifest.json");
+    if path.exists() {
+        memory_rows(&Manifest::load(path)?, &mut report)?;
+    } else {
+        eprintln!("no artifacts/manifest.json — skipping the memory table (run `make artifacts`)");
+    }
+    sinkhorn_rows(&opts, &mut report);
+
+    report.write(&opts.json_path)?;
+    println!("# wrote {}", opts.json_path.display());
+    println!("# time columns of Tbl. 5 come from `cargo bench --bench fig3_training`");
+    Ok(())
+}
+
+fn memory_rows(manifest: &Manifest, report: &mut BenchReport) -> anyhow::Result<()> {
     println!("# Tbl. 2-5 analogue: training-state memory by permutation method");
     println!(
         "{:<12} {:<16} {:>12} {:>10}",
@@ -34,16 +56,18 @@ fn main() -> anyhow::Result<()> {
     // here is representative; the trait hook exists for families that
     // later specialise it).
     let pattern = resolve_pattern("diag")?;
+    let base_perm = resolve_perm("none")?;
     for (model, entry) in &manifest.models {
-        let base = memory_footprint(entry, pattern.as_ref(), "none", false) as f64;
-        for (label, mode, hardened) in [
+        let base = memory_footprint(entry, pattern.as_ref(), base_perm.as_ref(), false) as f64;
+        for (label, spec, hardened) in [
             ("baseline", "none", false),
             ("+FixedRandPerm", "random", false),
             ("+PA-DST", "learned", false),
             ("+PA-DST(hard)", "learned", true),
             ("+Kaleidoscope", "kaleidoscope", false),
         ] {
-            let m = memory_footprint(entry, pattern.as_ref(), mode, hardened) as f64;
+            let pm = resolve_perm(spec)?;
+            let m = memory_footprint(entry, pattern.as_ref(), pm.as_ref(), hardened) as f64;
             let state_mb = m / (1024.0 * 1024.0);
             let overhead_pct = (m / base - 1.0) * 100.0;
             println!(
@@ -53,14 +77,93 @@ fn main() -> anyhow::Result<()> {
             report.push(
                 BenchRecord::value("memory", &format!("{model}/{label}"))
                     .with_pattern(&pattern.spec())
+                    .with_perm(&pm.spec())
                     .with_metric("state_mb", state_mb)
                     .with_metric("overhead_pct", overhead_pct),
             );
         }
         println!();
     }
-    report.write(&opts.json_path)?;
-    println!("# wrote {}", opts.json_path.display());
-    println!("# time columns of Tbl. 5 come from `cargo bench --bench fig3_training`");
     Ok(())
+}
+
+/// Before/after rows for the host Sinkhorn projection (the hottest
+/// non-kernel loop: it runs per hardening decision per site, and the
+/// analysis paths project every site).  N = 768 is the paper's ViT-B/16 /
+/// GPT-2 Small permutation dimension.
+fn sinkhorn_rows(opts: &BenchOpts, report: &mut BenchReport) {
+    let n = 768usize;
+    let iters = 12usize;
+    let mut rng = Rng::new(17);
+    let logits: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+    let (bw, bi, bt) = opts.budget(2, 5, 0.3);
+
+    println!("# Sinkhorn projection (N={n}, {iters} iters): before/after the scratch refactor");
+    println!("{:<26} {:>12} {:>14}", "path", "p50/call", "buffer_reused");
+
+    let before = bench(
+        || {
+            let _ = perm::soft_perm(&logits, n, iters);
+        },
+        bw,
+        bi,
+        bt,
+    );
+    println!("{:<26} {:>12} {:>14}", "before (alloc per call)", fmt_time(before.p50), "-");
+    report.push(
+        BenchRecord::from_summary("sinkhorn", &format!("soft_perm(N={n}) alloc"), &before)
+            .with_perm("learned")
+            .with_metric("buffer_reused", 0.0),
+    );
+
+    let mut scratch = SinkhornScratch::new();
+    scratch.soft_perm(&logits, n, iters, 1.0); // warm: buffers sized once
+    let fp = scratch.buffer_fingerprint();
+    let after = bench(
+        || {
+            let _ = scratch.soft_perm(&logits, n, iters, 1.0);
+        },
+        bw,
+        bi,
+        bt,
+    );
+    let reused = scratch.buffer_fingerprint() == fp;
+    assert!(reused, "SinkhornScratch reallocated during the timed loop");
+    println!(
+        "{:<26} {:>12} {:>14}",
+        "after (scratch, f64)",
+        fmt_time(after.p50),
+        if reused { "yes" } else { "NO" }
+    );
+    report.push(
+        BenchRecord::from_summary("sinkhorn", &format!("soft_perm(N={n}) scratch"), &after)
+            .with_perm("learned")
+            .with_metric("buffer_reused", if reused { 1.0 } else { 0.0 })
+            .with_metric("speedup_vs_alloc", before.p50 / after.p50),
+    );
+
+    let backend = opts.backend;
+    scratch.soft_perm_f32(&logits, n, iters, 1.0, backend); // warm f32 buffers
+    let after32 = bench(
+        || {
+            let _ = scratch.soft_perm_f32(&logits, n, iters, 1.0, backend);
+        },
+        bw,
+        bi,
+        bt,
+    );
+    println!(
+        "{:<26} {:>12} {:>14}",
+        format!("after (scratch, f32 {})", backend.name()),
+        fmt_time(after32.p50),
+        "yes"
+    );
+    report.push(
+        BenchRecord::from_summary("sinkhorn", &format!("soft_perm(N={n}) scratch f32"), &after32)
+            .with_perm("learned")
+            .with_backend(backend)
+            .with_metric("buffer_reused", 1.0)
+            .with_metric("speedup_vs_alloc", before.p50 / after32.p50),
+    );
+    println!();
 }

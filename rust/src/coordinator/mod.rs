@@ -8,17 +8,17 @@
 //! * the **DST scheduler** — fires the `dst_update` artifact every
 //!   `dst_every` steps with RigL's cosine-decayed update fraction until
 //!   `dst_end_frac` of the run (Evci et al. 2020);
-//! * the **permutation-hardening controller** ([`perm_ctrl`]) — tracks the
-//!   per-layer AutoShuffle penalty, and when a layer's normalised penalty
-//!   crosses the threshold delta it decodes the soft matrix to a hard
-//!   permutation (Hungarian), flips that layer's `hard_flags` entry, and
-//!   the layer switches from an N x N matmul to re-indexing *without
-//!   recompilation* (Apdx C.2).
+//! * the **permutation-hardening controller**
+//!   ([`perm::model::PermController`]) — tracks the per-layer AutoShuffle
+//!   penalty, and when a layer's normalised penalty crosses the threshold
+//!   delta the run's [`PermModel`](crate::perm::model::PermModel) decodes
+//!   the soft matrix to a hard permutation (Hungarian), flips that
+//!   layer's `hard_flags` entry, and the layer switches from an N x N
+//!   matmul to re-indexing *without recompilation* (Apdx C.2).
 //!
 //! Python never runs here: the artifacts are self-contained HLO.
 
 pub mod checkpoint;
-pub mod perm_ctrl;
 pub mod sweep;
 
 use std::collections::HashMap;
@@ -27,15 +27,15 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::{TaskData, TextTask, VisionTask};
+use crate::harness::executor;
 use crate::kernels::micro::Backend;
 use crate::models::init_params;
-use crate::perm;
+use crate::perm::{self, model::{resolve_perm, PermController, PermHandle}, SinkhornScratch};
 use crate::runtime::{Program, Runtime};
 use crate::sparsity::dst::cosine_update_frac;
 use crate::sparsity::pattern::{resolve_pattern, PatternHandle};
 use crate::tensor::Tensor;
 use crate::util::Rng;
-use perm_ctrl::PermController;
 
 /// Grow-signal selector for the unstructured baselines (`dst_update`'s
 /// `grow_mode` input): RigL = |grad|, SET = random, MEST = mixed.
@@ -55,8 +55,11 @@ pub struct RunConfig {
     /// `"diag"`, `"block:8"`, `"nm:2:8"` — via [`resolve_pattern`].
     pub pattern: PatternHandle,
     pub density: f64,
-    /// "none" | "random" | "learned" | "kaleidoscope"
-    pub perm_mode: String,
+    /// The permutation model object (trait dispatch for state init,
+    /// artifact selection, hardening, hard decode).  Resolve one from a
+    /// spec string — `"learned"`, `"learned:sinkhorn=24:tau=0.5"`,
+    /// `"random:seed=7"`, `"none"` — via [`resolve_perm`].
+    pub perm: PermHandle,
     pub steps: usize,
     pub lr: f32,
     /// Penalty weight lambda (Eqn. 13).
@@ -68,8 +71,12 @@ pub struct RunConfig {
     /// Initial drop fraction for the cosine schedule.
     pub dst_frac0: f64,
     pub grow_mode: GrowMode,
-    /// Normalised-penalty threshold for hardening; <0 disables.
+    /// Normalised-penalty threshold for hardening; <0 disables.  A
+    /// `threshold=` param on the perm spec wins over this default.
     pub harden_threshold: f64,
+    /// Hardening debounce: consecutive below-threshold observations
+    /// before a site hardens.  A `patience=` param on the perm spec wins.
+    pub harden_patience: usize,
     pub eval_every: usize,
     pub seed: u64,
     pub verbose: bool,
@@ -90,7 +97,7 @@ impl Default for RunConfig {
             model: "vit_tiny".into(),
             pattern: resolve_pattern("diag").expect("default pattern spec"),
             density: 0.1,
-            perm_mode: "learned".into(),
+            perm: resolve_perm("learned").expect("default perm spec"),
             steps: 200,
             lr: 1e-3,
             lambda: 5e-3,
@@ -99,6 +106,7 @@ impl Default for RunConfig {
             dst_frac0: 0.3,
             grow_mode: GrowMode::RigL,
             harden_threshold: 0.22,
+            harden_patience: perm::model::DEFAULT_PATIENCE,
             eval_every: 50,
             seed: 0,
             verbose: false,
@@ -186,11 +194,7 @@ impl<'rt> Trainer<'rt> {
     }
 
     fn train_artifact(&self) -> String {
-        match self.cfg.perm_mode.as_str() {
-            "none" => format!("{}_train_noperm", self.cfg.model),
-            "kaleidoscope" => format!("{}_train_kperm", self.cfg.model),
-            _ => format!("{}_train", self.cfg.model),
-        }
+        format!("{}_train{}", self.cfg.model, self.cfg.perm.artifact_suffix())
     }
 
     /// DST artifacts are compiled per *family* with the default template
@@ -254,47 +258,18 @@ impl<'rt> Trainer<'rt> {
         }
 
         // Permutation state (present for every mode; the noperm train
-        // artifact simply doesn't consume it, but eval/dst do).
+        // artifact simply doesn't consume it, but eval/dst do).  The
+        // typed per-site state machine owns init + export; bare-name
+        // specs reproduce the historical RNG stream bit-identically
+        // (pinned by the perm model test suite).
         let n_sites = entry.sites.len();
-        let hard_init = if cfg.perm_mode == "learned" || cfg.perm_mode == "kaleidoscope" {
-            0.0
-        } else {
-            1.0
-        };
-        vals.insert(
-            "hard_flags".into(),
-            Tensor::from_f32(&[n_sites], vec![hard_init; n_sites]),
-        );
+        let mut flags = Vec::with_capacity(n_sites);
         for (si, site) in entry.sites.iter().enumerate() {
-            let n = site.cols;
-            let logits = if cfg.perm_mode == "kaleidoscope" {
-                let levels = (usize::BITS - (n - 1).leading_zeros()) as usize;
-                let mut t = Tensor::zeros(&[levels, n]);
-                for v in t.f32s_mut() {
-                    *v = 0.01 * rng.normal();
-                }
-                t
-            } else {
-                let mut t = Tensor::zeros(&[n, n]);
-                let d = t.f32s_mut();
-                for (p, v) in d.iter_mut().enumerate() {
-                    *v = 0.01 * rng.normal()
-                        + if p % (n + 1) == 0 { 5.0 } else { 0.0 };
-                }
-                t
-            };
-            vals.insert(format!("perm_logits.{}", site.name), logits);
-            let idx: Vec<i32> = if cfg.perm_mode == "random" {
-                let mut prng = rng.fork(1000 + si as u64);
-                prng.permutation(n).iter().map(|&i| i as i32).collect()
-            } else {
-                (0..n as i32).collect()
-            };
-            vals.insert(
-                format!("perm_idx.{}", site.name),
-                Tensor::from_i32(&[n], idx),
-            );
+            let ps = cfg.perm.init_site(si, &site.name, site.cols, &mut rng);
+            flags.push(ps.hard_flag());
+            ps.export_into(&mut vals);
         }
+        vals.insert("hard_flags".into(), Tensor::from_f32(&[n_sites], flags));
 
         Ok(TrainState { vals, site_names, budgets })
     }
@@ -354,7 +329,18 @@ impl<'rt> Trainer<'rt> {
 
         let mut state = self.init_state()?;
         let mut task = self.make_task()?;
-        let mut ctrl = PermController::new(&state.site_names, cfg.harden_threshold);
+        // Hardening knobs: the spec's typed params win over the config
+        // defaults; a mode without hardening (none/random) never fires.
+        let hardening = cfg.perm.hardening();
+        let threshold = hardening
+            .and_then(|h| h.threshold)
+            .unwrap_or(cfg.harden_threshold);
+        let patience = hardening
+            .and_then(|h| h.patience)
+            .unwrap_or(cfg.harden_patience);
+        let widths: Vec<usize> = entry.sites.iter().map(|s| s.cols).collect();
+        let mut ctrl = PermController::new(&widths, threshold, patience);
+        let mut scratch = SinkhornScratch::new();
 
         let (mut bx, mut by) = make_batch_buffers(&entry, batch);
         let mut result = RunResult {
@@ -364,7 +350,7 @@ impl<'rt> Trainer<'rt> {
             ..Default::default()
         };
 
-        let learned = cfg.perm_mode == "learned" || cfg.perm_mode == "kaleidoscope";
+        let learned = cfg.perm.learns();
         let dst_until = (cfg.steps as f64 * cfg.dst_end_frac) as usize;
         let t0 = std::time::Instant::now();
 
@@ -386,10 +372,10 @@ impl<'rt> Trainer<'rt> {
                     result.penalties[s].push(p);
                 }
                 // Hardening decisions (only when learning permutations).
-                if learned && cfg.harden_threshold >= 0.0 {
-                    let decisions = ctrl.observe(step, &pens, &entry);
+                if learned && threshold >= 0.0 {
+                    let decisions = ctrl.observe(step, &pens);
                     for site_i in decisions {
-                        self.harden_site(&mut state, &entry, site_i)?;
+                        self.harden_site(&mut state, &entry, site_i, &mut scratch)?;
                         result.harden_step[site_i] = Some(step);
                         if cfg.verbose {
                             eprintln!(
@@ -477,47 +463,71 @@ impl<'rt> Trainer<'rt> {
         // Fig. 4: identity distance of the final permutations.  For sites
         // still in the soft regime, decode the current soft matrix (what
         // hardening *would* produce) so the metric reflects the learned
-        // shuffle rather than the untouched identity index map.
-        for (i, site) in state.site_names.iter().enumerate() {
-            let hardened = state.vals["hard_flags"].f32s()[i] > 0.5;
-            let idx: Vec<usize> = if hardened || cfg.perm_mode != "learned" {
-                state.vals[&format!("perm_idx.{site}")]
-                    .i32s()
-                    .iter()
-                    .map(|&x| x as usize)
-                    .collect()
-            } else {
-                let n = entry.sites[i].cols;
-                let logits = state.vals[&format!("perm_logits.{site}")].f32s();
-                perm::decode(&perm::soft_perm(logits, n, 12), n)
-            };
-            result.identity_distance.push(perm::identity_distance(&idx));
-        }
+        // shuffle rather than the untouched identity index map.  The
+        // per-site Sinkhorn + Hungarian decodes are independent, so they
+        // fan out over the harness executor under the run's `--threads`
+        // budget, one reusable `SinkhornScratch` per worker; results merge
+        // in site order, so the output is identical at any worker count.
+        let site_ids: Vec<usize> = (0..state.site_names.len()).collect();
+        let workers = executor::resolve_workers(cfg.threads, site_ids.len());
+        let state_ref = &state;
+        let entry_ref = &entry;
+        let cfg_ref = &cfg;
+        result.identity_distance = executor::execute_sharded(
+            &site_ids,
+            workers,
+            |_wid| Ok(SinkhornScratch::new()),
+            |scratch, _slot, &i| {
+                let site = &state_ref.site_names[i];
+                let hardened = state_ref.vals["hard_flags"].f32s()[i] > 0.5;
+                let stored_idx = || -> Vec<usize> {
+                    state_ref.vals[&format!("perm_idx.{site}")]
+                        .i32s()
+                        .iter()
+                        .map(|&x| x as usize)
+                        .collect()
+                };
+                let idx: Vec<usize> = if hardened {
+                    stored_idx()
+                } else {
+                    let n = entry_ref.sites[i].cols;
+                    let logits = state_ref.vals[&format!("perm_logits.{site}")].f32s();
+                    cfg_ref
+                        .perm
+                        .decode_logits(logits, n, scratch)
+                        .unwrap_or_else(stored_idx)
+                };
+                Ok(perm::identity_distance(&idx))
+            },
+        )?;
         Ok(result)
     }
 
     /// Decode site `site_i`'s soft permutation to a hard index map and flip
-    /// its hard flag (the Apdx C.2 early-stop).
+    /// its hard flag (the Apdx C.2 early-stop).  Modes without a decodable
+    /// soft matrix (kaleidoscope: the K-matrix is not a pure permutation;
+    /// the comparator only measures overhead) keep their identity index
+    /// map and just flip the flag.
     fn harden_site(
         &self,
         state: &mut TrainState,
         entry: &crate::runtime::manifest::ModelEntry,
         site_i: usize,
+        scratch: &mut SinkhornScratch,
     ) -> Result<()> {
         let site = &entry.sites[site_i];
-        let name = &state.site_names[site_i];
+        let name = state.site_names[site_i].clone();
         let n = site.cols;
-        if self.cfg.perm_mode == "learned" {
+        let decoded = {
             let logits = state.vals[&format!("perm_logits.{name}")].f32s();
-            let m = perm::soft_perm(logits, n, 12);
-            let idx = perm::decode(&m, n);
+            self.cfg.perm.decode_logits(logits, n, scratch)
+        };
+        if let Some(idx) = decoded {
             state.vals.insert(
                 format!("perm_idx.{name}"),
                 Tensor::from_i32(&[n], idx.iter().map(|&i| i as i32).collect()),
             );
         }
-        // Kaleidoscope hardening: keep identity idx (the K-matrix is not a
-        // pure permutation; the comparator only measures overhead).
         let flags = state.vals.get_mut("hard_flags").unwrap();
         flags.f32s_mut()[site_i] = 1.0;
         Ok(())

@@ -4,8 +4,12 @@
 //! both; the exported artifacts use column permutations, matching the
 //! paper's main results).
 //!
-//! A "method" is (structure, perm_mode, grow_mode) — e.g. RigL is
+//! A "method" is (pattern spec, perm spec, grow_mode) — e.g. RigL is
 //! (unstructured, none, RigL); DynaDiag+PA-DST is (diag, learned, RigL).
+//! Both spec axes resolve through their registries, so parameterised
+//! forms (`block:4`, `learned:sinkhorn=24`) are first-class grid rows,
+//! and [`cross_perms`] crosses a method list with a perm list
+//! (`--perms learned,none,random`) into one journal-compatible grid.
 //!
 //! Two execution paths produce identical cells:
 //!
@@ -32,6 +36,7 @@ use super::{GrowMode, RunConfig, RunResult, Trainer};
 use crate::harness::executor;
 use crate::harness::shard::{in_shard, plan_cells, CellKey, Journal, META_KEY};
 use crate::kernels::micro::Backend;
+use crate::perm::model::resolve_perm;
 use crate::runtime::Runtime;
 use crate::sparsity::pattern::resolve_pattern;
 use crate::util::cli::resolve_threads;
@@ -39,22 +44,23 @@ use crate::util::json::{self, Json};
 
 /// One method row of Fig. 2 / Tbl. 11–12: a pattern spec (resolved through
 /// the `PatternRegistry` — bare family names or parameterised forms like
-/// `"block:8"`) plus the permutation and grow treatments.
+/// `"block:8"`) plus the permutation spec (`PermRegistry`) and grow rule.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Method {
     pub name: String,
     /// Pattern spec string — the structure axis of the grid.
     pub pattern: String,
-    pub perm_mode: String,
+    /// Perm spec string — the permutation axis of the grid.
+    pub perm: String,
     pub grow_mode: GrowMode,
 }
 
 impl Method {
-    fn zoo(name: &str, pattern: &str, perm_mode: &str, grow_mode: GrowMode) -> Method {
+    fn zoo(name: &str, pattern: &str, perm: &str, grow_mode: GrowMode) -> Method {
         Method {
             name: name.to_string(),
             pattern: pattern.to_string(),
-            perm_mode: perm_mode.to_string(),
+            perm: perm.to_string(),
             grow_mode,
         }
     }
@@ -96,24 +102,74 @@ pub fn methods() -> &'static [Method] {
     })
 }
 
-/// Resolve a method name — a zoo entry, or a pattern spec (`"block:4"`,
+/// Resolve a method name — a zoo entry, a pattern spec (`"block:4"`,
 /// `"nm:1:4"`, or any bare family name not shadowed by a zoo entry), which
-/// synthesizes a structured-DST method (no permutation, RigL grow).  This
-/// is what makes pattern hyper-params a first-class grid axis:
-/// `--methods RigL,block:4,block:8` sweeps block sizes.  A name that is
-/// neither keeps the registry's descriptive parse error (`nm:3:2` reports
-/// "N <= M", not just "unknown method").
+/// synthesizes a structured-DST method (no permutation, RigL grow), or a
+/// crossed form `"<method>+<perm spec>"` (what [`cross_perms`] names its
+/// rows, so journaled crossed cells re-resolve on resume).  This is what
+/// makes pattern and perm hyper-params first-class grid axes:
+/// `--methods RigL,block:4,block:8` sweeps block sizes,
+/// `--methods block:4+learned,block:4+none` sweeps perm treatments.  A
+/// name that is none of these keeps the registry's descriptive parse
+/// error (`nm:3:2` reports "N <= M", not just "unknown method").
 pub fn resolve_method(name: &str) -> Result<Method> {
     if let Some(m) = methods().iter().find(|m| m.name == name) {
         return Ok(m.clone());
     }
-    match resolve_pattern(name) {
-        Ok(p) => Ok(Method::zoo(name, &p.spec(), "none", GrowMode::RigL)),
-        Err(e) => Err(anyhow!(
-            "{name:?} is not a sweep method ({}) and not a pattern spec: {e}",
-            methods().iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join("|")
-        )),
+    let pattern_err = match resolve_pattern(name) {
+        Ok(p) => return Ok(Method::zoo(name, &p.spec(), "none", GrowMode::RigL)),
+        Err(e) => e,
+    };
+    // Crossed form: split at the rightmost '+' whose left side is itself a
+    // method and right side a perm spec (zoo names like "DynaDiag+PA" were
+    // matched above, so this never shadows them).  A resolvable base with
+    // a broken perm spec keeps the perm registry's descriptive error —
+    // not the irrelevant pattern-parse error for the full string.
+    if let Some((base, perm)) = name.rsplit_once('+') {
+        if let Ok(mut m) = resolve_method(base) {
+            let ph = resolve_perm(perm).map_err(|e| {
+                anyhow!("{name:?}: {base:?} is a method, but the perm side is invalid: {e}")
+            })?;
+            m.name = name.to_string();
+            m.perm = ph.spec();
+            return Ok(m);
+        }
     }
+    Err(anyhow!(
+        "{name:?} is not a sweep method ({}), a pattern spec, or a method+perm cross: \
+         {pattern_err}",
+        methods().iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join("|")
+    ))
+}
+
+/// Cross a method list with perm specs — the `--perms` grid axis.  Each
+/// (method, perm) pair becomes one row named `"{method}+{spec}"`, keeping
+/// the method's pattern/grow and replacing its perm treatment.  Specs
+/// canonicalise through the registry, so `--perms learned:sinkhorn=12`
+/// names and fingerprints identically to `--perms learned`, and the
+/// crossed names re-resolve through [`resolve_method`] (journal resume).
+pub fn cross_perms(methods: &[Method], perms: &[String]) -> Result<Vec<Method>> {
+    // An empty perm list would silently erase the whole grid; refuse it
+    // (an empty/`,`-only `--perms` value is a flag mistake, not a wish
+    // for zero cells).
+    if perms.is_empty() {
+        bail!("--perms needs at least one perm spec (e.g. learned,none)");
+    }
+    if methods.is_empty() {
+        bail!("--perms has no methods to cross with");
+    }
+    let mut out = Vec::with_capacity(methods.len() * perms.len());
+    for m in methods {
+        for spec in perms {
+            let ph = resolve_perm(spec)
+                .map_err(|e| anyhow!("--perms {spec:?}: {e}"))?;
+            let mut c = m.clone();
+            c.perm = ph.spec();
+            c.name = format!("{}+{}", m.name, ph.spec());
+            out.push(c);
+        }
+    }
+    Ok(out)
 }
 
 /// [`resolve_method`] as an `Option` — for lookups where a missing name is
@@ -167,7 +223,7 @@ fn run_cell(
         model: model.to_string(),
         pattern: resolve_pattern(&m.pattern)?,
         density,
-        perm_mode: m.perm_mode.clone(),
+        perm: resolve_perm(&m.perm)?,
         steps,
         grow_mode: m.grow_mode,
         seed,
@@ -426,13 +482,14 @@ pub fn run_sweep_sharded(
 }
 
 /// What a method *does* — the cell fingerprint carried by the journal.
-/// The first component is the pattern *spec*, so parameterised grid axes
-/// (`block:4` vs `block:8`) fingerprint differently, and a zoo entry whose
+/// The first two components are the pattern and perm *specs*, so
+/// parameterised grid axes (`block:4` vs `block:8`, `learned` vs
+/// `learned:sinkhorn=24`) fingerprint differently, and a zoo entry whose
 /// definition changed between the run that wrote a journal and the run
 /// resuming it is refused.  Bare-name specs render exactly as the
-/// pre-registry `structure.name()` did, so old journals still match.
+/// pre-registry strings did, so old journals still match.
 pub fn method_fingerprint(m: &Method) -> String {
-    format!("{}|{}|{:?}", m.pattern, m.perm_mode, m.grow_mode)
+    format!("{}|{}|{:?}", m.pattern, m.perm, m.grow_mode)
 }
 
 /// Serialise one cell (full `RunResult` fidelity) for the resume journal.
@@ -458,12 +515,19 @@ pub fn cell_to_json(c: &SweepCell) -> Json {
                 None => Json::Null,
             },
         ),
-        // The pattern spec alone, for downstream tooling (the fingerprint
-        // above is what resume integrity checks).
+        // The pattern / perm specs alone, for downstream tooling (the
+        // fingerprint above is what resume integrity checks).
         (
             "pattern",
             match &entry {
                 Some(m) => json::s(&m.pattern),
+                None => Json::Null,
+            },
+        ),
+        (
+            "perm",
+            match &entry {
+                Some(m) => json::s(&m.perm),
                 None => Json::Null,
             },
         ),
@@ -660,7 +724,7 @@ mod tests {
         // permutation, fingerprinted by its canonical spec.
         let m = method_by_name("block:4").unwrap();
         assert_eq!(m.pattern, "block:4");
-        assert_eq!(m.perm_mode, "none");
+        assert_eq!(m.perm, "none");
         assert_eq!(method_fingerprint(&m), "block:4|none|RigL");
         // Defaults canonicalise: block:16 is the bare family.
         assert_eq!(method_by_name("block:16").unwrap().pattern, "block");
@@ -674,6 +738,78 @@ mod tests {
         // known family reports the actual constraint, not just "unknown".
         let err = resolve_method("nm:3:2").unwrap_err().to_string();
         assert!(err.contains("N <= M"), "{err}");
+    }
+
+    #[test]
+    fn perm_specs_cross_into_grid_rows() {
+        // The --perms axis: every (method, perm) pair becomes one row.
+        let base = vec![method_by_name("RigL").unwrap(), method_by_name("block:4").unwrap()];
+        let perms = vec!["learned".to_string(), "none".to_string()];
+        let crossed = cross_perms(&base, &perms).unwrap();
+        assert_eq!(crossed.len(), 4);
+        assert_eq!(crossed[0].name, "RigL+learned");
+        assert_eq!(crossed[0].perm, "learned");
+        assert_eq!(crossed[0].pattern, "unstructured");
+        assert_eq!(crossed[3].name, "block:4+none");
+        assert_eq!(method_fingerprint(&crossed[2]), "block:4|learned|RigL");
+        // Crossed names re-resolve (journal resume), including over zoo
+        // names that themselves contain '+'.
+        let back = resolve_method("block:4+learned").unwrap();
+        assert_eq!(method_fingerprint(&back), method_fingerprint(&crossed[2]));
+        let pa = resolve_method("DynaDiag+PA+random").unwrap();
+        assert_eq!(method_fingerprint(&pa), "diag|random|RigL");
+        // Parameterised perm specs canonicalise before naming.
+        let canon = cross_perms(&base[..1], &["learned:sinkhorn=12".to_string()]).unwrap();
+        assert_eq!(canon[0].name, "RigL+learned");
+        // Bad perm specs keep their descriptive registry error — both via
+        // cross_perms and via a crossed method name.
+        let err = cross_perms(&base, &["learned:tau=0".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("tau"), "{err}");
+        let err = resolve_method("block:4+learned:tau=0").unwrap_err().to_string();
+        assert!(err.contains("tau"), "{err}");
+        // An empty perm list must refuse rather than erase the grid.
+        assert!(cross_perms(&base, &[]).is_err());
+        assert!(cross_perms(&[], &perms).is_err());
+    }
+
+    #[test]
+    fn zoo_fingerprints_unchanged_from_pre_registry_journals() {
+        // Every zoo fingerprint is pinned: a journal written before the
+        // perm registry must resume against today's definitions.
+        let want = [
+            ("RigL", "unstructured|none|RigL"),
+            ("SET", "unstructured|none|Set"),
+            ("MEST", "unstructured|none|Mest"),
+            ("DynaDiag", "diag|none|RigL"),
+            ("SRigL", "nm|none|RigL"),
+            ("DSB", "block|none|RigL"),
+            ("PixelatedBFly", "butterfly|none|RigL"),
+            ("DynaDiag+Rand", "diag|random|RigL"),
+            ("SRigL+Rand", "nm|random|RigL"),
+            ("DSB+Rand", "block|random|RigL"),
+            ("DynaDiag+PA", "diag|learned|RigL"),
+            ("SRigL+PA", "nm|learned|RigL"),
+            ("DSB+PA", "block|learned|RigL"),
+            ("PBFly+PA", "butterfly|learned|RigL"),
+            ("Dense", "dense|none|RigL"),
+        ];
+        for (name, fp) in want {
+            assert_eq!(method_fingerprint(&method_by_name(name).unwrap()), fp, "{name}");
+        }
+    }
+
+    #[test]
+    fn crossed_cells_roundtrip_through_journal() {
+        let cell = SweepCell {
+            method: "block:4+learned".to_string(),
+            sparsity: 0.9,
+            result: RunResult::default(),
+        };
+        let j = cell_to_json(&cell);
+        assert_eq!(j.get("perm").and_then(Json::as_str), Some("learned"));
+        assert_eq!(j.get("pattern").and_then(Json::as_str), Some("block:4"));
+        let back = cell_from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.method, "block:4+learned");
     }
 
     #[test]

@@ -38,6 +38,10 @@
 //! was measured under (`"diag"`, `"block:8"`, ...), resolved through the
 //! `PatternRegistry`.  Like `backend` it is provenance metadata, not
 //! identity, and is absent (read back as `""`) when a row has no pattern.
+//!
+//! `perm` (per-record) is the permutation-mode spec the row was measured
+//! under (`"learned"`, `"random:seed=7"`, ...), resolved through the
+//! `PermRegistry` — same provenance-not-identity rules as `pattern`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -62,6 +66,9 @@ pub struct BenchRecord {
     /// Structure-family spec the row was measured under ("" = not
     /// pattern-specific).  Metadata only — never part of [`BenchRecord::id`].
     pub pattern: String,
+    /// Permutation-mode spec the row was measured under ("" = not
+    /// perm-specific).  Metadata only — never part of [`BenchRecord::id`].
+    pub perm: String,
     /// Timed samples behind the quantiles; 0 for value-only records.
     pub n: usize,
     pub mean_s: f64,
@@ -81,6 +88,7 @@ impl BenchRecord {
             name: name.to_string(),
             backend: String::new(),
             pattern: String::new(),
+            perm: String::new(),
             n: s.n,
             mean_s: s.mean,
             p50_s: s.p50,
@@ -98,6 +106,7 @@ impl BenchRecord {
             name: name.to_string(),
             backend: String::new(),
             pattern: String::new(),
+            perm: String::new(),
             n: 0,
             mean_s: 0.0,
             p50_s: 0.0,
@@ -128,6 +137,13 @@ impl BenchRecord {
         self
     }
 
+    /// Builder-style perm-spec stamp (rows measured under a specific
+    /// permutation treatment, e.g. the Tbl. 5 overhead rows).
+    pub fn with_perm(mut self, spec: &str) -> BenchRecord {
+        self.perm = spec.to_string();
+        self
+    }
+
     /// The identity the baseline comparison matches on.
     pub fn id(&self) -> String {
         format!("{}/{}", self.group, self.name)
@@ -143,6 +159,9 @@ impl BenchRecord {
         }
         if !self.pattern.is_empty() {
             pairs.push(("pattern", json::s(&self.pattern)));
+        }
+        if !self.perm.is_empty() {
+            pairs.push(("perm", json::s(&self.perm)));
         }
         pairs.extend(vec![
             ("n", json::num(self.n as f64)),
@@ -189,6 +208,11 @@ impl BenchRecord {
                 .to_string(),
             pattern: v
                 .get("pattern")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            perm: v
+                .get("perm")
                 .and_then(Json::as_str)
                 .unwrap_or("")
                 .to_string(),

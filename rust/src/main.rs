@@ -9,6 +9,8 @@
 //!                    `--shard i/n` runs one process-level shard of the grid
 //!   patterns       — list the registered structure families with their spec
 //!                    grammar, defaults, dynamic/static flag, and rank cap
+//!   perms          — list the registered permutation modes with their spec
+//!                    grammar, defaults, hardening behaviour, and artifact
 //!   journal-merge  — combine per-shard sweep journals into one resumable
 //!                    journal (cluster fan-out of Fig. 2 regeneration)
 //!   nlr            — expressivity bound tables (Table 1, Apdx B/C.1);
@@ -29,6 +31,7 @@ use padst::coordinator::{sweep, GrowMode, RunConfig, Trainer};
 use padst::harness::{baseline, shard, telemetry::BenchReport};
 use padst::kernels::micro::Backend;
 use padst::nlr;
+use padst::perm::model::{perm_registry, resolve_perm};
 use padst::runtime::Runtime;
 use padst::sparsity::pattern::{registry, resolve_pattern, Structure};
 
@@ -107,7 +110,7 @@ fn usage() -> ! {
     eprintln!(
         "padst — Permutation-Augmented Dynamic Structured Sparse Training
 
-USAGE: padst <train|sweep|patterns|nlr|list> [--flag value ...]
+USAGE: padst <train|sweep|patterns|perms|nlr|list> [--flag value ...]
        padst bench-compare <old.json> <new.json> [--threshold PCT]
        padst journal-merge <a.jsonl> <b.jsonl> ... -o <out.jsonl>
 
@@ -118,9 +121,13 @@ train:
                           parameterised form — diag:K, banded:B, block:BS,
                           nm:N:M (see `padst patterns` for the grammar)
   --sparsity 0.9          target sparsity (density = 1 - sparsity)
-  --perm none|random|learned|kaleidoscope          (default learned)
+  --perm SPEC             perm spec: a mode name (none|random|learned|
+                          kaleidoscope, default learned) or a parameterised
+                          form — learned:sinkhorn=24:tau=0.5, random:seed=7
+                          (see `padst perms` for the grammar)
   --steps 200  --lr 1e-3  --lambda 5e-3  --seed 0
-  --dst-every 25  --harden-threshold 0.22
+  --dst-every 25  --harden-threshold 0.22  --harden-patience 3
+                          (a patience=/threshold= param on --perm wins)
   --grow rigl|set|mest    unstructured grow rule
   --artifacts DIR         artifact directory (default artifacts)
   --threads N             worker threads (default: available parallelism)
@@ -132,6 +139,9 @@ sweep:
   --methods ...           zoo names and/or pattern specs — a spec like
                           block:4 or nm:1:4 becomes a structured-DST grid
                           row of its own (pattern hyper-params as axes)
+  --perms learned,none    cross every method with these perm specs: each
+                          (method, perm) pair becomes one grid row named
+                          method+spec (the permutation axis of Fig. 2)
   --dry-run               plan the grid and print each cell's fingerprint
                           without opening a runtime (no artifacts needed)
   --csv PATH              dump results as CSV (atomic write)
@@ -153,6 +163,10 @@ journal-merge:
 patterns:
   list the registered structure families: spec grammar, bare-name
   defaults, dynamic/static flag, and rank-cap formula (from the registry)
+
+perms:
+  list the registered permutation modes: spec grammar, bare-name
+  defaults, hardening behaviour, and train artifact (from the registry)
 
 nlr:
   --d0 1024 --widths 4096,1024x24 --density 0.05   Table-1 style bounds
@@ -185,13 +199,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         model: args.get("model", "vit_tiny"),
         pattern,
         density,
-        perm_mode: args.get("perm", "learned"),
+        perm: resolve_perm(&args.get("perm", "learned"))?,
         steps: args.get_usize("steps", 200)?,
         lr: args.get_f64("lr", 1e-3)? as f32,
         lambda: args.get_f64("lambda", 5e-3)? as f32,
         dst_every: args.get_usize("dst-every", 25)?,
         eval_every: args.get_usize("eval-every", 50)?,
         harden_threshold: args.get_f64("harden-threshold", 0.22)?,
+        harden_patience: args.get_usize("harden-patience", 3)?,
         grow_mode,
         seed: args.get_usize("seed", 0)? as u64,
         verbose: true,
@@ -233,23 +248,33 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .map(|s| s.parse().unwrap())
         .collect();
     let method_names = args.get("methods", "RigL,DynaDiag,DynaDiag+PA,SRigL,SRigL+PA");
-    let methods: Vec<sweep::Method> = method_names
+    let mut methods: Vec<sweep::Method> = method_names
         .split(',')
         .map(sweep::resolve_method)
         .collect::<Result<_>>()?;
+    // The permutation grid axis: cross every method with each perm spec.
+    if let Some(perm_specs) = args.flags.get("perms") {
+        let perms: Vec<String> =
+            perm_specs.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect();
+        methods = sweep::cross_perms(&methods, &perms)?;
+    }
     if args.flags.contains_key("dry-run") {
         // Plan-only: resolve every method/spec, expand the grid, and show
         // the cell fingerprints the journal would carry.  No runtime (and
         // no artifacts) needed — this is the CI smoke path for
-        // parameterised specs.
+        // parameterised specs, including the perm axis.
         let cells = sweep::plan_grid(&methods, &sparsities);
         println!("# sweep dry run: model={model} steps={steps} seed={seed} ({} cells)", cells.len());
-        println!("{:<16} {:<22} {:>9}  fingerprint", "method", "pattern", "sparsity");
+        println!(
+            "{:<22} {:<18} {:<14} {:>9}  fingerprint",
+            "method", "pattern", "perm", "sparsity"
+        );
         for (m, sp) in &cells {
             println!(
-                "{:<16} {:<22} {:>8.0}%  {}",
+                "{:<22} {:<18} {:<14} {:>8.0}%  {}",
                 m.name,
                 m.pattern,
+                m.perm,
                 sp * 100.0,
                 sweep::method_fingerprint(m)
             );
@@ -343,6 +368,26 @@ fn cmd_patterns(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// List the registered permutation modes — rendered from the
+/// `PermRegistry` itself, so the table can never drift from the impls.
+fn cmd_perms(_args: &Args) -> Result<()> {
+    println!(
+        "{:<14} {:<56} {:<36} {:<44} {}",
+        "mode", "spec grammar", "bare-name defaults", "hardening", "train artifact"
+    );
+    for m in perm_registry().modes() {
+        println!(
+            "{:<14} {:<56} {:<36} {:<44} {}",
+            m.name, m.grammar, m.defaults, m.hardening, m.artifact
+        );
+    }
+    println!("\nexamples: --perm learned:sinkhorn=24:tau=0.5 | random:seed=7 | none");
+    println!("bare names keep the historical defaults (seed-run bit-identical).");
+    println!("hardening defaults come from --harden-threshold / --harden-patience;");
+    println!("a threshold=/patience= param on the spec wins.");
+    Ok(())
+}
+
 fn cmd_nlr(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 0)?; // 0 = auto
     let d0 = args.get_usize("d0", 1024)?;
@@ -389,7 +434,7 @@ fn cmd_list(args: &Args) -> Result<()> {
             e.program,
             e.model,
             e.structure,
-            e.perm_mode,
+            e.perm,
             e.spec.inputs.len(),
             e.spec.outputs.len()
         );
@@ -419,6 +464,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
         "patterns" => cmd_patterns(&args),
+        "perms" => cmd_perms(&args),
         "nlr" => cmd_nlr(&args),
         "list" => cmd_list(&args),
         _ => usage(),

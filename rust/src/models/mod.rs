@@ -2,6 +2,7 @@
 //! layouts, paper-scale shape tables for the Fig. 3 benches, and memory
 //! accounting for the Tbl. 2–5 overhead reports.
 
+use crate::perm::model::PermModel;
 use crate::runtime::manifest::ModelEntry;
 use crate::sparsity::pattern::SparsePattern;
 use crate::tensor::Tensor;
@@ -69,15 +70,15 @@ pub const PAPER_LAYERS: &[PaperLayer] = &[
 
 /// Bytes of state a training run holds per method, for the Tbl. 2–5 memory
 /// overhead analogue.  The mask term comes from the structure family's own
-/// [`SparsePattern::memory_footprint`] accounting; `perm_mode` in
-/// {"none","random","learned","kaleidoscope"}; learned soft perms cost an
-/// N x N f32 logits matrix per site (+ nothing at inference after
-/// hardening), kaleidoscope costs log2(N) x N angles, random costs one
-/// index map.
+/// [`SparsePattern::memory_footprint`] accounting and the permutation term
+/// from the mode's own [`PermModel::memory_bytes`]: learned soft perms
+/// cost an N x N f32 logits matrix per site (collapsing to one index map
+/// after hardening), kaleidoscope costs log2(N) x N angles, random costs
+/// one index map, none costs nothing.
 pub fn memory_footprint(
     entry: &ModelEntry,
     pattern: &dyn SparsePattern,
-    perm_mode: &str,
+    perm: &dyn PermModel,
     hardened: bool,
 ) -> usize {
     let params: usize = entry.n_params() * 4;
@@ -87,25 +88,12 @@ pub fn memory_footprint(
         .iter()
         .map(|s| pattern.memory_footprint(s.rows, s.cols))
         .sum();
-    let perm: usize = entry
+    let perm_bytes: usize = entry
         .sites
         .iter()
-        .map(|s| {
-            let n = s.cols;
-            match (perm_mode, hardened) {
-                ("none", _) => 0,
-                ("random", _) => n * 4,
-                (_, true) => n * 4, // hardened: index map only
-                ("learned", false) => n * n * 4 + n * 4,
-                ("kaleidoscope", false) => {
-                    let levels = (usize::BITS - (n - 1).leading_zeros()) as usize;
-                    levels * n * 4 + n * 4
-                }
-                _ => 0,
-            }
-        })
+        .map(|s| perm.memory_bytes(s.cols, hardened))
         .sum();
-    params + adam + masks + perm
+    params + adam + masks + perm_bytes
 }
 
 #[cfg(test)]
@@ -152,11 +140,12 @@ mod tests {
         // random > none, and hardening collapses learned to ~random.
         let e = toy_entry();
         let p = crate::sparsity::pattern::resolve_pattern("diag").unwrap();
-        let none = memory_footprint(&e, p.as_ref(), "none", false);
-        let rand = memory_footprint(&e, p.as_ref(), "random", false);
-        let kal = memory_footprint(&e, p.as_ref(), "kaleidoscope", false);
-        let learned = memory_footprint(&e, p.as_ref(), "learned", false);
-        let hard = memory_footprint(&e, p.as_ref(), "learned", true);
+        let pm = |spec: &str| crate::perm::model::resolve_perm(spec).unwrap();
+        let none = memory_footprint(&e, p.as_ref(), pm("none").as_ref(), false);
+        let rand = memory_footprint(&e, p.as_ref(), pm("random").as_ref(), false);
+        let kal = memory_footprint(&e, p.as_ref(), pm("kaleidoscope").as_ref(), false);
+        let learned = memory_footprint(&e, p.as_ref(), pm("learned").as_ref(), false);
+        let hard = memory_footprint(&e, p.as_ref(), pm("learned").as_ref(), true);
         assert!(none < rand && rand < kal && kal < learned);
         assert_eq!(hard, rand);
     }

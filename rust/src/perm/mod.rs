@@ -3,33 +3,186 @@
 //! penalty (Eqn. 14), Hungarian assignment for hard decode, the
 //! identity-distance metric of Sec. 6.3, and index-map algebra for
 //! re-indexed inference.
+//!
+//! Two projection paths share one numeric core ([`sinkhorn`] /
+//! [`SinkhornScratch`], bit-identical): the legacy free functions allocate
+//! per call, the scratch reuses its buffers across calls — the hot path
+//! for per-step multi-site projection (`table5_overhead` times both).
+//! The typed mode objects (state machine, spec registry, hardening
+//! controller) live in [`model`].
 
 pub mod hungarian;
+pub mod model;
 
 pub use hungarian::hungarian_max;
+pub use model::{resolve_perm, PermHandle, PermModel};
 
-/// Sinkhorn projection of a positive matrix onto (near-)doubly-stochastic.
-pub fn sinkhorn(m: &mut [f64], n: usize, iters: usize) {
-    const EPS: f64 = 1e-6;
+use crate::kernels::micro::{self, Backend};
+
+/// Numerical floor of the Sinkhorn projection: entries below this are
+/// raised to it before iterating (guarding the `exp` underflow to exact
+/// zero).  The floor is *guarded* — applied only to entries already below
+/// it — so re-projecting a (near-)doubly-stochastic matrix is idempotent;
+/// the old unconditional `+= EPS` drifted every entry on every call
+/// (regression-tested below).
+const EPS: f64 = 1e-6;
+
+/// One normalisation core shared by every projection path.  Per
+/// iteration: one pass that row-normalises while accumulating the column
+/// sums (fused — the column sums come for free during the row pass, in
+/// the same i-ascending order the unfused loop summed them), then one
+/// pass dividing by them.  `col` is caller-provided scratch of length n.
+fn sinkhorn_core(m: &mut [f64], col: &mut [f64], n: usize, iters: usize) {
+    debug_assert_eq!(m.len(), n * n);
+    debug_assert_eq!(col.len(), n);
     for v in m.iter_mut() {
-        *v += EPS;
+        if *v < EPS {
+            *v = EPS;
+        }
     }
     for _ in 0..iters {
+        col.fill(0.0);
         for i in 0..n {
-            let s: f64 = m[i * n..(i + 1) * n].iter().sum();
+            let row = &mut m[i * n..(i + 1) * n];
+            let s: f64 = row.iter().sum();
+            for (j, v) in row.iter_mut().enumerate() {
+                *v /= s;
+                col[j] += *v;
+            }
+        }
+        for i in 0..n {
+            for (j, c) in col.iter().enumerate() {
+                m[i * n + j] /= c;
+            }
+        }
+    }
+}
+
+/// Sinkhorn projection of a positive matrix onto (near-)doubly-stochastic.
+/// Allocating entry point; the hot path is [`SinkhornScratch::project`].
+pub fn sinkhorn(m: &mut [f64], n: usize, iters: usize) {
+    let mut col = vec![0.0f64; n];
+    sinkhorn_core(m, &mut col, n, iters);
+}
+
+/// Reusable-buffer Sinkhorn projection: no per-call `Vec` allocations
+/// once warm (buffers grow monotonically to the largest site seen), the
+/// row/col sums of each iteration fused into one pass, and an optional
+/// f32 path whose row reductions dispatch through the [`Backend`]
+/// microkernels.  Results are bit-identical to the allocating
+/// [`soft_perm`]/[`sinkhorn`] path (same core, pinned by test); the f32
+/// path is tolerance-level (advisory — analysis/benching, not the decode
+/// contract).
+#[derive(Default)]
+pub struct SinkhornScratch {
+    m: Vec<f64>,
+    col: Vec<f64>,
+    m32: Vec<f32>,
+    col32: Vec<f32>,
+    ones32: Vec<f32>,
+}
+
+impl SinkhornScratch {
+    pub fn new() -> SinkhornScratch {
+        SinkhornScratch::default()
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.m.len() < n * n {
+            self.m.resize(n * n, 0.0);
+        }
+        if self.col.len() < n {
+            self.col.resize(n, 0.0);
+        }
+    }
+
+    /// The soft permutation M = sinkhorn(exp((logits - rowmax)/tau)) into
+    /// the reusable buffer; returns the n*n slice (valid until the next
+    /// call).  `tau = 1` reproduces the historical un-tempered map
+    /// bit-for-bit (x/1.0 is exact in IEEE arithmetic).
+    pub fn soft_perm(&mut self, logits: &[f32], n: usize, iters: usize, tau: f64) -> &[f64] {
+        assert_eq!(logits.len(), n * n, "logits must be n x n");
+        self.ensure(n);
+        for i in 0..n {
+            let row = &logits[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max) as f64;
             for j in 0..n {
-                m[i * n + j] /= s;
+                self.m[i * n + j] = (((row[j] as f64) - mx) / tau).exp();
             }
         }
-        for j in 0..n {
-            let mut s = 0.0;
-            for i in 0..n {
-                s += m[i * n + j];
-            }
-            for i in 0..n {
-                m[i * n + j] /= s;
+        sinkhorn_core(&mut self.m[..n * n], &mut self.col[..n], n, iters);
+        &self.m[..n * n]
+    }
+
+    /// Project a caller-held matrix in place through the reusable column
+    /// buffer (same numerics as [`sinkhorn`], no allocation once warm).
+    pub fn project(&mut self, m: &mut [f64], n: usize, iters: usize) {
+        assert_eq!(m.len(), n * n);
+        self.ensure(n);
+        sinkhorn_core(m, &mut self.col[..n], n, iters);
+    }
+
+    /// f32 soft permutation with the per-row reductions dispatched through
+    /// the [`Backend`] microkernels (`micro::dot` against a ones vector —
+    /// the tiled/simd lane summation).  Half the memory traffic of the f64
+    /// path; tolerance-level agreement (~1e-4), so it serves analysis and
+    /// benching while the f64 path remains the decode contract.
+    pub fn soft_perm_f32(
+        &mut self,
+        logits: &[f32],
+        n: usize,
+        iters: usize,
+        tau: f64,
+        backend: Backend,
+    ) -> &[f32] {
+        assert_eq!(logits.len(), n * n, "logits must be n x n");
+        if self.m32.len() < n * n {
+            self.m32.resize(n * n, 0.0);
+        }
+        if self.col32.len() < n {
+            self.col32.resize(n, 0.0);
+        }
+        if self.ones32.len() < n {
+            self.ones32.resize(n, 1.0);
+        }
+        let tau = tau as f32;
+        for i in 0..n {
+            let row = &logits[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            for j in 0..n {
+                self.m32[i * n + j] = ((row[j] - mx) / tau).exp();
             }
         }
+        let eps = EPS as f32;
+        for v in self.m32[..n * n].iter_mut() {
+            if *v < eps {
+                *v = eps;
+            }
+        }
+        for _ in 0..iters {
+            self.col32[..n].fill(0.0);
+            for i in 0..n {
+                let s = micro::dot(&self.m32[i * n..(i + 1) * n], &self.ones32[..n], backend);
+                let row = &mut self.m32[i * n..(i + 1) * n];
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v /= s;
+                    self.col32[j] += *v;
+                }
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    self.m32[i * n + j] /= self.col32[j];
+                }
+            }
+        }
+        &self.m32[..n * n]
+    }
+
+    /// Allocation fingerprint (base pointer + capacity of the f64 matrix
+    /// buffer): unchanged across same-size calls once warm — the no-alloc
+    /// contract `table5_overhead` reports and the perm model tests pin.
+    pub fn buffer_fingerprint(&self) -> (usize, usize) {
+        (self.m.as_ptr() as usize, self.m.capacity())
     }
 }
 
@@ -181,6 +334,109 @@ mod tests {
         }
         let m = soft_perm(&logits, n, 10);
         assert_eq!(decode(&m, n), (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sinkhorn_projection_is_idempotent() {
+        // Regression: the old unconditional `+= EPS` drifted every entry
+        // of an already doubly-stochastic matrix on re-projection.  The
+        // guarded floor leaves a converged projection fixed.
+        let mut rng = Rng::new(9);
+        let n = 16;
+        let mut m: Vec<f64> = (0..n * n).map(|_| rng.f32() as f64 + 0.1).collect();
+        sinkhorn(&mut m, n, 30);
+        let once = m.clone();
+        sinkhorn(&mut m, n, 30);
+        let drift = m
+            .iter()
+            .zip(&once)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(drift < 1e-9, "re-projection drifted by {drift}");
+    }
+
+    #[test]
+    fn scratch_matches_allocating_path_bitwise() {
+        let mut rng = Rng::new(10);
+        let n = 24;
+        let logits: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let legacy = soft_perm(&logits, n, 12);
+        let mut scratch = SinkhornScratch::new();
+        let fast = scratch.soft_perm(&logits, n, 12, 1.0);
+        assert_eq!(legacy.len(), fast.len());
+        for (i, (a, b)) in legacy.iter().zip(fast.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "entry {i}: {a} != {b}");
+        }
+        // project() on a caller buffer matches sinkhorn() too.
+        let mut a: Vec<f64> = (0..n * n).map(|_| rng.f32() as f64 + 0.05).collect();
+        let mut b = a.clone();
+        sinkhorn(&mut a, n, 8);
+        scratch.project(&mut b, n, 8);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn scratch_reuses_buffers_across_calls() {
+        let mut rng = Rng::new(11);
+        let n = 32;
+        let logits: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut scratch = SinkhornScratch::new();
+        scratch.soft_perm(&logits, n, 4, 1.0); // warm
+        let fp = scratch.buffer_fingerprint();
+        for _ in 0..5 {
+            scratch.soft_perm(&logits, n, 4, 1.0);
+            assert_eq!(scratch.buffer_fingerprint(), fp, "scratch reallocated");
+        }
+        // Smaller sites reuse the same buffer as well.
+        let small: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        scratch.soft_perm(&small, 8, 4, 1.0);
+        assert_eq!(scratch.buffer_fingerprint(), fp);
+    }
+
+    #[test]
+    fn f32_path_agrees_with_f64_within_tolerance() {
+        let mut rng = Rng::new(12);
+        let n = 16;
+        let logits: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut scratch = SinkhornScratch::new();
+        let m64: Vec<f64> = scratch.soft_perm(&logits, n, 12, 1.0).to_vec();
+        for &backend in crate::kernels::micro::Backend::all() {
+            let m32 = scratch.soft_perm_f32(&logits, n, 12, 1.0, backend);
+            let diff = m64
+                .iter()
+                .zip(m32.iter())
+                .map(|(a, b)| (a - *b as f64).abs())
+                .fold(0.0f64, f64::max);
+            assert!(diff < 1e-4, "[{:?}] f32 path diverged by {diff}", backend);
+            // And it must decode to the same permutation.
+            let as64: Vec<f64> = m32.iter().map(|&x| x as f64).collect();
+            assert_eq!(decode(&as64, n), decode(&m64, n), "[{:?}]", backend);
+        }
+    }
+
+    #[test]
+    fn tempered_soft_perm_sharpens() {
+        // tau < 1 sharpens the map toward its decoded vertex: the planted
+        // entries' mass grows.
+        let n = 8;
+        let mut rng = Rng::new(13);
+        let mut logits = vec![0.0f32; n * n];
+        for v in logits.iter_mut() {
+            *v = 0.2 * rng.normal();
+        }
+        for i in 0..n {
+            logits[i * n + i] += 1.0;
+        }
+        let mut scratch = SinkhornScratch::new();
+        let warm: f64 = {
+            let m = scratch.soft_perm(&logits, n, 12, 1.0);
+            (0..n).map(|i| m[i * n + i]).sum()
+        };
+        let sharp: f64 = {
+            let m = scratch.soft_perm(&logits, n, 12, 0.25);
+            (0..n).map(|i| m[i * n + i]).sum()
+        };
+        assert!(sharp > warm, "tau=0.25 diagonal mass {sharp} <= tau=1 mass {warm}");
     }
 
     #[test]

@@ -1,0 +1,1123 @@
+//! The permutation layer: one first-class object per permutation mode.
+//!
+//! The paper's central contribution is the *learned shuffle* (Sec. 4.2):
+//! a per-layer permutation trained jointly with the structured weights,
+//! softened via Gumbel-Sinkhorn and hardened to an index map once its
+//! AutoShuffle penalty (Eqn. 14) crosses delta (Apdx C.2).  This module
+//! makes that lifecycle typed, mirroring the pattern registry in
+//! `sparsity::pattern`:
+//!
+//! * [`PermState`] — the per-site state machine
+//!   (`Identity` → frozen, `Soft` → learning, `Hard` → re-indexing);
+//! * [`PermSite`] — one site's typed state plus its export into the
+//!   artifact input tensors (`perm_logits.*` / `perm_idx.*` /
+//!   `hard_flags`, the names the AOT programs consume — old checkpoints
+//!   carrying those keys load unchanged);
+//! * [`PermModel`] — the mode trait (init, hardening params, Sinkhorn +
+//!   Hungarian decode, memory accounting), one impl per mode:
+//!   [`LearnedPerm`], [`KaleidoscopePerm`], [`RandomPerm`], [`NoPerm`];
+//! * [`PermRegistry`] — parameterised spec strings (`"learned"`,
+//!   `"learned:sinkhorn=24:tau=0.5"`, `"random:seed=7"`, `"none"`)
+//!   resolved into trait objects.  Bare names keep today's defaults and
+//!   reproduce seed-run state bit-identically (pinned by test).
+//!
+//! All mode dispatch lives here.  The coordinator, sweep grid, CLI,
+//! benches, and examples hold a [`PermHandle`] and call trait methods;
+//! none of them match on a mode string.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{decode, SinkhornScratch};
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Back-compat key name: manifests written by `python/compile/aot.py`
+/// (and the historical Rust structs) call the permutation treatment
+/// `perm_mode`.  The parser in `runtime::manifest` reads this key; no
+/// other module spells the legacy name.
+pub const MANIFEST_PERM_KEY: &str = "perm_mode";
+
+/// Historical defaults a bare spec resolves to (and canonicalises back
+/// to): the Sinkhorn iteration count of the host decode path, the
+/// softmax temperature (1 = the historical un-tempered exp), the
+/// hardening debounce, and the frozen-random seed base
+/// (`rng.fork(1000 + site)` in the pre-registry init).
+pub const DEFAULT_SINKHORN_ITERS: usize = 12;
+pub const DEFAULT_TAU: f64 = 1.0;
+pub const DEFAULT_PATIENCE: usize = 3;
+pub const DEFAULT_RANDOM_SEED: u64 = 1000;
+
+/// Mode tag — one variant per [`PermModel`] impl.  String forms match the
+/// historical `perm_mode` values (manifest, old journals, CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PermMode {
+    NoPerm,
+    Random,
+    Learned,
+    Kaleidoscope,
+}
+
+impl PermMode {
+    pub fn parse(s: &str) -> Option<PermMode> {
+        Some(match s {
+            "none" => PermMode::NoPerm,
+            "random" => PermMode::Random,
+            "learned" => PermMode::Learned,
+            "kaleidoscope" => PermMode::Kaleidoscope,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PermMode::NoPerm => "none",
+            PermMode::Random => "random",
+            PermMode::Learned => "learned",
+            PermMode::Kaleidoscope => "kaleidoscope",
+        }
+    }
+}
+
+/// The per-site permutation state machine (Sec. 4.2 / Apdx C.2):
+///
+/// ```text
+///   Identity ──────────────────────────────┐ (frozen modes: none)
+///       │ init (learned/kaleidoscope)      │
+///       ▼                                  ▼
+///     Soft ── penalty < delta for        Hard  (random inits here;
+///              `patience` steps ─────────▶      re-indexing, never revisited)
+/// ```
+///
+/// `Soft` carries the trained logits plus the projection parameters the
+/// spec fixed; `Hard` carries the decoded index map the kernels fold into
+/// their index streams.
+#[derive(Clone, Debug)]
+pub enum PermState {
+    /// No permutation: the identity index map, never trained.
+    Identity,
+    /// Soft regime: logits updated by the train artifact every step,
+    /// Sinkhorn-projected with these parameters at decode time.
+    Soft { logits: Tensor, sinkhorn_iters: usize, temperature: f64 },
+    /// Hardened: a frozen index map; the layer runs re-indexing
+    /// (`(P x)_i = x[index_map[i]]`) folded into the kernel index stream.
+    Hard { index_map: Vec<usize> },
+}
+
+impl PermState {
+    pub fn is_hard(&self) -> bool {
+        !matches!(self, PermState::Soft { .. })
+    }
+
+    /// The hard index map, when one exists (`Identity` is implicit).
+    pub fn index_map(&self) -> Option<&[usize]> {
+        match self {
+            PermState::Hard { index_map } => Some(index_map),
+            _ => None,
+        }
+    }
+}
+
+/// One site's typed permutation state plus the inert logits frozen modes
+/// still export (the train artifacts take `perm_logits.*` as input for
+/// every mode; the historical init drew them from the run RNG even when
+/// nothing trains them, and seed parity requires the same draws).
+#[derive(Clone, Debug)]
+pub struct PermSite {
+    pub name: String,
+    /// Permutation dimension N (the site's input width).
+    pub n: usize,
+    pub state: PermState,
+    frozen_logits: Option<Tensor>,
+}
+
+impl PermSite {
+    pub fn new(name: &str, n: usize, state: PermState, frozen_logits: Option<Tensor>) -> PermSite {
+        PermSite { name: name.to_string(), n, state, frozen_logits }
+    }
+
+    /// The `hard_flags` entry this site contributes: 1 = the artifact's
+    /// re-indexing branch, 0 = the soft N x N matmul branch.
+    pub fn hard_flag(&self) -> f32 {
+        if self.state.is_hard() {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// The logits tensor exported as `perm_logits.{name}` (soft sites own
+    /// theirs; frozen sites export the inert init draw).
+    pub fn logits(&self) -> Option<&Tensor> {
+        match &self.state {
+            PermState::Soft { logits, .. } => Some(logits),
+            _ => self.frozen_logits.as_ref(),
+        }
+    }
+
+    /// The index map exported as `perm_idx.{name}` (identity unless Hard).
+    pub fn index_tensor(&self) -> Tensor {
+        let idx: Vec<i32> = match self.state.index_map() {
+            Some(map) => map.iter().map(|&i| i as i32).collect(),
+            None => (0..self.n as i32).collect(),
+        };
+        Tensor::from_i32(&[self.n], idx)
+    }
+
+    /// Write this site's artifact inputs into a `TrainState`-style vals
+    /// map (the names every AOT program consumes).
+    pub fn export_into(&self, vals: &mut HashMap<String, Tensor>) {
+        if let Some(l) = self.logits() {
+            vals.insert(format!("perm_logits.{}", self.name), l.clone());
+        }
+        vals.insert(format!("perm_idx.{}", self.name), self.index_tensor());
+    }
+
+    /// The Soft → Hard transition (monotone; asserted, since re-softening
+    /// a hardened site would corrupt the Apdx C.2 early-stop contract).
+    pub fn harden(&mut self, index_map: Vec<usize>) {
+        debug_assert_eq!(index_map.len(), self.n);
+        self.state = PermState::Hard { index_map };
+    }
+}
+
+/// Spec-level hardening overrides.  `None` fields fall back to the run
+/// config (`--harden-threshold` / `--harden-patience`); a mode that
+/// returns `None` from [`PermModel::hardening`] never hardens.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PermHardening {
+    pub threshold: Option<f64>,
+    pub patience: Option<usize>,
+}
+
+/// Everything a permutation mode knows, as one object.
+///
+/// Contract shared by all impls:
+/// * `init_site` consumes the RNG exactly as the historical
+///   `Trainer::init_state` did for its mode, so seed checkpoints are
+///   bit-identical (pinned by `tests/perm_model.rs`).
+/// * `spec` round-trips through [`resolve_perm`]; modes at defaults print
+///   the bare name, so journals/fingerprints written pre-registry still
+///   match.
+/// * `decode_logits` returns `Some` only for modes with an N x N soft
+///   matrix to decode (Learned); Kaleidoscope hardens to the identity map
+///   (its K-matrix is not a pure permutation — the comparator only
+///   measures overhead).
+pub trait PermModel: fmt::Debug + Send + Sync {
+    /// Mode tag (one per impl).
+    fn mode(&self) -> PermMode;
+
+    /// Canonical spec string; [`resolve_perm`] parses it back to an equal
+    /// model.
+    fn spec(&self) -> String;
+
+    /// Does this mode train logits (penalties flow, hardening applies)?
+    fn learns(&self) -> bool {
+        matches!(self.mode(), PermMode::Learned | PermMode::Kaleidoscope)
+    }
+
+    /// Suffix selecting the AOT train artifact: `"{model}_train{suffix}"`.
+    fn artifact_suffix(&self) -> &'static str;
+
+    /// Build site `site_i`'s initial typed state for permutation dimension
+    /// `n`, consuming `rng` exactly as the historical init did.
+    fn init_site(&self, site_i: usize, name: &str, n: usize, rng: &mut Rng) -> PermSite;
+
+    /// Projection parameters of the soft state — (Sinkhorn iterations,
+    /// temperature) — used when `Soft` states rebind on checkpoint resume
+    /// and by the decode path.  Modes whose soft state never host-decodes
+    /// keep the defaults.
+    fn projection(&self) -> (usize, f64) {
+        (DEFAULT_SINKHORN_ITERS, DEFAULT_TAU)
+    }
+
+    /// Hardening parameters; `None` = this mode never hardens.
+    fn hardening(&self) -> Option<PermHardening>;
+
+    /// Sinkhorn + Hungarian decode of a soft site's current logits into a
+    /// hard index map, using the spec's projection parameters.  `None`
+    /// for modes without an N x N soft matrix.
+    fn decode_logits(
+        &self,
+        logits: &[f32],
+        n: usize,
+        scratch: &mut SinkhornScratch,
+    ) -> Option<Vec<usize>>;
+
+    /// Bytes of permutation state one training run holds per site of
+    /// width `n` (Tbl. 2–5 accounting).
+    fn memory_bytes(&self, n: usize, hardened: bool) -> usize;
+}
+
+/// Shared, cheaply clonable permutation handle — what `RunConfig` and the
+/// sweep grid carry.
+pub type PermHandle = Arc<dyn PermModel>;
+
+/// Resolve a spec string against the global registry.
+pub fn resolve_perm(spec: &str) -> Result<PermHandle> {
+    perm_registry().resolve(spec)
+}
+
+/// Reconstruct typed per-site state from a `TrainState`-style vals map
+/// (checkpoint resume): hardened sites come back as `Hard` with their
+/// saved index maps, soft sites rebind the saved logits under the model's
+/// projection parameters, frozen modes classify as at init.
+pub fn sites_from_vals(
+    model: &dyn PermModel,
+    site_names: &[String],
+    widths: &[usize],
+    vals: &HashMap<String, Tensor>,
+) -> Result<Vec<PermSite>> {
+    let flags = vals
+        .get("hard_flags")
+        .ok_or_else(|| anyhow!("state has no hard_flags tensor"))?
+        .f32s();
+    if flags.len() != site_names.len() {
+        bail!("hard_flags has {} entries for {} sites", flags.len(), site_names.len());
+    }
+    site_names
+        .iter()
+        .zip(widths)
+        .enumerate()
+        .map(|(i, (name, &n))| {
+            let logits = vals.get(&format!("perm_logits.{name}")).cloned();
+            let hardened = flags[i] > 0.5;
+            let state = if !hardened && model.learns() {
+                let (iters, tau) = model.projection();
+                PermState::Soft {
+                    logits: logits
+                        .clone()
+                        .ok_or_else(|| anyhow!("soft site {name:?} has no perm_logits"))?,
+                    sinkhorn_iters: iters,
+                    temperature: tau,
+                }
+            } else if model.mode() == PermMode::NoPerm {
+                PermState::Identity
+            } else {
+                let idx = vals
+                    .get(&format!("perm_idx.{name}"))
+                    .ok_or_else(|| anyhow!("hardened site {name:?} has no perm_idx"))?;
+                PermState::Hard {
+                    index_map: idx.i32s().iter().map(|&x| x as usize).collect(),
+                }
+            };
+            Ok(PermSite { name: name.clone(), n, state, frozen_logits: logits })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Shared init helpers
+// ---------------------------------------------------------------------------
+
+/// The historical identity-biased N x N logits draw — run for *every*
+/// non-kaleidoscope mode at init (frozen modes keep the tensor inert),
+/// which is what keeps the per-site RNG stream identical across modes.
+fn identity_biased_logits(n: usize, rng: &mut Rng) -> Tensor {
+    let mut t = Tensor::zeros(&[n, n]);
+    let d = t.f32s_mut();
+    for (p, v) in d.iter_mut().enumerate() {
+        *v = 0.01 * rng.normal() + if p % (n + 1) == 0 { 5.0 } else { 0.0 };
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Mode impls
+// ---------------------------------------------------------------------------
+
+/// PA-DST's learned permutation: Gumbel-Sinkhorn soft training, Eqn. 14
+/// penalty, Hungarian hard decode at the Apdx C.2 early stop.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LearnedPerm {
+    /// Sinkhorn projection iterations of the host decode path.
+    pub sinkhorn_iters: usize,
+    /// Softmax temperature (logits are divided by tau before exp);
+    /// 1 = the historical un-tempered map, bit-identical to it.
+    pub tau: f64,
+    /// Hardening debounce override (`None` = `--harden-patience`).
+    pub patience: Option<usize>,
+    /// Normalised-penalty threshold override (`None` = `--harden-threshold`).
+    pub threshold: Option<f64>,
+}
+
+impl Default for LearnedPerm {
+    fn default() -> Self {
+        LearnedPerm {
+            sinkhorn_iters: DEFAULT_SINKHORN_ITERS,
+            tau: DEFAULT_TAU,
+            patience: None,
+            threshold: None,
+        }
+    }
+}
+
+impl PermModel for LearnedPerm {
+    fn mode(&self) -> PermMode {
+        PermMode::Learned
+    }
+
+    fn spec(&self) -> String {
+        let mut s = "learned".to_string();
+        if self.sinkhorn_iters != DEFAULT_SINKHORN_ITERS {
+            s.push_str(&format!(":sinkhorn={}", self.sinkhorn_iters));
+        }
+        if self.tau != DEFAULT_TAU {
+            s.push_str(&format!(":tau={}", self.tau));
+        }
+        if let Some(p) = self.patience {
+            s.push_str(&format!(":patience={p}"));
+        }
+        if let Some(t) = self.threshold {
+            s.push_str(&format!(":threshold={t}"));
+        }
+        s
+    }
+
+    fn artifact_suffix(&self) -> &'static str {
+        ""
+    }
+
+    fn init_site(&self, _site_i: usize, name: &str, n: usize, rng: &mut Rng) -> PermSite {
+        let logits = identity_biased_logits(n, rng);
+        PermSite::new(
+            name,
+            n,
+            PermState::Soft {
+                logits,
+                sinkhorn_iters: self.sinkhorn_iters,
+                temperature: self.tau,
+            },
+            None,
+        )
+    }
+
+    fn projection(&self) -> (usize, f64) {
+        (self.sinkhorn_iters, self.tau)
+    }
+
+    fn hardening(&self) -> Option<PermHardening> {
+        Some(PermHardening { threshold: self.threshold, patience: self.patience })
+    }
+
+    fn decode_logits(
+        &self,
+        logits: &[f32],
+        n: usize,
+        scratch: &mut SinkhornScratch,
+    ) -> Option<Vec<usize>> {
+        let m = scratch.soft_perm(logits, n, self.sinkhorn_iters, self.tau);
+        Some(decode(m, n))
+    }
+
+    fn memory_bytes(&self, n: usize, hardened: bool) -> usize {
+        if hardened {
+            n * 4 // index map only
+        } else {
+            n * n * 4 + n * 4 // logits matrix + index map
+        }
+    }
+}
+
+/// Kaleidoscope comparator: structured log2(N) x N butterfly-angle logits
+/// (Tbl. 5).  Hardening keeps the identity index map — the K-matrix is
+/// not a pure permutation, the comparator only measures overhead.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KaleidoscopePerm {
+    pub patience: Option<usize>,
+    pub threshold: Option<f64>,
+}
+
+impl PermModel for KaleidoscopePerm {
+    fn mode(&self) -> PermMode {
+        PermMode::Kaleidoscope
+    }
+
+    fn spec(&self) -> String {
+        let mut s = "kaleidoscope".to_string();
+        if let Some(p) = self.patience {
+            s.push_str(&format!(":patience={p}"));
+        }
+        if let Some(t) = self.threshold {
+            s.push_str(&format!(":threshold={t}"));
+        }
+        s
+    }
+
+    fn artifact_suffix(&self) -> &'static str {
+        "_kperm"
+    }
+
+    fn init_site(&self, _site_i: usize, name: &str, n: usize, rng: &mut Rng) -> PermSite {
+        let levels = (usize::BITS - (n - 1).leading_zeros()) as usize;
+        let mut logits = Tensor::zeros(&[levels, n]);
+        for v in logits.f32s_mut() {
+            *v = 0.01 * rng.normal();
+        }
+        PermSite::new(
+            name,
+            n,
+            PermState::Soft {
+                logits,
+                sinkhorn_iters: DEFAULT_SINKHORN_ITERS,
+                temperature: DEFAULT_TAU,
+            },
+            None,
+        )
+    }
+
+    fn hardening(&self) -> Option<PermHardening> {
+        Some(PermHardening { threshold: self.threshold, patience: self.patience })
+    }
+
+    fn decode_logits(
+        &self,
+        _logits: &[f32],
+        _n: usize,
+        _scratch: &mut SinkhornScratch,
+    ) -> Option<Vec<usize>> {
+        None
+    }
+
+    fn memory_bytes(&self, n: usize, hardened: bool) -> usize {
+        if hardened {
+            n * 4
+        } else {
+            let levels = (usize::BITS - (n - 1).leading_zeros()) as usize;
+            levels * n * 4 + n * 4
+        }
+    }
+}
+
+/// Frozen random permutation (the Tbl. 11 'Random' rows): one map sampled
+/// at init from `rng.fork(seed + site)`, hard from step 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RandomPerm {
+    /// Fork base of the per-site sample (`seed + site_index`).
+    pub seed: u64,
+}
+
+impl PermModel for RandomPerm {
+    fn mode(&self) -> PermMode {
+        PermMode::Random
+    }
+
+    fn spec(&self) -> String {
+        if self.seed == DEFAULT_RANDOM_SEED {
+            "random".into()
+        } else {
+            format!("random:seed={}", self.seed)
+        }
+    }
+
+    fn artifact_suffix(&self) -> &'static str {
+        ""
+    }
+
+    fn init_site(&self, site_i: usize, name: &str, n: usize, rng: &mut Rng) -> PermSite {
+        let logits = identity_biased_logits(n, rng);
+        let mut prng = rng.fork(self.seed + site_i as u64);
+        let index_map = prng.permutation(n);
+        PermSite::new(name, n, PermState::Hard { index_map }, Some(logits))
+    }
+
+    fn hardening(&self) -> Option<PermHardening> {
+        None
+    }
+
+    fn decode_logits(
+        &self,
+        _logits: &[f32],
+        _n: usize,
+        _scratch: &mut SinkhornScratch,
+    ) -> Option<Vec<usize>> {
+        None
+    }
+
+    fn memory_bytes(&self, n: usize, _hardened: bool) -> usize {
+        n * 4
+    }
+}
+
+/// No permutation: the structured-DST baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NoPerm;
+
+impl PermModel for NoPerm {
+    fn mode(&self) -> PermMode {
+        PermMode::NoPerm
+    }
+
+    fn spec(&self) -> String {
+        "none".into()
+    }
+
+    fn artifact_suffix(&self) -> &'static str {
+        "_noperm"
+    }
+
+    fn init_site(&self, _site_i: usize, name: &str, n: usize, rng: &mut Rng) -> PermSite {
+        let logits = identity_biased_logits(n, rng);
+        PermSite::new(name, n, PermState::Identity, Some(logits))
+    }
+
+    fn hardening(&self) -> Option<PermHardening> {
+        None
+    }
+
+    fn decode_logits(
+        &self,
+        _logits: &[f32],
+        _n: usize,
+        _scratch: &mut SinkhornScratch,
+    ) -> Option<Vec<usize>> {
+        None
+    }
+
+    fn memory_bytes(&self, _n: usize, _hardened: bool) -> usize {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hardening controller (Apdx C.2) — absorbed from coordinator::perm_ctrl
+// ---------------------------------------------------------------------------
+
+/// Permutation-hardening controller.
+///
+/// The paper tracks each layer's soft-permutation penalty (Eqn. 14,
+/// Fig. 5) and stops learning that layer's permutation — switching to
+/// hard re-indexing — once the penalty crosses a threshold delta (Fig. 6
+/// shows the per-layer crossing epochs).  The raw penalty is normalised
+/// by the permutation dimension N so a single delta works across layer
+/// widths (the raw penalty scales ~linearly in N for doubly-stochastic
+/// matrices), and the decision is debounced over `patience` consecutive
+/// observations so a single noisy step cannot harden a layer prematurely.
+/// Both knobs are typed parameters now (perm spec `patience=`/`threshold=`
+/// overrides, CLI `--harden-patience`/`--harden-threshold` defaults)
+/// instead of the old hardcoded constants.
+pub struct PermController {
+    threshold: f64,
+    patience: usize,
+    widths: Vec<usize>,
+    below: Vec<usize>,
+    hardened: Vec<bool>,
+}
+
+impl PermController {
+    /// `widths[i]` is site i's permutation dimension N (the normaliser).
+    pub fn new(widths: &[usize], threshold: f64, patience: usize) -> PermController {
+        PermController {
+            threshold,
+            patience: patience.max(1),
+            widths: widths.to_vec(),
+            below: vec![0; widths.len()],
+            hardened: vec![false; widths.len()],
+        }
+    }
+
+    /// Feed this step's raw per-site penalties; returns the sites to
+    /// harden *now*.  Hardening is monotone: a hardened site is never
+    /// revisited.
+    pub fn observe(&mut self, _step: usize, penalties: &[f32]) -> Vec<usize> {
+        assert_eq!(penalties.len(), self.widths.len());
+        let mut fire = Vec::new();
+        for (i, &p) in penalties.iter().enumerate() {
+            if self.hardened[i] {
+                continue;
+            }
+            let norm = p as f64 / self.widths[i] as f64;
+            if norm < self.threshold {
+                self.below[i] += 1;
+                if self.below[i] >= self.patience {
+                    self.hardened[i] = true;
+                    fire.push(i);
+                }
+            } else {
+                self.below[i] = 0;
+            }
+        }
+        fire
+    }
+
+    pub fn is_hardened(&self, i: usize) -> bool {
+        self.hardened[i]
+    }
+
+    pub fn n_hardened(&self) -> usize {
+        self.hardened.iter().filter(|&&h| h).count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// One registered mode: spec grammar, defaults, hardening behaviour, and
+/// the parser that turns spec arguments into a model object.  The
+/// `padst perms` subcommand renders exactly this table.
+pub struct PermEntry {
+    pub name: &'static str,
+    /// Spec grammar, e.g. `learned[:sinkhorn=I][:tau=T][:patience=P][:threshold=D]`.
+    pub grammar: &'static str,
+    /// Defaults a bare name resolves to.
+    pub defaults: &'static str,
+    /// Hardening behaviour rendered for the table.
+    pub hardening: &'static str,
+    /// Train artifact the mode selects.
+    pub artifact: &'static str,
+    parse: fn(&[&str]) -> Result<PermHandle>,
+}
+
+/// Named registry of every permutation mode.  `resolve` accepts both bare
+/// mode names (historical defaults) and parameterised specs.
+pub struct PermRegistry {
+    modes: Vec<PermEntry>,
+}
+
+impl PermRegistry {
+    pub fn modes(&self) -> &[PermEntry] {
+        &self.modes
+    }
+
+    /// Resolve `"mode[:key=value[:key=value]]"` into a model object.
+    pub fn resolve(&self, spec: &str) -> Result<PermHandle> {
+        let mut parts = spec.split(':');
+        let mode = parts.next().unwrap_or("");
+        let args: Vec<&str> = parts.collect();
+        let entry = self.modes.iter().find(|m| m.name == mode).ok_or_else(|| {
+            anyhow!(
+                "unknown permutation mode {mode:?} in spec {spec:?} (known: {})",
+                self.modes.iter().map(|m| m.name).collect::<Vec<_>>().join("|")
+            )
+        })?;
+        (entry.parse)(&args).map_err(|e| anyhow!("bad perm spec {spec:?}: {e}"))
+    }
+}
+
+/// Split `key=value` spec arguments, rejecting malformed or duplicate keys.
+fn parse_kv<'a>(args: &[&'a str], known: &[&str]) -> Result<Vec<(&'a str, &'a str)>> {
+    let mut out: Vec<(&str, &str)> = Vec::new();
+    for a in args {
+        let (k, v) = a
+            .split_once('=')
+            .ok_or_else(|| anyhow!("expected key=value, got {a:?}"))?;
+        if !known.contains(&k) {
+            bail!("unknown parameter {k:?} (known: {})", known.join(", "));
+        }
+        if out.iter().any(|(seen, _)| *seen == k) {
+            bail!("duplicate parameter {k:?}");
+        }
+        if v.is_empty() {
+            bail!("parameter {k:?} has no value");
+        }
+        out.push((k, v));
+    }
+    Ok(out)
+}
+
+fn parse_usize_v(what: &str, s: &str) -> Result<usize> {
+    s.parse::<usize>().map_err(|_| anyhow!("{what} must be a non-negative integer, got {s:?}"))
+}
+
+fn parse_f64_v(what: &str, s: &str) -> Result<f64> {
+    let v: f64 = s.parse().map_err(|_| anyhow!("{what} must be a number, got {s:?}"))?;
+    if !v.is_finite() {
+        bail!("{what} must be finite, got {s:?}");
+    }
+    Ok(v)
+}
+
+fn parse_learned(args: &[&str]) -> Result<PermHandle> {
+    let mut m = LearnedPerm::default();
+    for (k, v) in parse_kv(args, &["sinkhorn", "tau", "patience", "threshold"])? {
+        match k {
+            "sinkhorn" => {
+                m.sinkhorn_iters = parse_usize_v("sinkhorn", v)?;
+                if m.sinkhorn_iters == 0 {
+                    bail!("sinkhorn needs >= 1 iteration");
+                }
+            }
+            "tau" => {
+                m.tau = parse_f64_v("tau", v)?;
+                if m.tau <= 0.0 {
+                    bail!("tau must be > 0");
+                }
+            }
+            "patience" => {
+                let p = parse_usize_v("patience", v)?;
+                if p == 0 {
+                    bail!("patience must be >= 1");
+                }
+                m.patience = Some(p);
+            }
+            "threshold" => m.threshold = Some(parse_f64_v("threshold", v)?),
+            _ => unreachable!(),
+        }
+    }
+    Ok(Arc::new(m))
+}
+
+fn parse_kaleidoscope(args: &[&str]) -> Result<PermHandle> {
+    let mut m = KaleidoscopePerm { patience: None, threshold: None };
+    for (k, v) in parse_kv(args, &["patience", "threshold"])? {
+        match k {
+            "patience" => {
+                let p = parse_usize_v("patience", v)?;
+                if p == 0 {
+                    bail!("patience must be >= 1");
+                }
+                m.patience = Some(p);
+            }
+            "threshold" => m.threshold = Some(parse_f64_v("threshold", v)?),
+            _ => unreachable!(),
+        }
+    }
+    Ok(Arc::new(m))
+}
+
+fn parse_random(args: &[&str]) -> Result<PermHandle> {
+    let mut m = RandomPerm { seed: DEFAULT_RANDOM_SEED };
+    for (k, v) in parse_kv(args, &["seed"])? {
+        match k {
+            "seed" => {
+                m.seed = v
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("seed must be a non-negative integer, got {v:?}"))?;
+            }
+            _ => unreachable!(),
+        }
+    }
+    Ok(Arc::new(m))
+}
+
+fn parse_none(args: &[&str]) -> Result<PermHandle> {
+    if !args.is_empty() {
+        bail!("none takes no parameters");
+    }
+    Ok(Arc::new(NoPerm))
+}
+
+/// The global registry (built once).
+pub fn perm_registry() -> &'static PermRegistry {
+    static REG: OnceLock<PermRegistry> = OnceLock::new();
+    REG.get_or_init(|| PermRegistry {
+        modes: vec![
+            PermEntry {
+                name: "learned",
+                grammar: "learned[:sinkhorn=I][:tau=T][:patience=P][:threshold=D]",
+                defaults: "sinkhorn=12 tau=1 (hardening from CLI)",
+                hardening: "penalty/N < D for P steps -> Hungarian decode",
+                artifact: "{model}_train",
+                parse: parse_learned,
+            },
+            PermEntry {
+                name: "kaleidoscope",
+                grammar: "kaleidoscope[:patience=P][:threshold=D]",
+                defaults: "log2(N) x N angle logits",
+                hardening: "penalty/N < D for P steps -> identity idx",
+                artifact: "{model}_train_kperm",
+                parse: parse_kaleidoscope,
+            },
+            PermEntry {
+                name: "random",
+                grammar: "random[:seed=S]",
+                defaults: "S = 1000 (map = fork(S + site))",
+                hardening: "hard from step 0",
+                artifact: "{model}_train",
+                parse: parse_random,
+            },
+            PermEntry {
+                name: "none",
+                grammar: "none",
+                defaults: "-",
+                hardening: "never (identity)",
+                artifact: "{model}_train_noperm",
+                parse: parse_none,
+            },
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_names_resolve_and_roundtrip() {
+        for name in ["learned", "kaleidoscope", "random", "none"] {
+            let p = resolve_perm(name).unwrap();
+            assert_eq!(p.spec(), name, "bare spec must print back as itself");
+            assert_eq!(p.mode().name(), name);
+            let q = resolve_perm(&p.spec()).unwrap();
+            assert_eq!(q.spec(), p.spec());
+        }
+    }
+
+    #[test]
+    fn parameterised_specs_roundtrip() {
+        for spec in [
+            "learned:sinkhorn=24",
+            "learned:tau=0.5",
+            "learned:sinkhorn=24:tau=0.5",
+            "learned:patience=5",
+            "learned:threshold=0.1",
+            "learned:sinkhorn=24:tau=0.5:patience=5:threshold=0.1",
+            "kaleidoscope:patience=2",
+            "random:seed=7",
+        ] {
+            let p = resolve_perm(spec).unwrap();
+            assert_eq!(p.spec(), spec, "canonical spec must round-trip");
+        }
+        // Defaults canonicalise to the bare name.
+        assert_eq!(resolve_perm("learned:sinkhorn=12").unwrap().spec(), "learned");
+        assert_eq!(resolve_perm("learned:tau=1").unwrap().spec(), "learned");
+        assert_eq!(resolve_perm("random:seed=1000").unwrap().spec(), "random");
+    }
+
+    #[test]
+    fn bad_specs_are_descriptive_errors() {
+        for bad in [
+            "learned:sinkhorn=0",     // zero iterations
+            "learned:tau=0",          // non-positive temperature
+            "learned:tau=nan",        // non-finite
+            "learned:patience=0",     // zero debounce
+            "learned:sinkhorn",       // not key=value
+            "learned:sinkhorn=2:sinkhorn=3", // duplicate
+            "learned:bogus=1",        // unknown key
+            "random:seed=-3",         // negative seed
+            "none:x=1",               // mode takes no params
+            "shuffled",               // unknown mode
+        ] {
+            let err = resolve_perm(bad).unwrap_err().to_string();
+            assert!(!err.is_empty(), "{bad} must fail");
+        }
+    }
+
+    #[test]
+    fn artifact_suffixes_match_legacy_selection() {
+        assert_eq!(resolve_perm("learned").unwrap().artifact_suffix(), "");
+        assert_eq!(resolve_perm("random").unwrap().artifact_suffix(), "");
+        assert_eq!(resolve_perm("none").unwrap().artifact_suffix(), "_noperm");
+        assert_eq!(resolve_perm("kaleidoscope").unwrap().artifact_suffix(), "_kperm");
+    }
+
+    /// The historical `Trainer::init_state` permutation block, reproduced
+    /// verbatim: every bare-name mode must consume the RNG identically and
+    /// emit the same logits / index maps / hard flags.
+    #[test]
+    fn init_matches_legacy_bit_identically() {
+        let n = 24usize;
+        for mode in ["none", "random", "learned", "kaleidoscope"] {
+            let model = resolve_perm(mode).unwrap();
+            // Legacy path.
+            let mut rng_a = Rng::new(99);
+            let mut legacy_logits = Vec::new();
+            let mut legacy_idx = Vec::new();
+            let legacy_flag = if mode == "learned" || mode == "kaleidoscope" { 0.0 } else { 1.0 };
+            for si in 0..3usize {
+                let logits = if mode == "kaleidoscope" {
+                    let levels = (usize::BITS - (n - 1).leading_zeros()) as usize;
+                    let mut t = Tensor::zeros(&[levels, n]);
+                    for v in t.f32s_mut() {
+                        *v = 0.01 * rng_a.normal();
+                    }
+                    t
+                } else {
+                    let mut t = Tensor::zeros(&[n, n]);
+                    let d = t.f32s_mut();
+                    for (p, v) in d.iter_mut().enumerate() {
+                        *v = 0.01 * rng_a.normal() + if p % (n + 1) == 0 { 5.0 } else { 0.0 };
+                    }
+                    t
+                };
+                legacy_logits.push(logits);
+                let idx: Vec<i32> = if mode == "random" {
+                    let mut prng = rng_a.fork(1000 + si as u64);
+                    prng.permutation(n).iter().map(|&i| i as i32).collect()
+                } else {
+                    (0..n as i32).collect()
+                };
+                legacy_idx.push(idx);
+            }
+            // Typed path.
+            let mut rng_b = Rng::new(99);
+            for si in 0..3usize {
+                let site = model.init_site(si, &format!("s{si}"), n, &mut rng_b);
+                assert_eq!(site.hard_flag(), legacy_flag, "{mode} site {si} flag");
+                assert_eq!(
+                    site.logits().unwrap().f32s(),
+                    legacy_logits[si].f32s(),
+                    "{mode} site {si} logits"
+                );
+                assert_eq!(
+                    site.index_tensor().i32s(),
+                    &legacy_idx[si][..],
+                    "{mode} site {si} idx"
+                );
+            }
+            // And the streams must have advanced identically.
+            assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "{mode}: rng stream diverged");
+        }
+    }
+
+    #[test]
+    fn export_writes_the_artifact_input_names() {
+        let model = resolve_perm("random").unwrap();
+        let mut rng = Rng::new(3);
+        let site = model.init_site(0, "l0.fc1", 8, &mut rng);
+        let mut vals = HashMap::new();
+        site.export_into(&mut vals);
+        assert!(vals.contains_key("perm_logits.l0.fc1"));
+        let idx = vals["perm_idx.l0.fc1"].i32s().to_vec();
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<i32>>(), "a permutation of 0..n");
+        assert_eq!(site.hard_flag(), 1.0);
+    }
+
+    #[test]
+    fn learned_decode_uses_spec_params() {
+        let n = 10;
+        let model = resolve_perm("learned").unwrap();
+        let mut scratch = SinkhornScratch::new();
+        // Strong identity-biased logits decode to the identity.
+        let mut logits = vec![0.0f32; n * n];
+        for i in 0..n {
+            logits[i * n + i] = 8.0;
+        }
+        let idx = model.decode_logits(&logits, n, &mut scratch).unwrap();
+        assert_eq!(idx, (0..n).collect::<Vec<_>>());
+        // Frozen modes have nothing to decode.
+        for mode in ["none", "random", "kaleidoscope"] {
+            assert!(resolve_perm(mode)
+                .unwrap()
+                .decode_logits(&logits, n, &mut scratch)
+                .is_none());
+        }
+    }
+
+    #[test]
+    fn projection_params_flow_typed_from_spec() {
+        // The trait accessor reads the typed fields — no spec re-parsing —
+        // so resume rebinds Soft states under exactly the spec'd params.
+        assert_eq!(resolve_perm("learned").unwrap().projection(), (12, 1.0));
+        assert_eq!(
+            resolve_perm("learned:sinkhorn=24:tau=0.5").unwrap().projection(),
+            (24, 0.5)
+        );
+        assert_eq!(resolve_perm("none").unwrap().projection(), (12, 1.0));
+    }
+
+    #[test]
+    fn hardening_overrides_flow_from_spec() {
+        let m = resolve_perm("learned:patience=5:threshold=0.1").unwrap();
+        let h = m.hardening().unwrap();
+        assert_eq!(h.patience, Some(5));
+        assert_eq!(h.threshold, Some(0.1));
+        // Bare spec defers both to the run config.
+        let h = resolve_perm("learned").unwrap().hardening().unwrap();
+        assert_eq!(h, PermHardening::default());
+        // Frozen modes never harden.
+        assert!(resolve_perm("none").unwrap().hardening().is_none());
+        assert!(resolve_perm("random").unwrap().hardening().is_none());
+    }
+
+    #[test]
+    fn memory_accounting_matches_legacy_ordering() {
+        // Tbl. 2–5 ordering at one site: learned > kaleidoscope > random >
+        // none, and hardening collapses learned to the index map.
+        let n = 64;
+        let none = resolve_perm("none").unwrap().memory_bytes(n, false);
+        let rand = resolve_perm("random").unwrap().memory_bytes(n, false);
+        let kal = resolve_perm("kaleidoscope").unwrap().memory_bytes(n, false);
+        let learned = resolve_perm("learned").unwrap().memory_bytes(n, false);
+        let hard = resolve_perm("learned").unwrap().memory_bytes(n, true);
+        assert!(none < rand && rand < kal && kal < learned);
+        assert_eq!(hard, rand);
+        assert_eq!(none, 0);
+        assert_eq!(learned, n * n * 4 + n * 4);
+    }
+
+    #[test]
+    fn controller_hardens_after_patience() {
+        let widths = vec![100usize, 100];
+        let mut c = PermController::new(&widths, 0.22, 3);
+        // site 0 penalty below threshold (10/100 = 0.1), site 1 above.
+        for step in 0..2 {
+            assert!(c.observe(step, &[10.0, 80.0]).is_empty());
+        }
+        assert_eq!(c.observe(2, &[10.0, 80.0]), vec![0]);
+        assert!(c.is_hardened(0) && !c.is_hardened(1));
+        // Never fires twice.
+        assert!(c.observe(3, &[10.0, 80.0]).is_empty());
+        assert_eq!(c.n_hardened(), 1);
+    }
+
+    #[test]
+    fn controller_noisy_spike_resets_debounce() {
+        let mut c = PermController::new(&[100], 0.22, 3);
+        assert!(c.observe(0, &[10.0]).is_empty());
+        assert!(c.observe(1, &[10.0]).is_empty());
+        assert!(c.observe(2, &[90.0]).is_empty()); // spike resets
+        assert!(c.observe(3, &[10.0]).is_empty());
+        assert!(c.observe(4, &[10.0]).is_empty());
+        assert_eq!(c.observe(5, &[10.0]), vec![0]);
+    }
+
+    #[test]
+    fn controller_respects_typed_patience() {
+        let mut c = PermController::new(&[100], 0.22, 1);
+        assert_eq!(c.observe(0, &[10.0]), vec![0], "patience=1 fires immediately");
+        let mut c = PermController::new(&[100], -1.0, 3);
+        for step in 0..10 {
+            assert!(c.observe(step, &[0.0]).is_empty(), "negative threshold never fires");
+        }
+    }
+
+    #[test]
+    fn sites_from_vals_classifies_states() {
+        let model = resolve_perm("learned").unwrap();
+        let mut rng = Rng::new(5);
+        let names = vec!["a".to_string(), "b".to_string()];
+        let widths = vec![6usize, 6];
+        let mut vals = HashMap::new();
+        let mut flags = Vec::new();
+        for (si, name) in names.iter().enumerate() {
+            let mut site = model.init_site(si, name, 6, &mut rng);
+            if si == 1 {
+                site.harden(vec![5, 4, 3, 2, 1, 0]);
+            }
+            flags.push(site.hard_flag());
+            site.export_into(&mut vals);
+        }
+        vals.insert("hard_flags".into(), Tensor::from_f32(&[2], flags));
+        let sites = sites_from_vals(model.as_ref(), &names, &widths, &vals).unwrap();
+        assert!(matches!(sites[0].state, PermState::Soft { .. }));
+        assert_eq!(sites[1].state.index_map(), Some(&[5usize, 4, 3, 2, 1, 0][..]));
+        // NoPerm classifies hardened flags as Identity.
+        let none = resolve_perm("none").unwrap();
+        let mut rng = Rng::new(5);
+        let mut vals = HashMap::new();
+        let site = none.init_site(0, "a", 6, &mut rng);
+        site.export_into(&mut vals);
+        vals.insert("hard_flags".into(), Tensor::from_f32(&[1], vec![site.hard_flag()]));
+        let sites =
+            sites_from_vals(none.as_ref(), &names[..1], &widths[..1], &vals).unwrap();
+        assert!(matches!(sites[0].state, PermState::Identity));
+    }
+
+    #[test]
+    fn registry_table_is_complete() {
+        let reg = perm_registry();
+        assert_eq!(reg.modes().len(), 4);
+        for m in reg.modes() {
+            let p = reg.resolve(m.name).unwrap();
+            assert_eq!(p.mode().name(), m.name);
+            assert!(!m.grammar.is_empty() && !m.hardening.is_empty() && !m.artifact.is_empty());
+        }
+    }
+}

@@ -31,7 +31,9 @@ pub struct ProgramEntry {
     pub program: String,
     pub structure: String,
     pub density: f64,
-    pub perm_mode: String,
+    /// Permutation mode the artifact was compiled for (manifests spell
+    /// the legacy key name; see `perm::model::MANIFEST_PERM_KEY`).
+    pub perm: String,
     pub batch: usize,
     pub golden: bool,
     pub spec: ProgramSpec,
@@ -118,7 +120,11 @@ impl Manifest {
                     program: p.at(&["program"])?.as_str().unwrap().to_string(),
                     structure: p.at(&["structure"])?.as_str().unwrap().to_string(),
                     density: p.at(&["density"])?.as_f64().unwrap(),
-                    perm_mode: p.at(&["perm_mode"])?.as_str().unwrap().to_string(),
+                    perm: p
+                        .at(&[crate::perm::model::MANIFEST_PERM_KEY])?
+                        .as_str()
+                        .unwrap()
+                        .to_string(),
                     batch: p.at(&["batch"])?.as_usize().unwrap(),
                     golden: matches!(p.get("golden"), Some(Json::Bool(true))),
                     spec: ProgramSpec {

@@ -11,6 +11,7 @@
 use std::path::Path;
 
 use padst::coordinator::{RunConfig, Trainer};
+use padst::perm::model::resolve_perm;
 use padst::runtime::Runtime;
 use padst::sparsity::pattern::resolve_pattern;
 
@@ -28,7 +29,7 @@ fn short_cfg(perm: &str, spec: &str) -> RunConfig {
         model: "vit_tiny".into(),
         pattern: resolve_pattern(spec).unwrap(),
         density: 0.2,
-        perm_mode: perm.into(),
+        perm: resolve_perm(perm).unwrap(),
         steps: 30,
         dst_every: 10,
         eval_every: 0,
@@ -129,6 +130,20 @@ fn forced_hardening_impl(rt: &mut Runtime) {
     }
 }
 
+fn spec_hardening_overrides_impl(rt: &mut Runtime) {
+    // A patience=/threshold= param on the perm spec wins over the config:
+    // patience=1 with an unreachable threshold hardens every site on its
+    // first observation instead of the default debounce of 3.
+    let mut cfg = short_cfg("learned:patience=1:threshold=1000000000", "diag");
+    cfg.steps = 5;
+    let res = Trainer::new(rt, cfg).run().unwrap();
+    assert!(
+        res.harden_step.iter().all(|h| *h == Some(0)),
+        "spec patience=1 did not harden at step 0: {:?}",
+        res.harden_step
+    );
+}
+
 fn seeds_reproducible_impl(rt: &mut Runtime) {
     let a = Trainer::new(rt, short_cfg("learned", "diag"))
         .run()
@@ -148,5 +163,6 @@ fn e2e_scenarios() {
     dst_runs_impl(&mut rt);
     parameterised_spec_runs_impl(&mut rt);
     forced_hardening_impl(&mut rt);
+    spec_hardening_overrides_impl(&mut rt);
     seeds_reproducible_impl(&mut rt);
 }

@@ -1,0 +1,194 @@
+//! Property and integration tests of the typed permutation subsystem:
+//! planted-permutation recovery through the spec'd decode path, index-map
+//! algebra consistency with the compression layer, spec round-trips
+//! (including bare-name back-compat), and checkpoint save/load of the
+//! typed state machine across resume.
+
+use std::collections::HashMap;
+
+use padst::coordinator::{checkpoint, TrainState};
+use padst::perm::{self, model::{resolve_perm, sites_from_vals, PermState}, SinkhornScratch};
+use padst::sparsity::compress::{compress_rows, decompress_rows};
+use padst::sparsity::patterns::make_diag_mask;
+use padst::tensor::Tensor;
+use padst::util::Rng;
+
+/// `decode(soft_perm(..))` recovers a planted permutation under small
+/// logit noise, through the model's own decode path (Sinkhorn scratch +
+/// Hungarian), across seeds and spec'd iteration counts.
+#[test]
+fn prop_decode_recovers_planted_permutation() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(100 + seed);
+        let n = 12 + (seed as usize % 3) * 4;
+        let planted = rng.permutation(n);
+        let mut logits = vec![0.0f32; n * n];
+        for v in logits.iter_mut() {
+            *v = 0.3 * rng.normal();
+        }
+        for (i, &j) in planted.iter().enumerate() {
+            logits[i * n + j] += 4.0;
+        }
+        let mut scratch = SinkhornScratch::new();
+        for spec in ["learned", "learned:sinkhorn=24", "learned:tau=0.5"] {
+            let model = resolve_perm(spec).unwrap();
+            let idx = model.decode_logits(&logits, n, &mut scratch).unwrap();
+            assert_eq!(idx, planted, "seed {seed} spec {spec}: decode missed the plant");
+        }
+    }
+}
+
+/// Index-map composition is associative, and folding a permutation into
+/// the row-compressed index stream is inverse-consistent with
+/// `decompress_rows`: decompressing through `invert(p)` recovers exactly
+/// the masked dense weights.
+#[test]
+fn prop_index_algebra_consistent_with_compression() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(200 + seed);
+        let n = 16;
+        let a = rng.permutation(n);
+        let b = rng.permutation(n);
+        let c = rng.permutation(n);
+        // Associativity.
+        assert_eq!(
+            perm::compose(&perm::compose(&a, &b), &c),
+            perm::compose(&a, &perm::compose(&b, &c)),
+            "seed {seed}"
+        );
+        // Inverse consistency: inv ∘ a = identity on indices.
+        let inv = perm::invert(&a);
+        assert_eq!(perm::compose(&inv, &a), (0..n).collect::<Vec<_>>(), "seed {seed}");
+
+        // Through the compression layer: the stored index stream is
+        // p[j], and decompressing through invert(p) must give back the
+        // masked dense weights bit-for-bit.
+        let (rows, cols) = (12usize, n);
+        let mask = make_diag_mask(rows, cols, 3, &mut rng);
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let p_i32: Vec<i32> = a.iter().map(|&x| x as i32).collect();
+        let inv_i32: Vec<i32> = inv.iter().map(|&x| x as i32).collect();
+        let rc = compress_rows(&w, &mask, 3, Some(&p_i32));
+        let back = decompress_rows(&rc, Some(&inv_i32));
+        for i in 0..rows {
+            for j in 0..cols {
+                let want = if mask.get(i, j) { w[i * cols + j] } else { 0.0 };
+                assert_eq!(back[i * cols + j], want, "seed {seed} ({i},{j})");
+            }
+        }
+    }
+}
+
+/// Spec round-trip including bare-name back-compat: every canonical spec
+/// re-parses to itself, bare names canonicalise from their explicit
+/// default forms, and every historical mode string resolves.
+#[test]
+fn spec_roundtrip_and_bare_name_back_compat() {
+    // Historical strings (CLI flags, manifests, journals) all resolve and
+    // print back as themselves.
+    for legacy in ["none", "random", "learned", "kaleidoscope"] {
+        let m = resolve_perm(legacy).unwrap();
+        assert_eq!(m.spec(), legacy);
+        assert_eq!(resolve_perm(&m.spec()).unwrap().spec(), legacy);
+    }
+    // Parameterised forms round-trip canonically...
+    for spec in [
+        "learned:sinkhorn=24:tau=0.5",
+        "learned:patience=5:threshold=0.1",
+        "random:seed=7",
+        "kaleidoscope:threshold=0.05",
+    ] {
+        assert_eq!(resolve_perm(spec).unwrap().spec(), spec);
+    }
+    // ... and explicit defaults canonicalise to the bare name.
+    assert_eq!(resolve_perm("learned:sinkhorn=12:tau=1").unwrap().spec(), "learned");
+    assert_eq!(resolve_perm("random:seed=1000").unwrap().spec(), "random");
+}
+
+/// Checkpoint save/load preserves `Hard` state and hardened flags across
+/// resume: a run whose sites partially hardened reloads with the same
+/// index maps, flags, and typed classification.
+#[test]
+fn checkpoint_preserves_hard_state_across_resume() {
+    let model = resolve_perm("learned").unwrap();
+    let names: Vec<String> = vec!["l0.fc1".into(), "l0.attn".into(), "l1.fc1".into()];
+    let n = 8usize;
+    let mut rng = Rng::new(42);
+
+    let mut vals = HashMap::new();
+    let mut flags = Vec::new();
+    let hard_map: Vec<usize> = (0..n).rev().collect();
+    for (si, name) in names.iter().enumerate() {
+        let mut site = model.init_site(si, name, n, &mut rng);
+        if si == 1 {
+            site.harden(hard_map.clone());
+        }
+        flags.push(site.hard_flag());
+        site.export_into(&mut vals);
+        // Checkpoints key site order off the mask tensors.
+        vals.insert(
+            format!("mask.{name}"),
+            Tensor::from_f32(&[2, n], vec![1.0; 2 * n]),
+        );
+    }
+    vals.insert("hard_flags".into(), Tensor::from_f32(&[names.len()], flags.clone()));
+    vals.insert("step".into(), Tensor::scalar(17.0));
+    let state = TrainState { vals, site_names: names.clone(), budgets: vec![2 * n; 3] };
+
+    let dir = std::env::temp_dir().join("padst_perm_model_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume.tnz");
+    checkpoint::save(&path, &state).unwrap();
+    let back = checkpoint::load(&path).unwrap();
+
+    // Raw tensors survived.
+    assert_eq!(back.site_names, names);
+    assert_eq!(back.vals["hard_flags"].f32s(), &flags[..]);
+    let idx: Vec<usize> =
+        back.vals["perm_idx.l0.attn"].i32s().iter().map(|&x| x as usize).collect();
+    assert_eq!(idx, hard_map);
+
+    // The typed reconstruction classifies every site as before the save.
+    let widths = vec![n; names.len()];
+    let sites = sites_from_vals(model.as_ref(), &names, &widths, &back.vals).unwrap();
+    assert!(matches!(sites[0].state, PermState::Soft { .. }));
+    assert_eq!(sites[1].state.index_map(), Some(&hard_map[..]));
+    assert!(matches!(sites[2].state, PermState::Soft { .. }));
+    // Soft logits rebind bit-identically.
+    assert_eq!(
+        sites[0].logits().unwrap().f32s(),
+        back.vals["perm_logits.l0.fc1"].f32s()
+    );
+    // Hard flags re-derive from the states.
+    assert_eq!(
+        sites.iter().map(|s| s.hard_flag()).collect::<Vec<_>>(),
+        flags
+    );
+}
+
+/// The identity-distance metric is invariant across the soft decode and
+/// the stored hard map once a site hardens: hardening writes exactly the
+/// map the final analysis would decode.
+#[test]
+fn harden_decode_matches_final_decode() {
+    let model = resolve_perm("learned").unwrap();
+    let n = 10;
+    let mut rng = Rng::new(7);
+    let planted = rng.permutation(n);
+    let mut logits = vec![0.0f32; n * n];
+    for v in logits.iter_mut() {
+        *v = 0.2 * rng.normal();
+    }
+    for (i, &j) in planted.iter().enumerate() {
+        logits[i * n + j] += 5.0;
+    }
+    let mut s1 = SinkhornScratch::new();
+    let mut s2 = SinkhornScratch::new();
+    let at_harden = model.decode_logits(&logits, n, &mut s1).unwrap();
+    let at_finish = model.decode_logits(&logits, n, &mut s2).unwrap();
+    assert_eq!(at_harden, at_finish);
+    assert_eq!(
+        perm::identity_distance(&at_harden),
+        perm::identity_distance(&planted)
+    );
+}
