@@ -28,10 +28,16 @@
 //! dense panels, so its reindex treatment falls back to the row-gather
 //! form (that fallback now lives in `BlockPattern::compress`).
 
+use std::collections::HashMap;
+
+use padst::coordinator::TrainState;
 use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::kernels::{dense_matmul_blocked_mt_with, run_plan_mt, shuffle_rows};
 use padst::models::PAPER_LAYERS;
+use padst::perm::model::resolve_perm;
+use padst::serve::SessionCtx;
 use padst::sparsity::pattern::resolve_pattern;
+use padst::tensor::Tensor;
 use padst::util::cli::BenchOpts;
 use padst::util::stats::{bench, fmt_time, Summary};
 use padst::util::Rng;
@@ -162,6 +168,81 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+    // ----- SessionCtx (padst serve): cached plans/scratch vs rebuild -----
+    // Serving compiles each layer's KernelPlan once per session and reuses
+    // one grow-only activation scratch across requests.  Time a warm
+    // cached request against the rebuild-per-call path it replaces, at
+    // the headline geometry (ViT-B/16 fc1, diag @ 90 % sparsity, hard
+    // random perm), and fingerprint-assert the warm path's
+    // zero-allocation contract while we are here.
+    {
+        let (rows, cols) = (3072usize, 768usize);
+        let pattern = resolve_pattern("diag")?;
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..BATCH * cols).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let mask = pattern.init_mask(rows, cols, 0.1, &mut rng)?;
+        let perm: Vec<i32> = rng.permutation(cols).iter().map(|&p| p as i32).collect();
+
+        let mut vals = HashMap::new();
+        vals.insert("mask.fc1".to_string(), Tensor::from_f32(&[rows, cols], mask.bits.clone()));
+        vals.insert("param.fc1.w".to_string(), Tensor::from_f32(&[rows, cols], w.clone()));
+        vals.insert("perm_idx.fc1".to_string(), Tensor::from_i32(&[cols], perm.clone()));
+        vals.insert("hard_flags".to_string(), Tensor::from_f32(&[1], vec![1.0]));
+        let state =
+            TrainState { vals, site_names: vec!["fc1".to_string()], budgets: vec![mask.nnz()] };
+        let mut ctx = SessionCtx::from_state(
+            "fig3",
+            &state,
+            pattern.clone(),
+            resolve_perm("random")?,
+            threads,
+            backend,
+        )?;
+
+        let (bw, bi, bt) = opts.budget(2, 5, 0.25);
+        ctx.run("fc1", &x, BATCH)?; // cold call: plans compiled, scratch sized
+        let fp = ctx.fingerprint();
+        let t_cached = bench(
+            || {
+                ctx.run("fc1", &x, BATCH).unwrap();
+            },
+            bw,
+            bi,
+            bt,
+        );
+        assert_eq!(fp, ctx.fingerprint(), "warm serve path must not allocate");
+
+        let mut y = vec![0.0f32; BATCH * rows];
+        let t_rebuilt = bench(
+            || {
+                let plan = pattern.compress(&w, &mask, Some(&perm));
+                run_plan_mt(&plan, &x, BATCH, &mut y, threads, backend);
+            },
+            bw,
+            bi,
+            bt,
+        );
+        println!(
+            "\n## SessionCtx (padst serve) on vit_b16/fc1, diag @ 90%: cached {} vs rebuilt {} \
+             ({:.2}x)",
+            fmt_time(t_cached.p50),
+            fmt_time(t_rebuilt.p50),
+            t_rebuilt.p50 / t_cached.p50
+        );
+        report.push(
+            BenchRecord::from_summary("serve", "session cached", &t_cached)
+                .with_pattern("diag")
+                .with_perm("random")
+                .with_metric("speedup_cached_vs_rebuilt", t_rebuilt.p50 / t_cached.p50),
+        );
+        report.push(
+            BenchRecord::from_summary("serve", "session rebuilt", &t_rebuilt)
+                .with_pattern("diag")
+                .with_perm("random"),
+        );
+    }
+
     report.write(&opts.json_path)?;
     println!("# wrote {}", opts.json_path.display());
     println!("\n# done (see EXPERIMENTS.md §Fig3 for the recorded run)");

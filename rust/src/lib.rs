@@ -13,7 +13,10 @@
 //!   parallel execution layer ([`kernels::parallel`]) — used to reproduce
 //!   the paper's inference-speedup results, and the [`harness`] that
 //!   shards sweep grids across per-worker runtimes and records bench
-//!   telemetry (`BENCH_*.json`) for the CI perf gate.
+//!   telemetry (`BENCH_*.json`) for the CI perf gate.  Trained
+//!   checkpoints are served by the [`serve`] layer (`padst serve`): a
+//!   long-running node with per-session compiled-plan/scratch caching
+//!   and request coalescing over an NDJSON protocol.
 //!
 //! See `docs/ARCHITECTURE.md` for the full layer stack and the README for
 //! the paper-artifact ↔ command map.
@@ -38,3 +41,4 @@ pub mod data;
 pub mod models;
 pub mod harness;
 pub mod coordinator;
+pub mod serve;

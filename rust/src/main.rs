@@ -16,6 +16,9 @@
 //!   nlr            — expressivity bound tables (Table 1, Apdx B/C.1);
 //!                    `--structure SPEC` adds registry-derived cap rows
 //!   list           — artifacts available in the manifest
+//!   serve          — long-running batched inference node: loads a checkpoint
+//!                    once (plans compiled, perms decoded), answers NDJSON
+//!                    frames on stdin or a Unix socket until EOF
 //!   bench-compare  — diff two BENCH_*.json reports; exits non-zero on a
 //!                    p50 regression beyond the threshold (the CI perf gate)
 //!
@@ -33,6 +36,7 @@ use padst::kernels::micro::Backend;
 use padst::nlr;
 use padst::perm::model::{perm_registry, resolve_perm};
 use padst::runtime::Runtime;
+use padst::serve::{NodeOpts, SessionCtx};
 use padst::sparsity::pattern::{registry, resolve_pattern, Structure};
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
@@ -110,7 +114,7 @@ fn usage() -> ! {
     eprintln!(
         "padst — Permutation-Augmented Dynamic Structured Sparse Training
 
-USAGE: padst <train|sweep|patterns|perms|nlr|list> [--flag value ...]
+USAGE: padst <train|sweep|serve|patterns|perms|nlr|list> [--flag value ...]
        padst bench-compare <old.json> <new.json> [--threshold PCT]
        padst journal-merge <a.jsonl> <b.jsonl> ... -o <out.jsonl>
 
@@ -154,6 +158,22 @@ sweep:
   --shard i/n             run only grid slots with slot % n == i (cluster
                           fan-out; give each shard its own --journal and
                           combine them with `padst journal-merge`)
+
+serve:
+  long-running batched inference node: loads a checkpoint once (every
+  layer's kernel plan compiled, hard perms decoded at startup), then
+  answers newline-delimited JSON frames on stdin until EOF — protocol
+  in README §Serving, suite in tests/serve_protocol.rs
+  --checkpoint PATH       trained-state .tnz to serve
+  --structure SPEC        pattern spec the run trained with (default diag)
+  --perm SPEC             perm spec the run trained with (default learned)
+  --synthetic SPEC        serve a one-site all-ones demo layer instead of
+                          a checkpoint (CI smoke; --rows/--cols/--density)
+  --rows 8 --cols 8 --density 0.5   synthetic site geometry
+  --max-batch 32          coalescing cap in rows (default 4 panels x 8 lanes)
+  --socket PATH           accept connections on a Unix socket instead of
+                          stdin (sequential; unix only)
+  --threads N --backend B as in train
 
 journal-merge:
   padst journal-merge shard0.jsonl shard1.jsonl ... -o merged.jsonl
@@ -442,6 +462,63 @@ fn cmd_list(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Long-running batched inference node over stdin/a Unix socket.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let threads = args.get_usize("threads", 0)?; // 0 = auto
+    let backend = backend_flag(args)?;
+    let mut ctx = if let Some(spec) = args.flags.get("synthetic") {
+        let rows = args.get_usize("rows", 8)?;
+        let cols = args.get_usize("cols", 8)?;
+        let density = args.get_f64("density", 0.5)?;
+        SessionCtx::synthetic(spec, rows, cols, density, threads, backend)?
+    } else {
+        let ckpt = args
+            .flags
+            .get("checkpoint")
+            .ok_or_else(|| anyhow!("serve needs --checkpoint PATH (or --synthetic SPEC)"))?;
+        let pattern = resolve_pattern(&args.get("structure", "diag"))?;
+        let perm = resolve_perm(&args.get("perm", "learned"))?;
+        SessionCtx::load_checkpoint(Path::new(ckpt), pattern, perm, threads, backend)?
+    };
+    eprintln!(
+        "[padst serve] {} | protocol v{} | threads={} backend={}",
+        ctx.label(),
+        padst::serve::PROTOCOL_VERSION,
+        ctx.threads(),
+        ctx.backend().name()
+    );
+    for s in ctx.sites() {
+        eprintln!(
+            "[padst serve]   {:<20} {}x{} nnz={} driver={} permuted={}",
+            s.name,
+            s.rows,
+            s.cols,
+            s.nnz,
+            s.plan.driver(),
+            s.permuted
+        );
+    }
+    let opts = NodeOpts { max_batch: args.get_usize("max-batch", NodeOpts::default().max_batch)? };
+    if let Some(sock) = args.flags.get("socket") {
+        #[cfg(unix)]
+        {
+            return padst::serve::serve_unix_socket(&mut ctx, Path::new(sock), &opts);
+        }
+        #[cfg(not(unix))]
+        {
+            bail!("--socket {sock:?} needs a unix platform; pipe NDJSON over stdin instead");
+        }
+    }
+    let stdin = std::io::stdin();
+    let mut stdout = std::io::stdout().lock();
+    let stats = padst::serve::serve(&mut ctx, stdin.lock(), &mut stdout, &opts)?;
+    eprintln!(
+        "[padst serve] eof: {} requests -> {} responses ({} errors), {} batches (widest {})",
+        stats.requests, stats.responses, stats.errors, stats.batches, stats.widest_batch
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
@@ -467,6 +544,7 @@ fn main() -> Result<()> {
         "perms" => cmd_perms(&args),
         "nlr" => cmd_nlr(&args),
         "list" => cmd_list(&args),
+        "serve" => cmd_serve(&args),
         _ => usage(),
     }
 }

@@ -1,0 +1,37 @@
+//! `padst serve` — a batched sparse-inference node (ISSUE 6).
+//!
+//! The paper's headline efficiency claim is inference-side (structure +
+//! learned permutation infers up to 2.9x faster than unstructured DST);
+//! this layer is where a trained checkpoint actually serves.  Three
+//! pieces, layered strictly on top of the existing subsystems:
+//!
+//! * [`protocol`] — the NDJSON wire format ([`Request`]/[`Response`]),
+//!   versioned frames, structured error responses.  Pure codec; knows
+//!   nothing about kernels.
+//! * [`session`] — [`SessionCtx`], the per-session plan/scratch cache: a
+//!   checkpoint is loaded ONCE, Hard-state perms decoded and every
+//!   layer's `KernelPlan` compiled at startup; requests then reuse the
+//!   compiled plans and a grow-only activation scratch with zero warm
+//!   allocations (the `SinkhornScratch` pattern, one layer up).
+//! * [`node`] — the serving loop: coalesces `"more":true` bursts into
+//!   single batched `run_plan_mt` dispatches sized to the microkernel
+//!   panel widths, answers in request order, contains every frame error.
+//!
+//! The boundary with the kernel layer is exactly one function:
+//! [`crate::kernels::run_plan_mt`].  Plans are opaque to serve, so a new
+//! `KernelPlan` variant needs no serving changes.
+//!
+//! Wire format, batching bit-identity (batch-of-N == N singles,
+//! `to_bits`-exact per backend) and the warm-path allocation guard are
+//! pinned by `rust/tests/serve_protocol.rs`; CI's `serve-smoke` job pipes
+//! a golden transcript through the real binary.
+
+pub mod node;
+pub mod protocol;
+pub mod session;
+
+#[cfg(unix)]
+pub use node::serve_unix_socket;
+pub use node::{serve, NodeOpts, ServeStats};
+pub use protocol::{Request, Response, SiteInfo, PROTOCOL_VERSION};
+pub use session::{SessionCtx, SiteRuntime};

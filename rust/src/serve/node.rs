@@ -1,0 +1,242 @@
+//! The serving loop: read NDJSON request frames, coalesce `"more":true`
+//! infer bursts into one batched GEMM each, write response frames in
+//! request order.
+//!
+//! Error containment is the invariant the corrupt-frame tests pin: a bad
+//! frame (truncated, non-JSON, unknown op, wrong version, infeasible
+//! geometry) produces exactly one structured error frame — echoing the
+//! request id whenever the line was at least JSON — and the loop keeps
+//! serving.  Only EOF (clean shutdown, after flushing any held burst) or
+//! a transport I/O error ends a session.
+//!
+//! Batching policy: consecutive same-site infer frames marked
+//! `"more":true` are held; the burst flushes when a frame arrives without
+//! the flag, when the pending rows reach [`NodeOpts::max_batch`], when a
+//! non-infer frame needs the line, or at EOF.  Responses always come back
+//! in request order.
+
+use std::io::{BufRead, Write};
+
+use anyhow::Result;
+
+use crate::kernels::micro::LANES;
+use crate::serve::protocol::{Request, Response, SiteInfo};
+use crate::serve::session::SessionCtx;
+use crate::util::json::Json;
+
+/// Serving-loop knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeOpts {
+    /// Flush a held burst once this many rows are pending.  Default
+    /// `4 * LANES`: four 8-wide register panels — past this the batched
+    /// GEMM is panel-saturated and latency wins over more coalescing.
+    pub max_batch: usize,
+}
+
+impl Default for NodeOpts {
+    fn default() -> Self {
+        NodeOpts { max_batch: 4 * LANES }
+    }
+}
+
+/// End-of-session accounting (the CLI logs it at EOF).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub responses: usize,
+    /// Error frames emitted (counted inside `responses` too).
+    pub errors: usize,
+    /// Coalesced GEMM dispatches.
+    pub batches: usize,
+    /// Widest burst, in requests.
+    pub widest_batch: usize,
+}
+
+/// An infer frame held for coalescing.
+struct PendingInfer {
+    id: String,
+    site: String,
+    batch: usize,
+    x: Vec<f32>,
+}
+
+/// Serve one NDJSON session: `input` to EOF, responses on `out`.  Frame
+/// errors never end the loop; transport errors do.
+pub fn serve<R: BufRead, W: Write>(
+    ctx: &mut SessionCtx,
+    input: R,
+    out: &mut W,
+    opts: &NodeOpts,
+) -> Result<ServeStats> {
+    let mut stats = ServeStats::default();
+    let mut pending: Vec<PendingInfer> = Vec::new();
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        stats.requests += 1;
+        match decode(&line) {
+            Err((id, error)) => {
+                flush(ctx, &mut pending, out, &mut stats)?;
+                respond(out, &mut stats, &Response::Error { id, error })?;
+            }
+            Ok(Request::Infer { id, site, batch, x, more }) => {
+                // Geometry is checked at enqueue so one infeasible
+                // request cannot poison a coalesced burst, and its error
+                // frame echoes exactly its own id.
+                if let Err(e) = ctx.check_request(&site, batch, x.len()) {
+                    flush(ctx, &mut pending, out, &mut stats)?;
+                    let err = Response::Error { id: Some(id), error: e.to_string() };
+                    respond(out, &mut stats, &err)?;
+                    continue;
+                }
+                // Only same-site frames coalesce (one plan per dispatch).
+                if pending.last().is_some_and(|p| p.site != site) {
+                    flush(ctx, &mut pending, out, &mut stats)?;
+                }
+                pending.push(PendingInfer { id, site, batch, x });
+                let rows: usize = pending.iter().map(|p| p.batch).sum();
+                if !more || rows >= opts.max_batch {
+                    flush(ctx, &mut pending, out, &mut stats)?;
+                }
+            }
+            Ok(Request::Info { id }) => {
+                flush(ctx, &mut pending, out, &mut stats)?;
+                respond(out, &mut stats, &info_response(ctx, id))?;
+            }
+            Ok(Request::Reload { id, checkpoint }) => {
+                flush(ctx, &mut pending, out, &mut stats)?;
+                let resp = match ctx.reload_from(checkpoint.as_deref()) {
+                    Ok(generation) => Response::Reloaded { id, generation },
+                    Err(e) => Response::Error { id: Some(id), error: e.to_string() },
+                };
+                respond(out, &mut stats, &resp)?;
+            }
+        }
+    }
+    // EOF: answer any held burst, then shut down cleanly.
+    flush(ctx, &mut pending, out, &mut stats)?;
+    Ok(stats)
+}
+
+/// Serve connections from a Unix socket, sequentially: one NDJSON
+/// session per connection, per-connection stats to stderr.  Runs until
+/// the process is killed.
+#[cfg(unix)]
+pub fn serve_unix_socket(
+    ctx: &mut SessionCtx,
+    path: &std::path::Path,
+    opts: &NodeOpts,
+) -> Result<()> {
+    use anyhow::Context as _;
+    use std::os::unix::net::UnixListener;
+    // A dead node leaves its socket file behind; rebinding wants it gone.
+    let _ = std::fs::remove_file(path);
+    let listener = UnixListener::bind(path)
+        .with_context(|| format!("binding unix socket {}", path.display()))?;
+    eprintln!("[padst serve] listening on {}", path.display());
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        let mut writer = stream;
+        let stats = serve(ctx, reader, &mut writer, opts)?;
+        eprintln!(
+            "[padst serve] connection closed: {} requests -> {} responses ({} errors), {} batches",
+            stats.requests, stats.responses, stats.errors, stats.batches
+        );
+    }
+    Ok(())
+}
+
+/// Two-stage decode so error frames can echo the request id whenever the
+/// line was at least JSON.
+fn decode(line: &str) -> std::result::Result<Request, (Option<String>, String)> {
+    let v = Json::parse(line).map_err(|e| (None, format!("bad frame: {e}")))?;
+    let id = v.get("id").and_then(Json::as_str).map(str::to_string);
+    Request::from_json(&v).map_err(|e| (id, e.to_string()))
+}
+
+/// Execute the held burst as one batched dispatch and answer each pending
+/// request with its own rows, in order.
+fn flush<W: Write>(
+    ctx: &mut SessionCtx,
+    pending: &mut Vec<PendingInfer>,
+    out: &mut W,
+    stats: &mut ServeStats,
+) -> Result<()> {
+    if pending.is_empty() {
+        return Ok(());
+    }
+    let site = pending[0].site.clone();
+    let responses: Vec<Response> = match ctx.site(&site).map(|s| s.rows) {
+        Ok(rows) => {
+            let parts: Vec<(&[f32], usize)> =
+                pending.iter().map(|p| (p.x.as_slice(), p.batch)).collect();
+            match ctx.run_coalesced(&site, &parts) {
+                Ok(y) => {
+                    stats.batches += 1;
+                    stats.widest_batch = stats.widest_batch.max(pending.len());
+                    let mut off = 0usize;
+                    pending
+                        .iter()
+                        .map(|p| {
+                            let n = p.batch * rows;
+                            let resp = Response::Infer {
+                                id: p.id.clone(),
+                                batch: p.batch,
+                                y: y[off..off + n].to_vec(),
+                            };
+                            off += n;
+                            resp
+                        })
+                        .collect()
+                }
+                // Enqueue-time validation makes this unreachable in
+                // practice, but a kernel-layer refusal still answers
+                // every held request instead of killing the node.
+                Err(e) => per_request_errors(pending, &e.to_string()),
+            }
+        }
+        Err(e) => per_request_errors(pending, &e.to_string()),
+    };
+    pending.clear();
+    for r in &responses {
+        respond(out, stats, r)?;
+    }
+    Ok(())
+}
+
+fn per_request_errors(pending: &[PendingInfer], msg: &str) -> Vec<Response> {
+    pending
+        .iter()
+        .map(|p| Response::Error { id: Some(p.id.clone()), error: msg.to_string() })
+        .collect()
+}
+
+fn respond<W: Write>(out: &mut W, stats: &mut ServeStats, resp: &Response) -> Result<()> {
+    out.write_all(resp.to_line().as_bytes())?;
+    out.write_all(b"\n")?;
+    out.flush()?;
+    stats.responses += 1;
+    if matches!(resp, Response::Error { .. }) {
+        stats.errors += 1;
+    }
+    Ok(())
+}
+
+fn info_response(ctx: &SessionCtx, id: String) -> Response {
+    let sites = ctx
+        .sites()
+        .iter()
+        .map(|s| SiteInfo {
+            name: s.name.clone(),
+            rows: s.rows,
+            cols: s.cols,
+            nnz: s.nnz,
+            driver: s.plan.driver().to_string(),
+            permuted: s.permuted,
+        })
+        .collect();
+    Response::Info { id, model: ctx.label().to_string(), generation: ctx.generation(), sites }
+}

@@ -1,0 +1,328 @@
+//! Wire protocol of `padst serve`: newline-delimited JSON frames parsed
+//! with the in-tree [`crate::util::json`] (the build is offline; no serde).
+//!
+//! One request per line, one response line per request, in request order.
+//! Every frame carries the schema version (`"v"`) and a caller-chosen
+//! request id (`"id"`); responses echo the id — including error frames,
+//! whenever the id survives parsing.  A malformed frame is answered with
+//! a structured error frame, never a process exit; only EOF (or a
+//! transport I/O error) ends a session.
+//!
+//! Requests:
+//!
+//! ```json
+//! {"v":1,"op":"infer","id":"r1","site":"fc1","batch":2,"x":[0.5,...],"more":true}
+//! {"v":1,"op":"info","id":"r2"}
+//! {"v":1,"op":"reload","id":"r3","checkpoint":"run.tnz"}
+//! ```
+//!
+//! `"more":true` marks an infer frame as part of a coalescible burst: the
+//! node holds it and answers the whole burst after executing it as one
+//! batched GEMM (see [`crate::serve::node`]).  Responses mirror the op
+//! and add `"ok"`:
+//!
+//! ```json
+//! {"batch":2,"id":"r1","ok":true,"op":"infer","v":1,"y":[...]}
+//! {"error":"unknown op \"warp\" ...","id":"r9","ok":false,"op":"error","v":1}
+//! ```
+//!
+//! Activations travel as JSON numbers.  f32 → f64 widening is exact and
+//! the serializer emits shortest-round-trip f64, so wire transport
+//! preserves f32 value bits (the one flattening: `-0.0` prints as `0`;
+//! both sides flatten identically, so batched-vs-singles comparisons stay
+//! bitwise).  Pinned by `rust/tests/serve_protocol.rs`.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::{self, Json};
+
+/// Wire schema version.  Frames carrying any other `"v"` are rejected
+/// with a structured error frame naming both versions.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// One decoded request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Run `batch` rows (`x`, row-major, length `batch * cols`) through
+    /// `site`'s compiled plan.  `more` marks a coalescible burst.
+    Infer { id: String, site: String, batch: usize, x: Vec<f32>, more: bool },
+    /// Describe the loaded session: sites, geometry, drivers, generation.
+    Info { id: String },
+    /// Recompile every plan from a checkpoint (the given path, or the
+    /// session's own checkpoint when omitted), evicting cached plans.
+    Reload { id: String, checkpoint: Option<String> },
+}
+
+impl Request {
+    /// The caller-chosen request id (echoed by the response).
+    pub fn id(&self) -> &str {
+        match self {
+            Request::Infer { id, .. } | Request::Info { id } | Request::Reload { id, .. } => id,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Infer { id, site, batch, x, more } => {
+                let mut pairs = vec![
+                    ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                    ("op", json::s("infer")),
+                    ("id", json::s(id)),
+                    ("site", json::s(site)),
+                    ("batch", json::num(*batch as f64)),
+                    ("x", json::arr(x.iter().map(|&v| json::num(f64::from(v))))),
+                ];
+                if *more {
+                    pairs.push(("more", Json::Bool(true)));
+                }
+                json::obj(pairs)
+            }
+            Request::Info { id } => json::obj(vec![
+                ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                ("op", json::s("info")),
+                ("id", json::s(id)),
+            ]),
+            Request::Reload { id, checkpoint } => {
+                let mut pairs = vec![
+                    ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                    ("op", json::s("reload")),
+                    ("id", json::s(id)),
+                ];
+                if let Some(p) = checkpoint {
+                    pairs.push(("checkpoint", json::s(p)));
+                }
+                json::obj(pairs)
+            }
+        }
+    }
+
+    /// Serialise as one NDJSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Parse one NDJSON line.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let v = Json::parse(line).map_err(|e| anyhow!("bad frame: {e}"))?;
+        Request::from_json(&v)
+    }
+
+    /// Decode an already-parsed frame.  Error messages are descriptive
+    /// and safe to echo back verbatim in an error frame.
+    pub fn from_json(v: &Json) -> Result<Request> {
+        check_version(v)?;
+        let op = v
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("frame has no \"op\" string"))?;
+        let id = str_field(v, "id")?;
+        match op {
+            "infer" => {
+                let site = str_field(v, "site")?;
+                let batch = num_field(v, "batch")? as usize;
+                let x = f32_array(v, "x")?;
+                let more = matches!(v.get("more"), Some(Json::Bool(true)));
+                Ok(Request::Infer { id, site, batch, x, more })
+            }
+            "info" => Ok(Request::Info { id }),
+            "reload" => {
+                let checkpoint = v.get("checkpoint").and_then(Json::as_str).map(str::to_string);
+                Ok(Request::Reload { id, checkpoint })
+            }
+            other => bail!("unknown op {other:?} (known: infer|info|reload)"),
+        }
+    }
+}
+
+/// Per-site description inside an info response.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SiteInfo {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// Kernel driver of the compiled plan: gather | block | csr | dense.
+    pub driver: String,
+    /// Whether a hard permutation is folded into the plan's index stream.
+    pub permuted: bool,
+}
+
+impl SiteInfo {
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("rows", json::num(self.rows as f64)),
+            ("cols", json::num(self.cols as f64)),
+            ("nnz", json::num(self.nnz as f64)),
+            ("driver", json::s(&self.driver)),
+            ("permuted", Json::Bool(self.permuted)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<SiteInfo> {
+        Ok(SiteInfo {
+            name: str_field(v, "name")?,
+            rows: num_field(v, "rows")? as usize,
+            cols: num_field(v, "cols")? as usize,
+            nnz: num_field(v, "nnz")? as usize,
+            driver: str_field(v, "driver")?,
+            permuted: matches!(v.get("permuted"), Some(Json::Bool(true))),
+        })
+    }
+}
+
+/// One response frame; `Error` is the only `"ok":false` variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Infer { id: String, batch: usize, y: Vec<f32> },
+    Info { id: String, model: String, generation: u64, sites: Vec<SiteInfo> },
+    Reloaded { id: String, generation: u64 },
+    /// `id` is `None` only when the offending frame was not parseable
+    /// enough to recover one.
+    Error { id: Option<String>, error: String },
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Infer { id, batch, y } => json::obj(vec![
+                ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                ("op", json::s("infer")),
+                ("ok", Json::Bool(true)),
+                ("id", json::s(id)),
+                ("batch", json::num(*batch as f64)),
+                ("y", json::arr(y.iter().map(|&v| json::num(f64::from(v))))),
+            ]),
+            Response::Info { id, model, generation, sites } => json::obj(vec![
+                ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                ("op", json::s("info")),
+                ("ok", Json::Bool(true)),
+                ("id", json::s(id)),
+                ("model", json::s(model)),
+                ("generation", json::num(*generation as f64)),
+                ("sites", json::arr(sites.iter().map(|s| s.to_json()))),
+            ]),
+            Response::Reloaded { id, generation } => json::obj(vec![
+                ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                ("op", json::s("reload")),
+                ("ok", Json::Bool(true)),
+                ("id", json::s(id)),
+                ("generation", json::num(*generation as f64)),
+            ]),
+            Response::Error { id, error } => json::obj(vec![
+                ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                ("op", json::s("error")),
+                ("ok", Json::Bool(false)),
+                ("id", id.as_deref().map_or(Json::Null, json::s)),
+                ("error", json::s(error)),
+            ]),
+        }
+    }
+
+    /// Serialise as one NDJSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    /// Parse one NDJSON line (the client-side decoder; also what the
+    /// round-trip tests drive).
+    pub fn parse_line(line: &str) -> Result<Response> {
+        let v = Json::parse(line).map_err(|e| anyhow!("bad frame: {e}"))?;
+        Response::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Response> {
+        check_version(v)?;
+        if !matches!(v.get("ok"), Some(Json::Bool(true))) {
+            let id = v.get("id").and_then(Json::as_str).map(str::to_string);
+            return Ok(Response::Error { id, error: str_field(v, "error")? });
+        }
+        let id = str_field(v, "id")?;
+        match v.get("op").and_then(Json::as_str) {
+            Some("infer") => Ok(Response::Infer {
+                id,
+                batch: num_field(v, "batch")? as usize,
+                y: f32_array(v, "y")?,
+            }),
+            Some("info") => {
+                let sites = v
+                    .get("sites")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("info response has no \"sites\" array"))?
+                    .iter()
+                    .map(SiteInfo::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Response::Info {
+                    id,
+                    model: str_field(v, "model")?,
+                    generation: num_field(v, "generation")? as u64,
+                    sites,
+                })
+            }
+            Some("reload") => {
+                Ok(Response::Reloaded { id, generation: num_field(v, "generation")? as u64 })
+            }
+            other => bail!("unknown response op {other:?}"),
+        }
+    }
+}
+
+fn check_version(v: &Json) -> Result<()> {
+    match v.get("v").and_then(Json::as_f64) {
+        Some(n) if n == f64::from(PROTOCOL_VERSION) => Ok(()),
+        Some(n) => {
+            bail!("unsupported protocol version {n} (this node speaks v{PROTOCOL_VERSION})")
+        }
+        None => {
+            bail!("frame has no \"v\" protocol version (this node speaks v{PROTOCOL_VERSION})")
+        }
+    }
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("frame has no {key:?} string"))
+}
+
+fn num_field(v: &Json, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("frame has no {key:?} number"))
+}
+
+fn f32_array(v: &Json, key: &str) -> Result<Vec<f32>> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("frame has no {key:?} array"))?
+        .iter()
+        .map(|e| e.as_f64().map(|f| f as f32))
+        .collect::<Option<Vec<f32>>>()
+        .ok_or_else(|| anyhow!("{key:?} has a non-numeric element"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_wire_layout_is_stable() {
+        // Key order is the BTreeMap's alphabetical order — the CI golden
+        // transcript (`ci/golden/serve_smoke.out`) depends on it.
+        let r = Response::Infer { id: "a".into(), batch: 1, y: vec![4.0, 4.0] };
+        assert_eq!(r.to_line(), r#"{"batch":1,"id":"a","ok":true,"op":"infer","v":1,"y":[4,4]}"#);
+        let e = Response::Error { id: None, error: "bad frame: unexpected end of JSON".into() };
+        assert_eq!(
+            e.to_line(),
+            r#"{"error":"bad frame: unexpected end of JSON","id":null,"ok":false,"op":"error","v":1}"#
+        );
+    }
+
+    #[test]
+    fn version_gate_runs_before_op_dispatch() {
+        let line = r#"{"v":2,"op":"infer","id":"x","site":"fc","batch":1,"x":[1]}"#;
+        let err = Request::parse_line(line).unwrap_err().to_string();
+        assert!(err.contains("unsupported protocol version 2"), "{err}");
+    }
+}

@@ -1,0 +1,367 @@
+//! Per-session plan/scratch cache.
+//!
+//! [`SessionCtx`] is the forcing-function refactor behind `padst serve`:
+//! everything a request needs that does not depend on the request —
+//! compiled [`KernelPlan`]s, decoded hard perm index maps, activation
+//! scratch — is built once per checkpoint load and reused across calls.
+//! This extends the `SinkhornScratch` no-alloc pattern one layer up: after
+//! the first (cold) request against a site, serving again with the same
+//! or a smaller batch performs zero allocations, observable through
+//! [`SessionCtx::fingerprint`] exactly like
+//! [`SinkhornScratch::buffer_fingerprint`].
+//!
+//! Lifecycle:
+//!
+//! ```text
+//! load(.tnz) -> TrainState -> rebuild(): sites_from_vals decodes perms
+//!                             (Hard -> index map, Soft -> Sinkhorn+
+//!                             Hungarian via the owned scratch), then
+//!                             pattern.compress folds each map into the
+//!                             site's index stream  ==> Vec<SiteRuntime>
+//! run()/run_coalesced(): validate geometry, copy rows into the owned
+//!                        x-scratch, ONE run_plan_mt dispatch, answer
+//!                        from the owned y-scratch
+//! reload(): rebuild() again — plans evicted, generation bumped
+//! ```
+//!
+//! The serve layer never touches kernels below [`run_plan_mt`]: plans are
+//! opaque here, and a new `KernelPlan` variant needs no serve changes.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{checkpoint, TrainState};
+use crate::kernels::micro::Backend;
+use crate::kernels::run_plan_mt;
+use crate::perm::model::{resolve_perm, sites_from_vals, PermHandle, PermState};
+use crate::perm::SinkhornScratch;
+use crate::sparsity::pattern::{resolve_pattern, KernelPlan, PatternHandle};
+use crate::sparsity::patterns::Mask;
+use crate::tensor::Tensor;
+use crate::util::cli::resolve_threads;
+use crate::util::Rng;
+
+/// One site's compiled serving state: geometry for request validation
+/// plus the plan the kernels execute.
+#[derive(Clone, Debug)]
+pub struct SiteRuntime {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// Whether a hard (non-identity-decoded) permutation was folded into
+    /// the plan's index stream at compile time.
+    pub permuted: bool,
+    pub plan: KernelPlan,
+}
+
+/// A serving session: compiled plans, perm index maps and activation
+/// scratch for one loaded checkpoint.  See the module docs for the
+/// lifecycle; `rust/tests/serve_protocol.rs` pins the no-alloc warm path
+/// and the reload eviction semantics.
+pub struct SessionCtx {
+    label: String,
+    checkpoint: Option<PathBuf>,
+    pattern: PatternHandle,
+    perm: PermHandle,
+    sites: Vec<SiteRuntime>,
+    /// Request activations, grown once per high-water batch, never shrunk.
+    scratch_x: Vec<f32>,
+    /// Response activations, same policy.
+    scratch_y: Vec<f32>,
+    /// Sinkhorn/Hungarian decode scratch for Soft-state checkpoints.
+    sinkhorn: SinkhornScratch,
+    threads: usize,
+    backend: Backend,
+    /// Bumped on every (re)build; responses carry it so clients can tell
+    /// which compiled plans answered them.
+    generation: u64,
+}
+
+impl SessionCtx {
+    /// Build a session from an in-memory `TrainState` (what `load` and
+    /// the tests share).  `threads == 0` means auto, as everywhere else.
+    pub fn from_state(
+        label: &str,
+        state: &TrainState,
+        pattern: PatternHandle,
+        perm: PermHandle,
+        threads: usize,
+        backend: Backend,
+    ) -> Result<SessionCtx> {
+        let mut ctx = SessionCtx {
+            label: label.to_string(),
+            checkpoint: None,
+            pattern,
+            perm,
+            sites: Vec::new(),
+            scratch_x: Vec::new(),
+            scratch_y: Vec::new(),
+            sinkhorn: SinkhornScratch::new(),
+            threads: resolve_threads(threads),
+            backend,
+            generation: 0,
+        };
+        ctx.rebuild(state)?;
+        Ok(ctx)
+    }
+
+    /// Load a checkpoint from disk and compile every site once.  The
+    /// path is remembered so a `reload` frame without an explicit
+    /// checkpoint re-reads it.
+    pub fn load_checkpoint(
+        path: &Path,
+        pattern: PatternHandle,
+        perm: PermHandle,
+        threads: usize,
+        backend: Backend,
+    ) -> Result<SessionCtx> {
+        let state = checkpoint::load(path)?;
+        let label = path.display().to_string();
+        let mut ctx = SessionCtx::from_state(&label, &state, pattern, perm, threads, backend)?;
+        ctx.checkpoint = Some(path.to_path_buf());
+        Ok(ctx)
+    }
+
+    /// A one-site session with all-1.0 weights and no permutation — the
+    /// CI smoke target: on `diag:K` every row has exactly K nnz, so an
+    /// all-ones input row maps to the integer K on every backend and the
+    /// golden transcript is platform-stable.
+    pub fn synthetic(
+        spec: &str,
+        rows: usize,
+        cols: usize,
+        density: f64,
+        threads: usize,
+        backend: Backend,
+    ) -> Result<SessionCtx> {
+        let pattern = resolve_pattern(spec)?;
+        let mask = pattern.init_mask(rows, cols, density, &mut Rng::new(0))?;
+        let mut vals = HashMap::new();
+        vals.insert("mask.demo".to_string(), Tensor::from_f32(&[rows, cols], mask.bits.clone()));
+        let ones = Tensor::from_f32(&[rows, cols], vec![1.0; rows * cols]);
+        vals.insert("param.demo.w".to_string(), ones);
+        vals.insert("hard_flags".to_string(), Tensor::from_f32(&[1], vec![1.0]));
+        let state = TrainState {
+            vals,
+            site_names: vec!["demo".to_string()],
+            budgets: vec![mask.nnz()],
+        };
+        SessionCtx::from_state(
+            &format!("synthetic:{spec}"),
+            &state,
+            pattern,
+            resolve_perm("none")?,
+            threads,
+            backend,
+        )
+    }
+
+    /// Recompile every site from `state`: decode perms (Soft states go
+    /// through the owned Sinkhorn scratch), fold the index maps into
+    /// fresh plans, bump the generation.  Old plans are dropped here —
+    /// this is also the reload eviction path.
+    pub fn rebuild(&mut self, state: &TrainState) -> Result<()> {
+        let mut widths = Vec::with_capacity(state.site_names.len());
+        for name in &state.site_names {
+            let mask = state
+                .vals
+                .get(&format!("mask.{name}"))
+                .ok_or_else(|| anyhow!("state has no mask for site {name:?}"))?;
+            if mask.shape.len() != 2 {
+                bail!("mask.{name} is not 2-D (shape {:?})", mask.shape);
+            }
+            widths.push(mask.shape[1]);
+        }
+        let perm_sites =
+            sites_from_vals(self.perm.as_ref(), &state.site_names, &widths, &state.vals)?;
+
+        let mut sites = Vec::with_capacity(perm_sites.len());
+        for site in &perm_sites {
+            let name = &site.name;
+            let mask_t = &state.vals[&format!("mask.{name}")];
+            let (rows, cols) = (mask_t.shape[0], mask_t.shape[1]);
+            let w = state
+                .vals
+                .get(&format!("param.{name}.w"))
+                .ok_or_else(|| anyhow!("state has no weights for site {name:?}"))?;
+            if w.shape != mask_t.shape {
+                bail!("param.{name}.w shape {:?} != mask shape {:?}", w.shape, mask_t.shape);
+            }
+            let mask = Mask { rows, cols, bits: mask_t.f32s().to_vec() };
+            // Hard states carry their index map; Soft states decode
+            // through Sinkhorn + Hungarian right here, once, so requests
+            // never pay for projection.
+            let index_map: Option<Vec<usize>> = match &site.state {
+                PermState::Identity => None,
+                PermState::Hard { index_map } => Some(index_map.clone()),
+                PermState::Soft { logits, .. } => {
+                    self.perm.decode_logits(logits.f32s(), cols, &mut self.sinkhorn)
+                }
+            };
+            let permuted = index_map
+                .as_ref()
+                .is_some_and(|m| m.iter().enumerate().any(|(i, &p)| i != p));
+            let perm_i32: Option<Vec<i32>> =
+                index_map.map(|m| m.into_iter().map(|p| p as i32).collect());
+            let plan = self.pattern.compress(w.f32s(), &mask, perm_i32.as_deref());
+            sites.push(SiteRuntime {
+                name: name.clone(),
+                rows,
+                cols,
+                nnz: mask.nnz(),
+                permuted,
+                plan,
+            });
+        }
+        self.sites = sites;
+        self.generation += 1;
+        Ok(())
+    }
+
+    /// Reload from `state`, evicting every cached plan (alias of
+    /// [`SessionCtx::rebuild`], named for the serving-path intent).
+    pub fn reload(&mut self, state: &TrainState) -> Result<()> {
+        self.rebuild(state)
+    }
+
+    /// Reload from a checkpoint path (the session's own when `path` is
+    /// `None`).  Returns the new generation.
+    pub fn reload_from(&mut self, path: Option<&str>) -> Result<u64> {
+        let path: PathBuf = match (path, &self.checkpoint) {
+            (Some(p), _) => PathBuf::from(p),
+            (None, Some(p)) => p.clone(),
+            (None, None) => bail!(
+                "session {:?} was not loaded from a checkpoint; reload needs a \"checkpoint\" path",
+                self.label
+            ),
+        };
+        let state = checkpoint::load(&path)?;
+        self.rebuild(&state)?;
+        self.checkpoint = Some(path);
+        Ok(self.generation)
+    }
+
+    pub fn sites(&self) -> &[SiteRuntime] {
+        &self.sites
+    }
+
+    pub fn site(&self, name: &str) -> Result<&SiteRuntime> {
+        self.site_index(name).map(|i| &self.sites[i])
+    }
+
+    fn site_index(&self, name: &str) -> Result<usize> {
+        self.sites.iter().position(|s| s.name == name).ok_or_else(|| {
+            let known: Vec<&str> = self.sites.iter().map(|s| s.name.as_str()).collect();
+            anyhow!(
+                "unknown site {name:?} in this session (known: {}) — requests must target the \
+                 loaded checkpoint's sites",
+                known.join("|")
+            )
+        })
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Validate one request's geometry against the compiled site — the
+    /// serving-path answer to infeasible shapes, phrased like the
+    /// registry errors so the message can ship verbatim in an error frame.
+    pub fn check_request(&self, site: &str, batch: usize, x_len: usize) -> Result<()> {
+        let s = self.site(site)?;
+        if batch == 0 {
+            bail!("infeasible request geometry for site {site:?}: batch must be >= 1");
+        }
+        if x_len != batch * s.cols {
+            bail!(
+                "infeasible request geometry for site {site:?}: x has {x_len} values for \
+                 batch={batch} (expected batch x cols = {batch} x {} = {}; the site is {}x{} in \
+                 the loaded checkpoint)",
+                s.cols,
+                batch * s.cols,
+                s.rows,
+                s.cols
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute a coalesced burst against one site: the parts (each a
+    /// row-major `(x, batch)` slice pair) are packed into the owned
+    /// x-scratch and dispatched as ONE batched [`run_plan_mt`] call; the
+    /// returned slice is the concatenated rows in part order, living in
+    /// the owned y-scratch until the next call.
+    ///
+    /// Because every kernel row `y[b][i]` depends only on input row `b`,
+    /// the coalesced result is bitwise the concatenation of the parts run
+    /// singly — the identity `serve_protocol.rs` sweeps across backends.
+    pub fn run_coalesced(&mut self, site: &str, parts: &[(&[f32], usize)]) -> Result<&[f32]> {
+        let si = self.site_index(site)?;
+        let (rows, cols) = (self.sites[si].rows, self.sites[si].cols);
+        let mut total = 0usize;
+        for (x, batch) in parts {
+            self.check_request(site, *batch, x.len())?;
+            total += batch;
+        }
+        if total == 0 {
+            bail!("empty burst for site {site:?}");
+        }
+        // Grow-only scratch: warm requests at or below the high-water
+        // batch must not allocate (fingerprint-pinned).
+        if self.scratch_x.len() < total * cols {
+            self.scratch_x.resize(total * cols, 0.0);
+        }
+        if self.scratch_y.len() < total * rows {
+            self.scratch_y.resize(total * rows, 0.0);
+        }
+        let mut off = 0usize;
+        for (x, batch) in parts {
+            self.scratch_x[off..off + batch * cols].copy_from_slice(x);
+            off += batch * cols;
+        }
+        run_plan_mt(
+            &self.sites[si].plan,
+            &self.scratch_x[..total * cols],
+            total,
+            &mut self.scratch_y[..total * rows],
+            self.threads,
+            self.backend,
+        );
+        Ok(&self.scratch_y[..total * rows])
+    }
+
+    /// Single-request convenience over [`SessionCtx::run_coalesced`].
+    pub fn run(&mut self, site: &str, x: &[f32], batch: usize) -> Result<&[f32]> {
+        self.run_coalesced(site, &[(x, batch)])
+    }
+
+    /// Warm-path allocation fingerprint: scratch pointers + capacities +
+    /// the plan generation.  Stable across warm requests at or below the
+    /// high-water batch (nothing allocated); changes when a cold call
+    /// grows the scratch or a reload evicts the plans — the same
+    /// technique as [`SinkhornScratch::buffer_fingerprint`].
+    pub fn fingerprint(&self) -> (usize, usize, usize, usize, u64) {
+        (
+            self.scratch_x.as_ptr() as usize,
+            self.scratch_x.capacity(),
+            self.scratch_y.as_ptr() as usize,
+            self.scratch_y.capacity(),
+            self.generation,
+        )
+    }
+}

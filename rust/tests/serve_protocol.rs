@@ -1,0 +1,392 @@
+//! ISSUE 6 test surface for `padst serve`: the wire-format codec
+//! round-trip, the corrupt-frame containment table, the batching
+//! bit-identity contract (batch-of-N == N singles, `to_bits`-exact per
+//! backend x thread count x plan kind), the `SessionCtx` warm-path
+//! allocation guard with reload eviction, and the serving-path geometry
+//! errors — each mapped to a satellite of the issue.
+
+use std::collections::HashMap;
+
+use padst::coordinator::{checkpoint, TrainState};
+use padst::kernels::micro::Backend;
+use padst::perm::model::resolve_perm;
+use padst::serve::{serve, NodeOpts, Request, Response, SessionCtx, SiteInfo};
+use padst::sparsity::pattern::resolve_pattern;
+use padst::tensor::Tensor;
+use padst::util::json::Json;
+use padst::util::Rng;
+
+const ROWS: usize = 32;
+const COLS: usize = 64;
+
+/// A one-site `TrainState` over `spec` with random weights and
+/// (optionally) a random hard permutation — the checkpoint shape
+/// `padst serve` loads.  32x64 satisfies every swept spec's
+/// divisibility: block:8 | nm:2:8 | diag:4 | unstructured | dense.
+fn state_for(spec: &str, seed: u64, with_perm: bool) -> TrainState {
+    let pattern = resolve_pattern(spec).unwrap();
+    let density = if spec == "dense" { 1.0 } else { 0.25 };
+    let mut rng = Rng::new(seed);
+    let mask = pattern.init_mask(ROWS, COLS, density, &mut rng).unwrap();
+    let w: Vec<f32> = (0..ROWS * COLS).map(|_| rng.normal()).collect();
+    let mut vals = HashMap::new();
+    vals.insert("mask.fc".to_string(), Tensor::from_f32(&[ROWS, COLS], mask.bits.clone()));
+    vals.insert("param.fc.w".to_string(), Tensor::from_f32(&[ROWS, COLS], w));
+    vals.insert("hard_flags".to_string(), Tensor::from_f32(&[1], vec![1.0]));
+    if with_perm {
+        let idx: Vec<i32> = rng.permutation(COLS).iter().map(|&p| p as i32).collect();
+        vals.insert("perm_idx.fc".to_string(), Tensor::from_i32(&[COLS], idx));
+    }
+    TrainState { vals, site_names: vec!["fc".to_string()], budgets: vec![mask.nnz()] }
+}
+
+fn session(spec: &str, threads: usize, backend: Backend, with_perm: bool) -> SessionCtx {
+    let state = state_for(spec, 5, with_perm);
+    let perm = resolve_perm(if with_perm { "random" } else { "none" }).unwrap();
+    SessionCtx::from_state("test", &state, resolve_pattern(spec).unwrap(), perm, threads, backend)
+        .unwrap()
+}
+
+fn infer_line(id: &str, site: &str, batch: usize, x: &[f32], more: bool) -> String {
+    Request::Infer { id: id.into(), site: site.into(), batch, x: x.to_vec(), more }.to_line()
+}
+
+fn parse_responses(out: &[u8]) -> Vec<Response> {
+    std::str::from_utf8(out)
+        .unwrap()
+        .trim_end()
+        .lines()
+        .map(|l| Response::parse_line(l).unwrap())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Satellite (a): codec round-trip + corrupt-frame table
+// ---------------------------------------------------------------------------
+
+#[test]
+fn codec_round_trips_every_variant() {
+    let requests = vec![
+        Request::Infer {
+            id: "r1".into(),
+            site: "fc".into(),
+            batch: 2,
+            x: vec![0.5, -1.25, 3.0, f32::MIN_POSITIVE, 1.0e-7, 123456.78],
+            more: true,
+        },
+        Request::Infer { id: "r2".into(), site: "fc".into(), batch: 1, x: vec![1.0], more: false },
+        Request::Info { id: "r3".into() },
+        Request::Reload { id: "r4".into(), checkpoint: Some("run.tnz".into()) },
+        Request::Reload { id: "r5".into(), checkpoint: None },
+    ];
+    for r in requests {
+        assert_eq!(Request::parse_line(&r.to_line()).unwrap(), r, "{r:?}");
+    }
+    let responses = vec![
+        Response::Infer { id: "r1".into(), batch: 2, y: vec![0.1, -2.5, 1.0e-30, 7.0] },
+        Response::Info {
+            id: "r3".into(),
+            model: "ckpt.tnz".into(),
+            generation: 3,
+            sites: vec![SiteInfo {
+                name: "fc".into(),
+                rows: 32,
+                cols: 64,
+                nnz: 256,
+                driver: "gather".into(),
+                permuted: true,
+            }],
+        },
+        Response::Reloaded { id: "r4".into(), generation: 4 },
+        Response::Error { id: Some("r9".into()), error: "unknown site \"zz\"".into() },
+        Response::Error { id: None, error: "bad frame: unexpected end of JSON".into() },
+    ];
+    for r in responses {
+        assert_eq!(Response::parse_line(&r.to_line()).unwrap(), r, "{r:?}");
+    }
+}
+
+#[test]
+fn f32_values_survive_the_wire_bitwise() {
+    // f32 -> f64 is exact and the serializer round-trips f64, so wire
+    // transport preserves f32 bits (the protocol-doc claim).
+    let mut rng = Rng::new(42);
+    let x: Vec<f32> = (0..257)
+        .map(|_| rng.normal() * 10f32.powi(rng.below(20) as i32 - 10))
+        .collect();
+    let r =
+        Request::Infer { id: "w".into(), site: "fc".into(), batch: 1, x: x.clone(), more: false };
+    match Request::parse_line(&r.to_line()).unwrap() {
+        Request::Infer { x: back, .. } => {
+            let a: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = back.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn corrupt_frames_yield_error_frames_never_exit() {
+    let mut ctx = session("diag:4", 1, Backend::Scalar, false);
+    // (line, expected echoed id, substring expected in the error)
+    let cases: &[(&str, Option<&str>, &str)] = &[
+        (r#"{"v":1,"op":"infer","id":"t""#, None, "bad frame"),
+        ("not json", None, "bad frame"),
+        (r#"{"v":1,"op":"warp","id":"u"}"#, Some("u"), "unknown op"),
+        (r#"{"v":9,"op":"info","id":"w"}"#, Some("w"), "unsupported protocol version"),
+        (r#"{"op":"info","id":"n"}"#, Some("n"), "no \"v\""),
+        (r#"{"v":1,"op":"infer","id":"m"}"#, Some("m"), "\"site\""),
+        ("[1,2,3]", None, "no \"v\""),
+    ];
+    let script: String = cases.iter().map(|(l, _, _)| format!("{l}\n")).collect();
+    let mut out = Vec::new();
+    let stats = serve(&mut ctx, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+    assert_eq!(stats.requests, cases.len());
+    assert_eq!(stats.errors, cases.len());
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().trim_end().lines().collect();
+    assert_eq!(lines.len(), cases.len());
+    for ((line, want_id, want_msg), resp) in cases.iter().zip(&lines) {
+        let v = Json::parse(resp).unwrap_or_else(|e| panic!("error frame not JSON: {e}"));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(false)), "{line}");
+        assert_eq!(v.get("id").and_then(Json::as_str), *want_id, "{line}");
+        let err = v.get("error").and_then(Json::as_str).unwrap();
+        assert!(err.contains(want_msg), "{line}: {err}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Satellite (b): batch-of-N == N singles, to_bits-exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batched_equals_singles_bitwise() {
+    // One spec per KernelPlan kind: block:8 -> Blocks, diag:4/nm:2:8
+    // (hard-permuted) -> Rows, unstructured -> Csr, dense -> Dense.
+    let batches = [1usize, 2, 5];
+    for &spec in &["block:8", "nm:2:8", "diag:4", "unstructured", "dense"] {
+        let with_perm = matches!(spec, "nm:2:8" | "diag:4" | "unstructured");
+        for &backend in Backend::all() {
+            for threads in [1usize, 4] {
+                let mut ctx = session(spec, threads, backend, with_perm);
+                let mut rng = Rng::new(99);
+                let parts: Vec<(Vec<f32>, usize)> = batches
+                    .iter()
+                    .map(|&b| ((0..b * COLS).map(|_| rng.normal()).collect(), b))
+                    .collect();
+                let mut singles: Vec<u32> = Vec::new();
+                for (x, b) in &parts {
+                    let y = ctx.run("fc", x, *b).unwrap();
+                    singles.extend(y.iter().map(|v| v.to_bits()));
+                }
+                let refs: Vec<(&[f32], usize)> =
+                    parts.iter().map(|(x, b)| (x.as_slice(), *b)).collect();
+                let batched: Vec<u32> = ctx
+                    .run_coalesced("fc", &refs)
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(
+                    batched, singles,
+                    "batch-of-N != N singles for spec={spec} backend={backend:?} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn wire_batched_matches_wire_singles() {
+    // Same identity, through the full node: a "more":true pair answered
+    // from ONE coalesced dispatch must be bit-equal to the pair sent as
+    // independent requests.
+    let mut rng = Rng::new(7);
+    let x1: Vec<f32> = (0..COLS).map(|_| rng.normal()).collect();
+    let x2: Vec<f32> = (0..2 * COLS).map(|_| rng.normal()).collect();
+    let batched = format!(
+        "{}\n{}\n",
+        infer_line("a", "fc", 1, &x1, true),
+        infer_line("b", "fc", 2, &x2, false)
+    );
+    let singles = format!(
+        "{}\n{}\n",
+        infer_line("a", "fc", 1, &x1, false),
+        infer_line("b", "fc", 2, &x2, false)
+    );
+    let run = |script: &str| {
+        let mut ctx = session("diag:4", 2, Backend::Tiled, true);
+        let mut out = Vec::new();
+        let stats = serve(&mut ctx, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+        (parse_responses(&out), stats)
+    };
+    let (a, a_stats) = run(&batched);
+    let (b, b_stats) = run(&singles);
+    assert_eq!(a_stats.batches, 1, "the more:true pair must coalesce into one dispatch");
+    assert_eq!(a_stats.widest_batch, 2);
+    assert_eq!(b_stats.batches, 2);
+    let bits = |resp: &[Response]| -> Vec<(String, usize, Vec<u32>)> {
+        resp.iter()
+            .map(|r| match r {
+                Response::Infer { id, batch, y } => {
+                    (id.clone(), *batch, y.iter().map(|v| v.to_bits()).collect())
+                }
+                other => panic!("unexpected response {other:?}"),
+            })
+            .collect()
+    };
+    assert_eq!(bits(&a), bits(&b));
+}
+
+// ---------------------------------------------------------------------------
+// Satellite (c): warm-path allocation guard + reload eviction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_path_reuses_buffers_and_reload_evicts() {
+    let mut ctx = session("diag:4", 1, Backend::Scalar, true);
+    let mut rng = Rng::new(3);
+    let x4: Vec<f32> = (0..4 * COLS).map(|_| rng.normal()).collect();
+    let x1: Vec<f32> = x4[..COLS].to_vec();
+    // The cold call sizes the scratch; every later same-or-smaller
+    // request must reuse it byte-for-byte (the SinkhornScratch
+    // buffer_fingerprint technique, one layer up).
+    let y_before: Vec<f32> = ctx.run("fc", &x4, 4).unwrap().to_vec();
+    let fp = ctx.fingerprint();
+    for _ in 0..3 {
+        ctx.run("fc", &x4, 4).unwrap();
+        assert_eq!(ctx.fingerprint(), fp, "warm same-size request allocated");
+        ctx.run("fc", &x1, 1).unwrap();
+        assert_eq!(ctx.fingerprint(), fp, "warm smaller request allocated");
+    }
+    // Reload under a different seed: plans must be evicted (the
+    // generation in the fingerprint ends the old one's validity) and the
+    // outputs must change with the new weights/mask.
+    ctx.reload(&state_for("diag:4", 77, true)).unwrap();
+    assert_ne!(ctx.fingerprint(), fp, "reload must invalidate the warm fingerprint");
+    let y_after: Vec<f32> = ctx.run("fc", &x4, 4).unwrap().to_vec();
+    assert_ne!(y_before, y_after, "reload kept serving the old plans");
+    let fp2 = ctx.fingerprint();
+    ctx.run("fc", &x4, 4).unwrap();
+    assert_eq!(ctx.fingerprint(), fp2, "post-reload warm path allocated");
+}
+
+#[test]
+fn info_and_reload_frames_round_trip_through_a_checkpoint() {
+    let dir = std::env::temp_dir().join(format!("padst_serve_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("state.tnz");
+    checkpoint::save(&ckpt, &state_for("diag:4", 5, true)).unwrap();
+    let mut ctx = SessionCtx::load_checkpoint(
+        &ckpt,
+        resolve_pattern("diag:4").unwrap(),
+        resolve_perm("random").unwrap(),
+        1,
+        Backend::Scalar,
+    )
+    .unwrap();
+    let script = format!(
+        "{}\n{}\n{}\n",
+        Request::Info { id: "i".into() }.to_line(),
+        Request::Reload { id: "r".into(), checkpoint: None }.to_line(),
+        Request::Info { id: "j".into() }.to_line(),
+    );
+    let mut out = Vec::new();
+    serve(&mut ctx, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+    let resp = parse_responses(&out);
+    match &resp[0] {
+        Response::Info { id, generation, sites, .. } => {
+            assert_eq!(id, "i");
+            assert_eq!(*generation, 1);
+            assert_eq!(sites.len(), 1);
+            assert_eq!((sites[0].rows, sites[0].cols), (ROWS, COLS));
+            assert!(sites[0].permuted, "the random perm must fold into the plan");
+            assert_eq!(sites[0].driver, "gather");
+        }
+        other => panic!("{other:?}"),
+    }
+    match &resp[1] {
+        Response::Reloaded { id, generation } => {
+            assert_eq!(id, "r");
+            assert_eq!(*generation, 2, "reload must bump the plan generation");
+        }
+        other => panic!("{other:?}"),
+    }
+    match &resp[2] {
+        Response::Info { generation, .. } => assert_eq!(*generation, 2),
+        other => panic!("{other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Satellite (d): infeasible geometry -> descriptive error frame, id echoed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn geometry_errors_echo_request_id_and_preserve_order() {
+    let mut ctx = session("diag:4", 1, Backend::Scalar, false);
+    let good: Vec<f32> = vec![0.5; COLS];
+    let script = format!(
+        "{}\n{}\n{}\n",
+        infer_line("ok1", "fc", 1, &good, true),
+        infer_line("bad-len", "fc", 1, &[1.0, 2.0, 3.0], false),
+        infer_line("bad-site", "nope", 1, &good, false),
+    );
+    let mut out = Vec::new();
+    let stats = serve(&mut ctx, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+    assert_eq!(stats.responses, 3);
+    assert_eq!(stats.errors, 2);
+    let resp = parse_responses(&out);
+    // The held "more":true burst flushed BEFORE the error frame, so
+    // responses stay in request order.
+    match &resp[0] {
+        Response::Infer { id, .. } => assert_eq!(id, "ok1"),
+        other => panic!("{other:?}"),
+    }
+    match &resp[1] {
+        Response::Error { id, error } => {
+            assert_eq!(id.as_deref(), Some("bad-len"));
+            assert!(error.contains("expected batch x cols"), "{error}");
+        }
+        other => panic!("{other:?}"),
+    }
+    match &resp[2] {
+        Response::Error { id, error } => {
+            assert_eq!(id.as_deref(), Some("bad-site"));
+            assert!(error.contains("known:"), "{error}");
+            assert!(error.contains("fc"), "{error}");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Node behaviour: EOF flush + the CI golden's arithmetic assumption
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eof_flushes_a_held_burst() {
+    let mut ctx = session("diag:4", 1, Backend::Scalar, false);
+    let line = infer_line("tail", "fc", 1, &[0.25; COLS], true);
+    let mut out = Vec::new();
+    let stats =
+        serve(&mut ctx, format!("{line}\n").as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+    assert_eq!(stats.responses, 1, "EOF must answer the held more:true frame");
+    match &parse_responses(&out)[0] {
+        Response::Infer { id, .. } => assert_eq!(id, "tail"),
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn synthetic_session_matches_ci_golden_arithmetic() {
+    // ci/golden/serve_smoke.out relies on this: diag:K places exactly K
+    // nnz per row, so with all-1.0 weights an all-ones input row maps to
+    // the integer K on every backend and thread count.
+    for &backend in Backend::all() {
+        let mut ctx = SessionCtx::synthetic("diag:4", 8, 8, 0.5, 2, backend).unwrap();
+        assert_eq!(ctx.run("demo", &[1.0; 8], 1).unwrap().to_vec(), vec![4.0; 8], "{backend:?}");
+        assert_eq!(ctx.run("demo", &[2.0; 8], 1).unwrap().to_vec(), vec![8.0; 8], "{backend:?}");
+    }
+}
