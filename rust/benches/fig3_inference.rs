@@ -241,6 +241,19 @@ fn main() -> anyhow::Result<()> {
                 .with_pattern("diag")
                 .with_perm("random"),
         );
+        // Obs-sourced record: the same warm calls, quantiles read back
+        // from the session's per-site infer histogram instead of the
+        // sorted-sample harness (provenance stamped via obs_schema) —
+        // keeps the histogram math honest against the oracle path.
+        let infer = ctx.obs().histogram("serve.infer_ns.fc1").snapshot();
+        if infer.count > 0 {
+            report.push(
+                BenchRecord::from_hist("serve", "session infer_ns (obs)", &infer)
+                    .with_pattern("diag")
+                    .with_perm("random"),
+            );
+        }
+        report = report.with_obs(ctx.obs_snapshot().to_json());
     }
 
     report.write(&opts.json_path)?;

@@ -26,9 +26,11 @@
 //!   a JSONL journal so an interrupted sweep resumes without
 //!   recomputation.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -36,6 +38,7 @@ use super::{GrowMode, RunConfig, RunResult, Trainer};
 use crate::harness::executor;
 use crate::harness::shard::{in_shard, plan_cells, CellKey, Journal, META_KEY};
 use crate::kernels::micro::Backend;
+use crate::obs::watch::{now_unix, Heartbeat, HEARTBEAT_KEY, PLAN_KEY};
 use crate::perm::model::resolve_perm;
 use crate::runtime::Runtime;
 use crate::sparsity::pattern::resolve_pattern;
@@ -382,33 +385,19 @@ pub fn run_sweep_sharded(
     // The header is deliberately shard-blind: every shard of one sweep
     // writes the same header, which is what lets `padst journal-merge`
     // verify the shards belong together.
-    let meta = json::obj(vec![
-        ("model", json::s(model)),
-        ("steps", json::num(steps as f64)),
-        ("seed", json::num(seed as f64)),
-    ]);
+    let meta = sweep_meta(model, steps, seed);
     let mut done: HashMap<String, SweepCell> = HashMap::new();
     let journal = match &opts.journal {
         Some(path) => {
-            let (j, mut prior) = Journal::open(path)?;
-            match prior.remove(META_KEY) {
-                Some(m) if m != meta => bail!(
-                    "journal {} belongs to a different sweep ({}); this run is {} — \
-                     pass a fresh --journal path",
-                    path.display(),
-                    m.to_string_pretty(),
-                    meta.to_string_pretty()
-                ),
-                Some(_) => {}
-                None if prior.is_empty() => j.record(META_KEY, &meta)?,
-                None => bail!(
-                    "journal {} has cells but no {META_KEY} header; refusing to resume",
-                    path.display()
-                ),
-            }
+            let (j, prior) = open_sweep_journal(path, &meta)?;
             for (id, v) in &prior {
                 done.insert(id.clone(), cell_from_json(v)?);
             }
+            // Re-announce the plan on every (re)start: `padst watch` takes
+            // the latest plan record as the denominator, and a resumed run
+            // may have a different grid only if the meta check above let
+            // it through (it didn't — same header, same grid).
+            let _ = j.append_event(PLAN_KEY, &plan_event(&keys));
             Some(j)
         }
         None => None,
@@ -445,18 +434,43 @@ pub fn run_sweep_sharded(
     let cell_threads = (budget / workers).max(1);
     let journal_ref = journal.as_ref();
     let cells_ref = &cells;
+    // Liveness for `padst watch`: start/done heartbeats per cell, written
+    // best-effort (`let _ =`) — a full disk must not kill a sweep that
+    // could still return its cells in memory.  `done_count` starts at the
+    // resumed-cell count so progress reads cumulatively across restarts.
+    let total_cells = keys.len();
+    let done_count = AtomicUsize::new(done.len());
+    let heartbeat = |wid: usize, event: &str, cell: &CellKey, dur_s: Option<f64>| {
+        if let Some(j) = journal_ref {
+            let hb = Heartbeat {
+                worker: wid,
+                event: event.to_string(),
+                cell: cell.id(),
+                done: done_count.load(Ordering::SeqCst),
+                total: total_cells,
+                t: now_unix(),
+                dur_s,
+            };
+            let _ = j.append_event(HEARTBEAT_KEY, &hb.to_json());
+        }
+    };
     let fresh = executor::execute_sharded(
         &pending,
         workers,
-        |_wid| Runtime::open_with_threads(artifacts_dir, cell_threads),
-        |rt, _slot, (cell_i, key)| {
+        |wid| Ok((Runtime::open_with_threads(artifacts_dir, cell_threads)?, wid)),
+        |ctx, _slot, (cell_i, key)| {
+            let (rt, wid) = ctx;
             let (m, sp) = &cells_ref[*cell_i];
+            heartbeat(*wid, "start", key, None);
+            let t0 = Instant::now();
             let cell = run_cell(
                 rt, model, m, *sp, steps, seed, opts.verbose, cell_threads, opts.backend,
             )?;
             if let Some(j) = journal_ref {
                 j.record(&key.id(), &cell_to_json(&cell))?;
             }
+            done_count.fetch_add(1, Ordering::SeqCst);
+            heartbeat(*wid, "done", key, Some(t0.elapsed().as_secs_f64()));
             Ok(cell)
         },
     )?;
@@ -479,6 +493,66 @@ pub fn run_sweep_sharded(
         }
     }
     Ok(out)
+}
+
+/// The sweep's journal metadata header: a journal only resumes (or merges
+/// with) a sweep whose (model, steps, seed) match this exactly.
+pub fn sweep_meta(model: &str, steps: usize, seed: u64) -> Json {
+    json::obj(vec![
+        ("model", json::s(model)),
+        ("steps", json::num(steps as f64)),
+        ("seed", json::num(seed as f64)),
+    ])
+}
+
+/// Open (or create) a sweep journal at `path`, enforcing the header
+/// contract: a fresh journal gets `meta` written as its [`META_KEY`]
+/// record; an existing one must carry an identical header.  Returns the
+/// journal and the prior completed-cell records (header removed).
+pub fn open_sweep_journal(path: &Path, meta: &Json) -> Result<(Journal, BTreeMap<String, Json>)> {
+    let (j, mut prior) = Journal::open(path)?;
+    match prior.remove(META_KEY) {
+        Some(m) if m != *meta => bail!(
+            "journal {} belongs to a different sweep ({}); this run is {} — \
+             pass a fresh --journal path",
+            path.display(),
+            m.to_string_pretty(),
+            meta.to_string_pretty()
+        ),
+        Some(_) => {}
+        None if prior.is_empty() => j.record(META_KEY, meta)?,
+        None => bail!(
+            "journal {} has cells but no {META_KEY} header; refusing to resume",
+            path.display()
+        ),
+    }
+    Ok((j, prior))
+}
+
+/// The `{"plan": ...}` event payload announcing the full grid — `padst
+/// watch` reads `total` as its progress denominator.
+fn plan_event(keys: &[CellKey]) -> Json {
+    json::obj(vec![
+        ("total", json::num(keys.len() as f64)),
+        ("cells", Json::Arr(keys.iter().map(|k| json::s(&k.id())).collect())),
+    ])
+}
+
+/// Write a journal's header and plan record without running any cells —
+/// what `padst sweep --dry-run --journal <path>` leaves behind, so `padst
+/// watch` has a denominator (and CI a deterministic fixture) before the
+/// real run starts.
+pub fn seed_dry_run_journal(
+    path: &Path,
+    model: &str,
+    steps: usize,
+    seed: u64,
+    keys: &[CellKey],
+) -> Result<()> {
+    let meta = sweep_meta(model, steps, seed);
+    let (j, _prior) = open_sweep_journal(path, &meta)?;
+    j.append_event(PLAN_KEY, &plan_event(keys))?;
+    Ok(())
 }
 
 /// What a method *does* — the cell fingerprint carried by the journal.

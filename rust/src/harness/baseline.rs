@@ -5,6 +5,10 @@
 //! is a regression; `padst bench-compare <old> <new>` exits non-zero if
 //! any survive.  Value-only records (`n == 0`) and records present in only
 //! one report are listed but never gate.
+//!
+//! p90 is also compared, *warn-only*: a tail regression prints but never
+//! fails the gate (tails are noisier than medians, and pre-obs baselines
+//! have no p90 at all — those rows are skipped).
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -34,6 +38,9 @@ pub struct Comparison {
     pub added: Vec<String>,
     /// Record ids only in the old report.
     pub removed: Vec<String>,
+    /// p90 grew past the threshold — warn-only, never gates.  Rows where
+    /// either side lacks p90 (pre-obs baselines) are skipped.
+    pub p90_warnings: Vec<Delta>,
 }
 
 impl Comparison {
@@ -51,6 +58,7 @@ pub fn compare(old: &BenchReport, new: &BenchReport, threshold_pct: f64) -> Comp
         within: 0,
         added: Vec::new(),
         removed: Vec::new(),
+        p90_warnings: Vec::new(),
     };
     let old_by: BTreeMap<String, &BenchRecord> = old.records.iter().map(|r| (r.id(), r)).collect();
     let new_ids: BTreeSet<String> = new.records.iter().map(|r| r.id()).collect();
@@ -70,6 +78,17 @@ pub fn compare(old: &BenchReport, new: &BenchReport, threshold_pct: f64) -> Comp
                 } else {
                     cmp.within += 1;
                 }
+                if o.p90_s > 0.0 && r.p90_s > 0.0 {
+                    let pct90 = (r.p90_s / o.p90_s - 1.0) * 100.0;
+                    if pct90 > threshold_pct {
+                        cmp.p90_warnings.push(Delta {
+                            id: r.id(),
+                            old_p50_s: o.p90_s,
+                            new_p50_s: r.p90_s,
+                            pct: pct90,
+                        });
+                    }
+                }
             }
         }
     }
@@ -80,6 +99,7 @@ pub fn compare(old: &BenchReport, new: &BenchReport, threshold_pct: f64) -> Comp
     }
     cmp.regressions.sort_by(|a, b| b.pct.total_cmp(&a.pct));
     cmp.improvements.sort_by(|a, b| a.pct.total_cmp(&b.pct));
+    cmp.p90_warnings.sort_by(|a, b| b.pct.total_cmp(&a.pct));
     cmp
 }
 
@@ -95,19 +115,24 @@ pub fn print_comparison(c: &Comparison) {
         );
     };
     println!(
-        "# bench-compare: threshold ±{:.1}% on p50 ({} regressed, {} improved, {} within, {} added, {} removed)",
+        "# bench-compare: threshold ±{:.1}% on p50 ({} regressed, {} improved, {} within, \
+         {} added, {} removed, {} p90-warned)",
         c.threshold_pct,
         c.regressions.len(),
         c.improvements.len(),
         c.within,
         c.added.len(),
-        c.removed.len()
+        c.removed.len(),
+        c.p90_warnings.len()
     );
     for d in &c.regressions {
         row(d, "REGRESSED");
     }
     for d in &c.improvements {
         row(d, "improved ");
+    }
+    for d in &c.p90_warnings {
+        row(d, "p90-warn ");
     }
     for id in &c.added {
         println!("  added     {id}");
@@ -138,6 +163,24 @@ mod tests {
         let c = compare(&old, &report_with_p50(0.5), 10.0);
         assert!(!c.regressed());
         assert_eq!(c.improvements.len(), 1);
+    }
+
+    #[test]
+    fn p90_regression_warns_but_never_gates() {
+        fn rep(p50: f64, p90: f64) -> BenchReport {
+            let mut r = BenchReport::new("kernels", 1);
+            let mut rec = BenchRecord::from_summary("g", "hot", &summarize(&[p50]));
+            rec.p90_s = p90;
+            r.push(rec);
+            r
+        }
+        let c = compare(&rep(1.0, 1.0), &rep(1.0, 2.0), 10.0);
+        assert!(!c.regressed(), "p90 movement alone must not gate");
+        assert_eq!(c.p90_warnings.len(), 1);
+        assert_eq!(c.p90_warnings[0].id, "g/hot");
+        // Pre-obs baseline: no p90 on the old side, row skipped.
+        let c = compare(&rep(1.0, 0.0), &rep(1.0, 2.0), 10.0);
+        assert!(c.p90_warnings.is_empty());
     }
 
     #[test]

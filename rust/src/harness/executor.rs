@@ -15,11 +15,55 @@
 //! (`shard::Journal`), cells completed before the failure are not lost.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::{self, Counter, Histogram};
 use crate::util::cli::available_threads;
+
+/// Per-worker instrumentation handles, registered on the process-wide
+/// registry (`obs::global()`).  Cells are macro operations (seconds to
+/// minutes), so they record unconditionally — no `obs::enabled()` gate.
+struct WorkerObs {
+    /// Cells this worker pulled from the cursor (attempted, not finished).
+    pulled: Arc<Counter>,
+    /// Total nanoseconds this worker spent inside `work` — utilization is
+    /// `busy_ns / wall_ns` per worker, and skew across workers exposes
+    /// shard-alignment imbalance.
+    busy_ns: Arc<Counter>,
+    /// Pool-wide per-cell duration (successful cells only).
+    cell_ns: Arc<Histogram>,
+    /// Pool-wide completed-cell count.
+    cells_done: Arc<Counter>,
+}
+
+impl WorkerObs {
+    fn new(wid: usize) -> WorkerObs {
+        let reg = obs::global();
+        WorkerObs {
+            pulled: reg.counter(&format!("harness.worker{wid}.pulled")),
+            busy_ns: reg.counter(&format!("harness.worker{wid}.busy_ns")),
+            cell_ns: reg.histogram("harness.cell_ns"),
+            cells_done: reg.counter("harness.cells_done"),
+        }
+    }
+
+    /// Run one cell under the pull/busy/done counters.
+    fn observe<T>(&self, f: impl FnOnce() -> Result<T>) -> Result<T> {
+        self.pulled.inc();
+        let t0 = Instant::now();
+        let out = f();
+        let ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+        self.busy_ns.add(ns);
+        if out.is_ok() {
+            self.cell_ns.record(ns);
+            self.cells_done.inc();
+        }
+        out
+    }
+}
 
 /// Resolve a worker knob against a cell count: 0 = auto (available
 /// parallelism), and never more workers than cells.
@@ -57,7 +101,12 @@ where
     let workers = resolve_workers(workers, keys.len());
     if workers <= 1 {
         let mut ctx = init(0)?;
-        return keys.iter().enumerate().map(|(i, k)| work(&mut ctx, i, k)).collect();
+        let wobs = WorkerObs::new(0);
+        return keys
+            .iter()
+            .enumerate()
+            .map(|(i, k)| wobs.observe(|| work(&mut ctx, i, k)))
+            .collect();
     }
 
     let cursor = AtomicUsize::new(0);
@@ -82,6 +131,7 @@ where
                     Ok(c) => c,
                     Err(e) => return fail(e.context(format!("initialising worker {wid}"))),
                 };
+                let wobs = WorkerObs::new(wid);
                 loop {
                     if abort.load(Ordering::SeqCst) {
                         return;
@@ -90,7 +140,7 @@ where
                     if i >= keys.len() {
                         return;
                     }
-                    match work(&mut ctx, i, &keys[i]) {
+                    match wobs.observe(|| work(&mut ctx, i, &keys[i])) {
                         Ok(t) => slots.lock().unwrap()[i] = Some(t),
                         Err(e) => return fail(e),
                     }

@@ -142,6 +142,21 @@ impl Journal {
         Ok(())
     }
 
+    /// Append one tagged side-record (`{"<tag>": payload}`) and flush.
+    /// Heartbeats (`obs::watch::HEARTBEAT_KEY`) and plan records ride
+    /// this lane: resume and merge readers key on `"key"`/`"cell"` and
+    /// skip anything else, so journals with events stay readable by
+    /// pre-event tooling.  [`merge_journals`] drops them by design —
+    /// they describe one run's liveness, not the sweep's results.
+    pub fn append_event(&self, tag: &str, payload: &Json) -> Result<()> {
+        let line = json::obj(vec![(tag, payload.clone())]).to_string_pretty();
+        let mut f = self.file.lock().unwrap();
+        writeln!(f, "{line}")
+            .and_then(|()| f.flush())
+            .with_context(|| format!("appending event to journal {}", self.path.display()))?;
+        Ok(())
+    }
+
     pub fn path(&self) -> &Path {
         &self.path
     }

@@ -16,8 +16,8 @@
 //!   "records": [
 //!     {"group": "microbench", "name": "gather(64,768,768) d=0.1",
 //!      "backend": "tiled",
-//!      "n": 57, "mean_s": 1.1e-4, "p50_s": 1.0e-4, "p95_s": 1.3e-4,
-//!      "min_s": 9.0e-5, "max_s": 2.0e-4,
+//!      "n": 57, "mean_s": 1.1e-4, "p50_s": 1.0e-4, "p90_s": 1.2e-4,
+//!      "p95_s": 1.3e-4, "min_s": 9.0e-5, "max_s": 2.0e-4,
 //!      "metrics": {"gflops": 12.5, "vs_naive": 2.1}}
 //!   ]
 //! }
@@ -49,6 +49,7 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use crate::kernels::micro::Backend;
+use crate::obs::{HistSnapshot, OBS_SCHEMA_VERSION};
 use crate::util::json::{self, Json};
 use crate::util::stats::Summary;
 
@@ -73,9 +74,16 @@ pub struct BenchRecord {
     pub n: usize,
     pub mean_s: f64,
     pub p50_s: f64,
+    /// Tail quantile the obs layer added; 0.0 in pre-obs reports, and the
+    /// baseline comparison treats it as warn-only (never a CI gate).
+    pub p90_s: f64,
     pub p95_s: f64,
     pub min_s: f64,
     pub max_s: f64,
+    /// `obs::OBS_SCHEMA_VERSION` when the record's quantiles came from an
+    /// obs histogram ([`BenchRecord::from_hist`]); 0 when they came from
+    /// the sorted-sample path (or a pre-obs report).
+    pub obs_schema: u32,
     /// Free-form numeric side channel (gflops, speedups, MB, ...).
     pub metrics: BTreeMap<String, f64>,
 }
@@ -92,9 +100,35 @@ impl BenchRecord {
             n: s.n,
             mean_s: s.mean,
             p50_s: s.p50,
+            p90_s: s.p90,
             p95_s: s.p95,
             min_s: s.min,
             max_s: s.max,
+            obs_schema: 0,
+            metrics: BTreeMap::new(),
+        }
+    }
+
+    /// A timed record whose quantiles come from an obs nanosecond
+    /// [`HistSnapshot`] (bucket midpoints, ≤6.25 % relative error — fine
+    /// for trajectory tracking, which is why `obs_schema` stamps the
+    /// provenance).
+    pub fn from_hist(group: &str, name: &str, h: &HistSnapshot) -> BenchRecord {
+        let s = |ns: u64| ns as f64 * 1e-9;
+        BenchRecord {
+            group: group.to_string(),
+            name: name.to_string(),
+            backend: String::new(),
+            pattern: String::new(),
+            perm: String::new(),
+            n: h.count as usize,
+            mean_s: h.mean() * 1e-9,
+            p50_s: s(h.quantile(0.5)),
+            p90_s: s(h.quantile(0.9)),
+            p95_s: s(h.quantile(0.95)),
+            min_s: s(h.min),
+            max_s: s(h.max),
+            obs_schema: OBS_SCHEMA_VERSION,
             metrics: BTreeMap::new(),
         }
     }
@@ -110,9 +144,11 @@ impl BenchRecord {
             n: 0,
             mean_s: 0.0,
             p50_s: 0.0,
+            p90_s: 0.0,
             p95_s: 0.0,
             min_s: 0.0,
             max_s: 0.0,
+            obs_schema: 0,
             metrics: BTreeMap::new(),
         }
     }
@@ -163,10 +199,14 @@ impl BenchRecord {
         if !self.perm.is_empty() {
             pairs.push(("perm", json::s(&self.perm)));
         }
+        if self.obs_schema != 0 {
+            pairs.push(("obs_schema", json::num(self.obs_schema as f64)));
+        }
         pairs.extend(vec![
             ("n", json::num(self.n as f64)),
             ("mean_s", json::num(self.mean_s)),
             ("p50_s", json::num(self.p50_s)),
+            ("p90_s", json::num(self.p90_s)),
             ("p95_s", json::num(self.p95_s)),
             ("min_s", json::num(self.min_s)),
             ("max_s", json::num(self.max_s)),
@@ -219,9 +259,13 @@ impl BenchRecord {
             n: num_field("n")? as usize,
             mean_s: num_field("mean_s")?,
             p50_s: num_field("p50_s")?,
+            // Absent in pre-obs reports; 0.0 makes the p90 comparison
+            // skip the row rather than fabricate a delta.
+            p90_s: v.get("p90_s").and_then(Json::as_f64).unwrap_or(0.0),
             p95_s: num_field("p95_s")?,
             min_s: num_field("min_s")?,
             max_s: num_field("max_s")?,
+            obs_schema: v.get("obs_schema").and_then(Json::as_usize).unwrap_or(0) as u32,
             metrics,
         })
     }
@@ -239,6 +283,10 @@ pub struct BenchReport {
     /// reports).  Defaults to [`Backend::default_backend`]; override with
     /// [`BenchReport::with_backend`] when a `--backend` flag was parsed.
     pub backend: String,
+    /// Obs snapshot provenance (`ObsSnapshot::to_json`) from the run that
+    /// produced the report.  Optional and never part of any record's
+    /// identity: bench-compare ignores it entirely.
+    pub obs: Option<Json>,
     pub records: Vec<BenchRecord>,
 }
 
@@ -249,6 +297,7 @@ impl BenchReport {
             bench: bench.to_string(),
             threads,
             backend: Backend::default_backend().name().to_string(),
+            obs: None,
             records: Vec::new(),
         }
     }
@@ -256,6 +305,12 @@ impl BenchReport {
     /// Builder-style backend stamp for the whole report.
     pub fn with_backend(mut self, backend: Backend) -> BenchReport {
         self.backend = backend.name().to_string();
+        self
+    }
+
+    /// Builder-style obs-snapshot attachment (provenance only).
+    pub fn with_obs(mut self, obs: Json) -> BenchReport {
+        self.obs = Some(obs);
         self
     }
 
@@ -280,6 +335,9 @@ impl BenchReport {
         ];
         if !self.backend.is_empty() {
             pairs.push(("backend", json::s(&self.backend)));
+        }
+        if let Some(obs) = &self.obs {
+            pairs.push(("obs", obs.clone()));
         }
         pairs.push((
             "records",
@@ -306,6 +364,7 @@ impl BenchReport {
             .to_string();
         let threads = v.get("threads").and_then(Json::as_usize).unwrap_or(0);
         let backend = v.get("backend").and_then(Json::as_str).unwrap_or("").to_string();
+        let obs = v.get("obs").cloned().filter(|j| !matches!(j, Json::Null));
         let records = v
             .get("records")
             .and_then(Json::as_arr)
@@ -313,7 +372,7 @@ impl BenchReport {
             .iter()
             .map(BenchRecord::from_json)
             .collect::<Result<Vec<_>>>()?;
-        Ok(BenchReport { schema_version, bench, threads, backend, records })
+        Ok(BenchReport { schema_version, bench, threads, backend, obs, records })
     }
 
     /// Atomic write (temp + rename, parent dirs created).

@@ -50,11 +50,69 @@ pub fn spmm_flops(batch: usize, nnz: usize) -> usize {
     2 * batch * nnz
 }
 
+/// Dispatch metric handles, lazily registered on `obs::global()` the
+/// first time an *enabled* dispatch runs — a process that never turns
+/// observability on never registers (or pays for) them.
+struct KernelObs {
+    run_plan: std::sync::Arc<crate::obs::Counter>,
+    run_plan_mt: std::sync::Arc<crate::obs::Counter>,
+    /// Per-plan-kind dispatch timing, indexed by [`plan_kind_index`].
+    plan_ns: [std::sync::Arc<crate::obs::Histogram>; 4],
+}
+
+fn kernel_obs() -> &'static KernelObs {
+    static OBS: std::sync::OnceLock<KernelObs> = std::sync::OnceLock::new();
+    OBS.get_or_init(|| {
+        let reg = crate::obs::global();
+        KernelObs {
+            run_plan: reg.counter("kernels.run_plan"),
+            run_plan_mt: reg.counter("kernels.run_plan_mt"),
+            plan_ns: [
+                reg.histogram("kernels.plan_ns.rows"),
+                reg.histogram("kernels.plan_ns.blocks"),
+                reg.histogram("kernels.plan_ns.csr"),
+                reg.histogram("kernels.plan_ns.dense"),
+            ],
+        }
+    })
+}
+
+fn plan_kind_index(plan: &crate::sparsity::pattern::KernelPlan) -> usize {
+    use crate::sparsity::pattern::KernelPlan;
+    match plan {
+        KernelPlan::Rows(_) => 0,
+        KernelPlan::Blocks(_) => 1,
+        KernelPlan::Csr(_) => 2,
+        KernelPlan::Dense { .. } => 3,
+    }
+}
+
 /// Execute a pattern's [`KernelPlan`](crate::sparsity::pattern::KernelPlan)
 /// on the serial driver it selects — the single plan→driver dispatch
 /// point (benches and tests must not hand-roll this match: a new plan
 /// variant then only has one execution site to extend).
+///
+/// Sits inside training inner loops where an `Instant::now()` pair is
+/// measurable against a tiny GEMM, so dispatch metrics hide behind
+/// [`crate::obs::enabled`]: one relaxed atomic load when off.
 pub fn run_plan(
+    plan: &crate::sparsity::pattern::KernelPlan,
+    x: &[f32],
+    batch: usize,
+    y: &mut [f32],
+    backend: Backend,
+) {
+    if !crate::obs::enabled() {
+        return dispatch_plan(plan, x, batch, y, backend);
+    }
+    let ko = kernel_obs();
+    ko.run_plan.inc();
+    let t0 = std::time::Instant::now();
+    dispatch_plan(plan, x, batch, y, backend);
+    ko.plan_ns[plan_kind_index(plan)].record_ns(t0.elapsed());
+}
+
+fn dispatch_plan(
     plan: &crate::sparsity::pattern::KernelPlan,
     x: &[f32],
     batch: usize,
@@ -74,6 +132,24 @@ pub fn run_plan(
 
 /// [`run_plan`] on the scoped-thread `_mt` drivers.
 pub fn run_plan_mt(
+    plan: &crate::sparsity::pattern::KernelPlan,
+    x: &[f32],
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+    backend: Backend,
+) {
+    if !crate::obs::enabled() {
+        return dispatch_plan_mt(plan, x, batch, y, threads, backend);
+    }
+    let ko = kernel_obs();
+    ko.run_plan_mt.inc();
+    let t0 = std::time::Instant::now();
+    dispatch_plan_mt(plan, x, batch, y, threads, backend);
+    ko.plan_ns[plan_kind_index(plan)].record_ns(t0.elapsed());
+}
+
+fn dispatch_plan_mt(
     plan: &crate::sparsity::pattern::KernelPlan,
     x: &[f32],
     batch: usize,

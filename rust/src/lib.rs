@@ -16,7 +16,9 @@
 //!   telemetry (`BENCH_*.json`) for the CI perf gate.  Trained
 //!   checkpoints are served by the [`serve`] layer (`padst serve`): a
 //!   long-running node with per-session compiled-plan/scratch caching
-//!   and request coalescing over an NDJSON protocol.
+//!   and request coalescing over an NDJSON protocol.  The [`obs`] layer
+//!   (spans, metric registry, mergeable snapshots, `padst watch`)
+//!   instruments all of the above without allocating on hot paths.
 //!
 //! See `docs/ARCHITECTURE.md` for the full layer stack and the README for
 //! the paper-artifact ↔ command map.
@@ -32,6 +34,7 @@
 
 pub mod tensor;
 pub mod util;
+pub mod obs;
 pub mod runtime;
 pub mod sparsity;
 pub mod perm;

@@ -19,8 +19,11 @@
 //!   serve          — long-running batched inference node: loads a checkpoint
 //!                    once (plans compiled, perms decoded), answers NDJSON
 //!                    frames on stdin or a Unix socket until EOF
+//!   watch          — live terminal status view over a sweep journal
+//!                    (progress bar, per-worker heartbeat age, ETA)
 //!   bench-compare  — diff two BENCH_*.json reports; exits non-zero on a
-//!                    p50 regression beyond the threshold (the CI perf gate)
+//!                    p50 regression beyond the threshold (the CI perf gate);
+//!                    p90 movements print as warnings but never gate
 //!
 //! Benches (Fig. 3, Tbl. 5) live under `cargo bench`; analysis examples
 //! (Fig. 4-6) under `cargo run --example`.
@@ -34,6 +37,7 @@ use padst::coordinator::{sweep, GrowMode, RunConfig, Trainer};
 use padst::harness::{baseline, shard, telemetry::BenchReport};
 use padst::kernels::micro::Backend;
 use padst::nlr;
+use padst::obs;
 use padst::perm::model::{perm_registry, resolve_perm};
 use padst::runtime::Runtime;
 use padst::serve::{NodeOpts, SessionCtx};
@@ -115,6 +119,7 @@ fn usage() -> ! {
         "padst — Permutation-Augmented Dynamic Structured Sparse Training
 
 USAGE: padst <train|sweep|serve|patterns|perms|nlr|list> [--flag value ...]
+       padst watch <journal.jsonl> [--once] [--interval SECS] [--stale SECS]
        padst bench-compare <old.json> <new.json> [--threshold PCT]
        padst journal-merge <a.jsonl> <b.jsonl> ... -o <out.jsonl>
 
@@ -147,7 +152,9 @@ sweep:
                           (method, perm) pair becomes one grid row named
                           method+spec (the permutation axis of Fig. 2)
   --dry-run               plan the grid and print each cell's fingerprint
-                          without opening a runtime (no artifacts needed)
+                          without opening a runtime (no artifacts needed);
+                          with --journal, seeds the journal's header + plan
+                          record so `padst watch` shows done/total upfront
   --csv PATH              dump results as CSV (atomic write)
   --threads N             global native-kernel budget, divided across workers
   --backend B             microkernel backend for every cell
@@ -194,9 +201,19 @@ nlr:
                           from the pattern's typed params (e.g. diag:51)
   --threads N             parallel bound evaluation (default: auto)
 
+watch:
+  padst watch sweep.jsonl       live view, re-rendered every --interval
+  --once                  render one frame and exit (scripts, CI goldens)
+  --interval 2            refresh period in seconds
+  --stale 120             seconds of heartbeat silence before a worker is
+                          flagged STALE (dead-shard warning)
+  --now T                 pin the clock to unix time T (deterministic
+                          output for tests/goldens)
+
 bench-compare:
   padst bench-compare BENCH_old.json BENCH_new.json [--threshold 10]
-  exits 1 if any record's p50 regressed more than the threshold percent
+  exits 1 if any record's p50 regressed more than the threshold percent;
+  p90 movements past the threshold print as warnings and never gate
 "
     );
     std::process::exit(2);
@@ -250,6 +267,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
+    // Sweeps are macro-scale: kernel dispatch metrics cost nothing
+    // relative to a training cell, so observability is always on here.
+    obs::set_enabled(true);
     let threads = args.get_usize("threads", 0)?; // 0 = auto
     let workers = args.get_usize("workers", 1)?; // 1 = sequential, 0 = auto
     let backend = backend_flag(args)?;
@@ -297,6 +317,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 m.perm,
                 sp * 100.0,
                 sweep::method_fingerprint(m)
+            );
+        }
+        // Seed the journal's header + plan record so `padst watch` has a
+        // progress denominator before the real sweep starts.
+        if let Some(path) = &journal {
+            let keys: Vec<shard::CellKey> = cells
+                .iter()
+                .map(|(m, sp)| shard::CellKey { method: m.name.clone(), sparsity: *sp })
+                .collect();
+            sweep::seed_dry_run_journal(path, &model, steps, seed, &keys)?;
+            eprintln!(
+                "[padst] seeded journal {} ({} cells planned)",
+                path.display(),
+                keys.len()
             );
         }
         return Ok(());
@@ -462,8 +496,23 @@ fn cmd_list(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Live terminal status view over a sweep journal.
+fn cmd_watch(path: &str, args: &Args) -> Result<()> {
+    let once = args.flags.contains_key("once");
+    let interval = args.get_f64("interval", 2.0)?;
+    let stale = args.get_f64("stale", 120.0)?;
+    let now = match args.flags.get("now") {
+        Some(v) => Some(v.parse().map_err(|e| anyhow!("--now: {e}"))?),
+        None => None,
+    };
+    obs::watch::watch(Path::new(path), once, interval, stale, now)
+}
+
 /// Long-running batched inference node over stdin/a Unix socket.
 fn cmd_serve(args: &Args) -> Result<()> {
+    // Serving is frame-scale (µs+): always-on metrics back the `stats`
+    // wire frame and the shutdown latency summary.
+    obs::set_enabled(true);
     let threads = args.get_usize("threads", 0)?; // 0 = auto
     let backend = backend_flag(args)?;
     let mut ctx = if let Some(spec) = args.flags.get("synthetic") {
@@ -516,13 +565,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "[padst serve] eof: {} requests -> {} responses ({} errors), {} batches (widest {})",
         stats.requests, stats.responses, stats.errors, stats.batches, stats.widest_batch
     );
+    eprintln!("[padst serve] {}", padst::serve::latency_summary(&ctx));
     Ok(())
 }
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    obs::init_from_env();
     if argv.is_empty() {
         usage();
+    }
+    if argv[0] == "watch" {
+        // Positional form: watch <journal.jsonl> [--once] [--interval S].
+        if argv.len() < 2 || argv[1].starts_with("--") {
+            usage();
+        }
+        let args = Args::parse(&argv[2..])?;
+        return cmd_watch(&argv[1], &args);
     }
     if argv[0] == "bench-compare" {
         // Positional form: bench-compare <old.json> <new.json> [--flags].

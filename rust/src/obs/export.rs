@@ -1,0 +1,215 @@
+//! Schema-versioned JSON snapshots of the metric registry.
+//!
+//! A snapshot is the wire/disk form of [`super::metrics::MetricRegistry`]:
+//! plain counters/gauges plus sparse histogram bucket tables.  Snapshots
+//! are *mergeable* — `a.merge(&b)` is associative and commutative and
+//! equals the snapshot of a registry that saw both sample streams — so
+//! per-shard snapshots can be combined exactly like journal shards.
+//!
+//! The schema is versioned independently of the bench-telemetry schema:
+//! [`OBS_SCHEMA_VERSION`] is stamped into every exported object and into
+//! `BenchRecord.obs_schema`, so downstream tooling can tell which bucket
+//! layout produced a given quantile.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::{self, Json};
+
+use super::metrics::bucket_value;
+
+/// Bucket-layout / field-set version of exported snapshots.
+pub const OBS_SCHEMA_VERSION: u32 = 1;
+
+/// Point-in-time copy of one histogram: totals plus the sparse bucket
+/// table (`index -> count`, indices from `metrics::bucket_index`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub buckets: BTreeMap<usize, u64>,
+}
+
+impl HistSnapshot {
+    /// Quantile by the same rank convention as `util::stats::summarize`
+    /// (`rank = round((n-1) * q)`), reconstructed from bucket midpoints:
+    /// exact below 16, within 6.25 % above.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count - 1) as f64 * q).round() as u64;
+        let mut cum = 0u64;
+        for (&i, &c) in &self.buckets {
+            cum += c;
+            if cum > target {
+                return bucket_value(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Combine with another snapshot of the same metric (bucket counts
+    /// add, extremes widen).  Associative and commutative.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if other.count > 0 {
+            self.min = if self.count == 0 { other.min } else { self.min.min(other.min) };
+            self.max = self.max.max(other.max);
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        for (&i, &c) in &other.buckets {
+            *self.buckets.entry(i).or_insert(0) += c;
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let buckets = self
+            .buckets
+            .iter()
+            .map(|(&i, &c)| json::arr([json::num(i as f64), json::num(c as f64)]))
+            .collect::<Vec<_>>();
+        json::obj(vec![
+            ("count", json::num(self.count as f64)),
+            ("sum", json::num(self.sum as f64)),
+            ("min", json::num(self.min as f64)),
+            ("max", json::num(self.max as f64)),
+            // Derived quantiles, for humans and dashboards; `parse`
+            // ignores them (buckets are the source of truth).
+            ("p50", json::num(self.quantile(0.5) as f64)),
+            ("p90", json::num(self.quantile(0.9) as f64)),
+            ("p99", json::num(self.quantile(0.99) as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<HistSnapshot> {
+        let field = |k: &str| -> u64 { v.get(k).and_then(Json::as_f64).unwrap_or(0.0) as u64 };
+        let mut buckets = BTreeMap::new();
+        if let Some(arr) = v.get("buckets").and_then(Json::as_arr) {
+            for pair in arr {
+                let (Some(i), Some(c)) = (
+                    pair.idx(0).and_then(Json::as_usize),
+                    pair.idx(1).and_then(Json::as_f64),
+                ) else {
+                    bail!("bad histogram bucket entry: {}", pair.to_string_pretty());
+                };
+                buckets.insert(i, c as u64);
+            }
+        }
+        Ok(HistSnapshot {
+            count: field("count"),
+            sum: field("sum"),
+            min: field("min"),
+            max: field("max"),
+            buckets,
+        })
+    }
+}
+
+/// A full registry snapshot: every counter, gauge and histogram by name.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub hists: BTreeMap<String, HistSnapshot>,
+}
+
+impl ObsSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Merge rule per kind: counters add, gauges keep the max (they are
+    /// high-water marks on the wire), histograms merge bucket-wise.
+    pub fn merge(&mut self, other: &ObsSnapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            let e = self.gauges.entry(k.clone()).or_insert(0);
+            *e = (*e).max(*v);
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters =
+            self.counters.iter().map(|(k, &v)| (k.clone(), json::num(v as f64))).collect();
+        let gauges = self.gauges.iter().map(|(k, &v)| (k.clone(), json::num(v as f64))).collect();
+        let hists = self.hists.iter().map(|(k, h)| (k.clone(), h.to_json())).collect();
+        json::obj(vec![
+            ("obs_schema", json::num(OBS_SCHEMA_VERSION as f64)),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("hists", Json::Obj(hists)),
+        ])
+    }
+
+    pub fn parse(v: &Json) -> Result<ObsSnapshot> {
+        let schema = v.get("obs_schema").and_then(Json::as_usize).unwrap_or(0);
+        if schema != OBS_SCHEMA_VERSION as usize {
+            bail!("unsupported obs_schema {schema} (this build reads {OBS_SCHEMA_VERSION})");
+        }
+        let mut snap = ObsSnapshot::default();
+        if let Some(m) = v.get("counters").and_then(Json::as_obj) {
+            for (k, c) in m {
+                snap.counters.insert(k.clone(), c.as_f64().unwrap_or(0.0) as u64);
+            }
+        }
+        if let Some(m) = v.get("gauges").and_then(Json::as_obj) {
+            for (k, g) in m {
+                snap.gauges.insert(k.clone(), g.as_f64().unwrap_or(0.0) as u64);
+            }
+        }
+        if let Some(m) = v.get("hists").and_then(Json::as_obj) {
+            for (k, h) in m {
+                snap.hists.insert(k.clone(), HistSnapshot::from_json(h)?);
+            }
+        }
+        Ok(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let mut snap = ObsSnapshot::default();
+        snap.counters.insert("c".into(), 7);
+        snap.gauges.insert("g".into(), 3);
+        let mut h = HistSnapshot { count: 2, sum: 30, min: 10, max: 20, ..Default::default() };
+        h.buckets.insert(10, 1);
+        h.buckets.insert(17, 1);
+        snap.hists.insert("h".into(), h);
+        let text = snap.to_json().to_string_pretty();
+        let re = ObsSnapshot::parse(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(snap, re);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_schema() {
+        let v = json::obj(vec![("obs_schema", json::num(99.0))]);
+        assert!(ObsSnapshot::parse(&v).is_err());
+    }
+
+    #[test]
+    fn quantile_of_empty_is_zero() {
+        assert_eq!(HistSnapshot::default().quantile(0.5), 0);
+    }
+}

@@ -1,0 +1,301 @@
+//! Process-wide metric registry: counters, gauges, and fixed-bucket
+//! log-scale histograms.
+//!
+//! Design constraints (they shape everything here):
+//!
+//! - **Allocation-free on the hot path.** Registration (`counter()`,
+//!   `gauge()`, `histogram()`) allocates and takes a lock; *recording*
+//!   into a handle is a handful of relaxed atomic ops on pre-sized
+//!   storage.  The serve warm-path fingerprint test runs with metrics
+//!   enabled, so any allocation sneaking into `record()` shows up as a
+//!   moved scratch pointer or a bumped registration count.
+//! - **Dependency-free.** No prometheus/metrics crates — the build is
+//!   offline.  Snapshots serialise through [`crate::util::json`].
+//! - **Mergeable.** Shard A's snapshot + shard B's snapshot must equal
+//!   the snapshot of a registry that saw both streams (counters add,
+//!   gauges keep the max, histogram buckets add) — `journal-merge` and
+//!   multi-worker sweeps rely on this.
+//!
+//! Histogram buckets are log-scale with 8 sub-buckets per octave:
+//! values 0..16 get exact unit buckets, and every value `v >= 16` lands
+//! in a bucket of width `2^(floor_log2(v) - 3)`, so the reconstructed
+//! quantile is within 6.25 % of the true value while the whole table
+//! stays a fixed 496 slots (good to `u64::MAX` nanoseconds).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::export::{HistSnapshot, ObsSnapshot};
+
+/// Total number of histogram buckets: 16 exact unit buckets for 0..16,
+/// then 8 sub-buckets for each of the 60 octaves `2^4 ..= 2^63`.
+pub const NBUCKETS: usize = 16 + 60 * 8;
+
+/// Bucket index for a recorded value (total order, monotone in `v`).
+pub(crate) fn bucket_index(v: u64) -> usize {
+    if v < 16 {
+        return v as usize;
+    }
+    let lg = 63 - v.leading_zeros() as usize; // floor(log2 v), 4..=63
+    let sub = ((v >> (lg - 3)) & 7) as usize;
+    16 + (lg - 4) * 8 + sub
+}
+
+/// Representative value for a bucket (midpoint; exact below 16).
+pub(crate) fn bucket_value(i: usize) -> u64 {
+    if i < 16 {
+        return i as u64;
+    }
+    let lg = (i - 16) / 8 + 4;
+    let sub = ((i - 16) % 8) as u64;
+    let width = 1u64 << (lg - 3);
+    let lower = (1u64 << lg) + sub * width;
+    lower.saturating_add(width / 2)
+}
+
+/// Monotonically increasing event count.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-written / high-water value.  Snapshots merge gauges by `max`,
+/// so prefer [`Gauge::set_max`] for values that should survive merging
+/// (queue depths, widest batch, ...).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn set_max(&self, n: u64) {
+        self.v.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log-scale histogram of `u64` samples (typically
+/// nanoseconds).  Recording is five relaxed atomic ops, no allocation.
+pub struct Histogram {
+    buckets: [AtomicU64; NBUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds (saturating past ~584 years).
+    pub fn record_ns(&self, d: Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the bucket table (sparse), suitable for
+    /// quantile queries, merging, and JSON export.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let mut buckets = BTreeMap::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 {
+                buckets.insert(i, c);
+            }
+        }
+        HistSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { self.min.load(Ordering::Relaxed) },
+            max: self.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Named metric handles, get-or-create.  One global registry backs the
+/// kernels/harness layers ([`crate::obs::global`]); the serve layer
+/// gives each `SessionCtx` its own instance so per-session counters
+/// stay isolated (and deterministic under parallel `cargo test`).
+pub struct MetricRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    registrations: AtomicUsize,
+}
+
+impl Default for MetricRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricRegistry {
+    pub const fn new() -> MetricRegistry {
+        MetricRegistry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            hists: Mutex::new(BTreeMap::new()),
+            registrations: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        if let Some(c) = m.get(name) {
+            return c.clone();
+        }
+        let c = Arc::new(Counter::default());
+        m.insert(name.to_string(), c.clone());
+        self.registrations.fetch_add(1, Ordering::Relaxed);
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        if let Some(g) = m.get(name) {
+            return g.clone();
+        }
+        let g = Arc::new(Gauge::default());
+        m.insert(name.to_string(), g.clone());
+        self.registrations.fetch_add(1, Ordering::Relaxed);
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.hists.lock().unwrap();
+        if let Some(h) = m.get(name) {
+            return h.clone();
+        }
+        let h = Arc::new(Histogram::default());
+        m.insert(name.to_string(), h.clone());
+        self.registrations.fetch_add(1, Ordering::Relaxed);
+        h
+    }
+
+    /// Number of metrics ever created in this registry.  Part of the
+    /// serve warm-path fingerprint: a warm request must not register.
+    pub fn registrations(&self) -> usize {
+        self.registrations.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> ObsSnapshot {
+        let mut snap = ObsSnapshot::default();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            snap.counters.insert(k.clone(), c.get());
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            snap.gauges.insert(k.clone(), g.get());
+        }
+        for (k, h) in self.hists.lock().unwrap().iter() {
+            snap.hists.insert(k.clone(), h.snapshot());
+        }
+        snap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        for k in 0..64 {
+            for v in [(1u64 << k), (1u64 << k) + 1, (1u64 << k) + (1u64 << k) / 2] {
+                let i = bucket_index(v);
+                assert!(i < NBUCKETS, "v={v} i={i}");
+                assert!(i >= prev, "bucket index not monotone at v={v}");
+                prev = i;
+            }
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(15), 15);
+        assert!(bucket_index(u64::MAX) < NBUCKETS);
+    }
+
+    #[test]
+    fn bucket_value_round_trips_within_error() {
+        for v in [0u64, 1, 7, 15, 16, 17, 100, 1_000, 123_456, 1 << 40] {
+            let rep = bucket_value(bucket_index(v));
+            let err = rep.abs_diff(v) as f64;
+            assert!(err <= 1.0 + 0.0625 * v as f64, "v={v} rep={rep} err={err}");
+        }
+    }
+
+    #[test]
+    fn counter_gauge_basics() {
+        let r = MetricRegistry::new();
+        let c = r.counter("c");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = r.gauge("g");
+        g.set(3);
+        g.set_max(10);
+        g.set_max(2);
+        assert_eq!(g.get(), 10);
+        // get-or-create returns the same handle; no new registration.
+        let before = r.registrations();
+        assert_eq!(r.counter("c").get(), 5);
+        assert_eq!(r.registrations(), before);
+    }
+
+    #[test]
+    fn histogram_tracks_extremes() {
+        let h = Histogram::default();
+        for v in [5u64, 100, 3] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert_eq!(s.sum, 108);
+        assert_eq!(s.min, 3);
+        assert_eq!(s.max, 100);
+    }
+}

@@ -1,0 +1,60 @@
+//! Observability: spans, metrics, snapshots, and the `padst watch` view.
+//!
+//! Always-available and dependency-free (the build is offline).  Layout:
+//!
+//! - [`metrics`] — `MetricRegistry` of counters / gauges / log-scale
+//!   histograms; registration allocates, recording never does.
+//! - [`span`] — RAII timing spans with static labels on a thread-local
+//!   stack, recording into histograms on drop.
+//! - [`export`] — schema-versioned, mergeable JSON snapshots
+//!   (`obs_schema`), embedded in `stats` wire frames and
+//!   `BenchReport` provenance.
+//! - [`watch`] — journal heartbeat records + the `padst watch` terminal
+//!   status view.
+//!
+//! Two recording disciplines, by cost of the instrumented operation:
+//!
+//! - Serve frames and harness cells are *macro* operations (µs–minutes);
+//!   they record unconditionally.
+//! - `kernels::run_plan{,_mt}` sits inside training inner loops where a
+//!   single `Instant::now()` pair is measurable on tiny GEMMs, so kernel
+//!   dispatch metrics hide behind [`enabled`] — one relaxed atomic load
+//!   when off.  `padst serve` and `padst sweep` switch it on; tests and
+//!   library users via [`set_enabled`] or `PADST_OBS=1`.
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+pub mod watch;
+
+pub use export::{HistSnapshot, ObsSnapshot, OBS_SCHEMA_VERSION};
+pub use metrics::{Counter, Gauge, Histogram, MetricRegistry};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// The process-wide registry backing the kernels and harness layers.
+/// (The serve layer gives each `SessionCtx` its own registry instead,
+/// so per-session stats stay isolated.)
+pub fn global() -> &'static MetricRegistry {
+    static GLOBAL: MetricRegistry = MetricRegistry::new();
+    &GLOBAL
+}
+
+/// Cheap enabled-check guarding kernel-level (inner-loop) timing.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Honour `PADST_OBS=1` / `PADST_OBS=0` (called once from `main`).
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("PADST_OBS") {
+        set_enabled(v == "1" || v.eq_ignore_ascii_case("true"));
+    }
+}

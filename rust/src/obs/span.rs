@@ -1,0 +1,138 @@
+//! Scoped timing spans with static labels and a thread-local span stack.
+//!
+//! A span is an RAII guard: entering pushes its `&'static str` label
+//! onto a fixed-capacity thread-local stack (no allocation) and notes
+//! the start time; dropping pops the label and records the elapsed
+//! nanoseconds into an optional [`Histogram`].  Early returns and `?`
+//! propagation unwind guards in LIFO order, so the stack always
+//! balances — `depth()` is 0 between top-level operations.
+//!
+//! Labels must be `'static` string literals precisely so the hot path
+//! stays allocation-free: pushing is an array store + depth bump.
+
+use std::cell::Cell;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::metrics::Histogram;
+
+/// Maximum tracked nesting depth.  Deeper spans still time correctly;
+/// only their labels are dropped from the stack.
+pub const MAX_DEPTH: usize = 32;
+
+thread_local! {
+    static LABELS: Cell<[&'static str; MAX_DEPTH]> = const { Cell::new([""; MAX_DEPTH]) };
+    static DEPTH: Cell<usize> = const { Cell::new(0) };
+}
+
+/// RAII guard returned by [`enter`] / [`timed`].
+pub struct SpanGuard {
+    start: Instant,
+    hist: Option<Arc<Histogram>>,
+}
+
+/// Enter an untimed span: label-only, for attribution via [`path`].
+pub fn enter(label: &'static str) -> SpanGuard {
+    push(label);
+    SpanGuard { start: Instant::now(), hist: None }
+}
+
+/// Enter a timed span: on drop, elapsed nanoseconds are recorded into
+/// `hist`.  The `Arc` clone is a single atomic increment — no
+/// allocation on the hot path.
+pub fn timed(label: &'static str, hist: &Arc<Histogram>) -> SpanGuard {
+    push(label);
+    SpanGuard { start: Instant::now(), hist: Some(hist.clone()) }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        if let Some(h) = &self.hist {
+            h.record_ns(self.start.elapsed());
+        }
+    }
+}
+
+fn push(label: &'static str) {
+    DEPTH.with(|d| {
+        let depth = d.get();
+        if depth < MAX_DEPTH {
+            LABELS.with(|l| {
+                let mut arr = l.get();
+                arr[depth] = label;
+                l.set(arr);
+            });
+        }
+        d.set(depth + 1);
+    });
+}
+
+/// Current nesting depth on this thread (0 when no span is active).
+pub fn depth() -> usize {
+    DEPTH.with(Cell::get)
+}
+
+/// `"outer/inner"`-style label path for the current thread.  Allocates;
+/// intended for debugging and error context, not hot paths.
+pub fn path() -> String {
+    let depth = depth().min(MAX_DEPTH);
+    LABELS.with(|l| l.get()[..depth].join("/"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_spans_balance() {
+        assert_eq!(depth(), 0);
+        {
+            let _a = enter("a");
+            assert_eq!(depth(), 1);
+            {
+                let _b = enter("b");
+                assert_eq!(depth(), 2);
+                assert_eq!(path(), "a/b");
+            }
+            assert_eq!(depth(), 1);
+        }
+        assert_eq!(depth(), 0);
+        assert_eq!(path(), "");
+    }
+
+    #[test]
+    fn early_return_unwinds() {
+        fn inner(fail: bool) -> Result<(), ()> {
+            let _s = enter("inner");
+            if fail {
+                return Err(());
+            }
+            Ok(())
+        }
+        assert!(inner(true).is_err());
+        assert_eq!(depth(), 0);
+        assert!(inner(false).is_ok());
+        assert_eq!(depth(), 0);
+    }
+
+    #[test]
+    fn timed_span_records() {
+        let h = Arc::new(Histogram::default());
+        {
+            let _s = timed("t", &h);
+        }
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn overflow_depth_still_balances() {
+        let mut guards = Vec::new();
+        for _ in 0..(MAX_DEPTH + 4) {
+            guards.push(enter("deep"));
+        }
+        assert_eq!(depth(), MAX_DEPTH + 4);
+        drop(guards);
+        assert_eq!(depth(), 0);
+    }
+}

@@ -1,0 +1,428 @@
+//! `padst watch` — a live terminal status view over a sweep journal.
+//!
+//! The JSONL resume journal (`harness::shard::Journal`) is an embryonic
+//! event log: `{"cell":.., "key":..}` completion records plus a
+//! `__meta__` header.  This PR adds two *tagged* record kinds that
+//! pre-PR-7 readers skip (they key on `"key"`/`"cell"` presence):
+//!
+//! - `{"hb": {...}}` — a worker [`Heartbeat`] written by the sharded
+//!   sweep executor at cell start/finish, carrying worker id, cell id,
+//!   progress counters and (on `done`) the cell wall-clock.
+//! - `{"plan": {"total": N, "cells": [...]}}` — the planned grid,
+//!   seeded by `padst sweep --dry-run --journal <path>` so `watch` can
+//!   show done/total before the first worker finishes a cell.
+//!
+//! `watch` tails that file and renders progress, per-worker
+//! last-heartbeat age, an ETA from the cell-duration histogram, and a
+//! stale-shard warning.  Rendering is a pure function of
+//! `(view, now, stale_after)` so the CI golden and the unit tests are
+//! byte-deterministic.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::harness::shard::META_KEY;
+use crate::util::json::{self, Json};
+
+use super::metrics::Histogram;
+
+/// Journal key wrapping heartbeat events: `{"hb": {...}}`.
+pub const HEARTBEAT_KEY: &str = "hb";
+/// Journal key wrapping the planned-grid record: `{"plan": {...}}`.
+pub const PLAN_KEY: &str = "plan";
+
+/// Wall-clock seconds since the Unix epoch.
+pub fn now_unix() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+}
+
+/// One worker heartbeat: written at cell start (`event == "start"`) and
+/// completion (`event == "done"`, with the cell wall-clock in `dur_s`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Heartbeat {
+    pub worker: usize,
+    /// `"start"` or `"done"`.
+    pub event: String,
+    /// Cell id (`method@sparsity`).
+    pub cell: String,
+    /// Cells completed across the whole run when this beat was written.
+    pub done: usize,
+    /// Total cells in the planned grid.
+    pub total: usize,
+    /// Unix timestamp (seconds).
+    pub t: f64,
+    /// Cell wall-clock seconds; only on `done` events.
+    pub dur_s: Option<f64>,
+}
+
+impl Heartbeat {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("cell", json::s(&self.cell)),
+            ("done", json::num(self.done as f64)),
+            ("event", json::s(&self.event)),
+            ("t", json::num(self.t)),
+            ("total", json::num(self.total as f64)),
+            ("worker", json::num(self.worker as f64)),
+        ];
+        if let Some(d) = self.dur_s {
+            pairs.push(("dur_s", json::num(d)));
+        }
+        json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Heartbeat> {
+        Ok(Heartbeat {
+            worker: v.get("worker").and_then(Json::as_usize).ok_or_else(|| {
+                anyhow!("heartbeat record missing worker: {}", v.to_string_pretty())
+            })?,
+            event: v.get("event").and_then(Json::as_str).unwrap_or("?").to_string(),
+            cell: v.get("cell").and_then(Json::as_str).unwrap_or("?").to_string(),
+            done: v.get("done").and_then(Json::as_usize).unwrap_or(0),
+            total: v.get("total").and_then(Json::as_usize).unwrap_or(0),
+            t: v.get("t").and_then(Json::as_f64).unwrap_or(0.0),
+            dur_s: v.get("dur_s").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// Everything `watch` needs, parsed from one pass over the journal.
+/// Unparseable lines are counted, never fatal: the file is being
+/// appended to while we read it.
+#[derive(Clone, Debug, Default)]
+pub struct JournalView {
+    pub path: String,
+    /// The `__meta__` header payload (model / steps / seed), if present.
+    pub meta: Option<Json>,
+    /// Planned cell count from the newest `{"plan": ...}` record.
+    pub plan_total: Option<usize>,
+    /// Distinct completed cell ids.
+    pub done: BTreeSet<String>,
+    /// Per-cell training wall-clock from completion records (fallback
+    /// ETA source when no heartbeat carries `dur_s`).
+    pub cell_seconds: Vec<f64>,
+    /// All heartbeats, in file order.
+    pub heartbeats: Vec<Heartbeat>,
+    /// Lines that parsed as neither meta, cell, heartbeat nor plan.
+    pub skipped: usize,
+}
+
+impl JournalView {
+    /// Total cells: the planned grid if seeded, else the widest total
+    /// any heartbeat has claimed.
+    pub fn total(&self) -> Option<usize> {
+        self.plan_total
+            .or_else(|| self.heartbeats.iter().map(|h| h.total).max().filter(|&t| t > 0))
+    }
+
+    /// Latest heartbeat per worker id.
+    pub fn latest_by_worker(&self) -> BTreeMap<usize, &Heartbeat> {
+        let mut m: BTreeMap<usize, &Heartbeat> = BTreeMap::new();
+        for hb in &self.heartbeats {
+            let e = m.entry(hb.worker).or_insert(hb);
+            if hb.t >= e.t {
+                *e = hb;
+            }
+        }
+        m
+    }
+
+    /// Observed cell durations (heartbeat `dur_s` preferred, journal
+    /// `train_seconds` otherwise), for the ETA histogram.
+    pub fn durations_s(&self) -> Vec<f64> {
+        let hb: Vec<f64> = self.heartbeats.iter().filter_map(|h| h.dur_s).collect();
+        if hb.is_empty() {
+            self.cell_seconds.clone()
+        } else {
+            hb
+        }
+    }
+}
+
+/// Parse journal text into a [`JournalView`] (see module docs for the
+/// record kinds).  Tolerant by design: torn tails and unknown tagged
+/// records are skipped, not errors.
+pub fn parse_view(text: &str) -> JournalView {
+    let mut view = JournalView::default();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = Json::parse(line) else {
+            view.skipped += 1;
+            continue;
+        };
+        if let Some(key) = v.get("key").and_then(Json::as_str) {
+            let Some(cell) = v.get("cell") else {
+                view.skipped += 1;
+                continue;
+            };
+            if key == META_KEY {
+                view.meta = Some(cell.clone());
+            } else if view.done.insert(key.to_string()) {
+                if let Some(s) = cell.get("train_seconds").and_then(Json::as_f64) {
+                    if s.is_finite() && s >= 0.0 {
+                        view.cell_seconds.push(s);
+                    }
+                }
+            }
+        } else if let Some(hb) = v.get(HEARTBEAT_KEY) {
+            match Heartbeat::from_json(hb) {
+                Ok(h) => view.heartbeats.push(h),
+                Err(_) => view.skipped += 1,
+            }
+        } else if let Some(plan) = v.get(PLAN_KEY) {
+            view.plan_total = plan.get("total").and_then(Json::as_usize);
+        } else {
+            view.skipped += 1;
+        }
+    }
+    view
+}
+
+/// Read and parse a journal file.
+pub fn read_view(path: &Path) -> Result<JournalView> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("padst watch: cannot read journal {}", path.display()))?;
+    let mut view = parse_view(&text);
+    view.path = path.display().to_string();
+    Ok(view)
+}
+
+fn fmt_age(secs: f64) -> String {
+    let s = secs.max(0.0);
+    if s < 100.0 {
+        format!("{s:.0}s")
+    } else if s < 3600.0 {
+        format!("{:.1}m", s / 60.0)
+    } else {
+        format!("{:.1}h", s / 3600.0)
+    }
+}
+
+const BAR_WIDTH: usize = 40;
+
+/// Render the status view.  Pure: all wall-clock context comes in via
+/// `now`, so goldens and tests are byte-deterministic.
+pub fn render(view: &JournalView, now: f64, stale_after_s: f64) -> String {
+    let mut out = String::new();
+    let header = match &view.meta {
+        Some(m) => {
+            let f = |k: &str| match m.get(k) {
+                Some(Json::Str(s)) => s.clone(),
+                Some(v) => v.to_string_pretty(),
+                None => "?".to_string(),
+            };
+            format!("model={} steps={} seed={}", f("model"), f("steps"), f("seed"))
+        }
+        None => "no sweep header yet".to_string(),
+    };
+    let _ = writeln!(out, "# padst watch — {header}");
+    let _ = writeln!(
+        out,
+        "journal: {} ({} cells done, {} heartbeats)",
+        view.path,
+        view.done.len(),
+        view.heartbeats.len()
+    );
+
+    let done = view.done.len();
+    match view.total() {
+        Some(total) if total > 0 => {
+            let frac = (done as f64 / total as f64).clamp(0.0, 1.0);
+            let filled = (frac * BAR_WIDTH as f64).round() as usize;
+            let _ = writeln!(out, "cells:   {done}/{total} done ({:.1}%)", frac * 100.0);
+            let _ = writeln!(
+                out,
+                "         [{}{}]",
+                "#".repeat(filled),
+                ".".repeat(BAR_WIDTH - filled)
+            );
+            let durs = view.durations_s();
+            let latest = view.latest_by_worker();
+            let active = latest.values().filter(|h| now - h.t <= stale_after_s).count();
+            let pending = total.saturating_sub(done);
+            if pending > 0 && !durs.is_empty() {
+                // ETA from the cell-duration histogram (millisecond
+                // resolution; the log buckets keep long cells honest).
+                let h = Histogram::default();
+                for &d in &durs {
+                    h.record((d * 1e3).clamp(0.0, u64::MAX as f64) as u64);
+                }
+                let p50_s = h.snapshot().quantile(0.5) as f64 / 1e3;
+                let eta_s = pending as f64 * p50_s / active.max(1) as f64;
+                let _ = writeln!(
+                    out,
+                    "eta:     ~{} (p50 cell {}, {pending} pending, {active} active worker{})",
+                    fmt_age(eta_s),
+                    fmt_age(p50_s),
+                    if active == 1 { "" } else { "s" }
+                );
+            }
+        }
+        _ => {
+            let _ = writeln!(out, "cells:   {done}/? done (grid not seeded; no plan record)");
+        }
+    }
+
+    let latest = view.latest_by_worker();
+    if latest.is_empty() {
+        let _ = writeln!(
+            out,
+            "no heartbeats yet — run `padst sweep --journal {}` to light this view up",
+            view.path
+        );
+    } else {
+        let mut stale = 0usize;
+        for (i, (w, hb)) in latest.iter().enumerate() {
+            let age = now - hb.t;
+            let is_stale = age > stale_after_s;
+            if is_stale {
+                stale += 1;
+            }
+            let status = if hb.event == "start" {
+                format!("running {}", hb.cell)
+            } else {
+                format!("idle (last {})", hb.cell)
+            };
+            let _ = writeln!(
+                out,
+                "{} w{:<3} {:<34} hb {} ago{}",
+                if i == 0 { "workers:" } else { "        " },
+                w,
+                status,
+                fmt_age(age),
+                if is_stale { "  STALE" } else { "" }
+            );
+        }
+        if stale > 0 {
+            let _ = writeln!(
+                out,
+                "warning: {stale} worker{} silent for over {} — the shard may be dead; \
+                 its cells will be re-run on resume",
+                if stale == 1 { "" } else { "s" },
+                fmt_age(stale_after_s)
+            );
+        }
+    }
+    if view.skipped > 0 {
+        let _ = writeln!(out, "note:    {} unrecognised/torn journal line(s)", view.skipped);
+    }
+    out
+}
+
+/// The `padst watch` entry point: render once (`once == true`) or
+/// re-render in place every `interval_s` until interrupted.
+/// `now_override` pins the clock for deterministic output (CI goldens).
+pub fn watch(
+    path: &Path,
+    once: bool,
+    interval_s: f64,
+    stale_after_s: f64,
+    now_override: Option<f64>,
+) -> Result<()> {
+    loop {
+        let view = read_view(path)?;
+        let now = now_override.unwrap_or_else(now_unix);
+        let frame = render(&view, now, stale_after_s);
+        let mut stdout = std::io::stdout().lock();
+        if once {
+            stdout.write_all(frame.as_bytes())?;
+            return Ok(());
+        }
+        // ANSI clear + home, then the frame — a flicker-free live view
+        // without a TUI dependency.
+        write!(stdout, "\x1b[2J\x1b[H{frame}")?;
+        stdout.flush()?;
+        drop(stdout);
+        std::thread::sleep(Duration::from_secs_f64(interval_s.max(0.1)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heartbeat_json_round_trips() {
+        let hb = Heartbeat {
+            worker: 2,
+            event: "done".to_string(),
+            cell: "RigL@0.9".to_string(),
+            done: 3,
+            total: 8,
+            t: 1723.5,
+            dur_s: Some(12.25),
+        };
+        let back = Heartbeat::from_json(&Json::parse(&hb.to_json().to_string_pretty()).unwrap());
+        assert_eq!(back.unwrap(), hb);
+    }
+
+    #[test]
+    fn parse_view_sorts_record_kinds() {
+        let text = [
+            r#"{"cell":{"model":"vit_tiny","seed":0,"steps":5},"key":"__meta__"}"#,
+            r#"{"cell":{"train_seconds":2.5},"key":"RigL@0.8"}"#,
+            r#"{"hb":{"cell":"RigL@0.9","done":1,"event":"start","t":100,"total":4,"worker":0}}"#,
+            r#"{"plan":{"cells":["RigL@0.8","RigL@0.9"],"total":4}}"#,
+            r#"{"torn line"#,
+        ]
+        .join("\n");
+        let v = parse_view(&text);
+        assert!(v.meta.is_some());
+        assert_eq!(v.done.len(), 1);
+        assert_eq!(v.cell_seconds, vec![2.5]);
+        assert_eq!(v.heartbeats.len(), 1);
+        assert_eq!(v.plan_total, Some(4));
+        assert_eq!(v.skipped, 1);
+        assert_eq!(v.total(), Some(4));
+    }
+
+    #[test]
+    fn render_is_deterministic_and_shows_progress() {
+        let mut view = JournalView { path: "j.jsonl".to_string(), ..Default::default() };
+        view.plan_total = Some(4);
+        view.done.insert("a@0.8".to_string());
+        view.done.insert("b@0.8".to_string());
+        view.heartbeats.push(Heartbeat {
+            worker: 0,
+            event: "start".to_string(),
+            cell: "c@0.8".to_string(),
+            done: 2,
+            total: 4,
+            t: 995.0,
+            dur_s: None,
+        });
+        view.heartbeats.push(Heartbeat {
+            worker: 1,
+            event: "done".to_string(),
+            cell: "b@0.8".to_string(),
+            done: 2,
+            total: 4,
+            t: 600.0,
+            dur_s: Some(30.0),
+        });
+        let s = render(&view, 1000.0, 120.0);
+        assert_eq!(s, render(&view, 1000.0, 120.0));
+        assert!(s.contains("2/4 done (50.0%)"), "{s}");
+        assert!(s.contains("####################...................."), "{s}");
+        assert!(s.contains("eta:"), "{s}");
+        assert!(s.contains("running c@0.8"), "{s}");
+        assert!(s.contains("STALE"), "{s}");
+        assert!(s.contains("warning: 1 worker silent"), "{s}");
+    }
+
+    #[test]
+    fn render_without_heartbeats_is_time_independent() {
+        let mut view = JournalView { path: "j.jsonl".to_string(), ..Default::default() };
+        view.plan_total = Some(4);
+        assert_eq!(render(&view, 0.0, 120.0), render(&view, 1e9, 120.0));
+        assert!(render(&view, 0.0, 120.0).contains("no heartbeats yet"));
+    }
+}

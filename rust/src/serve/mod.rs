@@ -32,6 +32,6 @@ pub mod session;
 
 #[cfg(unix)]
 pub use node::serve_unix_socket;
-pub use node::{serve, NodeOpts, ServeStats};
-pub use protocol::{Request, Response, SiteInfo, PROTOCOL_VERSION};
+pub use node::{latency_summary, serve, NodeOpts, ServeStats};
+pub use protocol::{Request, Response, ServeWireStats, SiteInfo, PROTOCOL_VERSION};
 pub use session::{SessionCtx, SiteRuntime};

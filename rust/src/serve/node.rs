@@ -16,13 +16,17 @@
 //! in request order.
 
 use std::io::{BufRead, Write};
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::kernels::micro::LANES;
-use crate::serve::protocol::{Request, Response, SiteInfo};
+use crate::obs::{Counter, Gauge, Histogram, MetricRegistry};
+use crate::serve::protocol::{Request, Response, ServeWireStats, SiteInfo};
 use crate::serve::session::SessionCtx;
 use crate::util::json::Json;
+use crate::util::stats::fmt_time;
 
 /// Serving-loop knobs.
 #[derive(Clone, Copy, Debug)]
@@ -39,7 +43,8 @@ impl Default for NodeOpts {
     }
 }
 
-/// End-of-session accounting (the CLI logs it at EOF).
+/// End-of-session accounting (the CLI logs it at EOF; `info` and
+/// `stats` frames carry it live via [`ServeStats::wire`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ServeStats {
     pub requests: usize,
@@ -50,6 +55,49 @@ pub struct ServeStats {
     pub batches: usize,
     /// Widest burst, in requests.
     pub widest_batch: usize,
+}
+
+impl ServeStats {
+    pub fn wire(&self) -> ServeWireStats {
+        ServeWireStats {
+            requests: self.requests,
+            responses: self.responses,
+            errors: self.errors,
+            batches: self.batches,
+            widest_batch: self.widest_batch,
+        }
+    }
+}
+
+/// Node-level metric handles, registered once per [`serve`] call in the
+/// session's registry (get-or-create: a socket node serving many
+/// sequential connections re-uses the same handles, so warm frames
+/// never re-register — part of the session fingerprint contract).
+struct NodeObs {
+    /// Handling latency per frame (decode + dispatch + response write).
+    frame_ns: Arc<Histogram>,
+    /// Rows per coalesced dispatch.
+    batch_rows: Arc<Histogram>,
+    /// Dispatch rows as a percentage of `max_batch`.
+    batch_fill_pct: Arc<Histogram>,
+    /// High-water pending rows while a burst was held.
+    queue_rows: Arc<Gauge>,
+    /// Error frames emitted.
+    errors: Arc<Counter>,
+    max_batch: usize,
+}
+
+impl NodeObs {
+    fn new(reg: &MetricRegistry, max_batch: usize) -> NodeObs {
+        NodeObs {
+            frame_ns: reg.histogram("serve.frame_ns"),
+            batch_rows: reg.histogram("serve.batch_rows"),
+            batch_fill_pct: reg.histogram("serve.batch_fill_pct"),
+            queue_rows: reg.gauge("serve.queue_rows_max"),
+            errors: reg.counter("serve.error_frames"),
+            max_batch: max_batch.max(1),
+        }
+    }
 }
 
 /// An infer frame held for coalescing.
@@ -69,6 +117,7 @@ pub fn serve<R: BufRead, W: Write>(
     opts: &NodeOpts,
 ) -> Result<ServeStats> {
     let mut stats = ServeStats::default();
+    let nobs = NodeObs::new(ctx.obs(), opts.max_batch);
     let mut pending: Vec<PendingInfer> = Vec::new();
     for line in input.lines() {
         let line = line?;
@@ -76,48 +125,83 @@ pub fn serve<R: BufRead, W: Write>(
             continue;
         }
         stats.requests += 1;
+        // Per-frame handling latency: decode + any dispatch this frame
+        // triggered + response writes.  Held burst frames are cheap here
+        // (enqueue only); the flush cost lands on the frame that flushes.
+        let t0 = Instant::now();
         match decode(&line) {
             Err((id, error)) => {
-                flush(ctx, &mut pending, out, &mut stats)?;
-                respond(out, &mut stats, &Response::Error { id, error })?;
+                flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                respond(out, &mut stats, &nobs, &Response::Error { id, error })?;
             }
             Ok(Request::Infer { id, site, batch, x, more }) => {
                 // Geometry is checked at enqueue so one infeasible
                 // request cannot poison a coalesced burst, and its error
                 // frame echoes exactly its own id.
                 if let Err(e) = ctx.check_request(&site, batch, x.len()) {
-                    flush(ctx, &mut pending, out, &mut stats)?;
+                    flush(ctx, &mut pending, out, &mut stats, &nobs)?;
                     let err = Response::Error { id: Some(id), error: e.to_string() };
-                    respond(out, &mut stats, &err)?;
-                    continue;
-                }
-                // Only same-site frames coalesce (one plan per dispatch).
-                if pending.last().is_some_and(|p| p.site != site) {
-                    flush(ctx, &mut pending, out, &mut stats)?;
-                }
-                pending.push(PendingInfer { id, site, batch, x });
-                let rows: usize = pending.iter().map(|p| p.batch).sum();
-                if !more || rows >= opts.max_batch {
-                    flush(ctx, &mut pending, out, &mut stats)?;
+                    respond(out, &mut stats, &nobs, &err)?;
+                } else {
+                    // Only same-site frames coalesce (one plan per
+                    // dispatch).
+                    if pending.last().is_some_and(|p| p.site != site) {
+                        flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                    }
+                    pending.push(PendingInfer { id, site, batch, x });
+                    let rows: usize = pending.iter().map(|p| p.batch).sum();
+                    nobs.queue_rows.set_max(rows as u64);
+                    if !more || rows >= opts.max_batch {
+                        flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                    }
                 }
             }
             Ok(Request::Info { id }) => {
-                flush(ctx, &mut pending, out, &mut stats)?;
-                respond(out, &mut stats, &info_response(ctx, id))?;
+                flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                let resp = info_response(ctx, id, &stats);
+                respond(out, &mut stats, &nobs, &resp)?;
             }
             Ok(Request::Reload { id, checkpoint }) => {
-                flush(ctx, &mut pending, out, &mut stats)?;
+                flush(ctx, &mut pending, out, &mut stats, &nobs)?;
                 let resp = match ctx.reload_from(checkpoint.as_deref()) {
                     Ok(generation) => Response::Reloaded { id, generation },
                     Err(e) => Response::Error { id: Some(id), error: e.to_string() },
                 };
-                respond(out, &mut stats, &resp)?;
+                respond(out, &mut stats, &nobs, &resp)?;
+            }
+            Ok(Request::Stats { id }) => {
+                flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                let resp = Response::Stats {
+                    id,
+                    stats: stats.wire(),
+                    obs: ctx.obs_snapshot().to_json(),
+                };
+                respond(out, &mut stats, &nobs, &resp)?;
             }
         }
+        nobs.frame_ns.record_ns(t0.elapsed());
     }
     // EOF: answer any held burst, then shut down cleanly.
-    flush(ctx, &mut pending, out, &mut stats)?;
+    flush(ctx, &mut pending, out, &mut stats, &nobs)?;
     Ok(stats)
+}
+
+/// One-line latency digest from the session's frame histogram — the
+/// shutdown summary `padst serve` prints at EOF / connection close.
+pub fn latency_summary(ctx: &SessionCtx) -> String {
+    let snap = ctx.obs().histogram("serve.frame_ns").snapshot();
+    if snap.count == 0 {
+        return "no frames timed".to_string();
+    }
+    let t = |ns: u64| fmt_time(ns as f64 * 1e-9);
+    format!(
+        "frame latency p50 {} p90 {} p99 {} max {} over {} frames",
+        t(snap.quantile(0.5)),
+        t(snap.quantile(0.9)),
+        t(snap.quantile(0.99)),
+        t(snap.max),
+        snap.count
+    )
 }
 
 /// Serve connections from a Unix socket, sequentially: one NDJSON
@@ -145,6 +229,7 @@ pub fn serve_unix_socket(
             "[padst serve] connection closed: {} requests -> {} responses ({} errors), {} batches",
             stats.requests, stats.responses, stats.errors, stats.batches
         );
+        eprintln!("[padst serve] {}", latency_summary(ctx));
     }
     Ok(())
 }
@@ -164,10 +249,12 @@ fn flush<W: Write>(
     pending: &mut Vec<PendingInfer>,
     out: &mut W,
     stats: &mut ServeStats,
+    nobs: &NodeObs,
 ) -> Result<()> {
     if pending.is_empty() {
         return Ok(());
     }
+    let rows_total: usize = pending.iter().map(|p| p.batch).sum();
     let site = pending[0].site.clone();
     let responses: Vec<Response> = match ctx.site(&site).map(|s| s.rows) {
         Ok(rows) => {
@@ -177,6 +264,8 @@ fn flush<W: Write>(
                 Ok(y) => {
                     stats.batches += 1;
                     stats.widest_batch = stats.widest_batch.max(pending.len());
+                    nobs.batch_rows.record(rows_total as u64);
+                    nobs.batch_fill_pct.record((100 * rows_total / nobs.max_batch) as u64);
                     let mut off = 0usize;
                     pending
                         .iter()
@@ -202,7 +291,7 @@ fn flush<W: Write>(
     };
     pending.clear();
     for r in &responses {
-        respond(out, stats, r)?;
+        respond(out, stats, nobs, r)?;
     }
     Ok(())
 }
@@ -214,18 +303,24 @@ fn per_request_errors(pending: &[PendingInfer], msg: &str) -> Vec<Response> {
         .collect()
 }
 
-fn respond<W: Write>(out: &mut W, stats: &mut ServeStats, resp: &Response) -> Result<()> {
+fn respond<W: Write>(
+    out: &mut W,
+    stats: &mut ServeStats,
+    nobs: &NodeObs,
+    resp: &Response,
+) -> Result<()> {
     out.write_all(resp.to_line().as_bytes())?;
     out.write_all(b"\n")?;
     out.flush()?;
     stats.responses += 1;
     if matches!(resp, Response::Error { .. }) {
         stats.errors += 1;
+        nobs.errors.inc();
     }
     Ok(())
 }
 
-fn info_response(ctx: &SessionCtx, id: String) -> Response {
+fn info_response(ctx: &SessionCtx, id: String, stats: &ServeStats) -> Response {
     let sites = ctx
         .sites()
         .iter()
@@ -238,5 +333,11 @@ fn info_response(ctx: &SessionCtx, id: String) -> Response {
             permuted: s.permuted,
         })
         .collect();
-    Response::Info { id, model: ctx.label().to_string(), generation: ctx.generation(), sites }
+    Response::Info {
+        id,
+        model: ctx.label().to_string(),
+        generation: ctx.generation(),
+        sites,
+        stats: Some(stats.wire()),
+    }
 }

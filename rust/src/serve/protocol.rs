@@ -14,6 +14,7 @@
 //! {"v":1,"op":"infer","id":"r1","site":"fc1","batch":2,"x":[0.5,...],"more":true}
 //! {"v":1,"op":"info","id":"r2"}
 //! {"v":1,"op":"reload","id":"r3","checkpoint":"run.tnz"}
+//! {"v":1,"op":"stats","id":"r4"}
 //! ```
 //!
 //! `"more":true` marks an infer frame as part of a coalescible burst: the
@@ -51,13 +52,20 @@ pub enum Request {
     /// Recompile every plan from a checkpoint (the given path, or the
     /// session's own checkpoint when omitted), evicting cached plans.
     Reload { id: String, checkpoint: Option<String> },
+    /// Full health poll: live `ServeStats` counters plus a merged
+    /// `obs_schema`-versioned metric snapshot (per-site infer
+    /// histograms, frame latency, batch fill, queue depth, ...).
+    Stats { id: String },
 }
 
 impl Request {
     /// The caller-chosen request id (echoed by the response).
     pub fn id(&self) -> &str {
         match self {
-            Request::Infer { id, .. } | Request::Info { id } | Request::Reload { id, .. } => id,
+            Request::Infer { id, .. }
+            | Request::Info { id }
+            | Request::Reload { id, .. }
+            | Request::Stats { id } => id,
         }
     }
 
@@ -93,6 +101,11 @@ impl Request {
                 }
                 json::obj(pairs)
             }
+            Request::Stats { id } => json::obj(vec![
+                ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                ("op", json::s("stats")),
+                ("id", json::s(id)),
+            ]),
         }
     }
 
@@ -129,7 +142,8 @@ impl Request {
                 let checkpoint = v.get("checkpoint").and_then(Json::as_str).map(str::to_string);
                 Ok(Request::Reload { id, checkpoint })
             }
-            other => bail!("unknown op {other:?} (known: infer|info|reload)"),
+            "stats" => Ok(Request::Stats { id }),
+            other => bail!("unknown op {other:?} (known: infer|info|reload|stats)"),
         }
     }
 }
@@ -171,12 +185,56 @@ impl SiteInfo {
     }
 }
 
+/// Live session counters on the wire — the serve loop's `ServeStats`
+/// as carried by `info` and `stats` responses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeWireStats {
+    pub requests: usize,
+    pub responses: usize,
+    pub errors: usize,
+    pub batches: usize,
+    pub widest_batch: usize,
+}
+
+impl ServeWireStats {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("requests", json::num(self.requests as f64)),
+            ("responses", json::num(self.responses as f64)),
+            ("errors", json::num(self.errors as f64)),
+            ("batches", json::num(self.batches as f64)),
+            ("widest_batch", json::num(self.widest_batch as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ServeWireStats> {
+        Ok(ServeWireStats {
+            requests: num_field(v, "requests")? as usize,
+            responses: num_field(v, "responses")? as usize,
+            errors: num_field(v, "errors")? as usize,
+            batches: num_field(v, "batches")? as usize,
+            widest_batch: num_field(v, "widest_batch")? as usize,
+        })
+    }
+}
+
 /// One response frame; `Error` is the only `"ok":false` variant.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     Infer { id: String, batch: usize, y: Vec<f32> },
-    Info { id: String, model: String, generation: u64, sites: Vec<SiteInfo> },
+    Info {
+        id: String,
+        model: String,
+        generation: u64,
+        sites: Vec<SiteInfo>,
+        /// Live counters (always sent by this node; `None` only when
+        /// decoding a pre-stats peer's frame).
+        stats: Option<ServeWireStats>,
+    },
     Reloaded { id: String, generation: u64 },
+    /// Health poll: counters plus the merged metric snapshot as raw
+    /// JSON (schema-versioned via its own `obs_schema` field).
+    Stats { id: String, stats: ServeWireStats, obs: Json },
     /// `id` is `None` only when the offending frame was not parseable
     /// enough to recover one.
     Error { id: Option<String>, error: String },
@@ -193,21 +251,35 @@ impl Response {
                 ("batch", json::num(*batch as f64)),
                 ("y", json::arr(y.iter().map(|&v| json::num(f64::from(v))))),
             ]),
-            Response::Info { id, model, generation, sites } => json::obj(vec![
-                ("v", json::num(f64::from(PROTOCOL_VERSION))),
-                ("op", json::s("info")),
-                ("ok", Json::Bool(true)),
-                ("id", json::s(id)),
-                ("model", json::s(model)),
-                ("generation", json::num(*generation as f64)),
-                ("sites", json::arr(sites.iter().map(|s| s.to_json()))),
-            ]),
+            Response::Info { id, model, generation, sites, stats } => {
+                let mut pairs = vec![
+                    ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                    ("op", json::s("info")),
+                    ("ok", Json::Bool(true)),
+                    ("id", json::s(id)),
+                    ("model", json::s(model)),
+                    ("generation", json::num(*generation as f64)),
+                    ("sites", json::arr(sites.iter().map(|s| s.to_json()))),
+                ];
+                if let Some(s) = stats {
+                    pairs.push(("stats", s.to_json()));
+                }
+                json::obj(pairs)
+            }
             Response::Reloaded { id, generation } => json::obj(vec![
                 ("v", json::num(f64::from(PROTOCOL_VERSION))),
                 ("op", json::s("reload")),
                 ("ok", Json::Bool(true)),
                 ("id", json::s(id)),
                 ("generation", json::num(*generation as f64)),
+            ]),
+            Response::Stats { id, stats, obs } => json::obj(vec![
+                ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                ("op", json::s("stats")),
+                ("ok", Json::Bool(true)),
+                ("id", json::s(id)),
+                ("stats", stats.to_json()),
+                ("obs", obs.clone()),
             ]),
             Response::Error { id, error } => json::obj(vec![
                 ("v", json::num(f64::from(PROTOCOL_VERSION))),
@@ -252,15 +324,30 @@ impl Response {
                     .iter()
                     .map(SiteInfo::from_json)
                     .collect::<Result<Vec<_>>>()?;
+                let stats = match v.get("stats") {
+                    Some(s) => Some(ServeWireStats::from_json(s)?),
+                    None => None,
+                };
                 Ok(Response::Info {
                     id,
                     model: str_field(v, "model")?,
                     generation: num_field(v, "generation")? as u64,
                     sites,
+                    stats,
                 })
             }
             Some("reload") => {
                 Ok(Response::Reloaded { id, generation: num_field(v, "generation")? as u64 })
+            }
+            Some("stats") => {
+                let stats = v
+                    .get("stats")
+                    .ok_or_else(|| anyhow!("stats response has no \"stats\" object"))?;
+                Ok(Response::Stats {
+                    id,
+                    stats: ServeWireStats::from_json(stats)?,
+                    obs: v.get("obs").cloned().unwrap_or(Json::Null),
+                })
             }
             other => bail!("unknown response op {other:?}"),
         }
@@ -316,6 +403,27 @@ mod tests {
         assert_eq!(
             e.to_line(),
             r#"{"error":"bad frame: unexpected end of JSON","id":null,"ok":false,"op":"error","v":1}"#
+        );
+    }
+
+    #[test]
+    fn stats_wire_layout_is_stable() {
+        // The serve-smoke golden carries a stats frame; its key order
+        // (alphabetical, nested objects included) is pinned here.
+        let r = Response::Stats {
+            id: "s".into(),
+            stats: ServeWireStats {
+                requests: 5,
+                responses: 4,
+                errors: 1,
+                batches: 2,
+                widest_batch: 2,
+            },
+            obs: Json::Null,
+        };
+        assert_eq!(
+            r.to_line(),
+            r#"{"id":"s","obs":null,"ok":true,"op":"stats","stats":{"batches":2,"errors":1,"requests":5,"responses":4,"widest_batch":2},"v":1}"#
         );
     }
 

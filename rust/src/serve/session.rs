@@ -29,12 +29,14 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{checkpoint, TrainState};
 use crate::kernels::micro::Backend;
 use crate::kernels::run_plan_mt;
+use crate::obs::{self, Histogram, MetricRegistry, ObsSnapshot};
 use crate::perm::model::{resolve_perm, sites_from_vals, PermHandle, PermState};
 use crate::perm::SinkhornScratch;
 use crate::sparsity::pattern::{resolve_pattern, KernelPlan, PatternHandle};
@@ -78,6 +80,15 @@ pub struct SessionCtx {
     /// Bumped on every (re)build; responses carry it so clients can tell
     /// which compiled plans answered them.
     generation: u64,
+    /// Per-session metric registry: node-level frame metrics plus one
+    /// `serve.infer_ns.<site>` histogram per site.  Owned (not the
+    /// process-global registry) so concurrent sessions — and parallel
+    /// tests — never see each other's counters.
+    obs: MetricRegistry,
+    /// Pre-registered per-site infer histograms, index-aligned with
+    /// `sites`; looked up here so the warm path never takes the
+    /// registry lock or allocates a metric name.
+    site_hists: Vec<Arc<Histogram>>,
 }
 
 impl SessionCtx {
@@ -103,6 +114,8 @@ impl SessionCtx {
             threads: resolve_threads(threads),
             backend,
             generation: 0,
+            obs: MetricRegistry::new(),
+            site_hists: Vec::new(),
         };
         ctx.rebuild(state)?;
         Ok(ctx)
@@ -217,6 +230,15 @@ impl SessionCtx {
             });
         }
         self.sites = sites;
+        // Per-site infer histograms, registered once per (re)build.
+        // Get-or-create: a reload over the same site names re-uses the
+        // existing handles, so the registration count only moves when
+        // the site set actually changes.
+        self.site_hists = self
+            .sites
+            .iter()
+            .map(|s| self.obs.histogram(&format!("serve.infer_ns.{}", s.name)))
+            .collect();
         self.generation += 1;
         Ok(())
     }
@@ -312,6 +334,11 @@ impl SessionCtx {
     /// singly — the identity `serve_protocol.rs` sweeps across backends.
     pub fn run_coalesced(&mut self, site: &str, parts: &[(&[f32], usize)]) -> Result<&[f32]> {
         let si = self.site_index(site)?;
+        // Timed span over the whole coalesced dispatch (validation +
+        // scratch pack + kernel); the Arc clone and the thread-local
+        // label push are the only costs — no allocation, so the warm
+        // fingerprint holds with metrics recording enabled.
+        let _span = obs::span::timed("serve.infer", &self.site_hists[si]);
         let (rows, cols) = (self.sites[si].rows, self.sites[si].cols);
         let mut total = 0usize;
         for (x, batch) in parts {
@@ -350,18 +377,35 @@ impl SessionCtx {
         self.run_coalesced(site, &[(x, batch)])
     }
 
+    /// This session's metric registry (frame/batch metrics recorded by
+    /// the serve loop, per-site infer histograms recorded here).
+    pub fn obs(&self) -> &MetricRegistry {
+        &self.obs
+    }
+
+    /// Session metrics merged with the process-global registry (kernel
+    /// dispatch counters, harness metrics) — what `stats` frames carry.
+    pub fn obs_snapshot(&self) -> ObsSnapshot {
+        let mut snap = self.obs.snapshot();
+        snap.merge(&obs::global().snapshot());
+        snap
+    }
+
     /// Warm-path allocation fingerprint: scratch pointers + capacities +
-    /// the plan generation.  Stable across warm requests at or below the
-    /// high-water batch (nothing allocated); changes when a cold call
-    /// grows the scratch or a reload evicts the plans — the same
-    /// technique as [`SinkhornScratch::buffer_fingerprint`].
-    pub fn fingerprint(&self) -> (usize, usize, usize, usize, u64) {
+    /// the plan generation + the metric registration count.  Stable
+    /// across warm requests at or below the high-water batch (nothing
+    /// allocated, nothing newly registered — recording into existing
+    /// handles is atomic-only); changes when a cold call grows the
+    /// scratch or a reload evicts the plans — the same technique as
+    /// [`SinkhornScratch::buffer_fingerprint`].
+    pub fn fingerprint(&self) -> (usize, usize, usize, usize, u64, usize) {
         (
             self.scratch_x.as_ptr() as usize,
             self.scratch_x.capacity(),
             self.scratch_y.as_ptr() as usize,
             self.scratch_y.capacity(),
             self.generation,
+            self.obs.registrations(),
         )
     }
 }

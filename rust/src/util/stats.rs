@@ -12,6 +12,7 @@ pub struct Summary {
     pub std: f64,
     pub min: f64,
     pub p50: f64,
+    pub p90: f64,
     pub p95: f64,
     pub max: f64,
 }
@@ -30,6 +31,7 @@ pub fn summarize(samples: &[f64]) -> Summary {
         std: var.sqrt(),
         min: v[0],
         p50: q(0.5),
+        p90: q(0.90),
         p95: q(0.95),
         max: v[n - 1],
     }
@@ -88,6 +90,7 @@ mod tests {
     fn summary_basic() {
         let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
         assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p90, 5.0);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.mean - 3.0).abs() < 1e-12);

@@ -1,0 +1,273 @@
+//! ISSUE 7 test surface for the observability layer: histogram quantiles
+//! against a sorted-vec oracle, snapshot merge algebra, span-stack
+//! balance, the journal heartbeat lane (new readers see it, pre-PR-7
+//! readers skip it), the serve warm-path zero-allocation contract with
+//! metrics enabled, and the `obs_schema` provenance stamp on
+//! histogram-sourced bench records.
+
+use std::sync::Arc;
+
+use padst::harness::shard::{self, Journal, META_KEY};
+use padst::harness::telemetry::{BenchRecord, BenchReport};
+use padst::kernels::micro::Backend;
+use padst::obs::watch::{self, Heartbeat, HEARTBEAT_KEY, PLAN_KEY};
+use padst::obs::{self, span, HistSnapshot, Histogram, MetricRegistry, OBS_SCHEMA_VERSION};
+use padst::serve::{serve, NodeOpts, Request, SessionCtx};
+use padst::util::json;
+use padst::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Satellite (test plan a): quantiles vs the sorted-vec oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn histogram_quantiles_match_sorted_vec_oracle() {
+    // Samples spanning ~9 orders of magnitude, like nanosecond timings.
+    // The log buckets guarantee a representative within half a bucket
+    // width of the true rank value: exact below 16, 6.25 % above.
+    let mut rng = Rng::new(11);
+    let h = Histogram::default();
+    let mut vals: Vec<u64> = Vec::new();
+    for _ in 0..5000 {
+        let v = (rng.below(1_000_000) as u64) * (1 + rng.below(4000) as u64);
+        h.record(v);
+        vals.push(v);
+    }
+    vals.sort_unstable();
+    let snap = h.snapshot();
+    assert_eq!(snap.count, 5000);
+    for &q in &[0.0, 0.1, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+        // Same rank convention as util::stats::summarize.
+        let oracle = vals[((vals.len() - 1) as f64 * q).round() as usize];
+        let est = snap.quantile(q);
+        let err = est.abs_diff(oracle) as f64;
+        assert!(err <= 1.0 + 0.0625 * oracle as f64, "q={q} oracle={oracle} est={est}");
+    }
+    assert_eq!(snap.min, vals[0]);
+    assert_eq!(snap.max, *vals.last().unwrap());
+    assert_eq!(snap.sum, vals.iter().sum::<u64>());
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot merge algebra: associative, commutative, == combined recording
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hist_snapshot_merge_is_associative_and_matches_combined_recording() {
+    let streams: [&[u64]; 3] = [&[1, 2, 3, 700], &[16, 17, 40_000], &[0, 5, 5, 1 << 33]];
+    let combined = Histogram::default();
+    let parts: Vec<HistSnapshot> = streams
+        .iter()
+        .map(|s| {
+            let h = Histogram::default();
+            for &v in *s {
+                h.record(v);
+                combined.record(v);
+            }
+            h.snapshot()
+        })
+        .collect();
+    let mut ab_c = parts[0].clone();
+    ab_c.merge(&parts[1]);
+    ab_c.merge(&parts[2]);
+    let mut bc = parts[1].clone();
+    bc.merge(&parts[2]);
+    let mut a_bc = parts[0].clone();
+    a_bc.merge(&bc);
+    assert_eq!(ab_c, a_bc, "merge must be associative");
+    assert_eq!(ab_c, combined.snapshot(), "merged shards must equal one combined stream");
+}
+
+#[test]
+fn registry_snapshots_merge_like_one_registry() {
+    // Counters add, gauges keep the max (high-water on the wire),
+    // histogram buckets add — the journal-merge contract.
+    let (a, b, both) = (MetricRegistry::new(), MetricRegistry::new(), MetricRegistry::new());
+    a.counter("n").add(3);
+    b.counter("n").add(4);
+    both.counter("n").add(7);
+    a.gauge("q").set_max(7);
+    b.gauge("q").set_max(5);
+    both.gauge("q").set_max(7);
+    for v in [3u64, 9, 27] {
+        a.histogram("h").record(v);
+        both.histogram("h").record(v);
+    }
+    for v in [81u64, 243] {
+        b.histogram("h").record(v);
+        both.histogram("h").record(v);
+    }
+    let mut merged = a.snapshot();
+    merged.merge(&b.snapshot());
+    assert_eq!(merged, both.snapshot());
+    let mut rev = b.snapshot();
+    rev.merge(&a.snapshot());
+    assert_eq!(rev, merged, "merge must commute");
+}
+
+// ---------------------------------------------------------------------------
+// Span stack: balanced under nesting and early return, timed on both paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn span_stack_balances_and_records_through_early_returns() {
+    fn risky(h: &Arc<Histogram>, fail: bool) -> Result<(), ()> {
+        let _outer = span::timed("outer", h);
+        let _inner = span::enter("inner");
+        assert_eq!(span::path(), "outer/inner");
+        if fail {
+            return Err(());
+        }
+        Ok(())
+    }
+    let h = Arc::new(Histogram::default());
+    assert_eq!(span::depth(), 0);
+    assert!(risky(&h, true).is_err());
+    assert_eq!(span::depth(), 0, "early return must unwind the span stack");
+    assert!(risky(&h, false).is_ok());
+    assert_eq!(span::depth(), 0);
+    assert_eq!(h.count(), 2, "the timed span records on both exit paths");
+}
+
+// ---------------------------------------------------------------------------
+// Journal heartbeat lane: round-trips for new readers, invisible to old ones
+// ---------------------------------------------------------------------------
+
+#[test]
+fn journal_heartbeats_round_trip_and_old_readers_skip_them() {
+    let dir = std::env::temp_dir().join(format!("padst_obs_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("journal.jsonl");
+    std::fs::remove_file(&path).ok();
+
+    let (j, done) = Journal::open(&path).unwrap();
+    assert!(done.is_empty());
+    j.record(META_KEY, &json::obj(vec![("model", json::s("vit_tiny"))])).unwrap();
+    j.record("RigL@0.8", &json::obj(vec![("train_seconds", json::num(2.5))])).unwrap();
+    let hb = Heartbeat {
+        worker: 1,
+        event: "done".to_string(),
+        cell: "RigL@0.8".to_string(),
+        done: 1,
+        total: 2,
+        t: 1000.0,
+        dur_s: Some(2.5),
+    };
+    j.append_event(HEARTBEAT_KEY, &hb.to_json()).unwrap();
+    let plan = json::obj(vec![
+        ("cells", json::arr([json::s("RigL@0.8"), json::s("RigL@0.9")])),
+        ("total", json::num(2.0)),
+    ]);
+    j.append_event(PLAN_KEY, &plan).unwrap();
+    drop(j);
+
+    // New reader: the watch view sees cells, heartbeats and the plan.
+    let view = watch::read_view(&path).unwrap();
+    assert_eq!(view.heartbeats, vec![hb]);
+    assert_eq!(view.plan_total, Some(2));
+    assert_eq!(view.total(), Some(2));
+    assert_eq!(view.done.len(), 1);
+    assert_eq!(view.skipped, 0, "every line must be a recognised record kind");
+    assert_eq!(view.durations_s(), vec![2.5]);
+
+    // Pre-PR-7 readers key on "key"/"cell" and must skip the event lane.
+    let records = shard::read_journal(&path).unwrap();
+    assert_eq!(records.len(), 2, "events must be invisible to the record map");
+    assert!(records.contains_key(META_KEY));
+    assert!(records.contains_key("RigL@0.8"));
+    let (_j2, done2) = Journal::open(&path).unwrap();
+    assert_eq!(done2.len(), 2, "resume must ignore heartbeat/plan events");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn watch_renders_progress_and_eta_from_a_heartbeat_journal() {
+    let text = [
+        r#"{"cell":{"model":"vit_tiny","seed":0,"steps":5},"key":"__meta__"}"#,
+        r#"{"plan":{"cells":["RigL@0.8","RigL@0.9","SET@0.8","SET@0.9"],"total":4}}"#,
+        r#"{"cell":{"train_seconds":30},"key":"RigL@0.8"}"#,
+        r#"{"hb":{"cell":"RigL@0.8","done":1,"dur_s":30,"event":"done","t":900,"total":4,"worker":0}}"#,
+        r#"{"hb":{"cell":"RigL@0.9","done":1,"event":"start","t":995,"total":4,"worker":0}}"#,
+    ]
+    .join("\n");
+    let view = watch::parse_view(&text);
+    let frame = watch::render(&view, 1000.0, 120.0);
+    assert!(frame.contains("model=vit_tiny steps=5 seed=0"), "{frame}");
+    assert!(frame.contains("1/4 done (25.0%)"), "{frame}");
+    assert!(frame.contains("eta:"), "{frame}");
+    assert!(frame.contains("running RigL@0.9"), "{frame}");
+    assert!(!frame.contains("STALE"), "{frame}");
+    // Same inputs, same bytes: the golden contract.
+    assert_eq!(frame, watch::render(&view, 1000.0, 120.0));
+}
+
+// ---------------------------------------------------------------------------
+// Serve warm path: zero-allocation fingerprint holds with metrics enabled
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serve_warm_path_stays_zero_alloc_with_metrics_enabled() {
+    obs::set_enabled(true);
+    let mut ctx = SessionCtx::synthetic("diag:4", 8, 8, 0.5, 1, Backend::Scalar).unwrap();
+    let infer = |id: &str| {
+        Request::Infer {
+            id: id.into(),
+            site: "demo".into(),
+            batch: 1,
+            x: vec![1.0; 8],
+            more: false,
+        }
+        .to_line()
+    };
+    let stats = |id: &str| Request::Stats { id: id.into() }.to_line();
+    // Cold pass: plans compile, scratch sizes, node + span metrics register.
+    let script = format!("{}\n{}\n", infer("cold"), stats("s0"));
+    let mut out = Vec::new();
+    serve(&mut ctx, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+    let fp = ctx.fingerprint();
+    // Warm passes: recording into existing handles must neither allocate
+    // scratch nor register metrics — the fingerprint carries both.
+    for round in 0..3 {
+        let script = format!("{}\n{}\n{}\n", infer("w1"), infer("w2"), stats("s1"));
+        let mut out = Vec::new();
+        serve(&mut ctx, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+        assert_eq!(
+            ctx.fingerprint(),
+            fp,
+            "warm serve pass {round} allocated or registered with metrics enabled"
+        );
+    }
+    let snap = ctx.obs_snapshot();
+    let frames = snap.hists.get("serve.frame_ns").expect("frame latency histogram");
+    assert!(frames.count >= 8, "every frame must be timed (saw {})", frames.count);
+}
+
+// ---------------------------------------------------------------------------
+// Provenance: histogram-sourced bench records carry obs_schema
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bench_record_from_hist_stamps_obs_schema_and_round_trips() {
+    let h = Histogram::default();
+    for v in [1_000u64, 2_000, 3_000, 4_000, 5_000] {
+        h.record(v);
+    }
+    let r = BenchRecord::from_hist("serve", "session infer_ns (obs)", &h.snapshot());
+    assert_eq!(r.obs_schema, OBS_SCHEMA_VERSION);
+    assert_eq!(r.n, 5);
+    assert!(r.p50_s > 0.0 && r.p90_s >= r.p50_s, "p50={} p90={}", r.p50_s, r.p90_s);
+
+    let mut rep = BenchReport::new("obs_test", 1);
+    rep.push(r);
+    let rep = rep.with_obs(json::obj(vec![("obs_schema", json::num(1.0))]));
+    let text = rep.to_json().to_string_pretty();
+    let back = BenchReport::parse(&text).unwrap();
+    assert_eq!(back.records[0].obs_schema, OBS_SCHEMA_VERSION);
+    assert!((back.records[0].p90_s - rep.records[0].p90_s).abs() < 1e-12);
+    assert!(back.obs.is_some(), "report-level obs must survive the round trip");
+
+    // A summary-sourced record has no obs provenance.
+    let plain = BenchRecord::value("g", "v");
+    assert_eq!(plain.obs_schema, 0);
+}

@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use padst::coordinator::{checkpoint, TrainState};
 use padst::kernels::micro::Backend;
 use padst::perm::model::resolve_perm;
-use padst::serve::{serve, NodeOpts, Request, Response, SessionCtx, SiteInfo};
+use padst::serve::{serve, NodeOpts, Request, Response, ServeWireStats, SessionCtx, SiteInfo};
 use padst::sparsity::pattern::resolve_pattern;
 use padst::tensor::Tensor;
 use padst::util::json::Json;
@@ -78,6 +78,7 @@ fn codec_round_trips_every_variant() {
         Request::Info { id: "r3".into() },
         Request::Reload { id: "r4".into(), checkpoint: Some("run.tnz".into()) },
         Request::Reload { id: "r5".into(), checkpoint: None },
+        Request::Stats { id: "r6".into() },
     ];
     for r in requests {
         assert_eq!(Request::parse_line(&r.to_line()).unwrap(), r, "{r:?}");
@@ -96,8 +97,16 @@ fn codec_round_trips_every_variant() {
                 driver: "gather".into(),
                 permuted: true,
             }],
+            stats: Some(ServeWireStats {
+                requests: 3,
+                responses: 2,
+                errors: 0,
+                batches: 1,
+                widest_batch: 2,
+            }),
         },
         Response::Reloaded { id: "r4".into(), generation: 4 },
+        Response::Stats { id: "r6".into(), stats: ServeWireStats::default(), obs: Json::Null },
         Response::Error { id: Some("r9".into()), error: "unknown site \"zz\"".into() },
         Response::Error { id: None, error: "bad frame: unexpected end of JSON".into() },
     ];
@@ -358,6 +367,53 @@ fn geometry_errors_echo_request_id_and_preserve_order() {
             assert!(error.contains("fc"), "{error}");
         }
         other => panic!("{other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stats frames: live counters + merged obs snapshot; info carries counters
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stats_frame_carries_counters_and_obs_snapshot() {
+    use padst::obs::ObsSnapshot;
+    let mut ctx = session("diag:4", 1, Backend::Scalar, false);
+    let good: Vec<f32> = vec![0.5; COLS];
+    let script = format!(
+        "{}\n{}\n{}\n",
+        infer_line("a", "fc", 1, &good, false),
+        Request::Stats { id: "s".into() }.to_line(),
+        Request::Info { id: "i".into() }.to_line(),
+    );
+    let mut out = Vec::new();
+    serve(&mut ctx, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+    let resp = parse_responses(&out);
+    match &resp[1] {
+        Response::Stats { id, stats, obs } => {
+            assert_eq!(id, "s");
+            // Counters are read when the stats frame is handled: the
+            // infer frame plus this one seen, only the infer answered.
+            assert_eq!(stats.requests, 2);
+            assert_eq!(stats.responses, 1);
+            assert_eq!(stats.batches, 1);
+            // The embedded snapshot is schema-versioned, parseable, and
+            // carries the per-site infer histogram plus node metrics.
+            let snap = ObsSnapshot::parse(obs).unwrap();
+            let infer = snap.hists.get("serve.infer_ns.fc").expect("per-site infer histogram");
+            assert_eq!(infer.count, 1);
+            assert!(snap.hists.contains_key("serve.frame_ns"), "{:?}", snap.hists.keys());
+            assert!(snap.hists.contains_key("serve.batch_rows"), "{:?}", snap.hists.keys());
+        }
+        other => panic!("{other:?}"),
+    }
+    // Satellite bugfix: info responses must include the live counters.
+    match &resp[2] {
+        Response::Info { id, stats: Some(s), .. } => {
+            assert_eq!(id, "i");
+            assert_eq!(s.requests, 3, "info must see all three frames");
+            assert_eq!(s.responses, 2);
+        }
+        other => panic!("info must carry live ServeStats: {other:?}"),
     }
 }
 
