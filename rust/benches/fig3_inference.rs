@@ -32,7 +32,8 @@ use std::collections::HashMap;
 
 use padst::coordinator::TrainState;
 use padst::harness::telemetry::{BenchRecord, BenchReport};
-use padst::kernels::{dense_matmul_blocked_mt_with, run_plan_mt, shuffle_rows};
+use padst::kernels::tune::{self, TuneBudget};
+use padst::kernels::{dense_matmul_blocked_mt_with, run_plan_mt, run_plan_mt_tuned, shuffle_rows};
 use padst::models::PAPER_LAYERS;
 use padst::perm::model::resolve_perm;
 use padst::serve::SessionCtx;
@@ -254,6 +255,57 @@ fn main() -> anyhow::Result<()> {
             );
         }
         report = report.with_obs(ctx.obs_snapshot().to_json());
+    }
+
+    // ----- Tuned vs default dispatch (kernels::tune) -----
+    // Autotune the headline plan (ViT-B/16 fc1, diag @ 90 % sparsity),
+    // then bench the default `run_plan_mt` path against the tuned entry
+    // point with the winning choice.  The speedup metric is informational
+    // (CI treats timing variance as warn-only); the bit-identity
+    // guarantees live in `tests/tune.rs`.
+    {
+        let (rows, cols) = (3072usize, 768usize);
+        let pattern = resolve_pattern("diag")?;
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..BATCH * cols).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; BATCH * rows];
+        let mask = pattern.init_mask(rows, cols, 0.1, &mut rng)?;
+        let plan = pattern.compress(&w, &mask, None);
+
+        let mut budget = TuneBudget::default();
+        if opts.short {
+            budget.budget_ns = 2_000_000;
+        }
+        let (key, entry) = tune::tune_plan(&plan, &x, BATCH, &mut y, threads, &budget);
+        let choice = entry.choice;
+        let (bw, bi, bt) = opts.budget(2, 5, 0.25);
+        let t_default =
+            bench(|| run_plan_mt(&plan, &x, BATCH, &mut y, threads, backend), bw, bi, bt);
+        let t_tuned = bench(
+            || run_plan_mt_tuned(&plan, &x, BATCH, &mut y, threads, &choice),
+            bw,
+            bi,
+            bt,
+        );
+        let speedup = t_default.p50 / t_tuned.p50;
+        println!(
+            "\n## tuned dispatch on vit_b16/fc1, diag @ 90% ({}): default {} vs tuned {} \
+             ({speedup:.2}x)",
+            key.spec(),
+            fmt_time(t_default.p50),
+            fmt_time(t_tuned.p50),
+        );
+        report.push(
+            BenchRecord::from_summary("tuned", "run_plan_mt default", &t_default)
+                .with_pattern("diag"),
+        );
+        report.push(
+            BenchRecord::from_summary("tuned", "run_plan_mt tuned", &t_tuned)
+                .with_pattern("diag")
+                .with_tuned(true)
+                .with_metric("speedup_tuned_vs_default", speedup),
+        );
     }
 
     report.write(&opts.json_path)?;

@@ -24,13 +24,15 @@
 use padst::harness::telemetry::{BenchRecord, BenchReport};
 use padst::kernels::micro::Backend;
 use padst::kernels::parallel::available_threads;
+use padst::kernels::tune::{self, TuneBudget};
 use padst::kernels::{
     block_matmul_mt_with, block_matmul_with, csr_from_mask, csr_matmul_mt_with, csr_matmul_with,
     dense_matmul, dense_matmul_blocked_mt_with, dense_matmul_blocked_with,
-    gather_matmul_batched_with, gather_matmul_mt_with, gather_matmul_with, spmm_flops,
+    gather_matmul_batched_with, gather_matmul_mt_with, gather_matmul_with, run_plan_mt,
+    run_plan_mt_tuned, spmm_flops,
 };
 use padst::sparsity::compress::{compress_blocks, compress_rows};
-use padst::sparsity::pattern::resolve_pattern;
+use padst::sparsity::pattern::{resolve_pattern, KernelPlan};
 use padst::util::cli::BenchOpts;
 use padst::util::stats::{bench, fmt_time, Summary};
 use padst::util::Rng;
@@ -116,6 +118,7 @@ fn main() -> anyhow::Result<()> {
 
     backend_matrix(&opts, &mut report);
     parallel_scaling(&opts, &mut report);
+    tuned_section(&opts, &mut report);
 
     report.write(&opts.json_path)?;
     println!("# wrote {}", opts.json_path.display());
@@ -269,4 +272,65 @@ fn parallel_scaling(opts: &BenchOpts, report: &mut BenchReport) {
         row("dense_blocked", t, &s, serial);
     }
     println!("# (available parallelism on this machine: {})", available_threads());
+}
+
+/// Tuned vs default dispatch at the headline geometry: time the autotuner's
+/// candidate grid for the diag plan, then bench the default `run_plan_mt`
+/// path against `run_plan_mt_tuned` with the winning choice.  The speedup
+/// metric is informational — CI treats it as warn-only (timing variance on
+/// shared runners), the identity guarantees live in `tests/tune.rs`.
+fn tuned_section(opts: &BenchOpts, report: &mut BenchReport) {
+    let (bw, bi, bt) = opts.budget(1, 3, 0.3);
+    let threads = opts.threads;
+    let backend = opts.backend;
+    let (batch, rows, cols) = (64usize, 3072usize, 768usize);
+    let density = 0.1;
+    let mut rng = Rng::new(11);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0f32; batch * rows];
+
+    let dmask =
+        resolve_pattern("diag").unwrap().init_mask(rows, cols, density, &mut rng).unwrap();
+    let k = (0..dmask.rows).map(|i| dmask.row_nnz(i)).max().unwrap();
+    let plan = KernelPlan::Rows(compress_rows(&w, &dmask, k, None));
+
+    let mut budget = TuneBudget::default();
+    if opts.short {
+        budget.budget_ns = 2_000_000;
+    }
+    let (key, entry) = tune::tune_plan(&plan, &x, batch, &mut y, threads, &budget);
+    let choice = entry.choice;
+    println!(
+        "# tuned vs default ({batch},{rows},{cols}) d={density}, t={threads}: {} -> backend={} \
+         batched={} cap={}",
+        key.spec(),
+        choice.backend.name(),
+        u8::from(choice.batched),
+        choice.max_threads
+    );
+
+    let dflt = bench(|| run_plan_mt(&plan, &x, batch, &mut y, threads, backend), bw, bi, bt);
+    let tuned = bench(
+        || run_plan_mt_tuned(&plan, &x, batch, &mut y, threads, &choice),
+        bw,
+        bi,
+        bt,
+    );
+    let speedup = dflt.p50 / tuned.p50;
+    println!(
+        "{:<26} {:>12}\n{:<26} {:>12} ({:.2}x vs default)",
+        "run_plan_mt default",
+        fmt_time(dflt.p50),
+        "run_plan_mt tuned",
+        fmt_time(tuned.p50),
+        speedup
+    );
+    report.push(BenchRecord::from_summary("tuned", "run_plan_mt default", &dflt));
+    report.push(
+        BenchRecord::from_summary("tuned", "run_plan_mt tuned", &tuned)
+            .with_tuned(true)
+            .with_metric("speedup_tuned_vs_default", speedup),
+    );
+    println!();
 }

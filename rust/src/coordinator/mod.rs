@@ -85,9 +85,12 @@ pub struct RunConfig {
     /// artifact execution runs under PJRT's own pool until the intra-op
     /// wiring lands (ROADMAP).
     pub threads: usize,
-    /// Microkernel backend for the native kernel paths (CLI `--backend`,
-    /// else `PADST_BACKEND`, else tiled).  Propagated to the `Runtime`
-    /// alongside `threads`; artifact execution is backend-blind.
+    /// Microkernel backend for the native kernel paths.  Resolution order:
+    /// CLI `--backend`, else a spec-level backend, else `PADST_BACKEND`,
+    /// else a tuning-table choice ([`crate::kernels::tune`]), else tiled —
+    /// the first three pin the backend so the tuner never overrides an
+    /// explicit selection.  Propagated to the `Runtime` alongside
+    /// `threads`; artifact execution is backend-blind.
     pub backend: Backend,
 }
 

@@ -42,6 +42,11 @@
 //! `perm` (per-record) is the permutation-mode spec the row was measured
 //! under (`"learned"`, `"random:seed=7"`, ...), resolved through the
 //! `PermRegistry` — same provenance-not-identity rules as `pattern`.
+//!
+//! `tuned` (per-record) marks a row whose dispatch went through the
+//! kernel autotuner's tuning table (`kernels::tune`) rather than the
+//! default dispatch.  Provenance only, never identity; serialised only
+//! when true and absent rows read back as `false`.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -70,6 +75,10 @@ pub struct BenchRecord {
     /// Permutation-mode spec the row was measured under ("" = not
     /// perm-specific).  Metadata only — never part of [`BenchRecord::id`].
     pub perm: String,
+    /// Whether the row's dispatch went through the kernel autotuner's
+    /// tuning table (`kernels::tune`).  Metadata only — never part of
+    /// [`BenchRecord::id`]; serialised only when true.
+    pub tuned: bool,
     /// Timed samples behind the quantiles; 0 for value-only records.
     pub n: usize,
     pub mean_s: f64,
@@ -97,6 +106,7 @@ impl BenchRecord {
             backend: String::new(),
             pattern: String::new(),
             perm: String::new(),
+            tuned: false,
             n: s.n,
             mean_s: s.mean,
             p50_s: s.p50,
@@ -121,6 +131,7 @@ impl BenchRecord {
             backend: String::new(),
             pattern: String::new(),
             perm: String::new(),
+            tuned: false,
             n: h.count as usize,
             mean_s: h.mean() * 1e-9,
             p50_s: s(h.quantile(0.5)),
@@ -141,6 +152,7 @@ impl BenchRecord {
             backend: String::new(),
             pattern: String::new(),
             perm: String::new(),
+            tuned: false,
             n: 0,
             mean_s: 0.0,
             p50_s: 0.0,
@@ -180,6 +192,13 @@ impl BenchRecord {
         self
     }
 
+    /// Builder-style tuned-provenance stamp (rows whose dispatch went
+    /// through the autotuner's tuning table).
+    pub fn with_tuned(mut self, tuned: bool) -> BenchRecord {
+        self.tuned = tuned;
+        self
+    }
+
     /// The identity the baseline comparison matches on.
     pub fn id(&self) -> String {
         format!("{}/{}", self.group, self.name)
@@ -198,6 +217,9 @@ impl BenchRecord {
         }
         if !self.perm.is_empty() {
             pairs.push(("perm", json::s(&self.perm)));
+        }
+        if self.tuned {
+            pairs.push(("tuned", Json::Bool(true)));
         }
         if self.obs_schema != 0 {
             pairs.push(("obs_schema", json::num(self.obs_schema as f64)));
@@ -256,6 +278,7 @@ impl BenchRecord {
                 .and_then(Json::as_str)
                 .unwrap_or("")
                 .to_string(),
+            tuned: v.get("tuned").and_then(Json::as_bool).unwrap_or(false),
             n: num_field("n")? as usize,
             mean_s: num_field("mean_s")?,
             p50_s: num_field("p50_s")?,

@@ -146,6 +146,14 @@ impl Backend {
     /// `block_matmul`, ...) and `RunConfig::default` use this, which is
     /// what lets CI run the whole default test suite under
     /// `PADST_BACKEND=scalar`.
+    ///
+    /// Full resolution order across the crate: an explicit CLI `--backend`
+    /// flag wins over a spec-level backend, which wins over
+    /// `PADST_BACKEND`, which wins over a tuning-table choice
+    /// ([`crate::kernels::tune`]), which wins over this default.  The
+    /// first three sources *pin* the backend — the tuner then only varies
+    /// bit-preserving dispatch axes (batching, thread caps), never the
+    /// backend itself (see `tune::resolve_backend_precedence`).
     pub fn default_backend() -> Backend {
         static CACHE: OnceLock<Backend> = OnceLock::new();
         *CACHE.get_or_init(Backend::from_env)

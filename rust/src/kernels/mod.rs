@@ -23,12 +23,23 @@
 //! `std::simd` behind `--features nightly-simd`).  Plain entry points run
 //! [`Backend::default_backend`] (the `PADST_BACKEND` env knob); `_with` /
 //! `_mt_with` variants take the backend explicitly.
+//!
+//! [`run_plan`] / [`run_plan_mt`] additionally consult the [`tune`]
+//! autotuner: with a tuning table installed (`PADST_TUNE_TABLE`,
+//! `--tune-table`, or `padst tune`) the per-shape winning variant —
+//! backend, batched row driver, mt thread cap — replaces the defaults;
+//! untuned keys, `PADST_TUNE=off`, and table-less processes dispatch
+//! exactly as before.  A pinned backend (explicit `--backend` /
+//! `PADST_BACKEND`) is never overridden by the table, and the non-backend
+//! axes are bit-preserving, so the serial<->mt `to_bits` identity contract
+//! survives tuning unchanged.
 
 pub mod csr;
 pub mod dense;
 pub mod gather;
 pub mod micro;
 pub mod parallel;
+pub mod tune;
 
 pub use csr::{csr_from_mask, csr_matmul, csr_matmul_with, Csr};
 pub use dense::{
@@ -41,8 +52,9 @@ pub use gather::{
 pub use micro::Backend;
 pub use parallel::{
     available_threads, block_matmul_mt, block_matmul_mt_with, csr_matmul_mt, csr_matmul_mt_with,
-    dense_matmul_blocked_mt, dense_matmul_blocked_mt_with, gather_matmul_mt,
-    gather_matmul_mt_with, parallel_map, resolve_threads,
+    dense_matmul_blocked_mt, dense_matmul_blocked_mt_with, gather_matmul_batched_mt,
+    gather_matmul_batched_mt_with, gather_matmul_mt, gather_matmul_mt_with, parallel_map,
+    resolve_threads,
 };
 
 /// FLOPs of one sparse GEMM at the given geometry (2 * batch * nnz).
@@ -56,6 +68,9 @@ pub fn spmm_flops(batch: usize, nnz: usize) -> usize {
 struct KernelObs {
     run_plan: std::sync::Arc<crate::obs::Counter>,
     run_plan_mt: std::sync::Arc<crate::obs::Counter>,
+    /// Dispatches whose variant came from the tuning table (subset of the
+    /// two counters above) — the observable CI asserts on in `tune-smoke`.
+    run_plan_tuned: std::sync::Arc<crate::obs::Counter>,
     /// Per-plan-kind dispatch timing, indexed by [`plan_kind_index`].
     plan_ns: [std::sync::Arc<crate::obs::Histogram>; 4],
 }
@@ -67,6 +82,7 @@ fn kernel_obs() -> &'static KernelObs {
         KernelObs {
             run_plan: reg.counter("kernels.run_plan"),
             run_plan_mt: reg.counter("kernels.run_plan_mt"),
+            run_plan_tuned: reg.counter("kernels.run_plan_tuned"),
             plan_ns: [
                 reg.histogram("kernels.plan_ns.rows"),
                 reg.histogram("kernels.plan_ns.blocks"),
@@ -94,7 +110,9 @@ fn plan_kind_index(plan: &crate::sparsity::pattern::KernelPlan) -> usize {
 ///
 /// Sits inside training inner loops where an `Instant::now()` pair is
 /// measurable against a tiny GEMM, so dispatch metrics hide behind
-/// [`crate::obs::enabled`]: one relaxed atomic load when off.
+/// [`crate::obs::enabled`]: one relaxed atomic load when off.  The tuning
+/// consult is equally cheap when no table is installed (one atomic load;
+/// see [`tune::Tuner::choice_for`]), and allocation-free when one is.
 pub fn run_plan(
     plan: &crate::sparsity::pattern::KernelPlan,
     x: &[f32],
@@ -102,35 +120,65 @@ pub fn run_plan(
     y: &mut [f32],
     backend: Backend,
 ) {
+    let (choice, tuned) = tune::tuner().choice_for(plan, 1, backend);
     if !crate::obs::enabled() {
-        return dispatch_plan(plan, x, batch, y, backend);
+        return dispatch_plan_choice(plan, x, batch, y, &choice);
     }
     let ko = kernel_obs();
     ko.run_plan.inc();
+    if tuned {
+        ko.run_plan_tuned.inc();
+    }
     let t0 = std::time::Instant::now();
-    dispatch_plan(plan, x, batch, y, backend);
+    dispatch_plan_choice(plan, x, batch, y, &choice);
     ko.plan_ns[plan_kind_index(plan)].record_ns(t0.elapsed());
 }
 
-fn dispatch_plan(
+/// [`run_plan`] with an explicit, pre-resolved tuning [`tune::Choice`]
+/// (no table lookup at all).  Callers that execute one plan many times —
+/// serve sites, the tuned bench sections — resolve the choice once via
+/// [`tune::Tuner::choice_for`] and dispatch through this.
+pub fn run_plan_tuned(
     plan: &crate::sparsity::pattern::KernelPlan,
     x: &[f32],
     batch: usize,
     y: &mut [f32],
-    backend: Backend,
+    choice: &tune::Choice,
+) {
+    if !crate::obs::enabled() {
+        return dispatch_plan_choice(plan, x, batch, y, choice);
+    }
+    let ko = kernel_obs();
+    ko.run_plan.inc();
+    ko.run_plan_tuned.inc();
+    let t0 = std::time::Instant::now();
+    dispatch_plan_choice(plan, x, batch, y, choice);
+    ko.plan_ns[plan_kind_index(plan)].record_ns(t0.elapsed());
+}
+
+fn dispatch_plan_choice(
+    plan: &crate::sparsity::pattern::KernelPlan,
+    x: &[f32],
+    batch: usize,
+    y: &mut [f32],
+    c: &tune::Choice,
 ) {
     use crate::sparsity::pattern::KernelPlan;
     match plan {
-        KernelPlan::Rows(rc) => gather_matmul_with(x, rc, batch, y, backend),
-        KernelPlan::Blocks(bc) => block_matmul_with(x, bc, batch, y, backend),
-        KernelPlan::Csr(csr) => csr_matmul_with(x, csr, batch, y, backend),
+        KernelPlan::Rows(rc) if c.batched => {
+            gather_matmul_batched_with(x, rc, batch, y, c.backend)
+        }
+        KernelPlan::Rows(rc) => gather_matmul_with(x, rc, batch, y, c.backend),
+        KernelPlan::Blocks(bc) => block_matmul_with(x, bc, batch, y, c.backend),
+        KernelPlan::Csr(csr) => csr_matmul_with(x, csr, batch, y, c.backend),
         KernelPlan::Dense { rows, cols, w } => {
-            dense_matmul_blocked_with(x, w, batch, *rows, *cols, y, backend)
+            dense_matmul_blocked_with(x, w, batch, *rows, *cols, y, c.backend)
         }
     }
 }
 
-/// [`run_plan`] on the scoped-thread `_mt` drivers.
+/// [`run_plan`] on the scoped-thread `_mt` drivers, keyed in the tuning
+/// table at the resolved thread count.
 pub fn run_plan_mt(
     plan: &crate::sparsity::pattern::KernelPlan,
     x: &[f32],
@@ -139,31 +187,65 @@ pub fn run_plan_mt(
     threads: usize,
     backend: Backend,
 ) {
+    let threads = resolve_threads(threads);
+    let (choice, tuned) = tune::tuner().choice_for(plan, threads, backend);
     if !crate::obs::enabled() {
-        return dispatch_plan_mt(plan, x, batch, y, threads, backend);
+        return dispatch_plan_mt_choice(plan, x, batch, y, threads, &choice);
     }
     let ko = kernel_obs();
     ko.run_plan_mt.inc();
+    if tuned {
+        ko.run_plan_tuned.inc();
+    }
     let t0 = std::time::Instant::now();
-    dispatch_plan_mt(plan, x, batch, y, threads, backend);
+    dispatch_plan_mt_choice(plan, x, batch, y, threads, &choice);
     ko.plan_ns[plan_kind_index(plan)].record_ns(t0.elapsed());
 }
 
-fn dispatch_plan_mt(
+/// [`run_plan_mt`] with an explicit, pre-resolved tuning [`tune::Choice`]
+/// (no table lookup at all) — the serve warm path.
+pub fn run_plan_mt_tuned(
     plan: &crate::sparsity::pattern::KernelPlan,
     x: &[f32],
     batch: usize,
     y: &mut [f32],
     threads: usize,
-    backend: Backend,
+    choice: &tune::Choice,
+) {
+    if !crate::obs::enabled() {
+        return dispatch_plan_mt_choice(plan, x, batch, y, threads, choice);
+    }
+    let ko = kernel_obs();
+    ko.run_plan_mt.inc();
+    ko.run_plan_tuned.inc();
+    let t0 = std::time::Instant::now();
+    dispatch_plan_mt_choice(plan, x, batch, y, threads, choice);
+    ko.plan_ns[plan_kind_index(plan)].record_ns(t0.elapsed());
+}
+
+fn dispatch_plan_mt_choice(
+    plan: &crate::sparsity::pattern::KernelPlan,
+    x: &[f32],
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+    c: &tune::Choice,
 ) {
     use crate::sparsity::pattern::KernelPlan;
+    // Cap after resolving so `0` (auto) still expands before the min —
+    // the cap axis is bit-preserving (sharding is bit-identical at any
+    // thread count), it only limits oversubscription on small GEMMs.
+    let threads = resolve_threads(threads);
+    let threads = if c.max_threads > 0 { threads.min(c.max_threads as usize) } else { threads };
     match plan {
-        KernelPlan::Rows(rc) => gather_matmul_mt_with(x, rc, batch, y, threads, backend),
-        KernelPlan::Blocks(bc) => block_matmul_mt_with(x, bc, batch, y, threads, backend),
-        KernelPlan::Csr(csr) => csr_matmul_mt_with(x, csr, batch, y, threads, backend),
+        KernelPlan::Rows(rc) if c.batched => {
+            gather_matmul_batched_mt_with(x, rc, batch, y, threads, c.backend)
+        }
+        KernelPlan::Rows(rc) => gather_matmul_mt_with(x, rc, batch, y, threads, c.backend),
+        KernelPlan::Blocks(bc) => block_matmul_mt_with(x, bc, batch, y, threads, c.backend),
+        KernelPlan::Csr(csr) => csr_matmul_mt_with(x, csr, batch, y, threads, c.backend),
         KernelPlan::Dense { rows, cols, w } => {
-            dense_matmul_blocked_mt_with(x, w, batch, *rows, *cols, y, threads, backend)
+            dense_matmul_blocked_mt_with(x, w, batch, *rows, *cols, y, threads, c.backend)
         }
     }
 }

@@ -34,7 +34,9 @@ use crate::sparsity::compress::{BlockCompressed, RowCompressed};
 
 use super::csr::{csr_matmul_with, csr_row_dot, Csr};
 use super::dense::{dense_matmul_blocked_with, dense_rows_blocked};
-use super::gather::{block_matmul_with, block_row_matmul, gather_matmul_with};
+use super::gather::{
+    block_matmul_with, block_row_matmul, gather_matmul_batched_with, gather_matmul_with,
+};
 use super::micro::{self, Backend};
 
 pub use crate::util::cli::{available_threads, resolve_threads};
@@ -130,6 +132,48 @@ pub fn gather_matmul_mt_with(
             p += take;
             off += take;
         }
+    });
+}
+
+/// Parallel batched gather driver
+/// ([`gather_matmul_batched`](super::gather_matmul_batched)): whole batch
+/// rows sharded across threads, default backend.
+pub fn gather_matmul_batched_mt(
+    x: &[f32],
+    rc: &RowCompressed,
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+) {
+    gather_matmul_batched_mt_with(x, rc, batch, y, threads, Backend::default_backend());
+}
+
+/// [`gather_matmul_batched_mt`] with an explicit microkernel backend.
+/// Bit-identical to the serial batched driver *and* to the plain gather
+/// kernel at any thread count: a chunk boundary only changes which batch
+/// rows share a `dot_gather4` group, and each group row is required to be
+/// bit-identical to the single-row `dot_gather` (the microkernel row
+/// contract pinned by `tests/microkernels.rs`) — so the tuner's batched
+/// axis is always bit-safe to select.
+pub fn gather_matmul_batched_mt_with(
+    x: &[f32],
+    rc: &RowCompressed,
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+    backend: Backend,
+) {
+    let threads = resolve_threads(threads);
+    if threads <= 1 {
+        gather_matmul_batched_with(x, rc, batch, y, backend);
+        return;
+    }
+    let (rows, cols) = (rc.rows, rc.cols);
+    debug_assert_eq!(x.len(), batch * cols);
+    debug_assert_eq!(y.len(), batch * rows);
+    shard_units(y, rows, threads, |b0, chunk| {
+        let nb = chunk.len() / rows;
+        gather_matmul_batched_with(&x[b0 * cols..(b0 + nb) * cols], rc, nb, chunk, backend);
     });
 }
 
@@ -380,5 +424,29 @@ mod tests {
         dense_matmul_blocked(&x, &w, batch, rows, cols, &mut ys);
         dense_matmul_blocked_mt(&x, &w, batch, rows, cols, &mut ym, 3);
         assert!(ys.iter().zip(&ym).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    /// The tuner's batched axis: sharded 4-row-grouped batches must be
+    /// bit-identical to the plain serial gather kernel at any chunk phase
+    /// (batch 9 across 2/3/8 workers lands every group-boundary offset).
+    #[test]
+    fn batched_mt_matches_plain_gather_bitwise() {
+        let mut rng = Rng::new(42);
+        let (batch, rows, cols) = (9, 48, 64);
+        let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+        let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+        let dm = make_diag_mask(rows, cols, 5, &mut rng);
+        let rc = compress_rows(&w, &dm, 5, None);
+        let mut ys = vec![0.0f32; batch * rows];
+        let mut ym = vec![0.0f32; batch * rows];
+        gather_matmul(&x, &rc, batch, &mut ys);
+        for threads in [1, 2, 3, 8] {
+            ym.iter_mut().for_each(|v| *v = 0.0);
+            gather_matmul_batched_mt(&x, &rc, batch, &mut ym, threads);
+            assert!(
+                ys.iter().zip(&ym).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}"
+            );
+        }
     }
 }

@@ -1,0 +1,848 @@
+//! Kernel autotuner: a persistent per-shape tuning table consulted by
+//! [`run_plan`](super::run_plan) / [`run_plan_mt`](super::run_plan_mt).
+//!
+//! The fastest microkernel configuration varies with (plan kind, layer
+//! geometry, backend availability, thread count) — a single global
+//! [`Backend`] default leaves performance on the table for every pattern
+//! family.  This module closes that gap without touching the numerics:
+//!
+//! * **Key** ([`TuneKey`]): `(plan kind, ceil-log2 buckets of
+//!   rows/cols/panel, ceil-log2 thread bucket, simd-compiled bit)`.
+//!   Bucketing by powers of two keeps the table tiny and lets one offline
+//!   sweep cover every geometry a model will actually serve.  Keys pack
+//!   into a single `u64` ([`TuneKey::pack`]) so the hot-path probe is an
+//!   integer map lookup — no allocation, no string formatting.
+//! * **Choice** ([`Choice`]): the variant triple `(backend, row-blocking
+//!   batched `dot_gather4` vs plain `dot_gather`, mt thread cap)`.  The
+//!   batched and thread-cap axes are *bit-preserving* per backend (pinned
+//!   by `tests/microkernels.rs` / `tests/parallel_kernels.rs`), so a table
+//!   hit never changes output bits unless it changes the backend — and it
+//!   only changes the backend when the caller's backend is unpinned (see
+//!   [`backend_pinned`]).
+//! * **Measurement** ([`tune_plan`]): short calibrated reps per candidate,
+//!   recorded through the obs histogram machinery (a local
+//!   [`MetricRegistry`], so tuning never pollutes process metrics); the
+//!   p50 bucket midpoint scores each candidate and a deterministic total
+//!   order breaks ties, making winners reproducible run-to-run on a quiet
+//!   machine.
+//! * **Persistence** ([`TuningTable`]): schema-versioned JSON
+//!   (`tune_schema`), written atomically via `util::fs`, mergeable like
+//!   bench/obs snapshots (entry-wise min under the same total order, so
+//!   merge is associative and commutative).  Loadable from
+//!   `PADST_TUNE_TABLE` at process start or `--tune-table` / `padst tune`.
+//! * **Dispatch** ([`tuner`]): a process-wide [`Tuner`].  With no table
+//!   installed the consult is one relaxed atomic load — untuned processes
+//!   pay nothing.  With a table it is an uncontended shared-lock probe of
+//!   the packed-key map (no allocation).  Serve hoists the per-site lookup
+//!   into `SessionCtx::rebuild`, keeping its zero-alloc warm path entirely
+//!   lookup-free.  `PADST_TUNE=off` disables consultation, bit-reproducing
+//!   untuned behaviour exactly.
+//!
+//! **Backend resolution order** (the cached-once chain pinned by
+//! [`resolve_backend_precedence`]): explicit CLI `--backend` > a backend
+//! required by a spec > `PADST_BACKEND` > tuning-table choice > the
+//! built-in default (tiled).  The first three *pin* the backend
+//! ([`note_backend_pinned`]): a pinned backend is never overridden by the
+//! table, which is what keeps CI's `PADST_BACKEND=scalar` suite and
+//! explicit `--backend` runs bit-stable with a table installed.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{OnceLock, RwLock};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::obs::MetricRegistry;
+use crate::sparsity::pattern::KernelPlan;
+use crate::util::cli::resolve_threads;
+use crate::util::json::{self, Json};
+
+use super::micro::Backend;
+
+/// Schema version stamped into every serialized table; a mismatch is a
+/// parse error (and [`TuningTable::load_lenient`] degrades it to a warning
+/// plus an empty table, never a changed dispatch).
+pub const TUNE_SCHEMA_VERSION: u32 = 1;
+
+/// The four executable plan kinds, in [`KernelPlan`] declaration order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PlanKind {
+    /// Fixed-width index-stream panels ([`KernelPlan::Rows`]).
+    Rows = 0,
+    /// Dense bs x bs panels ([`KernelPlan::Blocks`]).
+    Blocks = 1,
+    /// Unstructured CSR ([`KernelPlan::Csr`]).
+    Csr = 2,
+    /// Dense fallback ([`KernelPlan::Dense`]).
+    Dense = 3,
+}
+
+impl PlanKind {
+    pub fn of(plan: &KernelPlan) -> PlanKind {
+        match plan {
+            KernelPlan::Rows(_) => PlanKind::Rows,
+            KernelPlan::Blocks(_) => PlanKind::Blocks,
+            KernelPlan::Csr(_) => PlanKind::Csr,
+            KernelPlan::Dense { .. } => PlanKind::Dense,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanKind::Rows => "rows",
+            PlanKind::Blocks => "blocks",
+            PlanKind::Csr => "csr",
+            PlanKind::Dense => "dense",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlanKind> {
+        match s {
+            "rows" => Some(PlanKind::Rows),
+            "blocks" => Some(PlanKind::Blocks),
+            "csr" => Some(PlanKind::Csr),
+            "dense" => Some(PlanKind::Dense),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [PlanKind; 4] {
+        [PlanKind::Rows, PlanKind::Blocks, PlanKind::Csr, PlanKind::Dense]
+    }
+
+    fn from_bits(v: u64) -> PlanKind {
+        match v & 0b11 {
+            0 => PlanKind::Rows,
+            1 => PlanKind::Blocks,
+            2 => PlanKind::Csr,
+            _ => PlanKind::Dense,
+        }
+    }
+}
+
+/// Ceil-log2 size bucket: 0 for n <= 1, else the smallest b with
+/// `n <= 2^b`.  Geometries within a factor of two share a tuning entry.
+pub fn bucket(n: usize) -> u8 {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as u8
+    }
+}
+
+/// One tuning key: what [`run_plan`](super::run_plan) hashes a dispatch
+/// down to before consulting the table.  See the module docs for the axis
+/// rationale; `simd` records backend *availability* (whether this build
+/// compiled the `nightly-simd` kernels), so tables tuned on a nightly
+/// build never mis-apply to a stable one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TuneKey {
+    pub kind: PlanKind,
+    /// Ceil-log2 bucket of output rows (m).
+    pub rows_b: u8,
+    /// Ceil-log2 bucket of input cols (k).
+    pub cols_b: u8,
+    /// Ceil-log2 bucket of the panel width: `RowCompressed::k`, block
+    /// size, CSR mean row nnz, or 0 for dense.
+    pub panel_b: u8,
+    /// Ceil-log2 bucket of the resolved thread count (0 = serial).
+    pub threads_b: u8,
+    /// Whether the simd backend is compiled into this build.
+    pub simd: bool,
+}
+
+impl TuneKey {
+    /// Key a concrete plan at a resolved thread count.
+    pub fn of_plan(plan: &KernelPlan, threads: usize) -> TuneKey {
+        let (rows, cols, panel) = match plan {
+            KernelPlan::Rows(rc) => (rc.rows, rc.cols, rc.k),
+            KernelPlan::Blocks(bc) => (bc.rows, bc.cols, bc.bs),
+            KernelPlan::Csr(csr) => (csr.rows, csr.cols, csr.vals.len() / csr.rows.max(1)),
+            KernelPlan::Dense { rows, cols, .. } => (*rows, *cols, 0),
+        };
+        TuneKey {
+            kind: PlanKind::of(plan),
+            rows_b: bucket(rows),
+            cols_b: bucket(cols),
+            panel_b: bucket(panel),
+            threads_b: bucket(threads),
+            simd: Backend::simd_compiled(),
+        }
+    }
+
+    /// Pack into the `u64` the in-memory table is keyed by (hot-path form:
+    /// no allocation, total round-trip with [`TuneKey::unpack`]).
+    pub fn pack(&self) -> u64 {
+        (self.kind as u64)
+            | (self.rows_b as u64) << 2
+            | (self.cols_b as u64) << 10
+            | (self.panel_b as u64) << 18
+            | (self.threads_b as u64) << 26
+            | u64::from(self.simd) << 34
+    }
+
+    pub fn unpack(v: u64) -> TuneKey {
+        TuneKey {
+            kind: PlanKind::from_bits(v),
+            rows_b: (v >> 2 & 0xff) as u8,
+            cols_b: (v >> 10 & 0xff) as u8,
+            panel_b: (v >> 18 & 0xff) as u8,
+            threads_b: (v >> 26 & 0xff) as u8,
+            simd: v >> 34 & 1 == 1,
+        }
+    }
+
+    /// Human/JSON spec form: `rows:r12:c10:p7:t1:s0`.
+    pub fn spec(&self) -> String {
+        format!(
+            "{}:r{}:c{}:p{}:t{}:s{}",
+            self.kind.name(),
+            self.rows_b,
+            self.cols_b,
+            self.panel_b,
+            self.threads_b,
+            u8::from(self.simd)
+        )
+    }
+
+    pub fn parse_spec(s: &str) -> Option<TuneKey> {
+        let p: Vec<&str> = s.split(':').collect();
+        if p.len() != 6 {
+            return None;
+        }
+        let field = |part: &str, tag: &str| part.strip_prefix(tag).and_then(|v| v.parse().ok());
+        Some(TuneKey {
+            kind: PlanKind::parse(p[0])?,
+            rows_b: field(p[1], "r")?,
+            cols_b: field(p[2], "c")?,
+            panel_b: field(p[3], "p")?,
+            threads_b: field(p[4], "t")?,
+            simd: field(p[5], "s")? != 0,
+        })
+    }
+}
+
+/// One dispatch variant: what a table hit resolves to.  Both non-backend
+/// axes are bit-preserving, so selecting among [`Choice`]s with the same
+/// backend never changes output bits (the tentpole safety property).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Choice {
+    /// Microkernel backend (the only axis that may change bits — applied
+    /// only when the caller's backend is unpinned; see
+    /// [`Tuner::choice_for`]).
+    pub backend: Backend,
+    /// Row-blocking: batched `dot_gather4` driver instead of the plain
+    /// per-row `dot_gather` driver (Rows plans only; bit-identical per
+    /// the microkernel row contract).
+    pub batched: bool,
+    /// Mt chunking cap: shard across at most this many threads (0 = no
+    /// cap).  Sharding is bit-identical at any thread count, so capping
+    /// oversubscribed small GEMMs is free of numeric risk.
+    pub max_threads: u32,
+}
+
+impl Choice {
+    /// The untuned dispatch exactly as it behaves today: the caller's
+    /// backend, plain row driver, no thread cap.
+    pub fn default_for(backend: Backend) -> Choice {
+        Choice { backend, batched: false, max_threads: 0 }
+    }
+}
+
+fn backend_rank(b: Backend) -> u8 {
+    match b {
+        Backend::Scalar => 0,
+        Backend::Tiled => 1,
+        Backend::Simd => 2,
+    }
+}
+
+/// A tuned winner plus its measurement provenance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TuneEntry {
+    pub choice: Choice,
+    /// p50 of the winning candidate's calibrated reps, in nanoseconds
+    /// (obs histogram bucket midpoint, <= 6.25 % relative error).
+    pub best_ns: u64,
+    /// Reps behind `best_ns`.
+    pub reps: u32,
+}
+
+impl TuneEntry {
+    /// Deterministic total order: faster first, ties broken by backend
+    /// rank, then the remaining fields.  Because this is total, keeping
+    /// the minimum under insert/merge is associative and commutative —
+    /// the same algebra as bench/obs snapshot merges.
+    fn order_key(&self) -> (u64, u8, bool, u32, u32) {
+        (
+            self.best_ns,
+            backend_rank(self.choice.backend),
+            self.choice.batched,
+            self.choice.max_threads,
+            self.reps,
+        )
+    }
+
+    fn to_json(self) -> Json {
+        json::obj(vec![
+            ("backend", json::s(self.choice.backend.name())),
+            ("batched", Json::Bool(self.choice.batched)),
+            ("best_ns", json::num(self.best_ns as f64)),
+            ("max_threads", json::num(self.choice.max_threads as f64)),
+            ("reps", json::num(self.reps as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<TuneEntry> {
+        let backend_name = v
+            .get("backend")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tuning entry: missing backend"))?;
+        let backend = Backend::parse(backend_name)
+            .ok_or_else(|| anyhow!("tuning entry: unknown backend {backend_name:?}"))?;
+        Ok(TuneEntry {
+            choice: Choice {
+                backend,
+                batched: v.get("batched").and_then(Json::as_bool).unwrap_or(false),
+                max_threads: v.get("max_threads").and_then(Json::as_usize).unwrap_or(0) as u32,
+            },
+            best_ns: v.get("best_ns").and_then(Json::as_usize).unwrap_or(0) as u64,
+            reps: v.get("reps").and_then(Json::as_usize).unwrap_or(0) as u32,
+        })
+    }
+}
+
+/// The persistent winner map, keyed by packed [`TuneKey`]s in memory and
+/// by key spec strings on disk.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TuningTable {
+    pub schema: u32,
+    entries: BTreeMap<u64, TuneEntry>,
+}
+
+impl Default for TuningTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TuningTable {
+    pub fn new() -> TuningTable {
+        TuningTable { schema: TUNE_SCHEMA_VERSION, entries: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, key: &TuneKey) -> Option<&TuneEntry> {
+        self.entries.get(&key.pack())
+    }
+
+    fn get_packed(&self, packed: u64) -> Option<&TuneEntry> {
+        self.entries.get(&packed)
+    }
+
+    /// Insert, keeping the better entry (minimum under
+    /// [`TuneEntry::order_key`]) when the key is already present.
+    pub fn insert(&mut self, key: TuneKey, entry: TuneEntry) {
+        let slot = self.entries.entry(key.pack()).or_insert(entry);
+        if entry.order_key() < slot.order_key() {
+            *slot = entry;
+        }
+    }
+
+    /// Entry-wise merge (best entry per key wins).  Associative and
+    /// commutative, so per-machine tables combine in any order — the same
+    /// contract as bench/obs snapshot merges.
+    pub fn merge(&mut self, other: &TuningTable) {
+        for (&k, e) in &other.entries {
+            self.insert(TuneKey::unpack(k), *e);
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (TuneKey, &TuneEntry)> {
+        self.entries.iter().map(|(&k, e)| (TuneKey::unpack(k), e))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries: BTreeMap<String, Json> =
+            self.entries.iter().map(|(&k, e)| (TuneKey::unpack(k).spec(), e.to_json())).collect();
+        json::obj(vec![
+            ("tune_schema", json::num(self.schema as f64)),
+            ("entries", Json::Obj(entries)),
+        ])
+    }
+
+    /// Strict parse: a schema mismatch, malformed key, or malformed entry
+    /// is an error (callers that prefer degradation use
+    /// [`TuningTable::load_lenient`]).
+    pub fn parse(src: &str) -> Result<TuningTable> {
+        let v = Json::parse(src).context("parsing tuning table")?;
+        let schema = v.get("tune_schema").and_then(Json::as_usize).unwrap_or(0);
+        if schema != TUNE_SCHEMA_VERSION as usize {
+            bail!("unsupported tune_schema {schema} (this build reads {TUNE_SCHEMA_VERSION})");
+        }
+        let mut table = TuningTable::new();
+        if let Some(m) = v.get("entries").and_then(Json::as_obj) {
+            for (spec, ev) in m {
+                let key = TuneKey::parse_spec(spec)
+                    .ok_or_else(|| anyhow!("bad tuning key {spec:?}"))?;
+                table.insert(key, TuneEntry::from_json(ev)?);
+            }
+        }
+        Ok(table)
+    }
+
+    /// Atomic write (temp sibling + rename), like every other snapshot.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::util::fs::write_atomic(path, &self.to_json().to_string_pretty())
+    }
+
+    pub fn load(path: &Path) -> Result<TuningTable> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tuning table {}", path.display()))?;
+        TuningTable::parse(&src).with_context(|| path.display().to_string())
+    }
+
+    /// Load for dispatch: a missing file is an empty table (silently), a
+    /// corrupt or stale-schema file warns on stderr and falls back to an
+    /// empty table — tuning must never turn a working run into a dead one.
+    pub fn load_lenient(path: &Path) -> TuningTable {
+        if !path.exists() {
+            return TuningTable::new();
+        }
+        match TuningTable::load(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!(
+                    "[padst] ignoring tuning table {} (falling back to default dispatch): {e}",
+                    path.display()
+                );
+                TuningTable::new()
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- pinnedness
+
+static BACKEND_PINNED: AtomicBool = AtomicBool::new(false);
+
+/// Record that the process backend was pinned explicitly (CLI `--backend`,
+/// `Runtime::set_backend`, a spec).  A pinned backend is never overridden
+/// by the tuning table — only the bit-preserving axes still apply.
+pub fn note_backend_pinned() {
+    BACKEND_PINNED.store(true, Ordering::Relaxed);
+}
+
+fn env_backend_pinned() -> bool {
+    static SET: OnceLock<bool> = OnceLock::new();
+    *SET.get_or_init(|| std::env::var("PADST_BACKEND").map(|v| !v.is_empty()).unwrap_or(false))
+}
+
+/// Whether the backend axis is pinned for this process (explicit flag /
+/// setter noted via [`note_backend_pinned`], or a non-empty
+/// `PADST_BACKEND` — the same env the [`Backend::default_backend`] cache
+/// reads, checked once).
+pub fn backend_pinned() -> bool {
+    BACKEND_PINNED.load(Ordering::Relaxed) || env_backend_pinned()
+}
+
+/// Where a resolved backend came from, for logs and the precedence test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendSource {
+    /// Explicit CLI `--backend`.
+    CliFlag,
+    /// A backend required by a pattern/run spec.
+    Spec,
+    /// The `PADST_BACKEND` environment variable.
+    Env,
+    /// A tuning-table entry.
+    Tuned,
+    /// The built-in default (tiled).
+    Default,
+}
+
+/// The one documented backend resolution order:
+/// `--backend` > spec > `PADST_BACKEND` > tuning table > default.
+/// Pure so the precedence is unit-testable without touching process
+/// globals; every layered resolver (CLI, benches, serve) must agree with
+/// this chain, and `Backend::default_backend` documents it.
+pub fn resolve_backend_precedence(
+    cli: Option<Backend>,
+    spec: Option<Backend>,
+    env: Option<Backend>,
+    tuned: Option<Backend>,
+) -> (Backend, BackendSource) {
+    let (b, src) = match (cli, spec, env, tuned) {
+        (Some(b), _, _, _) => (b, BackendSource::CliFlag),
+        (None, Some(b), _, _) => (b, BackendSource::Spec),
+        (None, None, Some(b), _) => (b, BackendSource::Env),
+        (None, None, None, Some(b)) => (b, BackendSource::Tuned),
+        (None, None, None, None) => (Backend::default(), BackendSource::Default),
+    };
+    (b.effective(), src)
+}
+
+// ----------------------------------------------------------- global tuner
+
+/// The process-wide dispatch consultant.  See the module docs for the
+/// locking story; the short form: no table installed = one relaxed atomic
+/// load, table installed = an uncontended shared read lock + ordered-map
+/// probe, neither allocating.
+pub struct Tuner {
+    /// Entry count of the installed table (0 = none): the hot-path
+    /// fast-out, so untuned processes never touch the lock.
+    installed: AtomicUsize,
+    off: AtomicBool,
+    table: RwLock<Option<TuningTable>>,
+}
+
+impl Tuner {
+    fn from_env() -> Tuner {
+        let off = matches!(
+            std::env::var("PADST_TUNE").ok().as_deref(),
+            Some("off") | Some("0") | Some("false")
+        );
+        let tuner = Tuner {
+            installed: AtomicUsize::new(0),
+            off: AtomicBool::new(off),
+            table: RwLock::new(None),
+        };
+        if let Ok(path) = std::env::var("PADST_TUNE_TABLE") {
+            if !path.is_empty() {
+                let t = TuningTable::load_lenient(Path::new(&path));
+                if !t.is_empty() {
+                    tuner.install(t);
+                }
+            }
+        }
+        tuner
+    }
+
+    /// Install (replacing any previous) the table consulted by every
+    /// subsequent `run_plan` / `run_plan_mt` dispatch.
+    pub fn install(&self, table: TuningTable) {
+        let n = table.len();
+        *self.table.write().unwrap_or_else(|e| e.into_inner()) = Some(table);
+        self.installed.store(n, Ordering::Release);
+    }
+
+    /// Drop the installed table (tests; `run_plan` returns to the
+    /// untuned fast path).
+    pub fn clear(&self) {
+        *self.table.write().unwrap_or_else(|e| e.into_inner()) = None;
+        self.installed.store(0, Ordering::Release);
+    }
+
+    /// Runtime switch mirroring `PADST_TUNE=off`.
+    pub fn set_enabled(&self, enabled: bool) {
+        self.off.store(!enabled, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        !self.off.load(Ordering::Relaxed)
+    }
+
+    /// Entries in the installed table (0 = none installed).
+    pub fn len(&self) -> usize {
+        self.installed.load(Ordering::Acquire)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Raw keyed lookup (no pinning policy applied) — what the tests and
+    /// `padst tune --dry-run` use to report coverage.
+    pub fn lookup(&self, key: &TuneKey) -> Option<TuneEntry> {
+        if self.installed.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let guard = self.table.read().unwrap_or_else(|e| e.into_inner());
+        guard.as_ref().and_then(|t| t.get_packed(key.pack())).copied()
+    }
+
+    /// Resolve the dispatch variant for one plan execution.  Returns the
+    /// choice plus whether it came from the table.  Fallback rules:
+    /// tuning off, no table, or no entry → exactly today's dispatch
+    /// ([`Choice::default_for`] the caller's backend).  On a hit, the
+    /// table's backend applies only when the caller's backend is unpinned
+    /// *and* equal to the process default (an explicitly threaded-through
+    /// non-default backend is as deliberate as a CLI flag); the
+    /// bit-preserving axes apply either way.
+    pub fn choice_for(
+        &self,
+        plan: &KernelPlan,
+        threads: usize,
+        backend: Backend,
+    ) -> (Choice, bool) {
+        if self.installed.load(Ordering::Acquire) == 0 || self.off.load(Ordering::Relaxed) {
+            return (Choice::default_for(backend), false);
+        }
+        let packed = TuneKey::of_plan(plan, threads).pack();
+        let entry = {
+            let guard = self.table.read().unwrap_or_else(|e| e.into_inner());
+            guard.as_ref().and_then(|t| t.get_packed(packed)).copied()
+        };
+        match entry {
+            Some(e) => {
+                let mut choice = e.choice;
+                if backend_pinned() || backend != Backend::default_backend() {
+                    choice.backend = backend;
+                }
+                (choice, true)
+            }
+            None => (Choice::default_for(backend), false),
+        }
+    }
+}
+
+/// The process-wide [`Tuner`], initialised once from `PADST_TUNE` /
+/// `PADST_TUNE_TABLE` on first consult.
+pub fn tuner() -> &'static Tuner {
+    static TUNER: OnceLock<Tuner> = OnceLock::new();
+    TUNER.get_or_init(Tuner::from_env)
+}
+
+// ------------------------------------------------------------ measurement
+
+/// Rep budget for timing one candidate.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneBudget {
+    pub min_reps: u32,
+    pub max_reps: u32,
+    /// Target wall time per candidate in nanoseconds; one calibration
+    /// call sizes the rep count to roughly fit it.
+    pub budget_ns: u64,
+}
+
+impl Default for TuneBudget {
+    fn default() -> Self {
+        TuneBudget { min_reps: 3, max_reps: 64, budget_ns: 20_000_000 }
+    }
+}
+
+/// The candidate variants for one key: every compiled backend, crossed
+/// with the batched row driver (Rows plans only) and — above one thread —
+/// a serialising thread cap (small GEMMs often lose to sharding overhead).
+pub fn candidates(kind: PlanKind, threads: usize) -> Vec<Choice> {
+    let batched_axis: &[bool] = if kind == PlanKind::Rows { &[false, true] } else { &[false] };
+    let cap_axis: &[u32] = if threads > 1 { &[0, 1] } else { &[0] };
+    let mut out = Vec::new();
+    for &backend in Backend::all() {
+        for &batched in batched_axis {
+            for &cap in cap_axis {
+                out.push(Choice { backend, batched, max_threads: cap });
+            }
+        }
+    }
+    out
+}
+
+/// Time every candidate for `plan` at `threads` and return the key plus
+/// the winning entry.  One calibration call per candidate sizes the rep
+/// count to the budget; reps are recorded into a local obs histogram and
+/// scored by p50, with [`TuneEntry::order_key`] breaking ties
+/// deterministically.  `x`/`y` are caller scratch of the plan's geometry
+/// (contents are clobbered).
+pub fn tune_plan(
+    plan: &KernelPlan,
+    x: &[f32],
+    batch: usize,
+    y: &mut [f32],
+    threads: usize,
+    budget: &TuneBudget,
+) -> (TuneKey, TuneEntry) {
+    let threads = resolve_threads(threads);
+    let key = TuneKey::of_plan(plan, threads);
+    let reg = MetricRegistry::new();
+    let mut best: Option<TuneEntry> = None;
+    for (i, choice) in candidates(key.kind, threads).into_iter().enumerate() {
+        let t0 = Instant::now();
+        super::dispatch_plan_mt_choice(plan, x, batch, y, threads, &choice);
+        let est = (t0.elapsed().as_nanos() as u64).max(1);
+        let reps =
+            (budget.budget_ns / est).clamp(budget.min_reps as u64, budget.max_reps as u64) as u32;
+        let hist = reg.histogram(&format!("tune.candidate.{i}"));
+        for _ in 0..reps {
+            let t = Instant::now();
+            super::dispatch_plan_mt_choice(plan, x, batch, y, threads, &choice);
+            hist.record_ns(t.elapsed());
+        }
+        let entry = TuneEntry { choice, best_ns: hist.snapshot().quantile(0.5), reps };
+        let better = match best {
+            Some(b) => entry.order_key() < b.order_key(),
+            None => true,
+        };
+        if better {
+            best = Some(entry);
+        }
+    }
+    (key, best.expect("Backend::all() is never empty"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_is_ceil_log2() {
+        assert_eq!(bucket(0), 0);
+        assert_eq!(bucket(1), 0);
+        assert_eq!(bucket(2), 1);
+        assert_eq!(bucket(3), 2);
+        assert_eq!(bucket(4), 2);
+        assert_eq!(bucket(5), 3);
+        assert_eq!(bucket(26), 5);
+        assert_eq!(bucket(77), 7);
+        assert_eq!(bucket(256), 8);
+        assert_eq!(bucket(3072), 12);
+    }
+
+    #[test]
+    fn key_pack_and_spec_round_trip() {
+        for kind in PlanKind::all() {
+            for simd in [false, true] {
+                let key =
+                    TuneKey { kind, rows_b: 12, cols_b: 10, panel_b: 7, threads_b: 1, simd };
+                assert_eq!(TuneKey::unpack(key.pack()), key);
+                assert_eq!(TuneKey::parse_spec(&key.spec()), Some(key));
+            }
+        }
+        assert_eq!(TuneKey::parse_spec("rows:r1:c2:p3"), None);
+        assert_eq!(TuneKey::parse_spec("nope:r1:c2:p3:t0:s0"), None);
+        assert_eq!(TuneKey::parse_spec("rows:x1:c2:p3:t0:s0"), None);
+    }
+
+    #[test]
+    fn precedence_chain_first_source_wins() {
+        let (s, t) = (Backend::Scalar, Backend::Tiled);
+        assert_eq!(
+            resolve_backend_precedence(Some(s), Some(t), Some(t), Some(t)),
+            (s, BackendSource::CliFlag)
+        );
+        assert_eq!(
+            resolve_backend_precedence(None, Some(s), Some(t), Some(t)),
+            (s, BackendSource::Spec)
+        );
+        assert_eq!(
+            resolve_backend_precedence(None, None, Some(s), Some(t)),
+            (s, BackendSource::Env)
+        );
+        assert_eq!(
+            resolve_backend_precedence(None, None, None, Some(s)),
+            (s, BackendSource::Tuned)
+        );
+        assert_eq!(
+            resolve_backend_precedence(None, None, None, None),
+            (Backend::Tiled, BackendSource::Default)
+        );
+        // The chain applies `effective()`: a Simd pick degrades in
+        // builds without nightly-simd instead of dispatching a missing
+        // kernel.
+        let (eff, src) = resolve_backend_precedence(Some(Backend::Simd), None, None, None);
+        assert_eq!(eff, Backend::Simd.effective());
+        assert_eq!(src, BackendSource::CliFlag);
+    }
+
+    fn entry(backend: Backend, ns: u64) -> TuneEntry {
+        let choice = Choice { backend, batched: false, max_threads: 0 };
+        TuneEntry { choice, best_ns: ns, reps: 3 }
+    }
+
+    #[test]
+    fn table_insert_keeps_the_better_entry() {
+        let key = TuneKey::parse_spec("rows:r8:c8:p5:t0:s0").unwrap();
+        let mut t = TuningTable::new();
+        t.insert(key, entry(Backend::Tiled, 200));
+        t.insert(key, entry(Backend::Scalar, 100));
+        assert_eq!(t.get(&key).unwrap().best_ns, 100);
+        // A slower late insert never regresses the stored winner.
+        t.insert(key, entry(Backend::Tiled, 300));
+        assert_eq!(t.get(&key).unwrap().best_ns, 100);
+        // Equal time: lower backend rank wins deterministically.
+        t.insert(key, entry(Backend::Scalar, 100));
+        assert_eq!(t.get(&key).unwrap().choice.backend, Backend::Scalar);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let k1 = TuneKey::parse_spec("rows:r8:c8:p5:t0:s0").unwrap();
+        let k2 = TuneKey::parse_spec("csr:r10:c8:p5:t1:s0").unwrap();
+        let k3 = TuneKey::parse_spec("dense:r12:c10:p0:t1:s0").unwrap();
+        let mut a = TuningTable::new();
+        a.insert(k1, entry(Backend::Tiled, 120));
+        a.insert(k2, entry(Backend::Scalar, 900));
+        let mut b = TuningTable::new();
+        b.insert(k1, entry(Backend::Scalar, 80));
+        b.insert(k3, entry(Backend::Tiled, 50));
+        let mut c = TuningTable::new();
+        c.insert(k2, entry(Backend::Tiled, 700));
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge must be associative");
+
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab, ba, "merge must be commutative");
+        assert_eq!(ab.get(&k1).unwrap().best_ns, 80);
+    }
+
+    #[test]
+    fn table_json_round_trips() {
+        let mut t = TuningTable::new();
+        t.insert(
+            TuneKey::parse_spec("rows:r8:c8:p5:t1:s0").unwrap(),
+            TuneEntry {
+                choice: Choice { backend: Backend::Tiled, batched: true, max_threads: 1 },
+                best_ns: 12345,
+                reps: 20,
+            },
+        );
+        let k2 = TuneKey::parse_spec("blocks:r10:c8:p4:t0:s0").unwrap();
+        t.insert(k2, entry(Backend::Scalar, 7));
+        let text = t.to_json().to_string_pretty();
+        let re = TuningTable::parse(&text).unwrap();
+        assert_eq!(t, re);
+    }
+
+    #[test]
+    fn parse_rejects_stale_schema_and_garbage() {
+        assert!(TuningTable::parse("{\"tune_schema\":99,\"entries\":{}}").is_err());
+        assert!(TuningTable::parse("{\"entries\":{}}").is_err());
+        assert!(TuningTable::parse("not json").is_err());
+        let bad_key = "{\"tune_schema\":1,\"entries\":{\"huh\":{\"backend\":\"tiled\"}}}";
+        assert!(TuningTable::parse(bad_key).is_err());
+        let bad_backend =
+            "{\"tune_schema\":1,\"entries\":{\"rows:r1:c1:p1:t0:s0\":{\"backend\":\"gpu\"}}}";
+        assert!(TuningTable::parse(bad_backend).is_err());
+    }
+
+    #[test]
+    fn candidate_axes_match_the_plan_kind() {
+        let n_backends = Backend::all().len();
+        assert_eq!(candidates(PlanKind::Rows, 1).len(), n_backends * 2);
+        assert_eq!(candidates(PlanKind::Rows, 2).len(), n_backends * 4);
+        assert_eq!(candidates(PlanKind::Csr, 1).len(), n_backends);
+        assert_eq!(candidates(PlanKind::Dense, 2).len(), n_backends * 2);
+        // Every candidate axis except the backend is bit-preserving, and
+        // the serial axis never caps threads.
+        assert!(candidates(PlanKind::Blocks, 1).iter().all(|c| c.max_threads == 0));
+    }
+}

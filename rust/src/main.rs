@@ -24,6 +24,11 @@
 //!   bench-compare  — diff two BENCH_*.json reports; exits non-zero on a
 //!                    p50 regression beyond the threshold (the CI perf gate);
 //!                    p90 movements print as warnings but never gate
+//!   tune           — offline kernel autotune sweep: times the candidate
+//!                    dispatch variants per (plan kind, geometry, threads)
+//!                    key and persists the winners in a tuning table that
+//!                    `run_plan`/`run_plan_mt` consult (`--dry-run` prints
+//!                    the key grid without timing anything)
 //!
 //! Benches (Fig. 3, Tbl. 5) live under `cargo bench`; analysis examples
 //! (Fig. 4-6) under `cargo run --example`.
@@ -36,12 +41,15 @@ use anyhow::{anyhow, bail, Result};
 use padst::coordinator::{sweep, GrowMode, RunConfig, Trainer};
 use padst::harness::{baseline, shard, telemetry::BenchReport};
 use padst::kernels::micro::Backend;
+use padst::kernels::resolve_threads;
+use padst::kernels::tune::{self, TuneBudget, TuneKey, TuningTable};
 use padst::nlr;
 use padst::obs;
 use padst::perm::model::{perm_registry, resolve_perm};
 use padst::runtime::Runtime;
 use padst::serve::{NodeOpts, SessionCtx};
-use padst::sparsity::pattern::{registry, resolve_pattern, Structure};
+use padst::sparsity::pattern::{registry, resolve_pattern, KernelPlan, Structure};
+use padst::util::Rng;
 
 /// Minimal flag parser: `--key value` pairs after the subcommand.
 struct Args {
@@ -108,6 +116,11 @@ fn backend_flag(args: &Args) -> Result<Backend> {
                     eff.name()
                 );
             }
+            // An explicit flag pins the backend: the tuning table may
+            // still pick bit-preserving variants, never another backend
+            // (resolution order: --backend > spec > PADST_BACKEND >
+            // tuning table > default).
+            tune::note_backend_pinned();
             Ok(eff)
         }
         None => Ok(Backend::from_env()),
@@ -118,7 +131,7 @@ fn usage() -> ! {
     eprintln!(
         "padst — Permutation-Augmented Dynamic Structured Sparse Training
 
-USAGE: padst <train|sweep|serve|patterns|perms|nlr|list> [--flag value ...]
+USAGE: padst <train|sweep|serve|tune|patterns|perms|nlr|list> [--flag value ...]
        padst watch <journal.jsonl> [--once] [--interval SECS] [--stale SECS]
        padst bench-compare <old.json> <new.json> [--threshold PCT]
        padst journal-merge <a.jsonl> <b.jsonl> ... -o <out.jsonl>
@@ -180,7 +193,29 @@ serve:
   --max-batch 32          coalescing cap in rows (default 4 panels x 8 lanes)
   --socket PATH           accept connections on a Unix socket instead of
                           stdin (sequential; unix only)
+  --tune-table PATH       install a tuning table at startup (else the
+                          PADST_TUNE_TABLE env); each site's dispatch
+                          variant is resolved once at plan-compile time
   --threads N --backend B as in train
+
+tune:
+  offline kernel autotune sweep (README §Autotuning): compiles one plan
+  per (--specs x --geoms) cell, times the candidate dispatch variants
+  (backend x batched row driver x mt thread cap) per thread level, and
+  merges the winners into a schema-versioned JSON table consulted by
+  run_plan/run_plan_mt (PADST_TUNE_TABLE / serve --tune-table;
+  PADST_TUNE=off disables consultation)
+  --specs diag,block,unstructured,dense    pattern specs to compile
+  --geoms 256x256,1024x256,3072x768        RxC geometry grid
+  --batch 64 --density 0.1                 plan compile inputs
+  --threads N             tune at levels [1, N] (0 = auto; 1 = serial only)
+  --budget 10             total timing budget in seconds, split evenly
+                          across candidates (clamped 1-200 ms each)
+  --out PATH              table to merge winners into (alias --tune-table;
+                          default PADST_TUNE_TABLE, else tune_table.json)
+  --dry-run               print the key grid (spec, geometry, thread
+                          level, tuning key, candidate count, whether the
+                          table already covers it) and exit
 
 journal-merge:
   padst journal-merge shard0.jsonl shard1.jsonl ... -o merged.jsonl
@@ -515,6 +550,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     obs::set_enabled(true);
     let threads = args.get_usize("threads", 0)?; // 0 = auto
     let backend = backend_flag(args)?;
+    // Install the tuning table (if any) before plans compile: each site's
+    // dispatch variant is resolved once inside SessionCtx::rebuild, so
+    // the table must be in place first.
+    if let Some(path) = args.flags.get("tune-table") {
+        let table = TuningTable::load_lenient(Path::new(path));
+        eprintln!("[padst serve] tuning table {path}: {} entries", table.len());
+        tune::tuner().install(table);
+    }
     let mut ctx = if let Some(spec) = args.flags.get("synthetic") {
         let rows = args.get_usize("rows", 8)?;
         let cols = args.get_usize("cols", 8)?;
@@ -538,13 +581,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     for s in ctx.sites() {
         eprintln!(
-            "[padst serve]   {:<20} {}x{} nnz={} driver={} permuted={}",
+            "[padst serve]   {:<20} {}x{} nnz={} driver={} permuted={} tuned={}",
             s.name,
             s.rows,
             s.cols,
             s.nnz,
             s.plan.driver(),
-            s.permuted
+            s.permuted,
+            s.tuned
         );
     }
     let opts = NodeOpts { max_batch: args.get_usize("max-batch", NodeOpts::default().max_batch)? };
@@ -566,6 +610,146 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.requests, stats.responses, stats.errors, stats.batches, stats.widest_batch
     );
     eprintln!("[padst serve] {}", padst::serve::latency_summary(&ctx));
+    Ok(())
+}
+
+/// Offline kernel autotune sweep: compile one plan per (spec, geometry),
+/// time the candidate dispatch variants at each thread level, and merge
+/// the winners into the persistent tuning table.  `--dry-run` prints the
+/// key grid without timing anything (the CI `tune-smoke` golden).
+fn cmd_tune(args: &Args) -> Result<()> {
+    let specs_csv = args.get("specs", "diag,block,unstructured,dense");
+    let geoms_csv = args.get("geoms", "256x256,1024x256,3072x768");
+    let batch = args.get_usize("batch", 64)?;
+    let density = args.get_f64("density", 0.1)?;
+    let threads = args.get_usize("threads", 0)?; // 0 = auto
+    let budget_secs = args.get_f64("budget", 10.0)?;
+    let out = args
+        .flags
+        .get("out")
+        .or_else(|| args.flags.get("tune-table"))
+        .cloned()
+        .or_else(|| std::env::var("PADST_TUNE_TABLE").ok().filter(|p| !p.is_empty()))
+        .unwrap_or_else(|| "tune_table.json".to_string());
+    let out = PathBuf::from(out);
+
+    let specs: Vec<&str> = specs_csv.split(',').filter(|s| !s.is_empty()).collect();
+    let mut geoms: Vec<(usize, usize)> = Vec::new();
+    for g in geoms_csv.split(',').filter(|s| !s.is_empty()) {
+        let (r, c) = g
+            .split_once('x')
+            .ok_or_else(|| anyhow!("bad --geoms entry {g:?} (expected RxC, e.g. 3072x768)"))?;
+        let rows: usize = r.parse().map_err(|e| anyhow!("bad rows in {g:?}: {e}"))?;
+        let cols: usize = c.parse().map_err(|e| anyhow!("bad cols in {g:?}: {e}"))?;
+        geoms.push((rows, cols));
+    }
+    // Thread levels: the serial key always, plus the parallel key when the
+    // budget allows more than one worker (run_plan keys at t=1,
+    // run_plan_mt at the resolved count).
+    let top = resolve_threads(threads);
+    let mut levels = vec![1usize];
+    if top > 1 {
+        levels.push(top);
+    }
+    let levels_csv = levels.iter().map(ToString::to_string).collect::<Vec<_>>().join(",");
+
+    // Compile the key grid once; the dry run prints it, the real run
+    // tunes it.  Deterministic seeds keep the grid (and its golden)
+    // byte-stable.
+    struct Cell {
+        spec: String,
+        rows: usize,
+        cols: usize,
+        threads: usize,
+        plan: KernelPlan,
+        key: TuneKey,
+        n_cands: usize,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    for spec in &specs {
+        let pattern = resolve_pattern(spec)?;
+        for &(rows, cols) in &geoms {
+            let mut rng = Rng::new(1);
+            let mask = pattern.init_mask(rows, cols, density, &mut rng)?;
+            let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+            let plan = pattern.compress(&w, &mask, None);
+            for &t in &levels {
+                let key = TuneKey::of_plan(&plan, t);
+                let n_cands = tune::candidates(key.kind, t).len();
+                cells.push(Cell {
+                    spec: spec.to_string(),
+                    rows,
+                    cols,
+                    threads: t,
+                    plan: plan.clone(),
+                    key,
+                    n_cands,
+                });
+            }
+        }
+    }
+
+    let existing = TuningTable::load_lenient(&out);
+    if args.flags.contains_key("dry-run") {
+        println!(
+            "# padst tune dry-run: specs={specs_csv} geoms={geoms_csv} batch={batch} \
+             density={density} threads={levels_csv} simd={}",
+            u8::from(Backend::simd_compiled())
+        );
+        let mut tuned_n = 0usize;
+        for cell in &cells {
+            let tuned = existing.get(&cell.key).is_some();
+            tuned_n += usize::from(tuned);
+            println!(
+                "{} {}x{} t={} {} candidates={} tuned={}",
+                cell.spec,
+                cell.rows,
+                cell.cols,
+                cell.threads,
+                cell.key.spec(),
+                cell.n_cands,
+                if tuned { "yes" } else { "no" }
+            );
+        }
+        println!("# {} keys, {tuned_n} already tuned, table={}", cells.len(), out.display());
+        return Ok(());
+    }
+
+    // Split the wall budget evenly across every candidate everywhere, so
+    // --budget bounds the whole sweep regardless of grid size.
+    let total_cands: usize = cells.iter().map(|c| c.n_cands).sum();
+    let per_cand_ns =
+        ((budget_secs * 1e9) as u64 / total_cands.max(1) as u64).clamp(1_000_000, 200_000_000);
+    let budget = TuneBudget { budget_ns: per_cand_ns, ..TuneBudget::default() };
+    println!(
+        "# padst tune: {} keys, {total_cands} candidates (~{} ms each), table={}",
+        cells.len(),
+        per_cand_ns / 1_000_000,
+        out.display()
+    );
+    let mut table = existing;
+    let mut rng = Rng::new(2);
+    for cell in &cells {
+        let x: Vec<f32> = (0..batch * cell.cols).map(|_| rng.normal()).collect();
+        let mut y = vec![0.0f32; batch * cell.rows];
+        let (key, entry) = tune::tune_plan(&cell.plan, &x, batch, &mut y, cell.threads, &budget);
+        println!(
+            "{} {}x{} t={} {} -> backend={} batched={} cap={} p50={}ns reps={}",
+            cell.spec,
+            cell.rows,
+            cell.cols,
+            cell.threads,
+            key.spec(),
+            entry.choice.backend.name(),
+            u8::from(entry.choice.batched),
+            entry.choice.max_threads,
+            entry.best_ns,
+            entry.reps
+        );
+        table.insert(key, entry);
+    }
+    table.save(&out)?;
+    eprintln!("[padst] wrote tuning table {} ({} entries)", out.display(), table.len());
     Ok(())
 }
 
@@ -604,6 +788,7 @@ fn main() -> Result<()> {
         "nlr" => cmd_nlr(&args),
         "list" => cmd_list(&args),
         "serve" => cmd_serve(&args),
+        "tune" => cmd_tune(&args),
         _ => usage(),
     }
 }

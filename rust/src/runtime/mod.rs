@@ -92,7 +92,11 @@ impl Runtime {
 
     /// Re-select the microkernel backend advertised by this runtime (a
     /// Simd request degrades to Tiled in builds without `nightly-simd`).
+    /// An explicit selection pins the backend process-wide: the kernel
+    /// autotuner ([`crate::kernels::tune`]) may still pick bit-preserving
+    /// dispatch variants, but never overrides a pinned backend.
     pub fn set_backend(&mut self, backend: Backend) {
+        crate::kernels::tune::note_backend_pinned();
         self.backend = backend.effective();
     }
 

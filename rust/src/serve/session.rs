@@ -35,7 +35,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::{checkpoint, TrainState};
 use crate::kernels::micro::Backend;
-use crate::kernels::run_plan_mt;
+use crate::kernels::{run_plan_mt, run_plan_mt_tuned, tune};
 use crate::obs::{self, Histogram, MetricRegistry, ObsSnapshot};
 use crate::perm::model::{resolve_perm, sites_from_vals, PermHandle, PermState};
 use crate::perm::SinkhornScratch;
@@ -56,6 +56,13 @@ pub struct SiteRuntime {
     /// Whether a hard (non-identity-decoded) permutation was folded into
     /// the plan's index stream at compile time.
     pub permuted: bool,
+    /// Dispatch variant resolved from the tuning table at (re)build time —
+    /// the per-site cache that keeps the warm request path free of table
+    /// lookups (see [`SessionCtx::run_coalesced`]).
+    pub choice: tune::Choice,
+    /// Whether `choice` came from the tuning table (`false` = the plain
+    /// default dispatch; reported in the per-site startup log).
+    pub tuned: bool,
     pub plan: KernelPlan,
 }
 
@@ -220,12 +227,18 @@ impl SessionCtx {
             let perm_i32: Option<Vec<i32>> =
                 index_map.map(|m| m.into_iter().map(|p| p as i32).collect());
             let plan = self.pattern.compress(w.f32s(), &mask, perm_i32.as_deref());
+            // One tuning-table consult per site per (re)build: the warm
+            // request path dispatches the cached choice and never probes
+            // the table again.
+            let (choice, tuned) = tune::tuner().choice_for(&plan, self.threads, self.backend);
             sites.push(SiteRuntime {
                 name: name.clone(),
                 rows,
                 cols,
                 nnz: mask.nnz(),
                 permuted,
+                choice,
+                tuned,
                 plan,
             });
         }
@@ -361,14 +374,30 @@ impl SessionCtx {
             self.scratch_x[off..off + batch * cols].copy_from_slice(x);
             off += batch * cols;
         }
-        run_plan_mt(
-            &self.sites[si].plan,
-            &self.scratch_x[..total * cols],
-            total,
-            &mut self.scratch_y[..total * rows],
-            self.threads,
-            self.backend,
-        );
+        // Tuned sites dispatch their (re)build-cached choice with no
+        // table lookup; untuned sites keep the exact pre-tuner call.
+        // Both are allocation-free — the fingerprint contract holds
+        // either way.
+        let (tuned, choice) = (self.sites[si].tuned, self.sites[si].choice);
+        if tuned {
+            run_plan_mt_tuned(
+                &self.sites[si].plan,
+                &self.scratch_x[..total * cols],
+                total,
+                &mut self.scratch_y[..total * rows],
+                self.threads,
+                &choice,
+            );
+        } else {
+            run_plan_mt(
+                &self.sites[si].plan,
+                &self.scratch_x[..total * cols],
+                total,
+                &mut self.scratch_y[..total * rows],
+                self.threads,
+                self.backend,
+            );
+        }
         Ok(&self.scratch_y[..total * rows])
     }
 

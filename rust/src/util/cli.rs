@@ -112,6 +112,12 @@ impl BenchOpts {
         let json_path = arg_value_in(&args, "--json")
             .map(PathBuf::from)
             .unwrap_or_else(|| bench_json_path(bench));
+        // An explicit --backend pins the backend for the whole bench run:
+        // the tuning table may still select bit-preserving variants but
+        // never another backend (see `kernels::tune`).
+        if arg_value_in(&args, "--backend").is_some() {
+            crate::kernels::tune::note_backend_pinned();
+        }
         BenchOpts {
             bench: bench.to_string(),
             threads: resolve_threads(thread_knob_in(&args)),

@@ -1,0 +1,351 @@
+//! Integration tests for the kernel autotuner (`padst::kernels::tune`):
+//! tuning-table persistence and merge algebra, tuned-dispatch bit-identity
+//! against directly invoking the selected variant, the corrupt/stale-table
+//! fallback, and the `PADST_TUNE=off` escape hatch.
+//!
+//! Tests that install into the process-wide [`tuner()`] serialise on a
+//! local mutex and clear the table (and re-enable tuning) before they
+//! return — integration tests in one file share a process, and cargo runs
+//! them on threads.  Assertions about the table *backend* winning are
+//! additionally gated on `PADST_BACKEND` being unset, so the suite still
+//! passes under CI's `PADST_BACKEND=scalar` re-run (where the backend is
+//! pinned by design).
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use padst::kernels::micro::Backend;
+use padst::kernels::tune::{
+    self, candidates, tuner, Choice, TuneBudget, TuneEntry, TuneKey, TuningTable,
+};
+use padst::kernels::{run_plan, run_plan_mt, run_plan_mt_tuned, run_plan_tuned};
+use padst::sparsity::pattern::{resolve_pattern, KernelPlan};
+use padst::util::Rng;
+
+/// Serialises every test that touches the process-wide tuner.
+static TUNER_LOCK: Mutex<()> = Mutex::new(());
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("padst_tune_{tag}_{}", std::process::id()))
+}
+
+/// One small plan per kind (dims divisible by the block size 16).
+fn test_plans() -> Vec<(&'static str, KernelPlan)> {
+    let (rows, cols) = (48usize, 64usize);
+    let mut rng = Rng::new(0x7E5);
+    let w: Vec<f32> = (0..rows * cols).map(|_| rng.normal()).collect();
+    ["diag", "block", "unstructured", "dense"]
+        .iter()
+        .map(|spec| {
+            let pattern = resolve_pattern(spec).unwrap();
+            let mask = pattern.init_mask(rows, cols, 0.2, &mut rng).unwrap();
+            (*spec, pattern.compress(&w, &mask, None))
+        })
+        .collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (p, (va, vb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            va.to_bits(),
+            vb.to_bits(),
+            "{what}: element {p} differs ({va} vs {vb})"
+        );
+    }
+}
+
+fn entry(choice: Choice, ns: u64) -> TuneEntry {
+    TuneEntry { choice, best_ns: ns, reps: 3 }
+}
+
+// ------------------------------------------------------------ persistence
+
+#[test]
+fn table_round_trips_through_disk() {
+    let plans = test_plans();
+    let mut table = TuningTable::new();
+    for (i, (_, plan)) in plans.iter().enumerate() {
+        for &threads in &[1usize, 2] {
+            let key = TuneKey::of_plan(plan, threads);
+            let choice = Choice { backend: Backend::Scalar, batched: false, max_threads: 0 };
+            table.insert(key, entry(choice, 100 + i as u64));
+        }
+    }
+    assert!(!table.is_empty());
+
+    let dir = tmp("roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("table.json");
+    table.save(&path).unwrap();
+    let loaded = TuningTable::load(&path).unwrap();
+    assert_eq!(table, loaded, "save -> load must be the identity");
+    // load_lenient on the same file agrees; on a missing file it is empty.
+    assert_eq!(TuningTable::load_lenient(&path), table);
+    assert!(TuningTable::load_lenient(&dir.join("absent.json")).is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn merge_is_associative_and_keeps_better_entries() {
+    let plans = test_plans();
+    let keys: Vec<TuneKey> = plans.iter().map(|(_, plan)| TuneKey::of_plan(plan, 1)).collect();
+    let scalar = Choice { backend: Backend::Scalar, batched: false, max_threads: 0 };
+    let tiled = Choice { backend: Backend::Tiled, batched: false, max_threads: 0 };
+
+    let mut a = TuningTable::new();
+    a.insert(keys[0], entry(scalar, 300));
+    a.insert(keys[1], entry(scalar, 100));
+    let mut b = TuningTable::new();
+    b.insert(keys[0], entry(tiled, 200)); // better than a's 300
+    b.insert(keys[2], entry(tiled, 50));
+    let mut c = TuningTable::new();
+    c.insert(keys[1], entry(tiled, 400)); // worse than a's 100
+    c.insert(keys[3], entry(scalar, 70));
+
+    let mut ab_c = a.clone();
+    ab_c.merge(&b);
+    ab_c.merge(&c);
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut a_bc = a.clone();
+    a_bc.merge(&bc);
+    assert_eq!(ab_c, a_bc, "merge must be associative");
+
+    assert_eq!(ab_c.get(&keys[0]).unwrap().best_ns, 200, "better entry wins");
+    assert_eq!(ab_c.get(&keys[1]).unwrap().best_ns, 100, "worse entry loses");
+    assert_eq!(ab_c.len(), 4);
+}
+
+#[test]
+fn corrupt_and_stale_tables_fall_back() {
+    let dir = tmp("corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let garbage = dir.join("garbage.json");
+    std::fs::write(&garbage, "{ not json").unwrap();
+    assert!(TuningTable::load(&garbage).is_err());
+    assert!(TuningTable::load_lenient(&garbage).is_empty());
+
+    let stale = dir.join("stale.json");
+    std::fs::write(&stale, r#"{"tune_schema":99,"entries":{}}"#).unwrap();
+    let err = TuningTable::load(&stale).unwrap_err().to_string();
+    assert!(err.contains("tune_schema"), "stale-schema error names the schema: {err}");
+    assert!(TuningTable::load_lenient(&stale).is_empty());
+
+    let bad_key = dir.join("bad_key.json");
+    std::fs::write(&bad_key, r#"{"tune_schema":1,"entries":{"huh":{}}}"#).unwrap();
+    assert!(TuningTable::load(&bad_key).is_err());
+    assert!(TuningTable::load_lenient(&bad_key).is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// -------------------------------------------------------- tuned dispatch
+
+/// The acceptance contract: with a table installed, `run_plan` /
+/// `run_plan_mt` output is bit-identical to directly invoking the variant
+/// the tuner resolved — for every test-grid key and every candidate
+/// choice.  Candidates whose backend matches the caller's must also
+/// bit-reproduce the untuned dispatch (the batched/thread-cap axes are
+/// bit-preserving by construction).
+#[test]
+fn tuned_dispatch_is_bit_identical_to_direct_choice() {
+    let _g = TUNER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let plans = test_plans();
+    let (rows, batch, cols) = (48usize, 5usize, 64usize);
+    let mut rng = Rng::new(0xD15);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let backend = Backend::default_backend();
+
+    for (spec, plan) in &plans {
+        for threads in [1usize, 2] {
+            let key = TuneKey::of_plan(plan, threads);
+            // Untuned reference for this (plan, threads).
+            tuner().clear();
+            let mut y_untuned = vec![f32::NAN; batch * rows];
+            run_plan_mt(plan, &x, batch, &mut y_untuned, threads, backend);
+
+            for cand in candidates(key.kind, threads) {
+                let mut table = TuningTable::new();
+                table.insert(key, entry(cand, 1));
+                tuner().install(table);
+
+                let (choice, hit) = tuner().choice_for(plan, threads, backend);
+                assert!(hit, "{spec} t={threads}: installed key must hit");
+
+                let mut y_tuned = vec![f32::NAN; batch * rows];
+                run_plan_mt(plan, &x, batch, &mut y_tuned, threads, backend);
+                let mut y_direct = vec![f32::NAN; batch * rows];
+                run_plan_mt_tuned(plan, &x, batch, &mut y_direct, threads, &choice);
+                assert_bits_eq(
+                    &y_tuned,
+                    &y_direct,
+                    &format!("{spec} t={threads} cand={cand:?}: tuned vs direct"),
+                );
+                if choice.backend == backend {
+                    assert_bits_eq(
+                        &y_tuned,
+                        &y_untuned,
+                        &format!("{spec} t={threads} cand={cand:?}: tuned vs untuned"),
+                    );
+                }
+            }
+        }
+        // Serial entry point keys the table at threads=1.
+        let key = TuneKey::of_plan(plan, 1);
+        let cand = Choice { backend, batched: key.kind == tune::PlanKind::Rows, max_threads: 0 };
+        let mut table = TuningTable::new();
+        table.insert(key, entry(cand, 1));
+        tuner().install(table);
+        let (choice, hit) = tuner().choice_for(plan, 1, backend);
+        assert!(hit);
+        let mut y_tuned = vec![f32::NAN; batch * rows];
+        run_plan(plan, &x, batch, &mut y_tuned, backend);
+        let mut y_direct = vec![f32::NAN; batch * rows];
+        run_plan_tuned(plan, &x, batch, &mut y_direct, &choice);
+        assert_bits_eq(&y_tuned, &y_direct, &format!("{spec} serial: tuned vs direct"));
+    }
+    tuner().clear();
+}
+
+/// Precedence: an unpinned caller on the process default backend takes the
+/// table's backend; an explicitly threaded-through non-default backend
+/// keeps its own.  Skipped when `PADST_BACKEND` pins the backend (CI's
+/// scalar re-run) — the pinning path itself is covered by unit tests in
+/// `kernels::tune`.
+#[test]
+fn table_backend_wins_only_when_unpinned() {
+    let _g = TUNER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if std::env::var("PADST_BACKEND").is_ok() || tune::backend_pinned() {
+        eprintln!("skipping: backend is pinned in this process");
+        return;
+    }
+    let plans = test_plans();
+    let plan = &plans[0].1;
+    let key = TuneKey::of_plan(plan, 1);
+    let other = match Backend::default_backend() {
+        Backend::Scalar => Backend::Tiled,
+        _ => Backend::Scalar,
+    };
+    let mut table = TuningTable::new();
+    table.insert(key, entry(Choice { backend: other, batched: false, max_threads: 0 }, 1));
+    tuner().install(table);
+
+    // Unpinned caller on the default backend: the table's backend applies.
+    let (choice, hit) = tuner().choice_for(plan, 1, Backend::default_backend());
+    assert!(hit);
+    assert_eq!(choice.backend, other, "table backend applies when unpinned");
+
+    // Caller explicitly on a non-default backend: the caller wins, only
+    // the bit-preserving axes come from the table.
+    let (choice, hit) = tuner().choice_for(plan, 1, other);
+    assert!(hit);
+    assert_eq!(choice.backend, other, "explicit caller backend is kept");
+    tuner().clear();
+}
+
+/// Disabling tuning (`PADST_TUNE=off` / `set_enabled(false)`) must
+/// bit-reproduce the untuned dispatch even with a table installed.
+#[test]
+fn tune_off_bit_reproduces_untuned() {
+    let _g = TUNER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let plans = test_plans();
+    let (rows, batch, cols) = (48usize, 5usize, 64usize);
+    let mut rng = Rng::new(0x0FF);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let backend = Backend::default_backend();
+
+    tuner().clear();
+    tuner().set_enabled(true);
+    let mut y_untuned = vec![f32::NAN; batch * rows];
+    run_plan_mt(&plans[0].1, &x, batch, &mut y_untuned, 2, backend);
+
+    let key = TuneKey::of_plan(&plans[0].1, 2);
+    let mut table = TuningTable::new();
+    table.insert(key, entry(Choice { backend, batched: true, max_threads: 1 }, 1));
+    tuner().install(table);
+    tuner().set_enabled(false);
+    assert!(!tuner().enabled());
+    let (choice, hit) = tuner().choice_for(&plans[0].1, 2, backend);
+    assert!(!hit, "no table hits while tuning is off");
+    assert_eq!(choice, Choice::default_for(backend));
+
+    let mut y_off = vec![f32::NAN; batch * rows];
+    run_plan_mt(&plans[0].1, &x, batch, &mut y_off, 2, backend);
+    assert_bits_eq(&y_untuned, &y_off, "tune off vs untuned");
+
+    tuner().set_enabled(true);
+    tuner().clear();
+}
+
+// ----------------------------------------------------------- measurement
+
+/// End-to-end `tune_plan`: the winner is one of the advertised candidates,
+/// its key matches the plan, and dispatching it is deterministic.
+#[test]
+fn tune_plan_winner_is_a_candidate_and_dispatches_deterministically() {
+    let plans = test_plans();
+    let (rows, batch, cols) = (48usize, 5usize, 64usize);
+    let mut rng = Rng::new(0x7E0);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0f32; batch * rows];
+    let budget = TuneBudget { min_reps: 1, max_reps: 2, budget_ns: 1 };
+
+    for (spec, plan) in &plans {
+        let (key, won) = tune::tune_plan(plan, &x, batch, &mut y, 1, &budget);
+        assert_eq!(key, TuneKey::of_plan(plan, 1), "{spec}: key matches the plan");
+        assert!(
+            candidates(key.kind, 1).contains(&won.choice),
+            "{spec}: winner {:?} must be an advertised candidate",
+            won.choice
+        );
+        assert!(won.reps >= 1);
+        let mut y1 = vec![f32::NAN; batch * rows];
+        run_plan_mt_tuned(plan, &x, batch, &mut y1, 1, &won.choice);
+        let mut y2 = vec![f32::NAN; batch * rows];
+        run_plan_mt_tuned(plan, &x, batch, &mut y2, 1, &won.choice);
+        assert_bits_eq(&y1, &y2, &format!("{spec}: winner dispatch is deterministic"));
+    }
+}
+
+/// Cross-backend numeric tolerance is a property of the microkernels, not
+/// the tuner: outputs under scalar and tiled dispatch stay elementwise
+/// close whether or not a table re-routed the call.
+#[test]
+fn cross_backend_tolerance_unchanged_by_tuning() {
+    let _g = TUNER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    tuner().clear();
+    let plans = test_plans();
+    let (rows, batch, cols) = (48usize, 5usize, 64usize);
+    let mut rng = Rng::new(0x70E);
+    let x: Vec<f32> = (0..batch * cols).map(|_| rng.normal()).collect();
+
+    for (spec, plan) in &plans {
+        let mut y_scalar = vec![f32::NAN; batch * rows];
+        run_plan_mt(plan, &x, batch, &mut y_scalar, 2, Backend::Scalar);
+
+        // Re-route through the table: same key, tiled backend, batched on
+        // Rows plans — the dispatch path the tuner would pick.
+        let key = TuneKey::of_plan(plan, 2);
+        let cand = Choice {
+            backend: Backend::Tiled,
+            batched: key.kind == tune::PlanKind::Rows,
+            max_threads: 0,
+        };
+        let mut table = TuningTable::new();
+        table.insert(key, entry(cand, 1));
+        tuner().install(table);
+        let (choice, _) = tuner().choice_for(plan, 2, Backend::Tiled);
+        let mut y_tuned = vec![f32::NAN; batch * rows];
+        run_plan_mt_tuned(plan, &x, batch, &mut y_tuned, 2, &choice);
+        tuner().clear();
+
+        for (p, (a, b)) in y_scalar.iter().zip(&y_tuned).enumerate() {
+            let scale = a.abs().max(b.abs()).max(1.0);
+            assert!(
+                (a - b).abs() <= 1e-4 * scale,
+                "{spec}: element {p} drifted across backends ({a} vs {b})"
+            );
+        }
+    }
+}
