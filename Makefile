@@ -50,6 +50,7 @@ fmt:
 
 lint:
 	cargo clippy -- -D warnings
+	cargo run --release -- lint
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -25,8 +25,9 @@ use padst::coordinator::sweep::{
     cross_perms, method_by_name, methods, print_table, resolve_method, run_sweep_auto, write_csv,
     Method, SweepShardOpts,
 };
+use padst::harness::bench::backend_knob_in;
 use padst::harness::shard::parse_shard;
-use padst::util::cli::{arg_value_in, backend_knob_in, has_flag_in};
+use padst::util::cli::{arg_value_in, has_flag_in};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();

@@ -22,7 +22,7 @@ use padst::perm::model::resolve_perm;
 use padst::runtime::Runtime;
 use padst::sparsity::pattern::resolve_pattern;
 use padst::tensor::Tensor;
-use padst::util::cli::BenchOpts;
+use padst::harness::bench::BenchOpts;
 use padst::util::stats::{bench, fmt_time, Summary};
 
 fn main() -> anyhow::Result<()> {

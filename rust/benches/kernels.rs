@@ -33,7 +33,7 @@ use padst::kernels::{
 };
 use padst::sparsity::compress::{compress_blocks, compress_rows};
 use padst::sparsity::pattern::{resolve_pattern, KernelPlan};
-use padst::util::cli::BenchOpts;
+use padst::harness::bench::BenchOpts;
 use padst::util::stats::{bench, fmt_time, Summary};
 use padst::util::Rng;
 

@@ -11,7 +11,7 @@ use padst::nlr::{
     table1_rows_mt, Setting,
 };
 use padst::sparsity::pattern::resolve_pattern;
-use padst::util::cli::BenchOpts;
+use padst::harness::bench::BenchOpts;
 use padst::util::stats::{bench, fmt_time};
 
 fn main() -> anyhow::Result<()> {

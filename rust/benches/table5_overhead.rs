@@ -23,7 +23,7 @@ use padst::models::memory_footprint;
 use padst::perm::{self, model::resolve_perm, SinkhornScratch};
 use padst::runtime::manifest::Manifest;
 use padst::sparsity::pattern::resolve_pattern;
-use padst::util::cli::BenchOpts;
+use padst::harness::bench::BenchOpts;
 use padst::util::stats::{bench, fmt_time};
 use padst::util::Rng;
 

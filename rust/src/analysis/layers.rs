@@ -1,0 +1,196 @@
+//! The module-DAG manifest behind rule L1 — `ci/lint/layers.toml`.
+//!
+//! The manifest is the single source of truth for the crate's layering
+//! (ARCHITECTURE.md §Layering refers here instead of restating the rules
+//! in prose).  Format: a tiny TOML subset parsed by hand (the build is
+//! offline; no toml crate), two tables:
+//!
+//! ```toml
+//! [modules]
+//! util   = []               # imports nothing
+//! kernels = ["kernels_micro", "obs", "sparsity", "util"]
+//! main   = ["*"]            # the CLI may import any module
+//!
+//! [split]
+//! "kernels::micro" = "kernels_micro"   # sub-module that is its own node
+//! ```
+//!
+//! Every top-level module must be declared; an undeclared module (or an
+//! edge to one) is itself an L1 diagnostic, so adding a module forces a
+//! deliberate manifest decision.  `[split]` carves a sub-module out as an
+//! independent node — used for `kernels::micro`, the std-only leaf that
+//! low layers (`perm`) may call without gaining access to the rest of
+//! `kernels`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed layering manifest.
+pub struct LayerManifest {
+    /// node -> allowed dependency nodes (`*` = anything).
+    nodes: BTreeMap<String, Vec<String>>,
+    /// module-path prefix (e.g. `kernels::micro`) -> node name.
+    splits: BTreeMap<String, String>,
+}
+
+impl LayerManifest {
+    pub fn parse(text: &str) -> Result<LayerManifest> {
+        let mut nodes = BTreeMap::new();
+        let mut splits = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("layers manifest line {}: expected `key = value`, got {raw:?}", ln + 1);
+            };
+            let key = unquote(k.trim());
+            let val = v.trim();
+            match section.as_str() {
+                "modules" => {
+                    nodes.insert(key, parse_string_array(val, ln + 1)?);
+                }
+                "split" => {
+                    splits.insert(key, unquote(val));
+                }
+                "" => {} // top-level scalars (schema stamp etc.) — ignored
+                other => bail!("layers manifest line {}: unknown section [{other}]", ln + 1),
+            }
+        }
+        if nodes.is_empty() {
+            bail!("layers manifest declares no [modules]");
+        }
+        for (node, deps) in &nodes {
+            for d in deps {
+                if d != "*" && !nodes.contains_key(d) {
+                    bail!("layers manifest: {node} allows undeclared module {d:?}");
+                }
+            }
+        }
+        for split_node in splits.values() {
+            if !nodes.contains_key(split_node) {
+                bail!("layers manifest: [split] target {split_node:?} not declared in [modules]");
+            }
+        }
+        Ok(LayerManifest { nodes, splits })
+    }
+
+    /// Map a module path (`kernels::micro`, `obs::watch`, `main`) to its
+    /// manifest node: longest `[split]` prefix wins, else the top-level
+    /// segment if declared.
+    pub fn node_for(&self, module_path: &str) -> Option<&str> {
+        let mut best: Option<&str> = None;
+        let mut best_len = 0usize;
+        for (prefix, node) in &self.splits {
+            let hit = module_path == prefix
+                || module_path.strip_prefix(prefix.as_str()).is_some_and(|r| r.starts_with("::"));
+            if hit && prefix.len() > best_len {
+                best = Some(node);
+                best_len = prefix.len();
+            }
+        }
+        if let Some(n) = best {
+            return Some(n);
+        }
+        let top = module_path.split("::").next().unwrap_or(module_path);
+        self.nodes.get_key_value(top).map(|(k, _)| k.as_str())
+    }
+
+    /// Whether `from` may depend on `to` (intra-node edges are always
+    /// allowed).
+    pub fn allows(&self, from: &str, to: &str) -> bool {
+        if from == to {
+            return true;
+        }
+        match self.nodes.get(from) {
+            Some(deps) => deps.iter().any(|d| d == "*" || d == to),
+            None => false,
+        }
+    }
+
+    pub fn is_declared(&self, node: &str) -> bool {
+        self.nodes.contains_key(node)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(s: &str) -> String {
+    s.trim().trim_matches('"').to_string()
+}
+
+fn parse_string_array(v: &str, line: usize) -> Result<Vec<String>> {
+    let Some(body) = v.strip_prefix('[').and_then(|s| s.strip_suffix(']')) else {
+        bail!("layers manifest line {line}: expected a [\"...\"] array, got {v:?}");
+    };
+    Ok(body
+        .split(',')
+        .map(|p| unquote(p.trim()))
+        .filter(|p| !p.is_empty())
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const M: &str = r#"
+# demo manifest
+schema = 1
+
+[modules]
+util = []
+kernels_micro = []
+kernels = ["kernels_micro", "util"]
+perm = ["kernels_micro", "util"]   # leaf access only
+main = ["*"]
+
+[split]
+"kernels::micro" = "kernels_micro"
+"#;
+
+    #[test]
+    fn parses_and_answers_edges() {
+        let m = LayerManifest::parse(M).unwrap();
+        assert!(m.allows("kernels", "util"));
+        assert!(m.allows("kernels", "kernels"));
+        assert!(!m.allows("util", "kernels"));
+        assert!(m.allows("main", "perm"));
+        assert!(!m.allows("perm", "kernels"));
+        assert!(m.allows("perm", "kernels_micro"));
+    }
+
+    #[test]
+    fn split_prefix_maps_submodule_to_leaf_node() {
+        let m = LayerManifest::parse(M).unwrap();
+        assert_eq!(m.node_for("kernels::micro"), Some("kernels_micro"));
+        assert_eq!(m.node_for("kernels::micro::dot"), Some("kernels_micro"));
+        assert_eq!(m.node_for("kernels::tune"), Some("kernels"));
+        assert_eq!(m.node_for("kernels"), Some("kernels"));
+        assert_eq!(m.node_for("nope"), None);
+    }
+
+    #[test]
+    fn rejects_undeclared_deps() {
+        let bad = "[modules]\na = [\"ghost\"]\n";
+        assert!(LayerManifest::parse(bad).is_err());
+        assert!(LayerManifest::parse("").is_err());
+    }
+}

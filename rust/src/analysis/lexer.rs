@@ -1,0 +1,406 @@
+//! A lightweight hand-rolled Rust lexer — just enough token structure for
+//! the lint rules, dependency-free like the rest of the crate.
+//!
+//! This is deliberately *not* a full Rust lexer: no keyword table, no
+//! numeric-suffix validation, no shebang handling.  What the rules need —
+//! and what this delivers exactly — is a token stream where comments,
+//! string/char literals, identifiers, numbers, and punctuation are
+//! separated with correct line numbers, so that:
+//!
+//! - `crate::foo` paths inside doc comments or string literals are *not*
+//!   layering edges (L1),
+//! - `unwrap_or_else` never matches a banned `unwrap` (L2/L4 match whole
+//!   identifier tokens, not substrings),
+//! - `// ordering:` / `// lint:` comments are first-class tokens the
+//!   rules can associate with adjacent code lines (L2-L4),
+//! - raw strings containing `"tune_schema":99` (the parser's own
+//!   negative tests) produce no string-key tokens of their own (L5).
+//!
+//! Handled: line comments (`//`, `///`, `//!`), nested block comments,
+//! plain/raw/byte string literals (`"…"`, `r"…"`, `r#"…"#` at any hash
+//! depth, `b"…"`, `br#"…"#`), char and byte-char literals vs. lifetimes,
+//! raw identifiers (`r#fn`), and multi-char number forms well enough to
+//! keep them out of the identifier stream.
+
+/// What a token is; `text` carries the exact source slice (for comments
+/// and string literals, *without* the delimiters).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`fn`, `push`, `Ordering`, ...).
+    Ident,
+    /// Integer or float literal (text kept verbatim, suffix included).
+    Num,
+    /// String literal; `text` is the raw *content* between the quotes.
+    Str,
+    /// Char or byte literal (content not needed by any rule).
+    Char,
+    /// Lifetime or loop label (`'a`, `'outer`).
+    Lifetime,
+    /// One punctuation byte (`::` arrives as two `:` tokens).
+    Punct(char),
+    /// `//`-style comment; `text` is everything after the slashes.
+    LineComment,
+    /// `/* ... */` comment (nesting folded in); `text` is the body.
+    BlockComment,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokenKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokenKind::Punct(c)
+    }
+
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokenKind::LineComment | TokenKind::BlockComment)
+    }
+}
+
+/// Tokenize Rust source.  Never fails: unterminated constructs are
+/// swallowed to EOF (the compiler owns syntax errors; the linter only
+/// needs a best-effort stream for files that already build).
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    out: Vec<Token>,
+}
+
+impl<'a> Lexer<'a> {
+    fn run(mut self) -> Vec<Token> {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                c if c.is_ascii_whitespace() => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.string(0),
+                b'\'' => self.char_or_lifetime(),
+                b'r' | b'b' => {
+                    if !self.raw_or_byte_prefix() {
+                        self.ident();
+                    }
+                }
+                c if c.is_ascii_alphabetic() || c == b'_' => self.ident(),
+                c if c.is_ascii_digit() => self.number(),
+                _ => {
+                    self.push(TokenKind::Punct(c as char), String::new());
+                    self.i += 1;
+                }
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, kind: TokenKind, text: String) {
+        self.out.push(Token { kind, text, line: self.line });
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i + 2;
+        let mut j = start;
+        while j < self.b.len() && self.b[j] != b'\n' {
+            j += 1;
+        }
+        // Strip any doc-comment extra slash/bang; the rules only look at
+        // the prose.
+        let mut s = start;
+        while s < j && matches!(self.b[s], b'/' | b'!') {
+            s += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[s..j]).into_owned();
+        self.push(TokenKind::LineComment, text);
+        self.i = j;
+    }
+
+    fn block_comment(&mut self) {
+        let line0 = self.line;
+        let start = self.i + 2;
+        let mut depth = 1usize;
+        let mut j = start;
+        while j < self.b.len() && depth > 0 {
+            match (self.b[j], self.b.get(j + 1).copied()) {
+                (b'/', Some(b'*')) => {
+                    depth += 1;
+                    j += 2;
+                }
+                (b'*', Some(b'/')) => {
+                    depth -= 1;
+                    j += 2;
+                }
+                (b'\n', _) => {
+                    self.line += 1;
+                    j += 1;
+                }
+                _ => j += 1,
+            }
+        }
+        let end = j.saturating_sub(2).max(start);
+        let text = String::from_utf8_lossy(&self.b[start..end]).into_owned();
+        self.out.push(Token { kind: TokenKind::BlockComment, text, line: line0 });
+        self.i = j;
+    }
+
+    /// `r"…"` / `r#"…"#` / `b"…"` / `br#"…"#` / `r#ident`; false if the
+    /// leading `r`/`b` begins a plain identifier instead.
+    fn raw_or_byte_prefix(&mut self) -> bool {
+        let mut j = self.i + 1;
+        if self.b[self.i] == b'b' && self.b.get(j) == Some(&b'r') {
+            j += 1;
+        }
+        if self.b[self.i] == b'b' && self.b.get(j) == Some(&b'\'') {
+            // Byte-char literal b'x'.
+            self.i = j;
+            self.char_literal();
+            return true;
+        }
+        let mut hashes = 0usize;
+        while self.b.get(j + hashes) == Some(&b'#') {
+            hashes += 1;
+        }
+        match self.b.get(j + hashes) {
+            Some(&b'"') => {
+                self.i = j + hashes;
+                self.string(hashes);
+                true
+            }
+            // `r#ident` raw identifier: skip the prefix, lex the ident.
+            _ if self.b[self.i] == b'r' && hashes == 1 => {
+                self.i += 2;
+                if self.i < self.b.len()
+                    && (self.b[self.i].is_ascii_alphabetic() || self.b[self.i] == b'_')
+                {
+                    self.ident();
+                } else {
+                    self.push(TokenKind::Punct('#'), String::new());
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Lex a string starting at the opening quote; `hashes` > 0 means raw
+    /// (no escapes, closed by `"` + that many `#`).
+    fn string(&mut self, hashes: usize) {
+        let line0 = self.line;
+        let start = self.i + 1;
+        let mut j = start;
+        while j < self.b.len() {
+            match self.b[j] {
+                b'\\' if hashes == 0 => j += 2,
+                b'\n' => {
+                    self.line += 1;
+                    j += 1;
+                }
+                b'"' => {
+                    let close = (1..=hashes).all(|k| self.b.get(j + k) == Some(&b'#'));
+                    if close {
+                        let text = String::from_utf8_lossy(&self.b[start..j]).into_owned();
+                        self.out.push(Token { kind: TokenKind::Str, text, line: line0 });
+                        self.i = j + 1 + hashes;
+                        return;
+                    }
+                    j += 1;
+                }
+                _ => j += 1,
+            }
+        }
+        // Unterminated: swallow to EOF.
+        let text = String::from_utf8_lossy(&self.b[start..]).into_owned();
+        self.out.push(Token { kind: TokenKind::Str, text, line: line0 });
+        self.i = self.b.len();
+    }
+
+    /// At a `'`: char literal (`'a'`, `'\n'`, `'\u{1F600}'`) or lifetime
+    /// (`'static`).  A quote followed by ident chars and no closing quote
+    /// within the escape-free forms is a lifetime.
+    fn char_or_lifetime(&mut self) {
+        // Escaped char is unambiguous.
+        if self.peek(1) == Some(b'\\') {
+            self.char_literal();
+            return;
+        }
+        // 'x' with a closing quote right after one scalar = char literal.
+        // Lifetimes are ASCII ident chars with *no* closing quote.
+        let mut j = self.i + 1;
+        while j < self.b.len() && (self.b[j].is_ascii_alphanumeric() || self.b[j] == b'_') {
+            j += 1;
+        }
+        if self.b.get(j) == Some(&b'"') || j == self.i + 1 {
+            // `'"` can't start a lifetime; treat as char-ish and resync.
+            self.char_literal();
+        } else if self.b.get(j) == Some(&b'\'') && j == self.i + 2 {
+            self.char_literal();
+        } else {
+            let text = String::from_utf8_lossy(&self.b[self.i + 1..j]).into_owned();
+            self.push(TokenKind::Lifetime, text);
+            self.i = j;
+        }
+    }
+
+    fn char_literal(&mut self) {
+        // self.i at the opening quote.
+        let mut j = self.i + 1;
+        while j < self.b.len() {
+            match self.b[j] {
+                b'\\' => j += 2,
+                b'\'' => {
+                    j += 1;
+                    break;
+                }
+                b'\n' => break,
+                _ => j += 1,
+            }
+        }
+        self.push(TokenKind::Char, String::new());
+        self.i = j;
+    }
+
+    fn ident(&mut self) {
+        let start = self.i;
+        let mut j = self.i;
+        while j < self.b.len() && (self.b[j].is_ascii_alphanumeric() || self.b[j] == b'_') {
+            j += 1;
+        }
+        let text = String::from_utf8_lossy(&self.b[start..j]).into_owned();
+        self.push(TokenKind::Ident, text);
+        self.i = j;
+    }
+
+    fn number(&mut self) {
+        let start = self.i;
+        let mut j = self.i;
+        while j < self.b.len() && (self.b[j].is_ascii_alphanumeric() || self.b[j] == b'_') {
+            j += 1;
+        }
+        // Fractional part — but not `..` range syntax.
+        if self.b.get(j) == Some(&b'.') && self.b.get(j + 1).is_some_and(|c| c.is_ascii_digit()) {
+            j += 1;
+            while j < self.b.len() && (self.b[j].is_ascii_alphanumeric() || self.b[j] == b'_') {
+                j += 1;
+            }
+        }
+        let text = String::from_utf8_lossy(&self.b[start..j]).into_owned();
+        self.push(TokenKind::Num, text);
+        self.i = j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        lex(src).into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let toks = lex("use crate::kernels::micro;");
+        let idents: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["use", "crate", "kernels", "micro"]);
+    }
+
+    #[test]
+    fn comments_are_not_code() {
+        let toks = lex("// crate::foo\n/* crate::bar */ x");
+        assert_eq!(toks[0].kind, TokenKind::LineComment);
+        assert_eq!(toks[0].text.trim(), "crate::foo");
+        assert_eq!(toks[1].kind, TokenKind::BlockComment);
+        assert!(toks[2].is_ident("x"));
+    }
+
+    #[test]
+    fn doc_comment_markers_are_stripped() {
+        let toks = lex("/// lint: no-alloc\n//! module doc");
+        assert_eq!(toks[0].text.trim(), "lint: no-alloc");
+        assert_eq!(toks[1].text.trim(), "module doc");
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let toks = lex("/* a /* b */ c */ y");
+        assert_eq!(toks[0].kind, TokenKind::BlockComment);
+        assert!(toks[1].is_ident("y"));
+    }
+
+    #[test]
+    fn strings_swallow_their_content() {
+        let toks = lex(r#"let s = "crate::foo .unwrap()";"#);
+        assert!(toks.iter().any(|t| t.kind == TokenKind::Str));
+        assert!(!toks.iter().any(|t| t.is_ident("unwrap")));
+    }
+
+    #[test]
+    fn raw_strings_at_hash_depth() {
+        let toks = lex(r##"let s = r#"{"tune_schema":99}"#;"##);
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokenKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, [r#"{"tune_schema":99}"#]);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = lex("let c = 'x'; fn f<'a>(v: &'a str) {}");
+        assert!(toks.iter().any(|t| t.kind == TokenKind::Char));
+        assert_eq!(toks.iter().filter(|t| t.kind == TokenKind::Lifetime).count(), 2);
+        // Escaped char.
+        assert!(lex(r"'\n'").iter().any(|t| t.kind == TokenKind::Char));
+    }
+
+    #[test]
+    fn numbers_do_not_merge_with_ranges() {
+        let k = kinds("0..10");
+        assert_eq!(
+            k,
+            vec![TokenKind::Num, TokenKind::Punct('.'), TokenKind::Punct('.'), TokenKind::Num]
+        );
+        assert_eq!(kinds("1.5e-3").len(), 3); // 1.5e, -, 3 — still not idents
+    }
+
+    #[test]
+    fn line_numbers_advance_through_everything() {
+        let toks = lex("a\n\"x\ny\"\n/* z\nw */\nb");
+        let a = toks.iter().find(|t| t.is_ident("a")).map(|t| t.line);
+        let b = toks.iter().find(|t| t.is_ident("b")).map(|t| t.line);
+        assert_eq!(a, Some(1));
+        assert_eq!(b, Some(6));
+    }
+
+    #[test]
+    fn unwrap_or_else_is_one_token() {
+        let toks = lex("x.unwrap_or_else(|e| e.into_inner())");
+        assert!(toks.iter().any(|t| t.is_ident("unwrap_or_else")));
+        assert!(!toks.iter().any(|t| t.is_ident("unwrap")));
+    }
+}

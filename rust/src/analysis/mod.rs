@@ -1,0 +1,172 @@
+//! Static analysis (`padst lint`): a dependency-free invariant checker
+//! for this repo's own sources.
+//!
+//! Layout:
+//! - [`lexer`]  — hand-rolled Rust lexer (comments, strings, raw strings)
+//! - [`source`] — per-file model: module path, test regions, annotations
+//! - [`layers`] — the `ci/lint/layers.toml` module-DAG manifest for L1
+//! - [`rules`]  — the rules themselves (L1-L6)
+//! - [`report`] — diagnostics, JSON report, committed baseline
+//!
+//! The checker exists because the invariants it enforces are exactly the
+//! ones `rustc` and clippy cannot see: *which* module may import which
+//! (layering), *which* functions sit on the serve/tuned warm path and
+//! must stay allocation-free, and *which* atomic sites carry a written
+//! justification for their memory ordering.  Everything is std-only —
+//! the lexer is ~300 lines, the manifest parser a TOML subset — so the
+//! lint runs in the same offline build as the rest of the crate.
+//!
+//! Entry point: [`run_lint`].  `padst lint` (see `main.rs`) wraps it
+//! with flag parsing, `--fix-baseline`, and exit-code mapping.
+
+pub mod layers;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+pub mod source;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use layers::LayerManifest;
+use report::{sort_diagnostics, Baseline, Diagnostic, LintReport};
+use rules::{LintCtx, RULES};
+use source::SourceFile;
+
+/// What to lint and how.
+pub struct LintOptions {
+    /// Repo root (the directory holding `rust/`, `ci/`, `README.md`).
+    pub root: PathBuf,
+    /// Rule ids to run, sorted.  Empty set = all rules.
+    pub rules: BTreeSet<String>,
+    /// Layering manifest path, relative to root unless absolute.
+    pub manifest_path: PathBuf,
+    /// Baseline path, relative to root unless absolute.
+    pub baseline_path: PathBuf,
+}
+
+impl LintOptions {
+    pub fn new(root: PathBuf) -> LintOptions {
+        LintOptions {
+            root,
+            rules: BTreeSet::new(),
+            manifest_path: PathBuf::from("ci/lint/layers.toml"),
+            baseline_path: PathBuf::from("ci/lint/baseline.json"),
+        }
+    }
+
+    fn resolve(&self, p: &Path) -> PathBuf {
+        if p.is_absolute() {
+            p.to_path_buf()
+        } else {
+            self.root.join(p)
+        }
+    }
+
+    /// The effective rule list (defaults to all), validated and sorted.
+    pub fn effective_rules(&self) -> Result<Vec<String>> {
+        if self.rules.is_empty() {
+            return Ok(RULES.iter().map(|r| r.id.to_string()).collect());
+        }
+        for id in &self.rules {
+            if rules::rule_info(id).is_none() {
+                bail!(
+                    "unknown lint rule {id:?} (known: {})",
+                    RULES.iter().map(|r| r.id).collect::<Vec<_>>().join(", ")
+                );
+            }
+        }
+        Ok(self.rules.iter().cloned().collect())
+    }
+}
+
+/// The result of a lint run.
+pub struct LintOutcome {
+    /// Baseline-filtered report (what `--format json` prints).
+    pub report: LintReport,
+    /// Every finding pre-baseline, canonically sorted (what
+    /// `--fix-baseline` snapshots).
+    pub all: Vec<Diagnostic>,
+}
+
+/// Run the configured rules over `<root>/rust/src/**/*.rs`.
+pub fn run_lint(opts: &LintOptions) -> Result<LintOutcome> {
+    let rule_ids = opts.effective_rules()?;
+
+    let src_root = opts.root.join("rust/src");
+    if !src_root.is_dir() {
+        bail!("lint root {} has no rust/src directory", opts.root.display());
+    }
+    let mut paths = Vec::new();
+    collect_rs_files(&src_root, &mut paths)?;
+    paths.sort();
+
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let src = std::fs::read_to_string(p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        let rel = p
+            .strip_prefix(&opts.root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(SourceFile::parse(&rel, &src));
+    }
+
+    let manifest = if rule_ids.iter().any(|r| r == "L1") {
+        let mp = opts.resolve(&opts.manifest_path);
+        let text = std::fs::read_to_string(&mp).with_context(|| {
+            format!("rule L1 needs the layering manifest at {}", mp.display())
+        })?;
+        Some(LayerManifest::parse(&text)?)
+    } else {
+        None
+    };
+
+    let readme = std::fs::read_to_string(opts.root.join("README.md")).ok();
+
+    let ctx = LintCtx {
+        files: &files,
+        manifest: manifest.as_ref(),
+        readme: readme.as_deref(),
+    };
+    let mut all = Vec::new();
+    for id in &rule_ids {
+        all.extend(rules::run_rule(id, &ctx));
+    }
+    sort_diagnostics(&mut all);
+
+    let baseline = Baseline::load(&opts.resolve(&opts.baseline_path))?;
+    let mut diagnostics = Vec::new();
+    let mut suppressed = 0usize;
+    for d in &all {
+        if baseline.covers(d) {
+            suppressed += 1;
+        } else {
+            diagnostics.push(d.clone());
+        }
+    }
+
+    Ok(LintOutcome {
+        report: LintReport { rules: rule_ids, diagnostics, suppressed },
+        all,
+    })
+}
+
+/// Recursively gather `.rs` files under `dir` (sorted later by caller).
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?;
+    for e in entries {
+        let e = e?;
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,281 @@
+//! Lint diagnostics, the machine-readable report, and the committed
+//! baseline — all serialised through [`crate::util::json`] so the report
+//! is byte-deterministic (BTreeMap key order, no timestamps, sorted
+//! diagnostics) and diffable as a CI golden, the same discipline as
+//! `obs_schema` / `tune_schema` snapshots.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Field-set version stamped into reports and baselines; readers reject
+/// a mismatch rather than guessing.
+pub const LINT_SCHEMA_VERSION: u32 = 1;
+
+/// How bad a finding is.  `Error` findings gate (non-zero exit / CI
+/// failure); `Warning` findings are reported but never gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Severity> {
+        match s {
+            "warning" => Ok(Severity::Warning),
+            "error" => Ok(Severity::Error),
+            other => bail!("unknown severity {other:?}"),
+        }
+    }
+}
+
+/// One finding, anchored to a `file:line`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Rule id (`L1` .. `L6`).
+    pub rule: String,
+    pub severity: Severity,
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl Diagnostic {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("file", json::s(&self.file)),
+            ("line", json::num(self.line as f64)),
+            ("msg", json::s(&self.msg)),
+            ("rule", json::s(&self.rule)),
+            ("severity", json::s(self.severity.as_str())),
+        ])
+    }
+
+    pub fn parse(v: &Json) -> Result<Diagnostic> {
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("diagnostic: missing {k}"))
+        };
+        Ok(Diagnostic {
+            rule: field("rule")?,
+            severity: Severity::parse(&field("severity")?)?,
+            file: field("file")?,
+            line: v.get("line").and_then(Json::as_usize).unwrap_or(0) as u32,
+            msg: field("msg")?,
+        })
+    }
+
+    /// `file:line: [rule/severity] msg` — the human-readable form.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: [{}/{}] {}",
+            self.file,
+            self.line,
+            self.rule,
+            self.severity.as_str(),
+            self.msg
+        )
+    }
+
+    /// Baseline identity: rule + file + message, *not* the line number,
+    /// so unrelated edits above an accepted finding don't un-suppress it.
+    pub fn baseline_key(&self) -> (String, String, String) {
+        (self.rule.clone(), self.file.clone(), self.msg.clone())
+    }
+}
+
+/// Sort diagnostics into their canonical (deterministic) order.
+pub fn sort_diagnostics(diags: &mut [Diagnostic]) {
+    diags.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule, &a.msg).cmp(&(&b.file, b.line, &b.rule, &b.msg))
+    });
+}
+
+/// The machine-readable lint report (`padst lint --format json`).
+/// Deliberately free of per-tree volatile fields (no file counts, no
+/// timings): on a clean tree the serialised report is byte-stable across
+/// commits, which is what lets CI diff it against a golden.
+#[derive(Debug, PartialEq)]
+pub struct LintReport {
+    /// Rule ids that ran, sorted.
+    pub rules: Vec<String>,
+    /// Findings not covered by the baseline, canonically sorted.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Findings matched (and hidden) by the baseline.
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    /// Gating findings present?  (`Error` severity only.)
+    pub fn failed(&self) -> bool {
+        self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            (
+                "diagnostics",
+                Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()),
+            ),
+            ("lint_schema", json::num(LINT_SCHEMA_VERSION as f64)),
+            ("rules", Json::Arr(self.rules.iter().map(|r| json::s(r)).collect())),
+            ("suppressed", json::num(self.suppressed as f64)),
+            ("total", json::num(self.diagnostics.len() as f64)),
+        ])
+    }
+
+    pub fn parse(v: &Json) -> Result<LintReport> {
+        let schema = v.get("lint_schema").and_then(Json::as_usize).unwrap_or(0);
+        if schema != LINT_SCHEMA_VERSION as usize {
+            bail!("unsupported lint_schema {schema} (this build reads {LINT_SCHEMA_VERSION})");
+        }
+        let rules = v
+            .get("rules")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_str).map(str::to_string).collect())
+            .unwrap_or_default();
+        let diagnostics = v
+            .get("diagnostics")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().map(Diagnostic::parse).collect::<Result<Vec<_>>>())
+            .transpose()?
+            .unwrap_or_default();
+        let suppressed = v.get("suppressed").and_then(Json::as_usize).unwrap_or(0);
+        Ok(LintReport { rules, diagnostics, suppressed })
+    }
+}
+
+/// The committed suppression file (`ci/lint/baseline.json`): accepted
+/// pre-existing findings that should not gate.  Kept empty on this tree;
+/// regenerate deliberately with `padst lint --fix-baseline`.
+#[derive(Debug, Default)]
+pub struct Baseline {
+    entries: BTreeSet<(String, String, String)>,
+}
+
+impl Baseline {
+    /// Load from disk; a missing file is an empty baseline.
+    pub fn load(path: &Path) -> Result<Baseline> {
+        if !path.exists() {
+            return Ok(Baseline::default());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading baseline {}", path.display()))?;
+        Baseline::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let v = Json::parse(text).context("parsing lint baseline")?;
+        let schema = v.get("lint_schema").and_then(Json::as_usize).unwrap_or(0);
+        if schema != LINT_SCHEMA_VERSION as usize {
+            bail!("unsupported baseline lint_schema {schema}");
+        }
+        let mut entries = BTreeSet::new();
+        for e in v.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+            let d = Diagnostic::parse(e).context("baseline entry")?;
+            entries.insert(d.baseline_key());
+        }
+        Ok(Baseline { entries })
+    }
+
+    pub fn covers(&self, d: &Diagnostic) -> bool {
+        self.entries.contains(&d.baseline_key())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialise a diagnostic set as baseline text (what `--fix-baseline`
+    /// writes).  Entries keep their line numbers for human readers, but
+    /// matching ignores them.
+    pub fn render(diags: &[Diagnostic]) -> String {
+        let mut sorted = diags.to_vec();
+        sort_diagnostics(&mut sorted);
+        let v = json::obj(vec![
+            ("entries", Json::Arr(sorted.iter().map(Diagnostic::to_json).collect())),
+            ("lint_schema", json::num(LINT_SCHEMA_VERSION as f64)),
+        ]);
+        let mut s = v.to_string_pretty();
+        s.push('\n');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag(rule: &str, file: &str, line: u32, msg: &str) -> Diagnostic {
+        Diagnostic {
+            rule: rule.into(),
+            severity: Severity::Error,
+            file: file.into(),
+            line,
+            msg: msg.into(),
+        }
+    }
+
+    #[test]
+    fn report_round_trips_through_util_json() {
+        let report = LintReport {
+            rules: vec!["L1".into(), "L3".into()],
+            diagnostics: vec![diag("L3", "rust/src/a.rs", 7, "undocumented SeqCst")],
+            suppressed: 2,
+        };
+        let text = report.to_json().to_string_pretty();
+        let re = LintReport::parse(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(report, re);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_schema() {
+        let v = json::obj(vec![("lint_schema", json::num(99.0))]);
+        assert!(LintReport::parse(&v).is_err());
+        assert!(Baseline::parse("{\"lint_schema\":99,\"entries\":[]}").is_err());
+    }
+
+    #[test]
+    fn baseline_matches_on_rule_file_msg_not_line() {
+        let accepted = diag("L2", "rust/src/a.rs", 10, "push() in no-alloc fn hot");
+        let text = Baseline::render(std::slice::from_ref(&accepted));
+        let base = Baseline::parse(&text).unwrap();
+        let mut moved = accepted.clone();
+        moved.line = 99; // the finding drifted down the file
+        assert!(base.covers(&moved));
+        let mut other = accepted;
+        other.msg = "collect() in no-alloc fn hot".into();
+        assert!(!base.covers(&other));
+    }
+
+    #[test]
+    fn render_is_file_line_rule_form() {
+        let d = diag("L1", "rust/src/util/cli.rs", 17, "util -> kernels not allowed");
+        assert_eq!(d.render(), "rust/src/util/cli.rs:17: [L1/error] util -> kernels not allowed");
+    }
+
+    #[test]
+    fn empty_baseline_loads_from_missing_file() {
+        let b = Baseline::load(Path::new("/nonexistent/baseline.json")).unwrap();
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
+    }
+}

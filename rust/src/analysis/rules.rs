@@ -1,0 +1,582 @@
+//! The lint rules, L1-L6.  Each rule is a pure function over the
+//! [`LintCtx`] producing [`Diagnostic`]s; nothing here touches the
+//! filesystem, so every rule is testable on fixture snippets.
+//!
+//! | id | name               | what it enforces                                       |
+//! |----|--------------------|--------------------------------------------------------|
+//! | L1 | layering           | `crate::` edges obey the `ci/lint/layers.toml` DAG     |
+//! | L2 | no-alloc           | `// lint: no-alloc` fn bodies never allocate           |
+//! | L3 | atomic-ordering    | non-Relaxed `Ordering::` sites carry `// ordering:`    |
+//! | L4 | no-panic           | `// lint: no-panic` fn bodies never unwrap/panic       |
+//! | L5 | schema-literals    | schema versions: one const, no adjacent literals, README agrees |
+//! | L6 | forbid-unsafe      | `#![forbid(unsafe_code)]` stays in `rust/src/lib.rs`   |
+//!
+//! Scope decisions (deliberate, documented here because they shape what
+//! the rules can and cannot see):
+//!
+//! - Rules scan `rust/src/` only; benches/tests/examples are dev-side.
+//! - `#[cfg(test)]` regions are exempt from L1/L3/L5 — a test may import
+//!   upward or use SeqCst without ceremony.
+//! - L2/L4 are *lexical*: they check the annotated body's own tokens,
+//!   not its callees.  That is the point — the rule pins the warm-path
+//!   *entry* free of banned constructs, and every helper it calls is
+//!   either annotated itself or covered by the runtime fingerprints.
+//! - Any finding can be waived in place with `// lint: allow(<id>)
+//!   <reason>` on the site's line or the line above.
+
+use std::collections::BTreeMap;
+
+use super::layers::LayerManifest;
+use super::report::{Diagnostic, Severity};
+use super::source::SourceFile;
+
+/// Static rule metadata (drives `--rules`, the README table, and the
+/// report's `rules` field).
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub name: &'static str,
+    pub severity: Severity,
+    pub description: &'static str,
+}
+
+/// All known rules, id order.
+pub const RULES: [RuleInfo; 6] = [
+    RuleInfo {
+        id: "L1",
+        name: "layering",
+        severity: Severity::Error,
+        description: "use crate:: edges must obey the declared module DAG (ci/lint/layers.toml)",
+    },
+    RuleInfo {
+        id: "L2",
+        name: "no-alloc",
+        severity: Severity::Error,
+        description: "fns annotated `// lint: no-alloc` must not allocate (push/collect/format!/...)",
+    },
+    RuleInfo {
+        id: "L3",
+        name: "atomic-ordering",
+        severity: Severity::Error,
+        description: "Ordering:: stricter than Relaxed needs an adjacent `// ordering:` justification",
+    },
+    RuleInfo {
+        id: "L4",
+        name: "no-panic",
+        severity: Severity::Error,
+        description: "fns annotated `// lint: no-panic` must not unwrap/expect/panic!/todo!",
+    },
+    RuleInfo {
+        id: "L5",
+        name: "schema-literals",
+        severity: Severity::Error,
+        description: "schema version constants: declared once, no adjacent hardcoded literals, README tables agree",
+    },
+    RuleInfo {
+        id: "L6",
+        name: "forbid-unsafe",
+        severity: Severity::Error,
+        description: "rust/src/lib.rs must keep #![forbid(unsafe_code)]",
+    },
+];
+
+pub fn rule_info(id: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.id == id)
+}
+
+/// Everything the rules read.
+pub struct LintCtx<'a> {
+    pub files: &'a [SourceFile],
+    /// Required when L1 runs.
+    pub manifest: Option<&'a LayerManifest>,
+    /// README text for the L5 doc-table check (absent on fixture trees).
+    pub readme: Option<&'a str>,
+}
+
+/// Run one rule by id.
+pub fn run_rule(id: &str, ctx: &LintCtx) -> Vec<Diagnostic> {
+    match id {
+        "L1" => l1_layering(ctx),
+        "L2" => l2_l4_annotated(ctx, "no-alloc", "L2", &l2_banned_site),
+        "L3" => l3_atomic_ordering(ctx),
+        "L4" => l2_l4_annotated(ctx, "no-panic", "L4", &l4_banned_site),
+        "L5" => l5_schema_literals(ctx),
+        "L6" => l6_forbid_unsafe(ctx),
+        _ => Vec::new(),
+    }
+}
+
+fn diag(rule: &str, file: &SourceFile, line: u32, msg: String) -> Diagnostic {
+    let severity = rule_info(rule).map(|r| r.severity).unwrap_or(Severity::Error);
+    Diagnostic { rule: rule.to_string(), severity, file: file.rel.clone(), line, msg }
+}
+
+// ------------------------------------------------------------------- L1
+
+/// Parse `crate::` paths out of the code-token stream and check each
+/// resulting module edge against the manifest.  Handles both `use`
+/// declarations and inline paths (`crate::kernels::tune::f()`), plus
+/// one level of `use crate::{a::x, b::y}` grouping.
+fn l1_layering(ctx: &LintCtx) -> Vec<Diagnostic> {
+    let Some(manifest) = ctx.manifest else {
+        return Vec::new(); // run_lint refuses earlier; belt and braces
+    };
+    let mut out = Vec::new();
+    for f in ctx.files {
+        let Some(from) = manifest.node_for(&f.module_path) else {
+            out.push(diag(
+                "L1",
+                f,
+                1,
+                format!(
+                    "module `{}` ({}) is not declared in the layers manifest",
+                    f.module_path, f.rel
+                ),
+            ));
+            continue;
+        };
+        let mut ci = 0;
+        while ci + 1 < f.code.len() {
+            if !(f.at(ci).is_ident("crate") && is_path_sep(f, ci + 1)) {
+                ci += 1;
+                continue;
+            }
+            // `foo::crate` is impossible; a leading `crate` token is
+            // always a crate-root path.
+            let line = f.at(ci).line;
+            if f.in_test_region(line) {
+                ci += 1;
+                continue;
+            }
+            let after = ci + 3; // first ident (or `{`) after `crate::`
+            if after >= f.code.len() {
+                break;
+            }
+            if f.at(after).is_punct('{') {
+                // use crate::{a::x, b::y};
+                let mut j = after + 1;
+                let mut depth = 1usize;
+                let mut expect_path = true;
+                while j < f.code.len() && depth > 0 {
+                    if f.at(j).is_punct('{') {
+                        depth += 1;
+                        expect_path = true;
+                    } else if f.at(j).is_punct('}') {
+                        depth -= 1;
+                    } else if f.at(j).is_punct(',') && depth == 1 {
+                        expect_path = true;
+                    } else if expect_path && f.at(j).kind == super::lexer::TokenKind::Ident {
+                        check_edge(manifest, f, from, j, &mut out);
+                        expect_path = false;
+                    }
+                    j += 1;
+                }
+                ci = j;
+            } else {
+                check_edge(manifest, f, from, after, &mut out);
+                ci = after;
+            }
+        }
+    }
+    out
+}
+
+fn is_path_sep(f: &SourceFile, ci: usize) -> bool {
+    ci + 1 < f.code.len() && f.at(ci).is_punct(':') && f.at(ci + 1).is_punct(':')
+}
+
+/// Check one edge whose target path starts at code-index `start`.
+fn check_edge(
+    manifest: &LayerManifest,
+    f: &SourceFile,
+    from: &str,
+    start: usize,
+    out: &mut Vec<Diagnostic>,
+) {
+    use super::lexer::TokenKind;
+    if f.at(start).kind != TokenKind::Ident {
+        return;
+    }
+    let seg0 = f.at(start).text.clone();
+    if seg0 == "self" || seg0 == "super" {
+        return;
+    }
+    // Capture an optional second segment so `[split]` nodes like
+    // `kernels::micro` resolve to their own node.
+    let mut path = seg0;
+    if start + 3 < f.code.len()
+        && is_path_sep(f, start + 1)
+        && f.at(start + 3).kind == TokenKind::Ident
+    {
+        path = format!("{path}::{}", f.at(start + 3).text);
+    }
+    let line = f.at(start).line;
+    if f.allow_covers("L1", line) {
+        return;
+    }
+    match manifest.node_for(&path) {
+        None => out.push(diag(
+            "L1",
+            f,
+            line,
+            format!("edge {from} -> crate::{path}: target module is not declared in the layers manifest"),
+        )),
+        Some(to) => {
+            if !manifest.allows(from, to) {
+                out.push(diag(
+                    "L1",
+                    f,
+                    line,
+                    format!("layering violation: {from} may not depend on {to} (crate::{path})"),
+                ));
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- L2 / L4
+
+/// Shared driver for the annotation-scoped rules: find every
+/// `// lint: <directive>` fn, scan its body tokens, and let the
+/// rule-specific `banned` callback flag sites.
+fn l2_l4_annotated(
+    ctx: &LintCtx,
+    directive: &str,
+    rule: &str,
+    banned: &dyn Fn(&SourceFile, usize) -> Option<String>,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in ctx.files {
+        for ann in f.fn_annotations() {
+            if ann.directive != directive {
+                continue;
+            }
+            let (a, b) = ann.body;
+            for ci in a..b {
+                let Some(what) = banned(f, ci) else { continue };
+                let line = f.at(ci).line;
+                if f.allow_covers(rule, line) {
+                    continue;
+                }
+                out.push(diag(
+                    rule,
+                    f,
+                    line,
+                    format!("{what} in `{directive}` fn `{}`", ann.fn_name),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Allocation sites for L2.  Exact-token matching: `unwrap_or_else`,
+/// `resize` (the sanctioned grow-only scratch idiom), `copy_from_slice`
+/// never match.
+fn l2_banned_site(f: &SourceFile, ci: usize) -> Option<String> {
+    const METHODS: [&str; 9] = [
+        "push",
+        "extend",
+        "extend_from_slice",
+        "append",
+        "to_vec",
+        "collect",
+        "clone",
+        "to_string",
+        "to_owned",
+    ];
+    const MACROS: [&str; 2] = ["format", "vec"];
+    const TYPES: [&str; 3] = ["Vec", "String", "Box"];
+    const CTORS: [&str; 4] = ["new", "from", "with_capacity", "default"];
+    let t = f.at(ci);
+    if t.kind != super::lexer::TokenKind::Ident {
+        return None;
+    }
+    let next_is = |c: char| ci + 1 < f.code.len() && f.at(ci + 1).is_punct(c);
+    let name = t.text.as_str();
+    if MACROS.contains(&name) && next_is('!') {
+        return Some(format!("`{name}!` allocation"));
+    }
+    if METHODS.contains(&name) && (next_is('(') || is_path_sep(f, ci + 1)) {
+        return Some(format!("`{name}()` call"));
+    }
+    if TYPES.contains(&name) && is_path_sep(f, ci + 1) {
+        // Walk past `::` (and any `::<...>` turbofish) to the ctor name.
+        let mut j = ci + 3;
+        if j < f.code.len() && f.at(j).is_punct('<') {
+            let mut depth = 1usize;
+            j += 1;
+            while j < f.code.len() && depth > 0 {
+                if f.at(j).is_punct('<') {
+                    depth += 1;
+                } else if f.at(j).is_punct('>') {
+                    depth -= 1;
+                }
+                j += 1;
+            }
+            if j + 1 < f.code.len() && is_path_sep(f, j) {
+                j += 2;
+            }
+        }
+        if j < f.code.len()
+            && f.at(j).kind == super::lexer::TokenKind::Ident
+            && CTORS.contains(&f.at(j).text.as_str())
+        {
+            return Some(format!("`{name}::{}` allocation", f.at(j).text));
+        }
+    }
+    None
+}
+
+/// Panic sites for L4.
+fn l4_banned_site(f: &SourceFile, ci: usize) -> Option<String> {
+    const CALLS: [&str; 2] = ["unwrap", "expect"];
+    const MACROS: [&str; 4] = ["panic", "todo", "unimplemented", "unreachable"];
+    let t = f.at(ci);
+    if t.kind != super::lexer::TokenKind::Ident {
+        return None;
+    }
+    let next_is = |c: char| ci + 1 < f.code.len() && f.at(ci + 1).is_punct(c);
+    let name = t.text.as_str();
+    if CALLS.contains(&name) && next_is('(') {
+        return Some(format!("`{name}()` call"));
+    }
+    if MACROS.contains(&name) && next_is('!') {
+        return Some(format!("`{name}!`"));
+    }
+    None
+}
+
+// ------------------------------------------------------------------- L3
+
+const STRICT_ORDERINGS: [&str; 4] = ["Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Every `Ordering::{Acquire,Release,AcqRel,SeqCst}` site outside test
+/// regions needs a `// ordering:` comment on its line or within the two
+/// lines above.  (`std::cmp::Ordering` variants never match the list.)
+fn l3_atomic_ordering(ctx: &LintCtx) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in ctx.files {
+        for ci in 0..f.code.len() {
+            if !f.at(ci).is_ident("Ordering") || !is_path_sep(f, ci + 1) {
+                continue;
+            }
+            let vi = ci + 3;
+            if vi >= f.code.len() {
+                continue;
+            }
+            let variant = f.at(vi).text.as_str();
+            if !STRICT_ORDERINGS.contains(&variant) {
+                continue;
+            }
+            let line = f.at(vi).line;
+            if f.in_test_region(line) || f.allow_covers("L3", line) {
+                continue;
+            }
+            if f.comment_near("ordering:", line, 2) {
+                continue;
+            }
+            out.push(diag(
+                "L3",
+                f,
+                line,
+                format!("Ordering::{variant} without an adjacent `// ordering:` justification"),
+            ));
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------- L5
+
+/// The crate's schema-versioned wire formats: constant name <-> the JSON
+/// key it is stamped under.  L5 keeps the three legs consistent —
+/// declaration (exactly one const), usage (no integer literal parked
+/// next to the wire key in place of the const), documentation (README
+/// mentions of `key`:N agree with the const).
+const SCHEMAS: [(&str, &str); 4] = [
+    ("OBS_SCHEMA_VERSION", "obs_schema"),
+    ("SCHEMA_VERSION", "schema_version"),
+    ("TUNE_SCHEMA_VERSION", "tune_schema"),
+    ("LINT_SCHEMA_VERSION", "lint_schema"),
+];
+
+/// Tokens scanned ahead of a wire-key string literal before giving up;
+/// an intervening `schema`/`version` ident justifies the site.
+const L5_WINDOW: usize = 8;
+
+fn l5_schema_literals(ctx: &LintCtx) -> Vec<Diagnostic> {
+    use super::lexer::TokenKind;
+    let mut out = Vec::new();
+
+    // Leg 1: each constant declared exactly once, capture its value.
+    let mut decls: BTreeMap<&str, Vec<(usize, u32, u64)>> = BTreeMap::new(); // name -> (file idx, line, value)
+    for (fi, f) in ctx.files.iter().enumerate() {
+        for ci in 0..f.code.len() {
+            if !f.at(ci).is_ident("const") {
+                continue;
+            }
+            let Some(&(name, _)) = SCHEMAS
+                .iter()
+                .find(|(n, _)| ci + 1 < f.code.len() && f.at(ci + 1).is_ident(n))
+            else {
+                continue;
+            };
+            // `const NAME: u32 = <value>;`
+            let val = (ci..f.code.len().min(ci + 8))
+                .find(|&j| f.at(j).kind == TokenKind::Num)
+                .and_then(|j| f.at(j).text.parse::<u64>().ok());
+            if let Some(v) = val {
+                decls.entry(name).or_default().push((fi, f.at(ci).line, v));
+            }
+        }
+    }
+    for (name, sites) in &decls {
+        if sites.len() > 1 {
+            for &(fi, line, _) in &sites[1..] {
+                out.push(diag(
+                    "L5",
+                    &ctx.files[fi],
+                    line,
+                    format!("schema constant {name} declared more than once"),
+                ));
+            }
+        }
+    }
+    let value_of =
+        |name: &str| decls.get(name).and_then(|s| s.first()).map(|&(_, _, v)| v);
+
+    // Leg 2: wire-key string literals followed by a bare integer literal
+    // (instead of the constant) — writer or parser hardcoding a version.
+    for f in ctx.files {
+        for ci in 0..f.code.len() {
+            let t = f.at(ci);
+            if t.kind != TokenKind::Str {
+                continue;
+            }
+            let Some((cname, key)) = SCHEMAS.iter().find(|(_, k)| t.text == *k) else {
+                continue;
+            };
+            let line = t.line;
+            if f.in_test_region(line) || f.allow_covers("L5", line) {
+                continue;
+            }
+            for j in ci + 1..f.code.len().min(ci + 1 + L5_WINDOW) {
+                let u = f.at(j);
+                if u.is_punct(';') {
+                    break;
+                }
+                if u.kind == TokenKind::Ident {
+                    let lower = u.text.to_ascii_lowercase();
+                    if lower.contains("schema") || lower.contains("version") {
+                        break; // the const (or a field mirroring it) is in play
+                    }
+                }
+                if u.kind == TokenKind::Num {
+                    out.push(diag(
+                        "L5",
+                        f,
+                        line,
+                        format!(
+                            "hardcoded version literal next to wire key \"{key}\" (use {cname})"
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+    }
+
+    // Leg 3: README mentions of `key … N` must agree with the constant.
+    if let Some(readme) = ctx.readme {
+        for (cname, key) in SCHEMAS {
+            let Some(expect) = value_of(cname) else { continue };
+            for (line, found) in readme_version_mentions(readme, key) {
+                if found != expect {
+                    out.push(Diagnostic {
+                        rule: "L5".into(),
+                        severity: Severity::Error,
+                        file: "README.md".into(),
+                        line,
+                        msg: format!(
+                            "README says {key} = {found}, but {cname} = {expect}"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Find `key":1` / `key | 1 |`-style numeric mentions of a wire key in
+/// prose: after a word-boundary occurrence of `key`, skip up to six
+/// separator chars (quote, backtick, colon, equals, pipe, space) and
+/// parse any digits found.
+fn readme_version_mentions(text: &str, key: &str) -> Vec<(u32, u64)> {
+    let mut out = Vec::new();
+    for (li, line) in text.lines().enumerate() {
+        let bytes = line.as_bytes();
+        let mut start = 0usize;
+        while let Some(pos) = line[start..].find(key) {
+            let i = start + pos;
+            start = i + key.len();
+            let before_ok = i == 0 || !(bytes[i - 1].is_ascii_alphanumeric() || bytes[i - 1] == b'_');
+            let after = i + key.len();
+            let after_ok = after >= bytes.len()
+                || !(bytes[after].is_ascii_alphanumeric() || bytes[after] == b'_');
+            if !before_ok || !after_ok {
+                continue;
+            }
+            let mut j = after;
+            let mut skipped = 0usize;
+            while j < bytes.len()
+                && skipped < 6
+                && matches!(bytes[j], b'"' | b'\'' | b'`' | b':' | b'=' | b'|' | b' ' | b'\t')
+            {
+                j += 1;
+                skipped += 1;
+            }
+            let d0 = j;
+            while j < bytes.len() && bytes[j].is_ascii_digit() {
+                j += 1;
+            }
+            if j > d0 {
+                if let Ok(v) = line[d0..j].parse::<u64>() {
+                    out.push((li as u32 + 1, v));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------- L6
+
+/// `rust/src/lib.rs` must carry `#![forbid(unsafe_code)]`.
+fn l6_forbid_unsafe(ctx: &LintCtx) -> Vec<Diagnostic> {
+    let Some(lib) = ctx.files.iter().find(|f| f.rel == "rust/src/lib.rs") else {
+        return vec![Diagnostic {
+            rule: "L6".into(),
+            severity: Severity::Error,
+            file: "rust/src/lib.rs".into(),
+            line: 1,
+            msg: "rust/src/lib.rs not found (cannot verify #![forbid(unsafe_code)])".into(),
+        }];
+    };
+    let has = (0..lib.code.len().saturating_sub(3)).any(|ci| {
+        lib.at(ci).is_ident("forbid")
+            && lib.at(ci + 1).is_punct('(')
+            && lib.at(ci + 2).is_ident("unsafe_code")
+            && lib.at(ci + 3).is_punct(')')
+    });
+    if has {
+        Vec::new()
+    } else {
+        vec![diag(
+            "L6",
+            lib,
+            1,
+            "missing #![forbid(unsafe_code)] crate attribute".to_string(),
+        )]
+    }
+}

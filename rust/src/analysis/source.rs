@@ -1,0 +1,285 @@
+//! Per-file source model derived from the token stream: module identity,
+//! `#[cfg(test)]` regions, `// lint:` annotations, and function-body
+//! extents — the shared substrate every rule walks.
+
+use super::lexer::{lex, Token, TokenKind};
+
+/// One lexed source file plus the derived structure the rules need.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes (`rust/src/obs/watch.rs`).
+    pub rel: String,
+    /// Module path under the crate root (`obs::watch`, `main`, `lib`).
+    pub module_path: String,
+    /// Full token stream, comments included.
+    pub tokens: Vec<Token>,
+    /// Indices into `tokens` of the non-comment tokens, in order.
+    pub code: Vec<usize>,
+    /// Line ranges (inclusive) covered by `#[cfg(test)]` blocks.
+    test_regions: Vec<(u32, u32)>,
+    /// `// lint: allow(<rule>)` suppressions: (rule id, comment line).
+    allows: Vec<(String, u32)>,
+}
+
+/// A `// lint: no-alloc` / `// lint: no-panic` annotation bound to the
+/// function that follows it.
+pub struct FnAnnotation {
+    /// `no-alloc` or `no-panic`.
+    pub directive: String,
+    /// Name of the annotated fn (for messages).
+    pub fn_name: String,
+    /// Exclusive range of *code indices* covering the fn body.
+    pub body: (usize, usize),
+    /// Line of the `fn` token.
+    pub line: u32,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, src: &str) -> SourceFile {
+        let tokens = lex(src);
+        let code: Vec<usize> =
+            tokens.iter().enumerate().filter(|(_, t)| !t.is_comment()).map(|(i, _)| i).collect();
+        let test_regions = find_test_regions(&tokens, &code);
+        let allows = find_allows(&tokens);
+        SourceFile {
+            rel: rel.to_string(),
+            module_path: module_path_of(rel),
+            tokens,
+            code,
+            test_regions,
+            allows,
+        }
+    }
+
+    /// Whether a source line falls inside a `#[cfg(test)]` block.
+    pub fn in_test_region(&self, line: u32) -> bool {
+        self.test_regions.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+
+    /// Whether a `// lint: allow(<rule>)` comment covers this line (the
+    /// comment's own line, or the line directly above the site).
+    pub fn allow_covers(&self, rule: &str, line: u32) -> bool {
+        self.allows.iter().any(|(r, l)| r == rule && (*l == line || *l + 1 == line))
+    }
+
+    /// The code token at code-index `ci`.
+    pub fn at(&self, ci: usize) -> &Token {
+        &self.tokens[self.code[ci]]
+    }
+
+    /// All `// lint: no-alloc` / `no-panic` annotations with their
+    /// resolved fn bodies.
+    pub fn fn_annotations(&self) -> Vec<FnAnnotation> {
+        let mut out = Vec::new();
+        for t in &self.tokens {
+            if t.kind != TokenKind::LineComment {
+                continue;
+            }
+            let Some(directives) = parse_lint_comment(&t.text) else { continue };
+            for d in directives {
+                if d != "no-alloc" && d != "no-panic" {
+                    continue;
+                }
+                if let Some(ann) = self.bind_to_fn(&d, t.line) {
+                    out.push(ann);
+                }
+            }
+        }
+        out
+    }
+
+    /// Bind an annotation on `line` to the first `fn` at or after it.
+    fn bind_to_fn(&self, directive: &str, line: u32) -> Option<FnAnnotation> {
+        let fn_ci = (0..self.code.len())
+            .find(|&ci| self.at(ci).line >= line && self.at(ci).is_ident("fn"))?;
+        let fn_name = if fn_ci + 1 < self.code.len() && self.at(fn_ci + 1).kind == TokenKind::Ident
+        {
+            self.at(fn_ci + 1).text.clone()
+        } else {
+            String::new()
+        };
+        // First `{` after the fn keyword opens the body (signatures in
+        // this codebase never contain braces before it).
+        let open = (fn_ci..self.code.len()).find(|&ci| self.at(ci).is_punct('{'))?;
+        let close = self.match_brace(open)?;
+        Some(FnAnnotation {
+            directive: directive.to_string(),
+            fn_name,
+            body: (open + 1, close),
+            line: self.at(fn_ci).line,
+        })
+    }
+
+    /// Code-index of the `}` matching the `{` at code-index `open`.
+    pub fn match_brace(&self, open: usize) -> Option<usize> {
+        let mut depth = 1usize;
+        for ci in open + 1..self.code.len() {
+            if self.at(ci).is_punct('{') {
+                depth += 1;
+            } else if self.at(ci).is_punct('}') {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(ci);
+                }
+            }
+        }
+        None
+    }
+
+    /// Whether any comment whose text contains `needle` sits on a line in
+    /// `[line - above, line]` — the adjacency test for `// ordering:`
+    /// justifications.
+    pub fn comment_near(&self, needle: &str, line: u32, above: u32) -> bool {
+        let lo = line.saturating_sub(above);
+        self.tokens
+            .iter()
+            .filter(|t| t.is_comment())
+            .any(|t| t.line >= lo && t.line <= line && t.text.contains(needle))
+    }
+}
+
+/// `rust/src/kernels/micro.rs` -> `kernels::micro`; `rust/src/main.rs`
+/// -> `main`; `perm/mod.rs` -> `perm`.
+fn module_path_of(rel: &str) -> String {
+    let p = rel.strip_prefix("rust/src/").unwrap_or(rel);
+    let p = p.strip_suffix(".rs").unwrap_or(p);
+    let p = p.strip_suffix("/mod").unwrap_or(p);
+    p.replace('/', "::")
+}
+
+/// Find `#[cfg(test)]` attributes and the brace block that follows each.
+fn find_test_regions(tokens: &[Token], code: &[usize]) -> Vec<(u32, u32)> {
+    let at = |ci: usize| &tokens[code[ci]];
+    let mut out = Vec::new();
+    let mut ci = 0;
+    while ci + 5 < code.len() {
+        let is_attr = at(ci).is_punct('#')
+            && at(ci + 1).is_punct('[')
+            && at(ci + 2).is_ident("cfg")
+            && at(ci + 3).is_punct('(')
+            && at(ci + 4).is_ident("test")
+            && at(ci + 5).is_punct(')');
+        if !is_attr {
+            ci += 1;
+            continue;
+        }
+        let start_line = at(ci).line;
+        // Skip to the block the attribute gates (`mod tests {`, or any
+        // single item with a brace body).
+        let mut j = ci + 6;
+        while j < code.len() && !at(j).is_punct('{') {
+            // A `;` first means the attribute gated a braceless item.
+            if at(j).is_punct(';') {
+                break;
+            }
+            j += 1;
+        }
+        if j < code.len() && at(j).is_punct('{') {
+            let mut depth = 1usize;
+            let mut k = j + 1;
+            while k < code.len() && depth > 0 {
+                if at(k).is_punct('{') {
+                    depth += 1;
+                } else if at(k).is_punct('}') {
+                    depth -= 1;
+                }
+                k += 1;
+            }
+            let end_line = if k > 0 { at(k - 1).line } else { start_line };
+            out.push((start_line, end_line));
+            ci = k;
+        } else {
+            ci = j + 1;
+        }
+    }
+    out
+}
+
+/// Parse a `lint:` comment body into its comma-separated directives.
+/// Returns `None` when the comment is not a lint directive at all.
+pub fn parse_lint_comment(text: &str) -> Option<Vec<String>> {
+    let t = text.trim();
+    let rest = t.strip_prefix("lint:")?;
+    Some(
+        rest.split(',')
+            .map(|d| d.trim())
+            .filter(|d| !d.is_empty())
+            // `allow(L3) reason prose` — keep only the directive head.
+            .map(|d| d.split_whitespace().next().unwrap_or("").to_string())
+            .collect(),
+    )
+}
+
+/// Collect `lint: allow(<rule>)` suppression comments.
+fn find_allows(tokens: &[Token]) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    for t in tokens {
+        if !t.is_comment() {
+            continue;
+        }
+        let Some(directives) = parse_lint_comment(&t.text) else { continue };
+        for d in directives {
+            if let Some(rule) = d.strip_prefix("allow(").and_then(|s| s.strip_suffix(')')) {
+                out.push((rule.to_string(), t.line));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_paths() {
+        assert_eq!(module_path_of("rust/src/kernels/micro.rs"), "kernels::micro");
+        assert_eq!(module_path_of("rust/src/perm/mod.rs"), "perm");
+        assert_eq!(module_path_of("rust/src/main.rs"), "main");
+        assert_eq!(module_path_of("rust/src/lib.rs"), "lib");
+        assert_eq!(module_path_of("rust/src/tensor.rs"), "tensor");
+    }
+
+    #[test]
+    fn test_regions_cover_mod_tests() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n";
+        let f = SourceFile::parse("rust/src/x.rs", src);
+        assert!(!f.in_test_region(1));
+        assert!(f.in_test_region(4));
+    }
+
+    #[test]
+    fn annotation_binds_to_next_fn_body() {
+        let src = "// lint: no-alloc\nfn hot(v: &mut Vec<u8>) {\n    v.push(1);\n}\nfn cold() { Vec::<u8>::new(); }\n";
+        let f = SourceFile::parse("rust/src/x.rs", src);
+        let anns = f.fn_annotations();
+        assert_eq!(anns.len(), 1);
+        assert_eq!(anns[0].fn_name, "hot");
+        // Body covers push but not the second fn.
+        let (a, b) = anns[0].body;
+        let body_idents: Vec<&str> = (a..b)
+            .map(|ci| f.at(ci))
+            .filter(|t| t.kind == TokenKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(body_idents.contains(&"push"));
+        assert!(!body_idents.contains(&"cold"));
+    }
+
+    #[test]
+    fn allow_comments_cover_adjacent_lines() {
+        let src = "// lint: allow(L3) startup-only flag\nlet x = 1;\n";
+        let f = SourceFile::parse("rust/src/x.rs", src);
+        assert!(f.allow_covers("L3", 1));
+        assert!(f.allow_covers("L3", 2));
+        assert!(!f.allow_covers("L3", 3));
+        assert!(!f.allow_covers("L2", 2));
+    }
+
+    #[test]
+    fn comment_near_window() {
+        let src = "// ordering: gate publishes table\nx.store(1, Ordering::Release);\n";
+        let f = SourceFile::parse("rust/src/x.rs", src);
+        assert!(f.comment_near("ordering:", 2, 2));
+        assert!(!f.comment_near("ordering:", 1 + 4, 2));
+    }
+}

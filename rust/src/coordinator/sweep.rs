@@ -446,6 +446,8 @@ pub fn run_sweep_sharded(
                 worker: wid,
                 event: event.to_string(),
                 cell: cell.id(),
+                // ordering: SeqCst so heartbeats never report a count
+                // behind a completion this worker already published.
                 done: done_count.load(Ordering::SeqCst),
                 total: total_cells,
                 t: now_unix(),
@@ -469,6 +471,8 @@ pub fn run_sweep_sharded(
             if let Some(j) = journal_ref {
                 j.record(&key.id(), &cell_to_json(&cell))?;
             }
+            // ordering: SeqCst publish of the completion count, paired
+            // with the heartbeat closure's load above.
             done_count.fetch_add(1, Ordering::SeqCst);
             heartbeat(*wid, "done", key, Some(t0.elapsed().as_secs_f64()));
             Ok(cell)

@@ -1,0 +1,110 @@
+//! Bench-target knob parsing that needs crate types.
+//!
+//! The std-only argv helpers live in [`crate::util::cli`]; this module
+//! layers the microkernel backend knob and the per-bench option bundle on
+//! top.  It sits in `harness` because harness is the lowest layer the
+//! manifest allows to see `kernels` *and* that the bench binaries already
+//! depend on — keeping `util` a leaf (lint rule L1).
+
+use std::path::PathBuf;
+
+use crate::kernels::micro::Backend;
+use crate::util::cli::{
+    arg_value_in, argv, bench_json_path, has_flag_in, resolve_threads, thread_knob_in,
+};
+
+/// Resolve the microkernel backend from an argv slice: `--backend NAME`
+/// wins, else the `PADST_BACKEND` env var, else Tiled.  Unknown names
+/// warn and fall back (see [`Backend::resolve`]); the `padst` CLI parses
+/// its own flag strictly instead.
+pub fn backend_knob_in(args: &[String]) -> Backend {
+    Backend::resolve(arg_value_in(args, "--backend").as_deref())
+}
+
+/// Options shared by every bench target, parsed from argv + environment in
+/// one place.
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    /// Bench name (the `BENCH_<name>.json` stem).
+    pub bench: String,
+    /// Resolved worker-thread ceiling (>= 1).
+    pub threads: usize,
+    /// Resolved microkernel backend (`--backend` / `PADST_BACKEND`,
+    /// default Tiled).
+    pub backend: Backend,
+    /// Short mode (`--short` or `PADST_BENCH_SHORT=1`): CI-sized sample
+    /// budgets via [`BenchOpts::budget`].
+    pub short: bool,
+    /// Where the JSON report is written (`--json PATH` overrides
+    /// [`bench_json_path`]).
+    pub json_path: PathBuf,
+}
+
+impl BenchOpts {
+    pub fn parse(bench: &str) -> BenchOpts {
+        let args = argv();
+        let short = has_flag_in(&args, "--short")
+            || std::env::var("PADST_BENCH_SHORT")
+                .map(|v| !v.is_empty() && v != "0")
+                .unwrap_or(false);
+        let json_path = arg_value_in(&args, "--json")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| bench_json_path(bench));
+        // An explicit --backend pins the backend for the whole bench run:
+        // the tuning table may still select bit-preserving variants but
+        // never another backend (see `kernels::tune`).
+        if arg_value_in(&args, "--backend").is_some() {
+            crate::kernels::tune::note_backend_pinned();
+        }
+        BenchOpts {
+            bench: bench.to_string(),
+            threads: resolve_threads(thread_knob_in(&args)),
+            backend: backend_knob_in(&args),
+            short,
+            json_path,
+        }
+    }
+
+    /// Scale a call site's `(warmup, min_iters, min_time_s)` budget down
+    /// for short mode; identity otherwise.
+    pub fn budget(&self, warmup: usize, min_iters: usize, min_time_s: f64) -> (usize, usize, f64) {
+        if self.short {
+            (warmup.min(1), min_iters.min(2), min_time_s.min(0.02))
+        } else {
+            (warmup, min_iters, min_time_s)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn backend_knob_explicit_flag_wins() {
+        let a = args(&["bench", "--backend", "scalar"]);
+        assert_eq!(backend_knob_in(&a), Backend::Scalar);
+        // Unknown names warn and fall back instead of erroring (benches
+        // should not die over a knob).
+        let bad = args(&["bench", "--backend", "gpu"]);
+        assert_eq!(backend_knob_in(&bad), Backend::Tiled);
+    }
+
+    #[test]
+    fn short_budget_caps() {
+        let mut o = BenchOpts {
+            bench: "x".into(),
+            threads: 1,
+            backend: Backend::Tiled,
+            short: true,
+            json_path: PathBuf::from("BENCH_x.json"),
+        };
+        assert_eq!(o.budget(2, 5, 0.3), (1, 2, 0.02));
+        o.short = false;
+        assert_eq!(o.budget(2, 5, 0.3), (2, 5, 0.3));
+    }
+}

@@ -83,6 +83,7 @@ pub fn resolve_workers(workers: usize, n_cells: usize) -> usize {
 /// thread.  `work(ctx, index, key)` runs one cell.  With one worker the
 /// whole thing runs inline on the calling thread — that *is* the
 /// sequential path, same context, same cell order.
+// lint: no-panic
 pub fn execute_sharded<K, W, T, I, F>(
     keys: &[K],
     workers: usize,
@@ -115,10 +116,14 @@ where
     let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
 
     let fail = |e: anyhow::Error| {
-        let mut fe = first_err.lock().unwrap();
+        // A poisoned lock just means another worker died mid-store; the
+        // data (an Option slot) is still coherent, so keep the error.
+        let mut fe = first_err.lock().unwrap_or_else(|p| p.into_inner());
         if fe.is_none() {
             *fe = Some(e);
         }
+        // ordering: SeqCst publish of the abort flag so every worker's
+        // next loop-top load observes it after the error is stored.
         abort.store(true, Ordering::SeqCst);
     };
 
@@ -133,15 +138,19 @@ where
                 };
                 let wobs = WorkerObs::new(wid);
                 loop {
+                    // ordering: SeqCst pairs with fail()'s store — a set
+                    // flag implies the first error is already recorded.
                     if abort.load(Ordering::SeqCst) {
                         return;
                     }
+                    // ordering: SeqCst claim ticket; every index handed
+                    // out exactly once across workers.
                     let i = cursor.fetch_add(1, Ordering::SeqCst);
                     if i >= keys.len() {
                         return;
                     }
                     match wobs.observe(|| work(&mut ctx, i, &keys[i])) {
-                        Ok(t) => slots.lock().unwrap()[i] = Some(t),
+                        Ok(t) => slots.lock().unwrap_or_else(|p| p.into_inner())[i] = Some(t),
                         Err(e) => return fail(e),
                     }
                 }
@@ -149,12 +158,12 @@ where
         }
     });
 
-    if let Some(e) = first_err.into_inner().unwrap() {
+    if let Some(e) = first_err.into_inner().unwrap_or_else(|p| p.into_inner()) {
         return Err(e);
     }
     slots
         .into_inner()
-        .unwrap()
+        .unwrap_or_else(|p| p.into_inner())
         .into_iter()
         .enumerate()
         .map(|(i, s)| s.ok_or_else(|| anyhow!("cell {i} was never executed")))

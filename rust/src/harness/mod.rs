@@ -26,6 +26,7 @@
 //! backend required.
 
 pub mod baseline;
+pub mod bench;
 pub mod executor;
 pub mod shard;
 pub mod telemetry;

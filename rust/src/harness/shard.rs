@@ -29,7 +29,10 @@ use crate::util::json::{self, Json};
 
 /// Journal line holding the sweep parameters; a journal only resumes (or
 /// merges with) a sweep whose metadata matches this header exactly.
-pub const META_KEY: &str = "__meta__";
+/// Defined in [`crate::obs::watch`], which owns the journal record-tag
+/// namespace (`hb`, `plan`, `__meta__`); re-exported here for the
+/// journal's own readers.
+pub use crate::obs::watch::META_KEY;
 
 /// Parse a `--shard i/n` value into (index, count): `i` zero-based,
 /// `i < n`, `n >= 1`.

@@ -138,6 +138,7 @@ pub fn run_plan(
 /// (no table lookup at all).  Callers that execute one plan many times —
 /// serve sites, the tuned bench sections — resolve the choice once via
 /// [`tune::Tuner::choice_for`] and dispatch through this.
+// lint: no-alloc
 pub fn run_plan_tuned(
     plan: &crate::sparsity::pattern::KernelPlan,
     x: &[f32],
@@ -204,6 +205,7 @@ pub fn run_plan_mt(
 
 /// [`run_plan_mt`] with an explicit, pre-resolved tuning [`tune::Choice`]
 /// (no table lookup at all) — the serve warm path.
+// lint: no-alloc
 pub fn run_plan_mt_tuned(
     plan: &crate::sparsity::pattern::KernelPlan,
     x: &[f32],

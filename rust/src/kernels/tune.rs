@@ -532,6 +532,8 @@ impl Tuner {
     pub fn install(&self, table: TuningTable) {
         let n = table.len();
         *self.table.write().unwrap_or_else(|e| e.into_inner()) = Some(table);
+        // ordering: Release publishes the table write above to the
+        // Acquire loads in len()/lookup()/choice_for().
         self.installed.store(n, Ordering::Release);
     }
 
@@ -539,6 +541,8 @@ impl Tuner {
     /// untuned fast path).
     pub fn clear(&self) {
         *self.table.write().unwrap_or_else(|e| e.into_inner()) = None;
+        // ordering: Release pairs with the same Acquire readers as
+        // install(); a 0 count means the table drop is visible too.
         self.installed.store(0, Ordering::Release);
     }
 
@@ -553,6 +557,7 @@ impl Tuner {
 
     /// Entries in the installed table (0 = none installed).
     pub fn len(&self) -> usize {
+        // ordering: Acquire pairs with install()/clear() Release stores.
         self.installed.load(Ordering::Acquire)
     }
 
@@ -563,6 +568,8 @@ impl Tuner {
     /// Raw keyed lookup (no pinning policy applied) — what the tests and
     /// `padst tune --dry-run` use to report coverage.
     pub fn lookup(&self, key: &TuneKey) -> Option<TuneEntry> {
+        // ordering: Acquire — a nonzero count implies the table behind
+        // the lock is the one install() published.
         if self.installed.load(Ordering::Acquire) == 0 {
             return None;
         }
@@ -578,12 +585,15 @@ impl Tuner {
     /// *and* equal to the process default (an explicitly threaded-through
     /// non-default backend is as deliberate as a CLI flag); the
     /// bit-preserving axes apply either way.
+    // lint: no-alloc
     pub fn choice_for(
         &self,
         plan: &KernelPlan,
         threads: usize,
         backend: Backend,
     ) -> (Choice, bool) {
+        // ordering: Acquire pairs with install()'s Release, so the warm
+        // path sees a fully-published table or skips entirely.
         if self.installed.load(Ordering::Acquire) == 0 || self.off.load(Ordering::Relaxed) {
             return (Choice::default_for(backend), false);
         }

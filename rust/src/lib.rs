@@ -23,6 +23,8 @@
 //! See `docs/ARCHITECTURE.md` for the full layer stack and the README for
 //! the paper-artifact ↔ command map.
 
+// The whole crate is safe Rust; `padst lint` rule L6 checks this stays.
+#![forbid(unsafe_code)]
 // Numeric-kernel code indexes flat buffers by design; these style lints
 // fight that idiom without improving it.
 #![allow(clippy::needless_range_loop)]
@@ -32,6 +34,7 @@
 // Simd backend degrades to Tiled at runtime.
 #![cfg_attr(feature = "nightly-simd", feature(portable_simd))]
 
+pub mod analysis;
 pub mod tensor;
 pub mod util;
 pub mod obs;

@@ -29,6 +29,11 @@
 //!                    key and persists the winners in a tuning table that
 //!                    `run_plan`/`run_plan_mt` consult (`--dry-run` prints
 //!                    the key grid without timing anything)
+//!   lint           — dependency-free static analysis over the repo's own
+//!                    Rust sources: layering vs ci/lint/layers.toml, warm-
+//!                    path no-alloc, atomic-ordering justifications,
+//!                    frame-loop panic freedom, schema-literal consistency,
+//!                    forbid(unsafe_code) (README §Static analysis)
 //!
 //! Benches (Fig. 3, Tbl. 5) live under `cargo bench`; analysis examples
 //! (Fig. 4-6) under `cargo run --example`.
@@ -131,7 +136,7 @@ fn usage() -> ! {
     eprintln!(
         "padst — Permutation-Augmented Dynamic Structured Sparse Training
 
-USAGE: padst <train|sweep|serve|tune|patterns|perms|nlr|list> [--flag value ...]
+USAGE: padst <train|sweep|serve|tune|lint|patterns|perms|nlr|list> [--flag value ...]
        padst watch <journal.jsonl> [--once] [--interval SECS] [--stale SECS]
        padst bench-compare <old.json> <new.json> [--threshold PCT]
        padst journal-merge <a.jsonl> <b.jsonl> ... -o <out.jsonl>
@@ -216,6 +221,20 @@ tune:
   --dry-run               print the key grid (spec, geometry, thread
                           level, tuning key, candidate count, whether the
                           table already covers it) and exit
+
+lint:
+  static-analysis pass over rust/src (README §Static analysis): exits 1
+  when any error-severity finding is not covered by the baseline
+  --root DIR              repo root to lint (default .)
+  --rules L1,L3           run a subset (default: all of L1-L6)
+  --format text|json      text = file:line diagnostics; json = the
+                          schema-versioned byte-deterministic report
+                          that CI diffs against ci/golden/lint_smoke.out
+  --manifest PATH         layering manifest (default ci/lint/layers.toml)
+  --baseline PATH         suppression file (default ci/lint/baseline.json)
+  --fix-baseline          rewrite the baseline to accept every current
+                          finding (deliberate act; the committed file
+                          stays empty on a clean tree)
 
 journal-merge:
   padst journal-merge shard0.jsonl shard1.jsonl ... -o merged.jsonl
@@ -753,6 +772,66 @@ fn cmd_tune(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(args: &Args) -> Result<()> {
+    use padst::analysis::report::Baseline;
+    use padst::analysis::{run_lint, LintOptions};
+    use padst::util::fs::write_atomic;
+
+    let mut opts = LintOptions::new(PathBuf::from(args.get("root", ".")));
+    if let Some(rules) = args.flags.get("rules") {
+        opts.rules = rules
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+    }
+    if let Some(m) = args.flags.get("manifest") {
+        opts.manifest_path = PathBuf::from(m);
+    }
+    if let Some(b) = args.flags.get("baseline") {
+        opts.baseline_path = PathBuf::from(b);
+    }
+    let outcome = run_lint(&opts)?;
+
+    if args.get("fix-baseline", "false") == "true" {
+        // Snapshot every pre-baseline finding as the new accepted set.
+        let path = if opts.baseline_path.is_absolute() {
+            opts.baseline_path.clone()
+        } else {
+            opts.root.join(&opts.baseline_path)
+        };
+        write_atomic(&path, &Baseline::render(&outcome.all))?;
+        eprintln!(
+            "[padst lint] wrote baseline with {} entr{} to {}",
+            outcome.all.len(),
+            if outcome.all.len() == 1 { "y" } else { "ies" },
+            path.display()
+        );
+        return Ok(());
+    }
+
+    match args.get("format", "text").as_str() {
+        "json" => println!("{}", outcome.report.to_json().to_string_pretty()),
+        "text" => {
+            for d in &outcome.report.diagnostics {
+                println!("{}", d.render());
+            }
+            eprintln!(
+                "[padst lint] rules {} -> {} finding{}, {} suppressed by baseline",
+                outcome.report.rules.join(","),
+                outcome.report.diagnostics.len(),
+                if outcome.report.diagnostics.len() == 1 { "" } else { "s" },
+                outcome.report.suppressed
+            );
+        }
+        f => bail!("bad --format {f:?} (text|json)"),
+    }
+    if outcome.report.failed() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     obs::init_from_env();
@@ -789,6 +868,7 @@ fn main() -> Result<()> {
         "list" => cmd_list(&args),
         "serve" => cmd_serve(&args),
         "tune" => cmd_tune(&args),
+        "lint" => cmd_lint(&args),
         _ => usage(),
     }
 }

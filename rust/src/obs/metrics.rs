@@ -62,10 +62,12 @@ pub struct Counter {
 }
 
 impl Counter {
+    // lint: no-alloc
     pub fn inc(&self) {
         self.v.fetch_add(1, Ordering::Relaxed);
     }
 
+    // lint: no-alloc
     pub fn add(&self, n: u64) {
         self.v.fetch_add(n, Ordering::Relaxed);
     }
@@ -84,10 +86,12 @@ pub struct Gauge {
 }
 
 impl Gauge {
+    // lint: no-alloc
     pub fn set(&self, n: u64) {
         self.v.store(n, Ordering::Relaxed);
     }
 
+    // lint: no-alloc
     pub fn set_max(&self, n: u64) {
         self.v.fetch_max(n, Ordering::Relaxed);
     }
@@ -120,6 +124,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    // lint: no-alloc
     pub fn record(&self, v: u64) {
         self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
@@ -129,6 +134,7 @@ impl Histogram {
     }
 
     /// Record a duration in nanoseconds (saturating past ~584 years).
+    // lint: no-alloc
     pub fn record_ns(&self, d: Duration) {
         self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
     }

@@ -26,11 +26,17 @@ use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::harness::shard::META_KEY;
 use crate::util::json::{self, Json};
 
 use super::metrics::Histogram;
 
+// This module owns the journal record-tag namespace (`harness::shard`
+// re-exports META_KEY): obs must stay importable from harness, not the
+// other way round (lint rule L1).
+
+/// Journal line holding the sweep parameters; a journal only resumes (or
+/// merges with) a sweep whose metadata matches this header exactly.
+pub const META_KEY: &str = "__meta__";
 /// Journal key wrapping heartbeat events: `{"hb": {...}}`.
 pub const HEARTBEAT_KEY: &str = "hb";
 /// Journal key wrapping the planned-grid record: `{"plan": {...}}`.

@@ -116,6 +116,7 @@ impl SinkhornScratch {
 
     /// Project a caller-held matrix in place through the reusable column
     /// buffer (same numerics as [`sinkhorn`], no allocation once warm).
+    // lint: no-alloc
     pub fn project(&mut self, m: &mut [f64], n: usize, iters: usize) {
         assert_eq!(m.len(), n * n);
         self.ensure(n);

@@ -110,6 +110,7 @@ struct PendingInfer {
 
 /// Serve one NDJSON session: `input` to EOF, responses on `out`.  Frame
 /// errors never end the loop; transport errors do.
+// lint: no-panic
 pub fn serve<R: BufRead, W: Write>(
     ctx: &mut SessionCtx,
     input: R,
@@ -236,6 +237,7 @@ pub fn serve_unix_socket(
 
 /// Two-stage decode so error frames can echo the request id whenever the
 /// line was at least JSON.
+// lint: no-panic
 fn decode(line: &str) -> std::result::Result<Request, (Option<String>, String)> {
     let v = Json::parse(line).map_err(|e| (None, format!("bad frame: {e}")))?;
     let id = v.get("id").and_then(Json::as_str).map(str::to_string);
@@ -244,6 +246,7 @@ fn decode(line: &str) -> std::result::Result<Request, (Option<String>, String)> 
 
 /// Execute the held burst as one batched dispatch and answer each pending
 /// request with its own rows, in order.
+// lint: no-panic
 fn flush<W: Write>(
     ctx: &mut SessionCtx,
     pending: &mut Vec<PendingInfer>,
@@ -296,6 +299,7 @@ fn flush<W: Write>(
     Ok(())
 }
 
+// lint: no-panic
 fn per_request_errors(pending: &[PendingInfer], msg: &str) -> Vec<Response> {
     pending
         .iter()
@@ -303,6 +307,7 @@ fn per_request_errors(pending: &[PendingInfer], msg: &str) -> Vec<Response> {
         .collect()
 }
 
+// lint: no-panic
 fn respond<W: Write>(
     out: &mut W,
     stats: &mut ServeStats,

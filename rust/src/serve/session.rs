@@ -345,6 +345,8 @@ impl SessionCtx {
     /// Because every kernel row `y[b][i]` depends only on input row `b`,
     /// the coalesced result is bitwise the concatenation of the parts run
     /// singly — the identity `serve_protocol.rs` sweeps across backends.
+    // lint: no-alloc (grow-only `resize` of the owned scratch is the one
+    // sanctioned exception; warm requests never reach it)
     pub fn run_coalesced(&mut self, site: &str, parts: &[(&[f32], usize)]) -> Result<&[f32]> {
         let si = self.site_index(site)?;
         // Timed span over the whole coalesced dispatch (validation +

@@ -7,14 +7,13 @@
 //! lives here now — the CLI, the five benches, the examples, and the sweep
 //! executor's `--workers` flag all parse through the same helpers.
 //!
-//! The microkernel backend knob (`--backend` / `PADST_BACKEND`) follows
-//! the same pattern.  [`kernels::micro`](crate::kernels::micro) is a leaf
-//! module (std only), so pulling its [`Backend`] type in here keeps the
-//! layering acyclic.
+//! This module is std-only by design: `util` sits at the bottom of the
+//! layering manifest (`ci/lint/layers.toml`) and imports nothing from the
+//! crate.  Knobs that need crate types — the microkernel backend knob and
+//! the bench option bundle — live in [`crate::harness::bench`], which is
+//! allowed to see `kernels`.
 
 use std::path::PathBuf;
-
-use crate::kernels::micro::Backend;
 
 /// The machine's available parallelism (>= 1).
 pub fn available_threads() -> usize {
@@ -40,7 +39,9 @@ pub fn has_flag_in(args: &[String], key: &str) -> bool {
     args.iter().any(|a| a == key)
 }
 
-fn argv() -> Vec<String> {
+/// The process argv as owned strings (cargo bench forwards arguments
+/// after `--` to the bench binary).
+pub fn argv() -> Vec<String> {
     std::env::args().collect()
 }
 
@@ -59,18 +60,9 @@ pub fn thread_knob_in(args: &[String]) -> usize {
     0
 }
 
-/// [`thread_knob_in`] over the process argv (cargo bench forwards
-/// arguments after `--` to the bench binary).
+/// [`thread_knob_in`] over the process argv.
 pub fn thread_knob() -> usize {
     thread_knob_in(&argv())
-}
-
-/// Resolve the microkernel backend from an argv slice: `--backend NAME`
-/// wins, else the `PADST_BACKEND` env var, else Tiled.  Unknown names
-/// warn and fall back (see [`Backend::resolve`]); the `padst` CLI parses
-/// its own flag strictly instead.
-pub fn backend_knob_in(args: &[String]) -> Backend {
-    Backend::resolve(arg_value_in(args, "--backend").as_deref())
 }
 
 /// Where a bench's machine-readable report goes: `PADST_BENCH_DIR` if set,
@@ -80,61 +72,6 @@ pub fn bench_json_path(bench: &str) -> PathBuf {
     match std::env::var("PADST_BENCH_DIR") {
         Ok(d) if !d.is_empty() => PathBuf::from(d).join(file),
         _ => PathBuf::from(file),
-    }
-}
-
-/// Options shared by every bench target, parsed from argv + environment in
-/// one place.
-#[derive(Clone, Debug)]
-pub struct BenchOpts {
-    /// Bench name (the `BENCH_<name>.json` stem).
-    pub bench: String,
-    /// Resolved worker-thread ceiling (>= 1).
-    pub threads: usize,
-    /// Resolved microkernel backend (`--backend` / `PADST_BACKEND`,
-    /// default Tiled).
-    pub backend: Backend,
-    /// Short mode (`--short` or `PADST_BENCH_SHORT=1`): CI-sized sample
-    /// budgets via [`BenchOpts::budget`].
-    pub short: bool,
-    /// Where the JSON report is written (`--json PATH` overrides
-    /// [`bench_json_path`]).
-    pub json_path: PathBuf,
-}
-
-impl BenchOpts {
-    pub fn parse(bench: &str) -> BenchOpts {
-        let args = argv();
-        let short = has_flag_in(&args, "--short")
-            || std::env::var("PADST_BENCH_SHORT")
-                .map(|v| !v.is_empty() && v != "0")
-                .unwrap_or(false);
-        let json_path = arg_value_in(&args, "--json")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| bench_json_path(bench));
-        // An explicit --backend pins the backend for the whole bench run:
-        // the tuning table may still select bit-preserving variants but
-        // never another backend (see `kernels::tune`).
-        if arg_value_in(&args, "--backend").is_some() {
-            crate::kernels::tune::note_backend_pinned();
-        }
-        BenchOpts {
-            bench: bench.to_string(),
-            threads: resolve_threads(thread_knob_in(&args)),
-            backend: backend_knob_in(&args),
-            short,
-            json_path,
-        }
-    }
-
-    /// Scale a call site's `(warmup, min_iters, min_time_s)` budget down
-    /// for short mode; identity otherwise.
-    pub fn budget(&self, warmup: usize, min_iters: usize, min_time_s: f64) -> (usize, usize, f64) {
-        if self.short {
-            (warmup.min(1), min_iters.min(2), min_time_s.min(0.02))
-        } else {
-            (warmup, min_iters, min_time_s)
-        }
     }
 }
 
@@ -160,29 +97,5 @@ mod tests {
     fn resolve_zero_is_auto() {
         assert_eq!(resolve_threads(0), available_threads());
         assert_eq!(resolve_threads(5), 5);
-    }
-
-    #[test]
-    fn backend_knob_explicit_flag_wins() {
-        let a = args(&["bench", "--backend", "scalar"]);
-        assert_eq!(backend_knob_in(&a), Backend::Scalar);
-        // Unknown names warn and fall back instead of erroring (benches
-        // should not die over a knob).
-        let bad = args(&["bench", "--backend", "gpu"]);
-        assert_eq!(backend_knob_in(&bad), Backend::Tiled);
-    }
-
-    #[test]
-    fn short_budget_caps() {
-        let mut o = BenchOpts {
-            bench: "x".into(),
-            threads: 1,
-            backend: Backend::Tiled,
-            short: true,
-            json_path: PathBuf::from("BENCH_x.json"),
-        };
-        assert_eq!(o.budget(2, 5, 0.3), (1, 2, 0.02));
-        o.short = false;
-        assert_eq!(o.budget(2, 5, 0.3), (2, 5, 0.3));
     }
 }

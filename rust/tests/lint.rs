@@ -1,0 +1,397 @@
+//! `padst lint` suite: every rule exercised on fixture trees (violation
+//! detected; justified/annotated site passes), baseline suppression, JSON
+//! round-trip and byte-determinism — plus the self-host checks: the real
+//! repo tree is clean under all rules and its report matches the CI
+//! golden byte for byte.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use padst::analysis::report::{Baseline, LintReport, Severity};
+use padst::analysis::{run_lint, LintOptions};
+use padst::util::json::Json;
+
+/// A fixture repo under the OS temp dir: `rust/src/` + manifest +
+/// baseline paths laid out exactly like the real tree.
+struct Fixture {
+    root: PathBuf,
+}
+
+impl Fixture {
+    fn new(tag: &str) -> Fixture {
+        let root =
+            std::env::temp_dir().join(format!("padst_lint_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join("rust/src")).unwrap();
+        Fixture { root }
+    }
+
+    fn write(&self, rel: &str, contents: &str) -> &Fixture {
+        let p = self.root.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(p, contents).unwrap();
+        self
+    }
+
+    fn opts(&self, rules: &[&str]) -> LintOptions {
+        let mut o = LintOptions::new(self.root.clone());
+        o.rules = rules.iter().map(|r| r.to_string()).collect::<BTreeSet<_>>();
+        o
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+const MANIFEST: &str = r#"
+[modules]
+util = []
+kernels_micro = []
+kernels = ["kernels_micro", "util"]
+perm = ["kernels_micro", "util"]
+serve = ["kernels", "perm", "util"]
+lib = []
+main = ["*"]
+
+[split]
+"kernels::micro" = "kernels_micro"
+"#;
+
+fn lib_ok() -> &'static str {
+    "#![forbid(unsafe_code)]\npub mod util;\n"
+}
+
+// ------------------------------------------------------------------- L1
+
+#[test]
+fn l1_flags_upward_edge_and_passes_allowed_ones() {
+    let fx = Fixture::new("l1");
+    fx.write("ci/lint/layers.toml", MANIFEST)
+        .write("rust/src/lib.rs", lib_ok())
+        .write("rust/src/util/mod.rs", "use crate::kernels::tune::Choice;\n")
+        .write("rust/src/perm/mod.rs", "use crate::kernels::micro::Backend;\n")
+        .write("rust/src/serve/mod.rs", "use crate::kernels::run_plan;\n");
+    let out = run_lint(&fx.opts(&["L1"])).unwrap();
+    // util -> kernels violates; perm -> kernels_micro (split) and
+    // serve -> kernels are declared legal.
+    assert_eq!(out.report.diagnostics.len(), 1, "{:?}", out.report.diagnostics);
+    let d = &out.report.diagnostics[0];
+    assert_eq!(d.rule, "L1");
+    assert_eq!(d.file, "rust/src/util/mod.rs");
+    assert_eq!(d.line, 1);
+    assert!(d.msg.contains("util"), "{}", d.msg);
+    assert!(d.msg.contains("kernels"), "{}", d.msg);
+}
+
+#[test]
+fn l1_ignores_doc_comments_strings_and_test_regions() {
+    let fx = Fixture::new("l1_skip");
+    fx.write("ci/lint/layers.toml", MANIFEST).write("rust/src/lib.rs", lib_ok()).write(
+        "rust/src/util/mod.rs",
+        concat!(
+            "//! See [`crate::kernels::tune`] for the tuner.\n",
+            "pub fn path() -> &'static str { \"crate::kernels::tune\" }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    use crate::kernels::micro::Backend;\n",
+            "    fn t() { let _ = Backend::Scalar; }\n",
+            "}\n",
+        ),
+    );
+    let out = run_lint(&fx.opts(&["L1"])).unwrap();
+    assert!(out.report.diagnostics.is_empty(), "{:?}", out.report.diagnostics);
+}
+
+#[test]
+fn l1_flags_undeclared_module() {
+    let fx = Fixture::new("l1_undeclared");
+    fx.write("ci/lint/layers.toml", MANIFEST)
+        .write("rust/src/lib.rs", lib_ok())
+        .write("rust/src/mystery.rs", "pub fn f() {}\n");
+    let out = run_lint(&fx.opts(&["L1"])).unwrap();
+    assert_eq!(out.report.diagnostics.len(), 1);
+    assert!(out.report.diagnostics[0].msg.contains("mystery"));
+}
+
+#[test]
+fn l1_without_manifest_is_an_error() {
+    let fx = Fixture::new("l1_nomanifest");
+    fx.write("rust/src/lib.rs", lib_ok());
+    assert!(run_lint(&fx.opts(&["L1"])).is_err());
+    // ...but rules that don't need the manifest still run.
+    assert!(run_lint(&fx.opts(&["L6"])).is_ok());
+}
+
+// ------------------------------------------------------------------- L2
+
+#[test]
+fn l2_flags_allocation_in_annotated_fn_only() {
+    let fx = Fixture::new("l2");
+    fx.write("ci/lint/layers.toml", MANIFEST).write("rust/src/lib.rs", lib_ok()).write(
+        "rust/src/util/mod.rs",
+        concat!(
+            "// lint: no-alloc\n",
+            "pub fn hot(v: &mut Vec<u8>, s: &[u8]) {\n",
+            "    v.push(1);\n",
+            "    let _ = format!(\"x\");\n",
+            "    let _: Vec<u8> = s.iter().copied().collect();\n",
+            "    let _ = Box::new(3);\n",
+            "}\n",
+            "pub fn cold() -> Vec<u8> {\n",
+            "    let mut v = Vec::new();\n",
+            "    v.push(1);\n",
+            "    v\n",
+            "}\n",
+        ),
+    );
+    let out = run_lint(&fx.opts(&["L2"])).unwrap();
+    // push, format!, collect, Box::new — all inside `hot`; `cold` is free
+    // to allocate.
+    assert_eq!(out.report.diagnostics.len(), 4, "{:?}", out.report.diagnostics);
+    assert!(out.report.diagnostics.iter().all(|d| d.msg.contains("hot")));
+}
+
+#[test]
+fn l2_clean_annotated_fn_and_inline_allow_pass() {
+    let fx = Fixture::new("l2_ok");
+    fx.write("ci/lint/layers.toml", MANIFEST).write("rust/src/lib.rs", lib_ok()).write(
+        "rust/src/util/mod.rs",
+        concat!(
+            "// lint: no-alloc\n",
+            "pub fn hot(y: &mut [f32], x: &[f32]) {\n",
+            "    y.copy_from_slice(x);\n",
+            "    // lint: allow(L2) startup-only scratch growth\n",
+            "    let _ = Vec::<u8>::with_capacity(4);\n",
+            "}\n",
+        ),
+    );
+    let out = run_lint(&fx.opts(&["L2"])).unwrap();
+    assert!(out.report.diagnostics.is_empty(), "{:?}", out.report.diagnostics);
+}
+
+// ------------------------------------------------------------------- L3
+
+#[test]
+fn l3_requires_ordering_comment_on_strict_orderings() {
+    let fx = Fixture::new("l3");
+    fx.write("ci/lint/layers.toml", MANIFEST).write("rust/src/lib.rs", lib_ok()).write(
+        "rust/src/util/mod.rs",
+        concat!(
+            "use std::sync::atomic::{AtomicUsize, Ordering};\n",
+            "pub fn f(a: &AtomicUsize) -> usize {\n",
+            "    a.store(1, Ordering::SeqCst);\n",
+            "    // ordering: Acquire pairs with the publisher's Release.\n",
+            "    let n = a.load(Ordering::Acquire);\n",
+            "    n + a.load(Ordering::Relaxed)\n",
+            "}\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    use super::*;\n",
+            "    fn t(a: &AtomicUsize) { a.store(0, Ordering::SeqCst); }\n",
+            "}\n",
+        ),
+    );
+    let out = run_lint(&fx.opts(&["L3"])).unwrap();
+    // Only the bare SeqCst store gates: the Acquire is justified, Relaxed
+    // is exempt, and the test-region SeqCst is skipped.
+    assert_eq!(out.report.diagnostics.len(), 1, "{:?}", out.report.diagnostics);
+    assert_eq!(out.report.diagnostics[0].line, 3);
+    assert!(out.report.diagnostics[0].msg.contains("SeqCst"));
+}
+
+// ------------------------------------------------------------------- L4
+
+#[test]
+fn l4_flags_panics_in_annotated_fn() {
+    let fx = Fixture::new("l4");
+    fx.write("ci/lint/layers.toml", MANIFEST).write("rust/src/lib.rs", lib_ok()).write(
+        "rust/src/serve/mod.rs",
+        concat!(
+            "// lint: no-panic\n",
+            "pub fn frame_loop(x: Option<u32>) -> u32 {\n",
+            "    if x.is_none() { panic!(\"boom\") }\n",
+            "    x.unwrap()\n",
+            "}\n",
+            "pub fn helper(x: Option<u32>) -> u32 { x.unwrap() }\n",
+        ),
+    );
+    let out = run_lint(&fx.opts(&["L4"])).unwrap();
+    assert_eq!(out.report.diagnostics.len(), 2, "{:?}", out.report.diagnostics);
+    assert!(out.report.diagnostics.iter().all(|d| d.msg.contains("frame_loop")));
+}
+
+#[test]
+fn l4_poison_idiom_passes() {
+    let fx = Fixture::new("l4_ok");
+    fx.write("ci/lint/layers.toml", MANIFEST).write("rust/src/lib.rs", lib_ok()).write(
+        "rust/src/serve/mod.rs",
+        concat!(
+            "use std::sync::Mutex;\n",
+            "// lint: no-panic\n",
+            "pub fn frame_loop(m: &Mutex<u32>) -> u32 {\n",
+            "    *m.lock().unwrap_or_else(|p| p.into_inner())\n",
+            "}\n",
+        ),
+    );
+    let out = run_lint(&fx.opts(&["L4"])).unwrap();
+    assert!(out.report.diagnostics.is_empty(), "{:?}", out.report.diagnostics);
+}
+
+// ------------------------------------------------------------------- L5
+
+#[test]
+fn l5_flags_hardcoded_wire_version_and_duplicate_const() {
+    let fx = Fixture::new("l5");
+    fx.write("ci/lint/layers.toml", MANIFEST).write("rust/src/lib.rs", lib_ok()).write(
+        "rust/src/util/mod.rs",
+        concat!(
+            "pub const TUNE_SCHEMA_VERSION: u32 = 1;\n",
+            "pub fn write(o: &mut Vec<(String, u32)>) {\n",
+            "    o.push((\"tune_schema\".to_string(), 1));\n",
+            "}\n",
+        ),
+    ).write(
+        "rust/src/kernels/mod.rs",
+        "pub const TUNE_SCHEMA_VERSION: u32 = 1;\n",
+    );
+    let out = run_lint(&fx.opts(&["L5"])).unwrap();
+    let msgs: Vec<&str> = out.report.diagnostics.iter().map(|d| d.msg.as_str()).collect();
+    assert_eq!(out.report.diagnostics.len(), 2, "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("hardcoded")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("more than once")), "{msgs:?}");
+}
+
+#[test]
+fn l5_const_use_and_readme_agreement_pass() {
+    let fx = Fixture::new("l5_ok");
+    fx.write("ci/lint/layers.toml", MANIFEST)
+        .write("rust/src/lib.rs", lib_ok())
+        .write(
+            "rust/src/util/mod.rs",
+            concat!(
+                "pub const TUNE_SCHEMA_VERSION: u32 = 3;\n",
+                "pub fn write(o: &mut Vec<(String, u32)>) {\n",
+                "    o.push((\"tune_schema\".to_string(), TUNE_SCHEMA_VERSION));\n",
+                "}\n",
+                "pub fn read(v: u32) -> bool { v == TUNE_SCHEMA_VERSION }\n",
+            ),
+        )
+        .write("README.md", "| `tune_schema` | 3 | tuning table |\n");
+    let out = run_lint(&fx.opts(&["L5"])).unwrap();
+    assert!(out.report.diagnostics.is_empty(), "{:?}", out.report.diagnostics);
+}
+
+#[test]
+fn l5_readme_disagreement_gates() {
+    let fx = Fixture::new("l5_readme");
+    fx.write("ci/lint/layers.toml", MANIFEST)
+        .write("rust/src/lib.rs", lib_ok())
+        .write("rust/src/util/mod.rs", "pub const TUNE_SCHEMA_VERSION: u32 = 2;\n")
+        .write("README.md", "The table stamps `tune_schema`: 1 today.\n");
+    let out = run_lint(&fx.opts(&["L5"])).unwrap();
+    assert_eq!(out.report.diagnostics.len(), 1, "{:?}", out.report.diagnostics);
+    assert_eq!(out.report.diagnostics[0].file, "README.md");
+    assert!(out.report.diagnostics[0].msg.contains("tune_schema"));
+}
+
+// ------------------------------------------------------------------- L6
+
+#[test]
+fn l6_missing_forbid_unsafe_gates() {
+    let fx = Fixture::new("l6");
+    fx.write("ci/lint/layers.toml", MANIFEST)
+        .write("rust/src/lib.rs", "pub mod util;\n");
+    let out = run_lint(&fx.opts(&["L6"])).unwrap();
+    assert_eq!(out.report.diagnostics.len(), 1);
+    assert!(out.report.diagnostics[0].msg.contains("forbid(unsafe_code)"));
+
+    let fx2 = Fixture::new("l6_ok");
+    fx2.write("ci/lint/layers.toml", MANIFEST).write("rust/src/lib.rs", lib_ok());
+    let out2 = run_lint(&fx2.opts(&["L6"])).unwrap();
+    assert!(out2.report.diagnostics.is_empty());
+}
+
+// ------------------------------------------- baseline, report, determinism
+
+#[test]
+fn baseline_suppresses_accepted_findings() {
+    let fx = Fixture::new("baseline");
+    fx.write("ci/lint/layers.toml", MANIFEST)
+        .write("rust/src/lib.rs", lib_ok())
+        .write("rust/src/util/mod.rs", "use crate::kernels::tune::Choice;\n");
+    // First run: one L1 finding, empty (missing) baseline.
+    let out = run_lint(&fx.opts(&["L1"])).unwrap();
+    assert_eq!(out.report.diagnostics.len(), 1);
+    assert!(out.report.failed());
+    // Accept it, exactly as --fix-baseline does.
+    fx.write("ci/lint/baseline.json", &Baseline::render(&out.all));
+    let out2 = run_lint(&fx.opts(&["L1"])).unwrap();
+    assert!(out2.report.diagnostics.is_empty());
+    assert_eq!(out2.report.suppressed, 1);
+    assert!(!out2.report.failed());
+    // `all` still carries the finding for the next --fix-baseline.
+    assert_eq!(out2.all.len(), 1);
+}
+
+#[test]
+fn report_json_round_trips_and_is_byte_deterministic() {
+    let fx = Fixture::new("determinism");
+    fx.write("ci/lint/layers.toml", MANIFEST)
+        .write("rust/src/lib.rs", lib_ok())
+        .write("rust/src/util/mod.rs", "use crate::kernels::tune::Choice;\n")
+        .write("rust/src/perm/mod.rs", "x.store(1, Ordering::SeqCst);\n");
+    let run = || {
+        let out = run_lint(&fx.opts(&["L1", "L3", "L6"])).unwrap();
+        out.report.to_json().to_string_pretty()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a, b, "two runs over the same tree must serialise identically");
+    let re = LintReport::parse(&Json::parse(&a).unwrap()).unwrap();
+    assert_eq!(re.diagnostics.len(), 2);
+    assert!(re.diagnostics.iter().all(|d| d.severity == Severity::Error));
+    // Canonical order: sorted by (file, line, rule, msg).
+    let files: Vec<&str> = re.diagnostics.iter().map(|d| d.file.as_str()).collect();
+    assert_eq!(files, vec!["rust/src/perm/mod.rs", "rust/src/util/mod.rs"]);
+}
+
+// ------------------------------------------------------- self-host checks
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR = <repo>/rust
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+/// The real tree is clean under every rule with the committed (empty)
+/// baseline — satellite guarantee of the lint PR, enforced forever after.
+#[test]
+fn repo_tree_is_clean() {
+    let opts = LintOptions::new(repo_root());
+    let out = run_lint(&opts).unwrap();
+    let rendered: Vec<String> =
+        out.report.diagnostics.iter().map(|d| d.render()).collect();
+    assert!(rendered.is_empty(), "repo lint findings:\n{}", rendered.join("\n"));
+    assert_eq!(out.report.suppressed, 0, "committed baseline must stay empty");
+}
+
+/// The repo report matches the CI golden byte for byte (the same file the
+/// blocking `lint` CI job diffs).
+#[test]
+fn repo_report_matches_ci_golden() {
+    let root = repo_root();
+    let out = run_lint(&LintOptions::new(root.clone())).unwrap();
+    let mut text = out.report.to_json().to_string_pretty();
+    text.push('\n');
+    let golden = std::fs::read_to_string(root.join("ci/golden/lint_smoke.out"))
+        .expect("ci/golden/lint_smoke.out");
+    assert_eq!(text, golden);
+}
+
+/// The committed baseline file parses and is empty.
+#[test]
+fn committed_baseline_is_empty() {
+    let b = Baseline::load(&repo_root().join("ci/lint/baseline.json")).unwrap();
+    assert!(b.is_empty());
+}
