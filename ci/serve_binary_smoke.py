@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Binary-wire smoke for `padst serve` (protocol v2), stdlib only.
+
+Drives one stdin/stdout session of the synthetic diag:4 8x8 node with a
+mixed text/binary script and prints a canonical transcript for `diff`
+against ci/golden/serve_binary_smoke.out:
+
+  1. text  hello wire=binary  -> text ack (acks are always NDJSON)
+  2. binary infer x=[1]*8     -> binary response y=[4]*8 (mirrors format)
+  3. text  infer x=[2]*8      -> binary response y=[8]*8 (hello preference)
+  4. text  hello wire=ndjson  -> text ack, preference cleared
+  5. text  infer x=[1]*8      -> text response y=[4]*8
+
+All-ones weights on diag:4 make every activation an exact small integer,
+so the transcript is stable across platforms, backends and threads.
+
+Usage: serve_binary_smoke.py /path/to/padst
+"""
+
+import io
+import struct
+import subprocess
+import sys
+
+MAGIC = b"\xbfPA2"
+KIND_REQUEST, KIND_RESPONSE = 1, 2
+
+
+def encode_infer(rid, site, batch, x, more=False):
+    body = struct.pack("<BB", KIND_REQUEST, 1 if more else 0)
+    body += struct.pack("<H", len(rid)) + rid.encode()
+    body += struct.pack("<H", len(site)) + site.encode()
+    body += struct.pack("<II", batch, len(x))
+    body += struct.pack("<%df" % len(x), *x)
+    return MAGIC + struct.pack("<I", len(body)) + body
+
+
+def read_frames(stream):
+    """Yield ('TEXT', line) / ('BIN', decoded) off a mixed response stream."""
+    while True:
+        b = stream.read(1)
+        if not b:
+            return
+        if b in (b"\n", b"\r"):
+            continue
+        if b == MAGIC[:1]:
+            rest = stream.read(3)
+            assert b + rest == MAGIC, "bad magic %r" % (b + rest)
+            (blen,) = struct.unpack("<I", stream.read(4))
+            body = stream.read(blen)
+            assert len(body) == blen, "truncated body"
+            yield ("BIN", decode_body(body))
+        else:
+            line = b + stream.readline()
+            yield ("TEXT", line.decode().rstrip("\n"))
+
+
+def decode_body(body):
+    kind, _flags = struct.unpack_from("<BB", body, 0)
+    assert kind == KIND_RESPONSE, "unexpected kind %d" % kind
+    off = 2
+    (idlen,) = struct.unpack_from("<H", body, off)
+    off += 2
+    rid = body[off : off + idlen].decode()
+    off += idlen
+    batch, nvals = struct.unpack_from("<II", body, off)
+    off += 8
+    y = struct.unpack_from("<%df" % nvals, body, off)
+    assert off + 4 * nvals == len(body), "trailing bytes"
+    return rid, batch, y
+
+
+def main():
+    padst = sys.argv[1] if len(sys.argv) > 1 else "./target/release/padst"
+    script = io.BytesIO()
+    script.write(b'{"v":2,"op":"hello","id":"h","wire":"binary"}\n')
+    script.write(encode_infer("p", "demo", 1, [1.0] * 8))
+    script.write(b'{"v":2,"op":"infer","id":"q","site":"demo","batch":1,"x":[2,2,2,2,2,2,2,2]}\n')
+    script.write(b'{"v":2,"op":"hello","id":"h2","wire":"ndjson"}\n')
+    script.write(b'{"v":2,"op":"infer","id":"r","site":"demo","batch":1,"x":[1,1,1,1,1,1,1,1]}\n')
+    out = subprocess.run(
+        [padst, "serve", "--synthetic", "diag:4", "--rows", "8", "--cols", "8", "--threads", "2"],
+        input=script.getvalue(),
+        stdout=subprocess.PIPE,
+        timeout=120,
+        check=True,
+    ).stdout
+    for kind, frame in read_frames(io.BufferedReader(io.BytesIO(out))):
+        if kind == "TEXT":
+            print("TEXT %s" % frame)
+        else:
+            rid, batch, y = frame
+            vals = ",".join("%g" % v for v in y)
+            print("BIN id=%s batch=%d y=[%s]" % (rid, batch, vals))
+
+
+if __name__ == "__main__":
+    main()

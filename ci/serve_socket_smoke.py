@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Two-connection Unix-socket smoke for `padst serve`, stdlib only.
+
+Starts the synthetic diag:4 8x8 node on a Unix socket with
+`--max-conns 2`, opens two concurrent connections, interleaves text
+infer frames across them (plus one binary frame on connection B), and
+prints connection A's transcript then connection B's for `diff` against
+ci/golden/serve_socket_smoke.out.
+
+Each connection's own responses arrive in its own request order no
+matter how the two workers interleave on the kernel layer, so the
+per-connection transcripts — and the A-then-B print order — are
+deterministic.  All-ones weights on diag:4 keep every activation an
+exact small integer (x=[k]*8 -> y=[4k]*8), stable across platforms,
+backends and thread counts.
+
+Usage: serve_socket_smoke.py /path/to/padst
+"""
+
+import json
+import os
+import socket
+import struct
+import subprocess
+import sys
+import tempfile
+import time
+
+MAGIC = b"\xbfPA2"
+KIND_REQUEST, KIND_RESPONSE = 1, 2
+
+
+def infer_line(rid, x):
+    req = {"v": 2, "op": "infer", "id": rid, "site": "demo", "batch": 1, "x": x}
+    return (json.dumps(req) + "\n").encode()
+
+
+def encode_infer(rid, site, batch, x):
+    body = struct.pack("<BB", KIND_REQUEST, 0)
+    body += struct.pack("<H", len(rid)) + rid.encode()
+    body += struct.pack("<H", len(site)) + site.encode()
+    body += struct.pack("<II", batch, len(x))
+    body += struct.pack("<%df" % len(x), *x)
+    return MAGIC + struct.pack("<I", len(body)) + body
+
+
+def recv_exact(sock, n):
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        assert chunk, "connection closed mid-frame"
+        buf += chunk
+    return buf
+
+
+def recv_text(sock):
+    line = b""
+    while not line.endswith(b"\n"):
+        line += recv_exact(sock, 1)
+    return line.decode().rstrip("\n")
+
+
+def recv_binary(sock):
+    assert recv_exact(sock, 4) == MAGIC, "bad magic"
+    (blen,) = struct.unpack("<I", recv_exact(sock, 4))
+    body = recv_exact(sock, blen)
+    kind, _flags = struct.unpack_from("<BB", body, 0)
+    assert kind == KIND_RESPONSE, "unexpected kind %d" % kind
+    off = 2
+    (idlen,) = struct.unpack_from("<H", body, off)
+    off += 2
+    rid = body[off : off + idlen].decode()
+    off += idlen
+    batch, nvals = struct.unpack_from("<II", body, off)
+    off += 8
+    y = struct.unpack_from("<%df" % nvals, body, off)
+    vals = ",".join("%g" % v for v in y)
+    return "BIN id=%s batch=%d y=[%s]" % (rid, batch, vals)
+
+
+def connect(path, deadline=60.0):
+    t0 = time.time()
+    while True:
+        try:
+            s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+            s.connect(path)
+            return s
+        except OSError:
+            s.close()
+            if time.time() - t0 > deadline:
+                raise
+            time.sleep(0.05)
+
+
+def main():
+    padst = sys.argv[1] if len(sys.argv) > 1 else "./target/release/padst"
+    sock_path = os.path.join(tempfile.mkdtemp(prefix="padst_smoke_"), "serve.sock")
+    node = subprocess.Popen(
+        [padst, "serve", "--synthetic", "diag:4", "--rows", "8", "--cols", "8",
+         "--threads", "2", "--socket", sock_path, "--max-conns", "2"],
+    )
+    try:
+        a = connect(sock_path)
+        b = connect(sock_path)
+        transcript_a, transcript_b = [], []
+        # Interleave across the two live connections; each answer is read
+        # before the next frame goes out, so both workers are provably
+        # serving at once (not queued behind each other).
+        a.sendall(infer_line("a1", [1] * 8))
+        transcript_a.append(recv_text(a))
+        b.sendall(infer_line("b1", [2] * 8))
+        transcript_b.append(recv_text(b))
+        a.sendall(infer_line("a2", [3] * 8))
+        transcript_a.append(recv_text(a))
+        b.sendall(infer_line("b2", [4] * 8))
+        transcript_b.append(recv_text(b))
+        # Binary frames work over the socket too, mirrored per frame.
+        b.sendall(encode_infer("b3", "demo", 1, [1.0] * 8))
+        transcript_b.append(recv_binary(b))
+        a.close()
+        b.close()
+        for line in transcript_a:
+            print("A %s" % line)
+        for line in transcript_b:
+            print("B %s" % line)
+    finally:
+        node.terminate()
+        node.wait(timeout=30)
+
+
+if __name__ == "__main__":
+    main()

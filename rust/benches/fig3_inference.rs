@@ -36,7 +36,7 @@ use padst::kernels::tune::{self, TuneBudget};
 use padst::kernels::{dense_matmul_blocked_mt_with, run_plan_mt, run_plan_mt_tuned, shuffle_rows};
 use padst::models::PAPER_LAYERS;
 use padst::perm::model::resolve_perm;
-use padst::serve::SessionCtx;
+use padst::serve::{decode_binary_body, encode_binary_infer_response, Response, SessionCtx};
 use padst::sparsity::pattern::resolve_pattern;
 use padst::tensor::Tensor;
 use padst::harness::bench::BenchOpts;
@@ -305,6 +305,64 @@ fn main() -> anyhow::Result<()> {
                 .with_pattern("diag")
                 .with_tuned(true)
                 .with_metric("speedup_tuned_vs_default", speedup),
+        );
+    }
+
+    // ----- Wire formats (padst serve protocol v2): NDJSON vs binary -----
+    // One infer response worth of activations at the headline width
+    // (cols=768 x BATCH=64 = 49152 f32 values), round-tripped through
+    // both wire formats: NDJSON text (serialize + parse) vs the v2
+    // length-prefixed binary frame (encode + decode, `to_bits`-exact).
+    // `bytes_per_value` is the payload efficiency the binary wire buys
+    // (4 B payload + fixed header vs ~13-20 text chars per value); the
+    // speedup is informational (CI treats timing variance as warn-only).
+    {
+        let cols = 768usize;
+        let mut rng = Rng::new(1);
+        let y: Vec<f32> = (0..BATCH * cols).map(|_| rng.normal()).collect();
+        let nvals = y.len() as f64;
+        let resp = Response::Infer { id: "w".to_string(), batch: BATCH, y: y.clone() };
+
+        let (bw, bi, bt) = opts.budget(2, 5, 0.25);
+        let text_line = resp.to_line();
+        let t_text = bench(
+            || {
+                let line = resp.to_line();
+                let parsed = Response::parse_line(&line).unwrap();
+                std::hint::black_box(parsed);
+            },
+            bw,
+            bi,
+            bt,
+        );
+        let bin_frame = encode_binary_infer_response("w", BATCH, &y)?;
+        let t_bin = bench(
+            || {
+                let frame = encode_binary_infer_response("w", BATCH, &y).unwrap();
+                let body = decode_binary_body(&frame[8..]).unwrap();
+                std::hint::black_box(body);
+            },
+            bw,
+            bi,
+            bt,
+        );
+        let text_bpv = (text_line.len() + 1) as f64 / nvals; // +1: the newline delimiter
+        let bin_bpv = bin_frame.len() as f64 / nvals;
+        let speedup = t_text.p50 / t_bin.p50;
+        println!(
+            "\n## wire formats on {BATCH}x{cols} activations: ndjson {} ({text_bpv:.1} B/val) vs \
+             binary {} ({bin_bpv:.2} B/val, {speedup:.2}x)",
+            fmt_time(t_text.p50),
+            fmt_time(t_bin.p50),
+        );
+        report.push(
+            BenchRecord::from_summary("wire", "ndjson round-trip", &t_text)
+                .with_metric("bytes_per_value", text_bpv),
+        );
+        report.push(
+            BenchRecord::from_summary("wire", "binary round-trip", &t_bin)
+                .with_metric("bytes_per_value", bin_bpv)
+                .with_metric("speedup_binary_vs_ndjson", speedup),
         );
     }
 

@@ -393,11 +393,12 @@ fn l3_atomic_ordering(ctx: &LintCtx) -> Vec<Diagnostic> {
 /// declaration (exactly one const), usage (no integer literal parked
 /// next to the wire key in place of the const), documentation (README
 /// mentions of `key`:N agree with the const).
-const SCHEMAS: [(&str, &str); 4] = [
+const SCHEMAS: [(&str, &str); 5] = [
     ("OBS_SCHEMA_VERSION", "obs_schema"),
     ("SCHEMA_VERSION", "schema_version"),
     ("TUNE_SCHEMA_VERSION", "tune_schema"),
     ("LINT_SCHEMA_VERSION", "lint_schema"),
+    ("PROTOCOL_VERSION", "v"),
 ];
 
 /// Tokens scanned ahead of a wire-key string literal before giving up;

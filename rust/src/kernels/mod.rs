@@ -178,6 +178,15 @@ fn dispatch_plan_choice(
     }
 }
 
+/// Split a global kernel-thread budget across `conns` concurrent serve
+/// connections, floor one thread each.  The split is bit-safe: the `_mt`
+/// drivers are bit-identical at any thread count, so dividing (or
+/// oversubscribing, when `total < conns`) never changes results — only
+/// throughput.
+pub fn threads_per_conn(total: usize, conns: usize) -> usize {
+    (resolve_threads(total) / conns.max(1)).max(1)
+}
+
 /// [`run_plan`] on the scoped-thread `_mt` drivers, keyed in the tuning
 /// table at the resolved thread count.
 pub fn run_plan_mt(

@@ -52,7 +52,7 @@ use padst::nlr;
 use padst::obs;
 use padst::perm::model::{perm_registry, resolve_perm};
 use padst::runtime::Runtime;
-use padst::serve::{NodeOpts, SessionCtx};
+use padst::serve::{NodeOpts, SessionCtx, SocketOpts};
 use padst::sparsity::pattern::{registry, resolve_pattern, KernelPlan, Structure};
 use padst::util::Rng;
 
@@ -187,8 +187,10 @@ sweep:
 serve:
   long-running batched inference node: loads a checkpoint once (every
   layer's kernel plan compiled, hard perms decoded at startup), then
-  answers newline-delimited JSON frames on stdin until EOF — protocol
-  in README §Serving, suite in tests/serve_protocol.rs
+  answers request frames on stdin until EOF — NDJSON control frames
+  plus, since protocol v2, length-prefixed binary activation frames
+  (~4 bytes/value, hello-negotiated) — protocol in README §Serving,
+  suite in tests/serve_protocol.rs + tests/serve_concurrent.rs
   --checkpoint PATH       trained-state .tnz to serve
   --structure SPEC        pattern spec the run trained with (default diag)
   --perm SPEC             perm spec the run trained with (default learned)
@@ -197,7 +199,12 @@ serve:
   --rows 8 --cols 8 --density 0.5   synthetic site geometry
   --max-batch 32          coalescing cap in rows (default 4 panels x 8 lanes)
   --socket PATH           accept connections on a Unix socket instead of
-                          stdin (sequential; unix only)
+                          stdin (concurrent; unix only)
+  --max-conns 4           concurrent connection cap for --socket; the
+                          --threads budget is split across connections
+  --watch-checkpoint      hot-reload the checkpoint when its mtime
+                          changes (plans recompile once, shared; every
+                          live connection picks them up next burst)
   --tune-table PATH       install a tuning table at startup (else the
                           PADST_TUNE_TABLE env); each site's dispatch
                           variant is resolved once at plan-compile time
@@ -611,10 +618,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     let opts = NodeOpts { max_batch: args.get_usize("max-batch", NodeOpts::default().max_batch)? };
+    let sopts = SocketOpts {
+        max_conns: args.get_usize("max-conns", SocketOpts::default().max_conns)?,
+        watch_checkpoint: args.flags.contains_key("watch-checkpoint"),
+        ..SocketOpts::default()
+    };
     if let Some(sock) = args.flags.get("socket") {
         #[cfg(unix)]
         {
-            return padst::serve::serve_unix_socket(&mut ctx, Path::new(sock), &opts);
+            return padst::serve::serve_unix_socket(&ctx, Path::new(sock), &opts, &sopts);
         }
         #[cfg(not(unix))]
         {
@@ -623,7 +635,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let stdin = std::io::stdin();
     let mut stdout = std::io::stdout().lock();
-    let stats = padst::serve::serve(&mut ctx, stdin.lock(), &mut stdout, &opts)?;
+    let stats = if sopts.watch_checkpoint {
+        padst::serve::serve_with_watch(
+            &mut ctx,
+            stdin.lock(),
+            &mut stdout,
+            &opts,
+            sopts.watch_interval_ms,
+        )?
+    } else {
+        padst::serve::serve(&mut ctx, stdin.lock(), &mut stdout, &opts)?
+    };
     eprintln!(
         "[padst serve] eof: {} requests -> {} responses ({} errors), {} batches (widest {})",
         stats.requests, stats.responses, stats.errors, stats.batches, stats.widest_batch

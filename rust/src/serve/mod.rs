@@ -1,30 +1,43 @@
-//! `padst serve` — a batched sparse-inference node (ISSUE 6).
+//! `padst serve` — a batched sparse-inference node (ISSUE 6, made
+//! concurrent + binary-wire in ISSUE 10).
 //!
 //! The paper's headline efficiency claim is inference-side (structure +
 //! learned permutation infers up to 2.9x faster than unstructured DST);
 //! this layer is where a trained checkpoint actually serves.  Three
 //! pieces, layered strictly on top of the existing subsystems:
 //!
-//! * [`protocol`] — the NDJSON wire format ([`Request`]/[`Response`]),
-//!   versioned frames, structured error responses.  Pure codec; knows
-//!   nothing about kernels.
-//! * [`session`] — [`SessionCtx`], the per-session plan/scratch cache: a
-//!   checkpoint is loaded ONCE, Hard-state perms decoded and every
-//!   layer's `KernelPlan` compiled at startup; requests then reuse the
-//!   compiled plans and a grow-only activation scratch with zero warm
-//!   allocations (the `SinkhornScratch` pattern, one layer up).
+//! * [`protocol`] — the wire formats: NDJSON control frames
+//!   ([`Request`]/[`Response`], versioned, structured error responses)
+//!   and, since protocol v2, length-prefixed binary activation frames
+//!   (~4 bytes/value instead of ~13, `to_bits`-exact) negotiated via a
+//!   `hello` handshake and auto-detected per frame by the first byte.
+//!   Pure codec; knows nothing about kernels.
+//! * [`session`] — the per-checkpoint plan cache, split for concurrency:
+//!   [`session::SharedState`] loads a checkpoint ONCE (Hard-state perms
+//!   decoded, every layer's `KernelPlan` compiled) behind a read-write
+//!   lock, and each connection holds a [`SessionCtx`] view with private
+//!   grow-only activation scratch — zero warm allocations per
+//!   connection (the `SinkhornScratch` pattern, one layer up).
+//!   [`session::CheckpointWatch`] hot-reloads the shared plans on
+//!   checkpoint mtime change (`--watch-checkpoint`).
 //! * [`node`] — the serving loop: coalesces `"more":true` bursts into
 //!   single batched `run_plan_mt` dispatches sized to the microkernel
-//!   panel widths, answers in request order, contains every frame error.
+//!   panel widths, answers in request order (each response in its
+//!   request's wire format), contains every frame error; plus the
+//!   concurrent Unix-socket listener (one scoped worker per connection,
+//!   up to `--max-conns`, kernel threads split per connection).
 //!
 //! The boundary with the kernel layer is exactly one function:
-//! [`crate::kernels::run_plan_mt`].  Plans are opaque to serve, so a new
-//! `KernelPlan` variant needs no serving changes.
+//! [`crate::kernels::run_plan_mt`] (plus the `threads_per_conn` budget
+//! split).  Plans are opaque to serve, so a new `KernelPlan` variant
+//! needs no serving changes.
 //!
-//! Wire format, batching bit-identity (batch-of-N == N singles,
-//! `to_bits`-exact per backend) and the warm-path allocation guard are
-//! pinned by `rust/tests/serve_protocol.rs`; CI's `serve-smoke` job pipes
-//! a golden transcript through the real binary.
+//! Wire formats, batching bit-identity (batch-of-N == N singles,
+//! `to_bits`-exact per backend, across text/binary and any connection
+//! interleaving) and the warm-path allocation guard are pinned by
+//! `rust/tests/serve_protocol.rs` and `rust/tests/serve_concurrent.rs`;
+//! CI's `serve-smoke` job pipes golden transcripts (text, binary, and a
+//! two-connection socket run) through the real binary.
 
 pub mod node;
 pub mod protocol;
@@ -32,6 +45,10 @@ pub mod session;
 
 #[cfg(unix)]
 pub use node::serve_unix_socket;
-pub use node::{latency_summary, serve, NodeOpts, ServeStats};
-pub use protocol::{Request, Response, ServeWireStats, SiteInfo, PROTOCOL_VERSION};
-pub use session::{SessionCtx, SiteRuntime};
+pub use node::{latency_summary, serve, serve_with_watch, NodeOpts, ServeStats, SocketOpts};
+pub use protocol::{
+    decode_binary_body, encode_binary_infer, encode_binary_infer_response, read_frame,
+    BinaryFrame, Request, Response, ServeWireStats, SiteInfo, WireFrame, BINARY_MAGIC,
+    MIN_PROTOCOL_VERSION, PROTOCOL_VERSION, WIRE_BINARY, WIRE_NDJSON,
+};
+pub use session::{CheckpointWatch, PlanSet, SessionCtx, SharedState, SiteRuntime};

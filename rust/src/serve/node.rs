@@ -1,19 +1,35 @@
-//! The serving loop: read NDJSON request frames, coalesce `"more":true`
-//! infer bursts into one batched GEMM each, write response frames in
-//! request order.
+//! The serving loop: read request frames (NDJSON text or, since
+//! protocol v2, length-prefixed binary activation frames — distinguished
+//! per frame by the first byte), coalesce `"more":true` infer bursts
+//! into one batched GEMM each, write response frames in request order.
 //!
 //! Error containment is the invariant the corrupt-frame tests pin: a bad
 //! frame (truncated, non-JSON, unknown op, wrong version, infeasible
-//! geometry) produces exactly one structured error frame — echoing the
-//! request id whenever the line was at least JSON — and the loop keeps
-//! serving.  Only EOF (clean shutdown, after flushing any held burst) or
-//! a transport I/O error ends a session.
+//! geometry, undecodable binary body) produces exactly one structured
+//! NDJSON error frame — echoing the request id whenever one survived
+//! parsing — and the loop keeps serving.  Framing corruption that
+//! desynchronises the byte stream (bad magic, oversized or truncated
+//! length prefix, non-UTF-8 text) is answered with one error frame and
+//! then closes the *connection*; only EOF (clean shutdown, after
+//! flushing any held burst), framing corruption, or a transport I/O
+//! error ends a session — never the process.
 //!
 //! Batching policy: consecutive same-site infer frames marked
 //! `"more":true` are held; the burst flushes when a frame arrives without
 //! the flag, when the pending rows reach [`NodeOpts::max_batch`], when a
 //! non-infer frame needs the line, or at EOF.  Responses always come back
-//! in request order.
+//! in request order.  Text and binary infer frames coalesce together —
+//! each response mirrors its request's wire format (or the connection
+//! preference set by a `hello` frame), so the batched dispatch is
+//! format-blind and batch-of-N ≡ N singles holds across any mix.
+//!
+//! The socket listener ([`serve_unix_socket`]) accepts up to
+//! `--max-conns` concurrent connections, each served by a scoped worker
+//! thread over its own [`SessionCtx`] view (private scratch, shared
+//! compiled plans, kernel threads split via
+//! [`crate::kernels::threads_per_conn`]).  All workers resolve the same
+//! metric handles from the shared registry, so per-connection recording
+//! rolls up into one `stats` frame.
 
 use std::io::{BufRead, Write};
 use std::sync::Arc;
@@ -23,8 +39,11 @@ use anyhow::Result;
 
 use crate::kernels::micro::LANES;
 use crate::obs::{Counter, Gauge, Histogram, MetricRegistry};
-use crate::serve::protocol::{Request, Response, ServeWireStats, SiteInfo};
-use crate::serve::session::SessionCtx;
+use crate::serve::protocol::{
+    decode_binary_body, encode_binary_infer_response, read_frame, BinaryFrame, Request, Response,
+    ServeWireStats, SiteInfo, WireFrame, PROTOCOL_VERSION, WIRE_BINARY, WIRE_NDJSON,
+};
+use crate::serve::session::{CheckpointWatch, SessionCtx};
 use crate::util::json::Json;
 use crate::util::stats::fmt_time;
 
@@ -40,6 +59,23 @@ pub struct NodeOpts {
 impl Default for NodeOpts {
     fn default() -> Self {
         NodeOpts { max_batch: 4 * LANES }
+    }
+}
+
+/// Socket-listener knobs (see [`serve_unix_socket`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SocketOpts {
+    /// Concurrent connection cap; accepts past it wait for a slot.
+    pub max_conns: usize,
+    /// Hot-reload the session's checkpoint when its mtime changes.
+    pub watch_checkpoint: bool,
+    /// Watcher poll interval.
+    pub watch_interval_ms: u64,
+}
+
+impl Default for SocketOpts {
+    fn default() -> Self {
+        SocketOpts { max_conns: 4, watch_checkpoint: false, watch_interval_ms: 500 }
     }
 }
 
@@ -69,10 +105,13 @@ impl ServeStats {
     }
 }
 
-/// Node-level metric handles, registered once per [`serve`] call in the
-/// session's registry (get-or-create: a socket node serving many
-/// sequential connections re-uses the same handles, so warm frames
-/// never re-register — part of the session fingerprint contract).
+/// Node-level metric handles, resolved once per [`serve`] call from the
+/// session's registry.  Get-or-create keyed by metric name is the
+/// de-duplication contract: a second (or fiftieth) connection resolves
+/// the *same* handles instead of double-registering or clobbering them,
+/// so the registration count stays flat across connections (pinned by
+/// `node_obs_dedup_across_connections` in `serve_concurrent.rs`) and
+/// per-connection recording aggregates into one `stats` frame.
 struct NodeObs {
     /// Handling latency per frame (decode + dispatch + response write).
     frame_ns: Arc<Histogram>,
@@ -84,6 +123,8 @@ struct NodeObs {
     queue_rows: Arc<Gauge>,
     /// Error frames emitted.
     errors: Arc<Counter>,
+    /// Binary frames handled, both directions (v2 wire adoption).
+    binary_frames: Arc<Counter>,
     max_batch: usize,
 }
 
@@ -95,6 +136,7 @@ impl NodeObs {
             batch_fill_pct: reg.histogram("serve.batch_fill_pct"),
             queue_rows: reg.gauge("serve.queue_rows_max"),
             errors: reg.counter("serve.error_frames"),
+            binary_frames: reg.counter("serve.binary_frames"),
             max_batch: max_batch.max(1),
         }
     }
@@ -106,10 +148,14 @@ struct PendingInfer {
     site: String,
     batch: usize,
     x: Vec<f32>,
+    /// Whether the request arrived as a binary frame (its response
+    /// mirrors the format unless a `hello` preference overrides).
+    binary: bool,
 }
 
-/// Serve one NDJSON session: `input` to EOF, responses on `out`.  Frame
-/// errors never end the loop; transport errors do.
+/// Serve one session: `input` to EOF, responses on `out`.  Frame errors
+/// never end the loop; framing corruption ends the connection (after
+/// one error frame); transport errors propagate.
 // lint: no-panic
 pub fn serve<R: BufRead, W: Write>(
     ctx: &mut SessionCtx,
@@ -117,53 +163,104 @@ pub fn serve<R: BufRead, W: Write>(
     out: &mut W,
     opts: &NodeOpts,
 ) -> Result<ServeStats> {
+    let mut input = input;
     let mut stats = ServeStats::default();
     let nobs = NodeObs::new(ctx.obs(), opts.max_batch);
     let mut pending: Vec<PendingInfer> = Vec::new();
-    for line in input.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
+    // Connection wire preference, set by a `hello` frame: when true,
+    // even text infer requests are answered with binary frames.
+    let mut prefer_binary = false;
+    loop {
+        let frame = read_frame(&mut input)?;
+        let (request, arrived_binary) = match frame {
+            WireFrame::Eof => break,
+            WireFrame::Corrupt(msg) => {
+                // The byte stream cannot be re-synchronised: answer the
+                // held burst, emit one structured error frame, close
+                // this connection (the process keeps serving others).
+                stats.requests += 1;
+                flush(ctx, &mut pending, out, &mut stats, &nobs, prefer_binary)?;
+                respond(out, &mut stats, &nobs, &Response::Error { id: None, error: msg })?;
+                break;
+            }
+            WireFrame::Text(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                (decode(&line), false)
+            }
+            WireFrame::Binary(body) => {
+                nobs.binary_frames.inc();
+                (decode_binary(&body), true)
+            }
+        };
         stats.requests += 1;
         // Per-frame handling latency: decode + any dispatch this frame
         // triggered + response writes.  Held burst frames are cheap here
         // (enqueue only); the flush cost lands on the frame that flushes.
         let t0 = Instant::now();
-        match decode(&line) {
+        match request {
             Err((id, error)) => {
-                flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                flush(ctx, &mut pending, out, &mut stats, &nobs, prefer_binary)?;
                 respond(out, &mut stats, &nobs, &Response::Error { id, error })?;
             }
             Ok(Request::Infer { id, site, batch, x, more }) => {
                 // Geometry is checked at enqueue so one infeasible
                 // request cannot poison a coalesced burst, and its error
                 // frame echoes exactly its own id.
+                ctx.refresh();
                 if let Err(e) = ctx.check_request(&site, batch, x.len()) {
-                    flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                    flush(ctx, &mut pending, out, &mut stats, &nobs, prefer_binary)?;
                     let err = Response::Error { id: Some(id), error: e.to_string() };
                     respond(out, &mut stats, &nobs, &err)?;
                 } else {
                     // Only same-site frames coalesce (one plan per
                     // dispatch).
                     if pending.last().is_some_and(|p| p.site != site) {
-                        flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                        flush(ctx, &mut pending, out, &mut stats, &nobs, prefer_binary)?;
                     }
-                    pending.push(PendingInfer { id, site, batch, x });
+                    pending.push(PendingInfer { id, site, batch, x, binary: arrived_binary });
                     let rows: usize = pending.iter().map(|p| p.batch).sum();
                     nobs.queue_rows.set_max(rows as u64);
                     if !more || rows >= opts.max_batch {
-                        flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                        flush(ctx, &mut pending, out, &mut stats, &nobs, prefer_binary)?;
                     }
                 }
             }
+            Ok(Request::Hello { id, wire }) => {
+                flush(ctx, &mut pending, out, &mut stats, &nobs, prefer_binary)?;
+                let resp = match wire.as_deref() {
+                    None => None,
+                    Some(WIRE_NDJSON) => {
+                        prefer_binary = false;
+                        None
+                    }
+                    Some(WIRE_BINARY) => {
+                        prefer_binary = true;
+                        None
+                    }
+                    Some(other) => Some(Response::Error {
+                        id: Some(id.clone()),
+                        error: format!(
+                            "unknown wire format {other:?} (known: {WIRE_NDJSON}|{WIRE_BINARY})"
+                        ),
+                    }),
+                };
+                let resp = resp.unwrap_or_else(|| Response::Hello {
+                    id,
+                    proto: PROTOCOL_VERSION,
+                    wire: if prefer_binary { WIRE_BINARY } else { WIRE_NDJSON }.to_string(),
+                });
+                respond(out, &mut stats, &nobs, &resp)?;
+            }
             Ok(Request::Info { id }) => {
-                flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                flush(ctx, &mut pending, out, &mut stats, &nobs, prefer_binary)?;
+                ctx.refresh();
                 let resp = info_response(ctx, id, &stats);
                 respond(out, &mut stats, &nobs, &resp)?;
             }
             Ok(Request::Reload { id, checkpoint }) => {
-                flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                flush(ctx, &mut pending, out, &mut stats, &nobs, prefer_binary)?;
                 let resp = match ctx.reload_from(checkpoint.as_deref()) {
                     Ok(generation) => Response::Reloaded { id, generation },
                     Err(e) => Response::Error { id: Some(id), error: e.to_string() },
@@ -171,7 +268,8 @@ pub fn serve<R: BufRead, W: Write>(
                 respond(out, &mut stats, &nobs, &resp)?;
             }
             Ok(Request::Stats { id }) => {
-                flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+                flush(ctx, &mut pending, out, &mut stats, &nobs, prefer_binary)?;
+                ctx.refresh();
                 let resp = Response::Stats {
                     id,
                     stats: stats.wire(),
@@ -182,8 +280,9 @@ pub fn serve<R: BufRead, W: Write>(
         }
         nobs.frame_ns.record_ns(t0.elapsed());
     }
-    // EOF: answer any held burst, then shut down cleanly.
-    flush(ctx, &mut pending, out, &mut stats, &nobs)?;
+    // EOF (or corruption close): answer any held burst, then shut down
+    // this connection cleanly.
+    flush(ctx, &mut pending, out, &mut stats, &nobs, prefer_binary)?;
     Ok(stats)
 }
 
@@ -205,34 +304,172 @@ pub fn latency_summary(ctx: &SessionCtx) -> String {
     )
 }
 
-/// Serve connections from a Unix socket, sequentially: one NDJSON
-/// session per connection, per-connection stats to stderr.  Runs until
-/// the process is killed.
+/// Serve a session on stdin/stdout-style streams while a scoped watcher
+/// thread polls the checkpoint mtime and hot-reloads the shared plans
+/// (what `--watch-checkpoint` without `--socket` runs).
+pub fn serve_with_watch<R: BufRead, W: Write>(
+    ctx: &mut SessionCtx,
+    input: R,
+    out: &mut W,
+    opts: &NodeOpts,
+    interval_ms: u64,
+) -> Result<ServeStats> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let Some(watch) = checkpoint_watch(ctx) else {
+        anyhow::bail!(
+            "--watch-checkpoint needs a session loaded from a checkpoint (synthetic sessions \
+             have no file to watch)"
+        );
+    };
+    let shared = Arc::clone(ctx.shared());
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut watch = watch;
+            while !done.load(Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(interval_ms.max(1)));
+                log_watch_poll(watch.poll(&shared), watch.path());
+            }
+        });
+        let stats = serve(ctx, input, out, opts);
+        done.store(true, Ordering::Relaxed);
+        stats
+    })
+}
+
+fn checkpoint_watch(ctx: &SessionCtx) -> Option<CheckpointWatch> {
+    ctx.shared().checkpoint_path().map(|p| CheckpointWatch::new(&p))
+}
+
+fn log_watch_poll(poll: Result<Option<u64>>, path: &std::path::Path) {
+    match poll {
+        Ok(Some(generation)) => eprintln!(
+            "[padst serve] checkpoint {} changed on disk -> hot-reloaded as generation {}",
+            path.display(),
+            generation
+        ),
+        Ok(None) => {}
+        // The old plans keep serving; the watcher retries next poll
+        // (e.g. the trainer was mid-write).
+        Err(e) => eprintln!("[padst serve] watch: reload failed, keeping old plans: {e:#}"),
+    }
+}
+
+/// Serve connections from a Unix socket concurrently: up to
+/// `sopts.max_conns` scoped worker threads, each over its own
+/// [`SessionCtx::connection`] view with a `threads_per_conn` slice of
+/// the kernel-thread budget (bit-safe: `run_plan_mt` is bit-identical
+/// at any thread count).  Worker failures are logged, never fatal to
+/// the listener.  Runs until the process is killed.
 #[cfg(unix)]
 pub fn serve_unix_socket(
-    ctx: &mut SessionCtx,
+    ctx: &SessionCtx,
     path: &std::path::Path,
     opts: &NodeOpts,
+    sopts: &SocketOpts,
 ) -> Result<()> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
     use anyhow::Context as _;
     use std::os::unix::net::UnixListener;
+
+    let max_conns = sopts.max_conns.max(1);
+    let watch = if sopts.watch_checkpoint {
+        let Some(w) = checkpoint_watch(ctx) else {
+            anyhow::bail!(
+                "--watch-checkpoint needs a session loaded from a checkpoint (synthetic \
+                 sessions have no file to watch)"
+            );
+        };
+        Some(w)
+    } else {
+        None
+    };
     // A dead node leaves its socket file behind; rebinding wants it gone.
     let _ = std::fs::remove_file(path);
     let listener = UnixListener::bind(path)
         .with_context(|| format!("binding unix socket {}", path.display()))?;
-    eprintln!("[padst serve] listening on {}", path.display());
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let reader = std::io::BufReader::new(stream.try_clone()?);
-        let mut writer = stream;
-        let stats = serve(ctx, reader, &mut writer, opts)?;
-        eprintln!(
-            "[padst serve] connection closed: {} requests -> {} responses ({} errors), {} batches",
-            stats.requests, stats.responses, stats.errors, stats.batches
-        );
-        eprintln!("[padst serve] {}", latency_summary(ctx));
+    eprintln!(
+        "[padst serve] listening on {} (up to {} concurrent connections, {} kernel threads each)",
+        path.display(),
+        max_conns,
+        crate::kernels::threads_per_conn(ctx.threads(), max_conns)
+    );
+    let active = AtomicUsize::new(0);
+    let conns = ctx.obs().counter("serve.connections");
+    std::thread::scope(|s| -> Result<()> {
+        if let Some(watch) = watch {
+            let shared = Arc::clone(ctx.shared());
+            let interval = sopts.watch_interval_ms.max(1);
+            s.spawn(move || {
+                let mut watch = watch;
+                loop {
+                    std::thread::sleep(std::time::Duration::from_millis(interval));
+                    log_watch_poll(watch.poll(&shared), watch.path());
+                }
+            });
+        }
+        for (conn_no, stream) in listener.incoming().enumerate() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    // Never fatal: one failed accept must not take down
+                    // the listener (or hang joining the watcher thread).
+                    eprintln!("[padst serve] accept failed: {e}");
+                    continue;
+                }
+            };
+            // Admission gate: hold the accept loop until a worker slot
+            // frees up.  Relaxed suffices — the gate only bounds the
+            // worker count, it orders nothing.
+            while active.load(Ordering::Relaxed) >= max_conns {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            active.fetch_add(1, Ordering::Relaxed);
+            conns.inc();
+            let conn = ctx
+                .connection()
+                .with_threads(crate::kernels::threads_per_conn(ctx.threads(), max_conns));
+            let active = &active;
+            s.spawn(move || {
+                let mut conn = conn;
+                serve_worker(&mut conn, stream, opts, conn_no);
+                active.fetch_sub(1, Ordering::Relaxed);
+            });
+        }
+        Ok(())
+    })
+}
+
+/// One socket connection, errors contained: a worker failure closes its
+/// connection and is logged — the listener and the other workers keep
+/// serving.
+#[cfg(unix)]
+fn serve_worker(
+    conn: &mut SessionCtx,
+    stream: std::os::unix::net::UnixStream,
+    opts: &NodeOpts,
+    conn_no: usize,
+) {
+    let reader = match stream.try_clone() {
+        Ok(s) => std::io::BufReader::new(s),
+        Err(e) => {
+            eprintln!("[padst serve] conn {conn_no}: socket clone failed: {e}");
+            return;
+        }
+    };
+    let mut writer = stream;
+    match serve(conn, reader, &mut writer, opts) {
+        Ok(stats) => {
+            eprintln!(
+                "[padst serve] conn {conn_no} closed: {} requests -> {} responses ({} errors), \
+                 {} batches",
+                stats.requests, stats.responses, stats.errors, stats.batches
+            );
+            eprintln!("[padst serve] {}", latency_summary(conn));
+        }
+        Err(e) => eprintln!("[padst serve] conn {conn_no}: transport error: {e:#}"),
     }
-    Ok(())
 }
 
 /// Two-stage decode so error frames can echo the request id whenever the
@@ -244,8 +481,27 @@ fn decode(line: &str) -> std::result::Result<Request, (Option<String>, String)> 
     Request::from_json(&v).map_err(|e| (id, e.to_string()))
 }
 
+/// Decode a binary frame body into the common [`Request`] shape.  The
+/// body arrived length-delimited, so a decode failure leaves the stream
+/// in sync — it maps to one error frame, same as a bad text line.
+// lint: no-panic
+fn decode_binary(body: &[u8]) -> std::result::Result<Request, (Option<String>, String)> {
+    match decode_binary_body(body) {
+        Ok(BinaryFrame::InferRequest { id, site, batch, x, more }) => {
+            Ok(Request::Infer { id, site, batch, x, more })
+        }
+        Ok(BinaryFrame::InferResponse { id, .. }) => Err((
+            Some(id),
+            "unexpected binary infer-response frame from client (kind 2 is server->client)"
+                .to_string(),
+        )),
+        Err(e) => Err((None, e.to_string())),
+    }
+}
+
 /// Execute the held burst as one batched dispatch and answer each pending
-/// request with its own rows, in order.
+/// request with its own rows, in order — each response in its request's
+/// wire format (or binary when the connection preference says so).
 // lint: no-panic
 fn flush<W: Write>(
     ctx: &mut SessionCtx,
@@ -253,13 +509,14 @@ fn flush<W: Write>(
     out: &mut W,
     stats: &mut ServeStats,
     nobs: &NodeObs,
+    prefer_binary: bool,
 ) -> Result<()> {
     if pending.is_empty() {
         return Ok(());
     }
     let rows_total: usize = pending.iter().map(|p| p.batch).sum();
     let site = pending[0].site.clone();
-    let responses: Vec<Response> = match ctx.site(&site).map(|s| s.rows) {
+    match ctx.site(&site).map(|s| s.rows) {
         Ok(rows) => {
             let parts: Vec<(&[f32], usize)> =
                 pending.iter().map(|p| (p.x.as_slice(), p.batch)).collect();
@@ -270,32 +527,41 @@ fn flush<W: Write>(
                     nobs.batch_rows.record(rows_total as u64);
                     nobs.batch_fill_pct.record((100 * rows_total / nobs.max_batch) as u64);
                     let mut off = 0usize;
-                    pending
-                        .iter()
-                        .map(|p| {
-                            let n = p.batch * rows;
+                    for p in pending.iter() {
+                        let n = p.batch * rows;
+                        let part = &y[off..off + n];
+                        off += n;
+                        if p.binary || prefer_binary {
+                            respond_binary_infer(out, stats, nobs, &p.id, p.batch, part)?;
+                        } else {
                             let resp = Response::Infer {
                                 id: p.id.clone(),
                                 batch: p.batch,
-                                y: y[off..off + n].to_vec(),
+                                y: part.to_vec(),
                             };
-                            off += n;
-                            resp
-                        })
-                        .collect()
+                            respond(out, stats, nobs, &resp)?;
+                        }
+                    }
                 }
                 // Enqueue-time validation makes this unreachable in
                 // practice, but a kernel-layer refusal still answers
                 // every held request instead of killing the node.
-                Err(e) => per_request_errors(pending, &e.to_string()),
+                Err(e) => {
+                    let msg = e.to_string();
+                    for r in per_request_errors(pending, &msg) {
+                        respond(out, stats, nobs, &r)?;
+                    }
+                }
             }
         }
-        Err(e) => per_request_errors(pending, &e.to_string()),
-    };
-    pending.clear();
-    for r in &responses {
-        respond(out, stats, nobs, r)?;
+        Err(e) => {
+            let msg = e.to_string();
+            for r in per_request_errors(pending, &msg) {
+                respond(out, stats, nobs, &r)?;
+            }
+        }
     }
+    pending.clear();
     Ok(())
 }
 
@@ -323,6 +589,34 @@ fn respond<W: Write>(
         nobs.errors.inc();
     }
     Ok(())
+}
+
+/// Write one infer response as a binary frame.  An id too long for the
+/// u16 length prefix degrades to a structured text error frame rather
+/// than a malformed binary one.
+// lint: no-panic
+fn respond_binary_infer<W: Write>(
+    out: &mut W,
+    stats: &mut ServeStats,
+    nobs: &NodeObs,
+    id: &str,
+    batch: usize,
+    y: &[f32],
+) -> Result<()> {
+    match encode_binary_infer_response(id, batch, y) {
+        Ok(frame) => {
+            out.write_all(&frame)?;
+            out.flush()?;
+            stats.responses += 1;
+            nobs.binary_frames.inc();
+            Ok(())
+        }
+        Err(e) => {
+            let resp =
+                Response::Error { id: Some(id.to_string()), error: e.to_string() };
+            respond(out, stats, nobs, &resp)
+        }
+    }
 }
 
 fn info_response(ctx: &SessionCtx, id: String, stats: &ServeStats) -> Response {

@@ -1,20 +1,23 @@
-//! Wire protocol of `padst serve`: newline-delimited JSON frames parsed
-//! with the in-tree [`crate::util::json`] (the build is offline; no serde).
+//! Wire protocol of `padst serve`: newline-delimited JSON control frames
+//! parsed with the in-tree [`crate::util::json`] (the build is offline;
+//! no serde), plus — since protocol v2 — a length-prefixed **binary
+//! activation frame** for bulk f32 payloads.
 //!
-//! One request per line, one response line per request, in request order.
-//! Every frame carries the schema version (`"v"`) and a caller-chosen
-//! request id (`"id"`); responses echo the id — including error frames,
-//! whenever the id survives parsing.  A malformed frame is answered with
-//! a structured error frame, never a process exit; only EOF (or a
-//! transport I/O error) ends a session.
+//! One request per frame, one response per request, in request order.
+//! Every text frame carries the schema version (`"v"`) and a
+//! caller-chosen request id (`"id"`); responses echo the id — including
+//! error frames, whenever the id survives parsing.  A malformed frame is
+//! answered with a structured error frame, never a process exit; only
+//! EOF (or a transport I/O error) ends a session.
 //!
-//! Requests:
+//! Requests (the node accepts v1 frames unchanged; it emits v2):
 //!
 //! ```json
-//! {"v":1,"op":"infer","id":"r1","site":"fc1","batch":2,"x":[0.5,...],"more":true}
-//! {"v":1,"op":"info","id":"r2"}
-//! {"v":1,"op":"reload","id":"r3","checkpoint":"run.tnz"}
-//! {"v":1,"op":"stats","id":"r4"}
+//! {"v":2,"op":"infer","id":"r1","site":"fc1","batch":2,"x":[0.5,...],"more":true}
+//! {"v":2,"op":"info","id":"r2"}
+//! {"v":2,"op":"reload","id":"r3","checkpoint":"run.tnz"}
+//! {"v":2,"op":"stats","id":"r4"}
+//! {"v":2,"op":"hello","id":"r5","wire":"binary"}
 //! ```
 //!
 //! `"more":true` marks an infer frame as part of a coalescible burst: the
@@ -23,23 +26,65 @@
 //! and add `"ok"`:
 //!
 //! ```json
-//! {"batch":2,"id":"r1","ok":true,"op":"infer","v":1,"y":[...]}
-//! {"error":"unknown op \"warp\" ...","id":"r9","ok":false,"op":"error","v":1}
+//! {"batch":2,"id":"r1","ok":true,"op":"infer","v":2,"y":[...]}
+//! {"error":"unknown op \"warp\" ...","id":"r9","ok":false,"op":"error","v":2}
 //! ```
 //!
-//! Activations travel as JSON numbers.  f32 → f64 widening is exact and
-//! the serializer emits shortest-round-trip f64, so wire transport
+//! # Wire formats
+//!
+//! Text activations travel as JSON numbers.  f32 → f64 widening is exact
+//! and the serializer emits shortest-round-trip f64, so text transport
 //! preserves f32 value bits (the one flattening: `-0.0` prints as `0`;
 //! both sides flatten identically, so batched-vs-singles comparisons stay
-//! bitwise).  Pinned by `rust/tests/serve_protocol.rs`.
+//! bitwise) — at ~13 bytes per value.  The v2 binary activation frame
+//! ([`encode_binary_infer`], [`decode_binary_body`]) carries the same
+//! payload as raw little-endian f32 at ~4 bytes per value, `to_bits`
+//! exact by construction.  A client discovers the formats with a `hello`
+//! handshake frame and switches by simply sending binary frames — the
+//! node tells them apart per frame by the first byte ([`read_frame`]):
+//! [`BINARY_MAGIC`] starts with `0xBF`, a UTF-8 continuation byte that
+//! can never begin a text line.  Pinned by `rust/tests/serve_protocol.rs`.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::util::json::{self, Json};
 
-/// Wire schema version.  Frames carrying any other `"v"` are rejected
-/// with a structured error frame naming both versions.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// Wire schema version this node speaks (and stamps on every response).
+/// Frames carrying any `"v"` outside
+/// [`MIN_PROTOCOL_VERSION`]`..=`[`PROTOCOL_VERSION`] are rejected with a
+/// structured error frame naming the supported range.
+pub const PROTOCOL_VERSION: u32 = 2;
+
+/// Oldest request version still accepted: v1 text frames decode
+/// unchanged, so pre-binary clients keep working against a v2 node.
+pub const MIN_PROTOCOL_VERSION: u32 = 1;
+
+/// Wire-format name of the newline-delimited JSON frames (the default).
+pub const WIRE_NDJSON: &str = "ndjson";
+
+/// Wire-format name of the length-prefixed binary activation frames.
+pub const WIRE_BINARY: &str = "binary";
+
+/// Formats a `hello` response advertises, preference order.
+pub const SUPPORTED_WIRES: [&str; 2] = [WIRE_NDJSON, WIRE_BINARY];
+
+/// Leading magic of a binary frame.  The first byte (`0xBF`) is a UTF-8
+/// continuation byte, so it can never start a text line — the per-frame
+/// format detector in [`read_frame`] keys on it.  The last byte encodes
+/// the protocol major version that introduced the layout (`b'2'`,
+/// tied to [`PROTOCOL_VERSION`] by unit test).
+pub const BINARY_MAGIC: [u8; 4] = [0xBF, b'P', b'A', b'2'];
+
+/// Sanity cap on a binary frame body.  A length prefix beyond this is
+/// answered with an error frame and the connection is closed (the
+/// stream cannot be re-synchronised past an untrusted length).
+pub const MAX_BINARY_BODY: usize = 1 << 30;
+
+/// Binary frame body kind: an infer request (id, site, batch, x, more).
+pub const BIN_INFER_REQUEST: u8 = 1;
+
+/// Binary frame body kind: an infer response (id, batch, y).
+pub const BIN_INFER_RESPONSE: u8 = 2;
 
 /// One decoded request frame.
 #[derive(Clone, Debug, PartialEq)]
@@ -56,6 +101,11 @@ pub enum Request {
     /// `obs_schema`-versioned metric snapshot (per-site infer
     /// histograms, frame latency, batch fill, queue depth, ...).
     Stats { id: String },
+    /// Wire-format handshake (v2): the node answers with its protocol
+    /// version and supported formats; `wire` (optional) asks it to emit
+    /// infer responses in that format from here on.  Binary *requests*
+    /// need no handshake — they are self-describing per frame.
+    Hello { id: String, wire: Option<String> },
 }
 
 impl Request {
@@ -65,7 +115,8 @@ impl Request {
             Request::Infer { id, .. }
             | Request::Info { id }
             | Request::Reload { id, .. }
-            | Request::Stats { id } => id,
+            | Request::Stats { id }
+            | Request::Hello { id, .. } => id,
         }
     }
 
@@ -106,6 +157,17 @@ impl Request {
                 ("op", json::s("stats")),
                 ("id", json::s(id)),
             ]),
+            Request::Hello { id, wire } => {
+                let mut pairs = vec![
+                    ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                    ("op", json::s("hello")),
+                    ("id", json::s(id)),
+                ];
+                if let Some(w) = wire {
+                    pairs.push(("wire", json::s(w)));
+                }
+                json::obj(pairs)
+            }
         }
     }
 
@@ -143,7 +205,11 @@ impl Request {
                 Ok(Request::Reload { id, checkpoint })
             }
             "stats" => Ok(Request::Stats { id }),
-            other => bail!("unknown op {other:?} (known: infer|info|reload|stats)"),
+            "hello" => {
+                let wire = v.get("wire").and_then(Json::as_str).map(str::to_string);
+                Ok(Request::Hello { id, wire })
+            }
+            other => bail!("unknown op {other:?} (known: infer|info|reload|stats|hello)"),
         }
     }
 }
@@ -235,6 +301,10 @@ pub enum Response {
     /// Health poll: counters plus the merged metric snapshot as raw
     /// JSON (schema-versioned via its own `obs_schema` field).
     Stats { id: String, stats: ServeWireStats, obs: Json },
+    /// Handshake ack: the node's protocol version and the wire format
+    /// it will use for this connection's infer responses (the response
+    /// also advertises every supported format under `"formats"`).
+    Hello { id: String, proto: u32, wire: String },
     /// `id` is `None` only when the offending frame was not parseable
     /// enough to recover one.
     Error { id: Option<String>, error: String },
@@ -280,6 +350,15 @@ impl Response {
                 ("id", json::s(id)),
                 ("stats", stats.to_json()),
                 ("obs", obs.clone()),
+            ]),
+            Response::Hello { id, proto, wire } => json::obj(vec![
+                ("v", json::num(f64::from(PROTOCOL_VERSION))),
+                ("op", json::s("hello")),
+                ("ok", Json::Bool(true)),
+                ("id", json::s(id)),
+                ("proto", json::num(f64::from(*proto))),
+                ("wire", json::s(wire)),
+                ("formats", json::arr(SUPPORTED_WIRES.iter().map(|w| json::s(w)))),
             ]),
             Response::Error { id, error } => json::obj(vec![
                 ("v", json::num(f64::from(PROTOCOL_VERSION))),
@@ -349,20 +428,29 @@ impl Response {
                     obs: v.get("obs").cloned().unwrap_or(Json::Null),
                 })
             }
+            Some("hello") => Ok(Response::Hello {
+                id,
+                proto: num_field(v, "proto")? as u32,
+                wire: str_field(v, "wire")?,
+            }),
             other => bail!("unknown response op {other:?}"),
         }
     }
 }
 
 fn check_version(v: &Json) -> Result<()> {
+    let lo = f64::from(MIN_PROTOCOL_VERSION);
+    let hi = f64::from(PROTOCOL_VERSION);
     match v.get("v").and_then(Json::as_f64) {
-        Some(n) if n == f64::from(PROTOCOL_VERSION) => Ok(()),
-        Some(n) => {
-            bail!("unsupported protocol version {n} (this node speaks v{PROTOCOL_VERSION})")
-        }
-        None => {
-            bail!("frame has no \"v\" protocol version (this node speaks v{PROTOCOL_VERSION})")
-        }
+        Some(n) if n >= lo && n <= hi && n.fract() == 0.0 => Ok(()),
+        Some(n) => bail!(
+            "unsupported protocol version {n} (this node speaks \
+             v{MIN_PROTOCOL_VERSION}..v{PROTOCOL_VERSION})"
+        ),
+        None => bail!(
+            "frame has no \"v\" protocol version (this node speaks \
+             v{MIN_PROTOCOL_VERSION}..v{PROTOCOL_VERSION})"
+        ),
     }
 }
 
@@ -389,6 +477,282 @@ fn f32_array(v: &Json, key: &str) -> Result<Vec<f32>> {
         .ok_or_else(|| anyhow!("{key:?} has a non-numeric element"))
 }
 
+// ---------------------------------------------------------------------------
+// Binary activation frames (protocol v2)
+// ---------------------------------------------------------------------------
+//
+// Layout, all integers little-endian:
+//
+// ```text
+// [0..4)   magic        BINARY_MAGIC (0xBF 'P' 'A' '2')
+// [4..8)   u32 body_len length of everything after this field
+// body:
+//   u8       kind       BIN_INFER_REQUEST | BIN_INFER_RESPONSE
+//   u8       flags      bit0 = "more" (coalescible burst); 0 in responses
+//   u16+..   id         length-prefixed UTF-8 request id
+//   u16+..   site       length-prefixed UTF-8 site name (requests only)
+//   u32      batch      rows in this request/response
+//   u32      nvals      f32 count that follows
+//   nvals*4  payload    raw little-endian f32 activations
+// ```
+//
+// The payload is carried bit-for-bit (`f32::to_le_bytes` /
+// `from_le_bytes`), so NaN payload bits and signed zeros survive the
+// wire exactly — stronger than the text path, which flattens `-0.0`.
+
+/// One decoded binary frame body.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BinaryFrame {
+    /// kind [`BIN_INFER_REQUEST`]: semantically identical to a text
+    /// `infer` frame.
+    InferRequest { id: String, site: String, batch: usize, x: Vec<f32>, more: bool },
+    /// kind [`BIN_INFER_RESPONSE`]: semantically identical to a text
+    /// `infer` response.
+    InferResponse { id: String, batch: usize, y: Vec<f32> },
+}
+
+/// Encode a complete binary infer-request frame (magic + length prefix
+/// + body).  Fails only on an id/site longer than a u16 length prefix
+/// can carry.
+pub fn encode_binary_infer(
+    id: &str,
+    site: &str,
+    batch: usize,
+    x: &[f32],
+    more: bool,
+) -> Result<Vec<u8>> {
+    let body_len = 1 + 1 + (2 + id.len()) + (2 + site.len()) + 4 + 4 + 4 * x.len();
+    let mut f = frame_header(body_len)?;
+    f.push(BIN_INFER_REQUEST);
+    f.push(u8::from(more));
+    push_str16(&mut f, id)?;
+    push_str16(&mut f, site)?;
+    push_u32(&mut f, batch)?;
+    push_u32(&mut f, x.len())?;
+    for v in x {
+        f.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(f)
+}
+
+/// Encode a complete binary infer-response frame (magic + length prefix
+/// + body).
+pub fn encode_binary_infer_response(id: &str, batch: usize, y: &[f32]) -> Result<Vec<u8>> {
+    let body_len = 1 + 1 + (2 + id.len()) + 4 + 4 + 4 * y.len();
+    let mut f = frame_header(body_len)?;
+    f.push(BIN_INFER_RESPONSE);
+    f.push(0); // flags: none defined for responses
+    push_str16(&mut f, id)?;
+    push_u32(&mut f, batch)?;
+    push_u32(&mut f, y.len())?;
+    for v in y {
+        f.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(f)
+}
+
+fn frame_header(body_len: usize) -> Result<Vec<u8>> {
+    if body_len > MAX_BINARY_BODY {
+        bail!("binary frame body of {body_len} bytes exceeds the {MAX_BINARY_BODY}-byte cap");
+    }
+    let mut f = Vec::with_capacity(8 + body_len);
+    f.extend_from_slice(&BINARY_MAGIC);
+    f.extend_from_slice(&(body_len as u32).to_le_bytes());
+    Ok(f)
+}
+
+fn push_str16(f: &mut Vec<u8>, s: &str) -> Result<()> {
+    let len = u16::try_from(s.len())
+        .map_err(|_| anyhow!("string of {} bytes exceeds the u16 length prefix", s.len()))?;
+    f.extend_from_slice(&len.to_le_bytes());
+    f.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn push_u32(f: &mut Vec<u8>, n: usize) -> Result<()> {
+    let n = u32::try_from(n).map_err(|_| anyhow!("value {n} exceeds the u32 wire field"))?;
+    f.extend_from_slice(&n.to_le_bytes());
+    Ok(())
+}
+
+/// Decode a binary frame *body* (magic and length prefix already
+/// consumed by [`read_frame`]).  Because the body arrived length-
+/// delimited, a decode error here leaves the stream in sync: the node
+/// answers an error frame and keeps serving.  Error messages are
+/// descriptive and safe to echo.
+pub fn decode_binary_body(body: &[u8]) -> Result<BinaryFrame> {
+    let mut c = ByteCursor { b: body, off: 0 };
+    let kind = c.u8("kind")?;
+    match kind {
+        BIN_INFER_REQUEST => {
+            let flags = c.u8("flags")?;
+            let id = c.str16("id")?;
+            let site = c.str16("site")?;
+            let batch = c.u32("batch")? as usize;
+            let n = c.u32("nvals")? as usize;
+            let x = c.f32s(n)?;
+            c.done()?;
+            Ok(BinaryFrame::InferRequest { id, site, batch, x, more: flags & 1 != 0 })
+        }
+        BIN_INFER_RESPONSE => {
+            let _flags = c.u8("flags")?;
+            let id = c.str16("id")?;
+            let batch = c.u32("batch")? as usize;
+            let n = c.u32("nvals")? as usize;
+            let y = c.f32s(n)?;
+            c.done()?;
+            Ok(BinaryFrame::InferResponse { id, batch, y })
+        }
+        other => bail!(
+            "unknown binary frame kind {other} (known: {BIN_INFER_REQUEST}=infer request, \
+             {BIN_INFER_RESPONSE}=infer response)"
+        ),
+    }
+}
+
+/// Bounds-checked little-endian reader over a binary frame body.
+struct ByteCursor<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl ByteCursor<'_> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&[u8]> {
+        let end = self.off.checked_add(n).filter(|&e| e <= self.b.len()).ok_or_else(|| {
+            anyhow!(
+                "binary frame body truncated: wanted {n} bytes for {what} at offset {} of {}",
+                self.off,
+                self.b.len()
+            )
+        })?;
+        let s = &self.b[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        let s = self.take(2, what)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn str16(&mut self, what: &str) -> Result<String> {
+        let len = self.u16(what)? as usize;
+        let s = self.take(len, what)?;
+        String::from_utf8(s.to_vec()).map_err(|_| anyhow!("binary frame {what} is not UTF-8"))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let nbytes = n.checked_mul(4).ok_or_else(|| anyhow!("binary frame nvals overflows"))?;
+        let s = self.take(nbytes, "f32 payload")?;
+        Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.off != self.b.len() {
+            bail!("binary frame body has {} trailing bytes", self.b.len() - self.off);
+        }
+        Ok(())
+    }
+}
+
+/// One frame off the wire, as read by [`read_frame`].
+#[derive(Debug)]
+pub enum WireFrame {
+    /// End of stream (clean shutdown).
+    Eof,
+    /// One NDJSON text line, trailing newline stripped.
+    Text(String),
+    /// The body of a binary frame (magic + length prefix already
+    /// consumed and validated; decode with [`decode_binary_body`]).
+    Binary(Vec<u8>),
+    /// Unrecoverable framing corruption: bad magic, an oversized length
+    /// prefix, a frame truncated by EOF, or non-UTF-8 text.  The stream
+    /// cannot be re-synchronised, so the node answers one structured
+    /// error frame and closes the *connection* — never the process.
+    Corrupt(String),
+}
+
+/// Read the next frame off a mixed text/binary stream.  The formats are
+/// distinguished per frame by the first byte: [`BINARY_MAGIC`] starts
+/// with `0xBF` (a UTF-8 continuation byte, never a text-line start);
+/// anything else is read as an NDJSON line.  Blank separator lines are
+/// skipped.  I/O errors (transport death) propagate; framing corruption
+/// is reported in-band as [`WireFrame::Corrupt`].
+pub fn read_frame<R: std::io::BufRead>(input: &mut R) -> std::io::Result<WireFrame> {
+    let first = loop {
+        let buf = input.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(WireFrame::Eof);
+        }
+        let b = buf[0];
+        if b == b'\n' || b == b'\r' {
+            input.consume(1);
+            continue;
+        }
+        break b;
+    };
+    if first != BINARY_MAGIC[0] {
+        let mut raw = Vec::new();
+        input.read_until(b'\n', &mut raw)?;
+        return Ok(match String::from_utf8(raw) {
+            Ok(mut s) => {
+                while s.ends_with('\n') || s.ends_with('\r') {
+                    s.pop();
+                }
+                WireFrame::Text(s)
+            }
+            Err(_) => WireFrame::Corrupt("text frame is not valid UTF-8".to_string()),
+        });
+    }
+    let mut magic = [0u8; 4];
+    if hit_eof(input, &mut magic)? {
+        return Ok(WireFrame::Corrupt("binary frame truncated inside the magic".to_string()));
+    }
+    if magic != BINARY_MAGIC {
+        return Ok(WireFrame::Corrupt(format!(
+            "bad binary frame magic {magic:02x?} (expected {BINARY_MAGIC:02x?})"
+        )));
+    }
+    let mut len4 = [0u8; 4];
+    if hit_eof(input, &mut len4)? {
+        return Ok(WireFrame::Corrupt(
+            "binary frame truncated inside the length prefix".to_string(),
+        ));
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_BINARY_BODY {
+        return Ok(WireFrame::Corrupt(format!(
+            "binary frame length prefix {len} exceeds the {MAX_BINARY_BODY}-byte cap"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    if hit_eof(input, &mut body)? {
+        return Ok(WireFrame::Corrupt(format!(
+            "binary frame truncated: length prefix promised {len} body bytes"
+        )));
+    }
+    Ok(WireFrame::Binary(body))
+}
+
+/// `read_exact`, with early EOF reported as `Ok(true)` instead of an
+/// error so the caller can answer it as framing corruption.
+fn hit_eof<R: std::io::Read>(input: &mut R, buf: &mut [u8]) -> std::io::Result<bool> {
+    match input.read_exact(buf) {
+        Ok(()) => Ok(false),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Ok(true),
+        Err(e) => Err(e),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -398,11 +762,11 @@ mod tests {
         // Key order is the BTreeMap's alphabetical order — the CI golden
         // transcript (`ci/golden/serve_smoke.out`) depends on it.
         let r = Response::Infer { id: "a".into(), batch: 1, y: vec![4.0, 4.0] };
-        assert_eq!(r.to_line(), r#"{"batch":1,"id":"a","ok":true,"op":"infer","v":1,"y":[4,4]}"#);
+        assert_eq!(r.to_line(), r#"{"batch":1,"id":"a","ok":true,"op":"infer","v":2,"y":[4,4]}"#);
         let e = Response::Error { id: None, error: "bad frame: unexpected end of JSON".into() };
         assert_eq!(
             e.to_line(),
-            r#"{"error":"bad frame: unexpected end of JSON","id":null,"ok":false,"op":"error","v":1}"#
+            r#"{"error":"bad frame: unexpected end of JSON","id":null,"ok":false,"op":"error","v":2}"#
         );
     }
 
@@ -423,14 +787,43 @@ mod tests {
         };
         assert_eq!(
             r.to_line(),
-            r#"{"id":"s","obs":null,"ok":true,"op":"stats","stats":{"batches":2,"errors":1,"requests":5,"responses":4,"widest_batch":2},"v":1}"#
+            r#"{"id":"s","obs":null,"ok":true,"op":"stats","stats":{"batches":2,"errors":1,"requests":5,"responses":4,"widest_batch":2},"v":2}"#
         );
     }
 
     #[test]
-    fn version_gate_runs_before_op_dispatch() {
-        let line = r#"{"v":2,"op":"infer","id":"x","site":"fc","batch":1,"x":[1]}"#;
+    fn hello_wire_layout_is_stable() {
+        // The binary-smoke golden parses this ack; key order pinned.
+        let r = Response::Hello { id: "h".into(), proto: PROTOCOL_VERSION, wire: "binary".into() };
+        assert_eq!(
+            r.to_line(),
+            r#"{"formats":["ndjson","binary"],"id":"h","ok":true,"op":"hello","proto":2,"v":2,"wire":"binary"}"#
+        );
+    }
+
+    #[test]
+    fn version_gate_accepts_the_range_and_runs_before_op_dispatch() {
+        // v1 requests decode unchanged (back-compat leg of the v2 bump).
+        let v1 = r#"{"v":1,"op":"infer","id":"x","site":"fc","batch":1,"x":[1]}"#;
+        assert!(Request::parse_line(v1).is_ok());
+        // Out-of-range versions are rejected before the op is looked at.
+        let line = r#"{"v":9,"op":"warp","id":"x"}"#;
         let err = Request::parse_line(line).unwrap_err().to_string();
-        assert!(err.contains("unsupported protocol version 2"), "{err}");
+        assert!(err.contains("unsupported protocol version 9"), "{err}");
+        assert!(err.contains("v1..v2"), "{err}");
+        // Fractional versions are not a thing.
+        let frac = r#"{"v":1.5,"op":"info","id":"x"}"#;
+        let err = Request::parse_line(frac).unwrap_err().to_string();
+        assert!(err.contains("unsupported protocol version 1.5"), "{err}");
+    }
+
+    #[test]
+    fn binary_magic_is_tied_to_the_protocol_version() {
+        // The magic's last byte names the protocol major version that
+        // introduced the layout; a future v3 with a changed layout must
+        // mint a new magic.
+        assert_eq!(BINARY_MAGIC[3], b'0' + PROTOCOL_VERSION as u8);
+        // And the first byte can never start a UTF-8 text line.
+        assert!(BINARY_MAGIC[0] >= 0x80);
     }
 }

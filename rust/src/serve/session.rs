@@ -1,4 +1,4 @@
-//! Per-session plan/scratch cache.
+//! Per-session plan cache, shared across connections.
 //!
 //! [`SessionCtx`] is the forcing-function refactor behind `padst serve`:
 //! everything a request needs that does not depend on the request —
@@ -10,6 +10,19 @@
 //! [`SessionCtx::fingerprint`] exactly like
 //! [`SinkhornScratch::buffer_fingerprint`].
 //!
+//! Since the concurrent-serve refactor the state splits in two:
+//!
+//! - [`SharedState`] — one per loaded checkpoint, behind an `Arc`: the
+//!   pattern/perm drivers, the metric registry, and the compiled
+//!   [`PlanSet`] behind a read-write lock.  Checkpoints load and compile
+//!   **once**, no matter how many connections serve them; a reload (or
+//!   the `--watch-checkpoint` poller, via [`CheckpointWatch`]) swaps the
+//!   whole `Arc<PlanSet>` under the write lock and bumps the generation.
+//! - [`SessionCtx`] — one per connection: its own activation scratch
+//!   (no cross-connection contention on the warm path) plus a cached
+//!   `Arc<PlanSet>` view refreshed from the shared lock at each burst,
+//!   so a hot reload reaches every live connection at its next frame.
+//!
 //! Lifecycle:
 //!
 //! ```text
@@ -17,11 +30,18 @@
 //!                             (Hard -> index map, Soft -> Sinkhorn+
 //!                             Hungarian via the owned scratch), then
 //!                             pattern.compress folds each map into the
-//!                             site's index stream  ==> Vec<SiteRuntime>
-//! run()/run_coalesced(): validate geometry, copy rows into the owned
-//!                        x-scratch, ONE run_plan_mt dispatch, answer
-//!                        from the owned y-scratch
-//! reload(): rebuild() again — plans evicted, generation bumped
+//!                             site's index stream  ==> Arc<PlanSet>
+//! connection():          cheap per-connection view — clones the Arc,
+//!                        fresh scratch, get-or-create metric handles
+//!                        (zero new registrations on an unchanged site
+//!                        set — the NodeObs dedup contract)
+//! run()/run_coalesced(): refresh the plan view (read lock, generation
+//!                        compare), validate geometry, copy rows into
+//!                        the owned x-scratch, ONE run_plan_mt dispatch,
+//!                        answer from the owned y-scratch
+//! reload()/poll():       rebuild() again under the write lock — plans
+//!                        evicted, generation bumped, every connection
+//!                        picks the swap up at its next burst
 //! ```
 //!
 //! The serve layer never touches kernels below [`run_plan_mt`]: plans are
@@ -29,7 +49,8 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::SystemTime;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -66,36 +87,188 @@ pub struct SiteRuntime {
     pub plan: KernelPlan,
 }
 
-/// A serving session: compiled plans, perm index maps and activation
-/// scratch for one loaded checkpoint.  See the module docs for the
-/// lifecycle; `rust/tests/serve_protocol.rs` pins the no-alloc warm path
-/// and the reload eviction semantics.
-pub struct SessionCtx {
+/// One immutable generation of compiled plans.  Connections hold it by
+/// `Arc`, so a reload never invalidates an in-flight burst: the old
+/// generation stays alive until the last connection refreshes past it.
+pub struct PlanSet {
+    sites: Vec<SiteRuntime>,
+    /// Bumped on every (re)build; responses carry it so clients can tell
+    /// which compiled plans answered them.
+    generation: u64,
+}
+
+impl PlanSet {
+    pub fn sites(&self) -> &[SiteRuntime] {
+        &self.sites
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+}
+
+/// Everything one loaded checkpoint shares across its connections:
+/// drivers, the metric registry, and the current [`PlanSet`] behind a
+/// read-write lock.  Checkpoints load once per process, not once per
+/// connection; see the module docs for the split.
+pub struct SharedState {
     label: String,
-    checkpoint: Option<PathBuf>,
+    checkpoint: Mutex<Option<PathBuf>>,
     pattern: PatternHandle,
     perm: PermHandle,
-    sites: Vec<SiteRuntime>,
+    threads: usize,
+    backend: Backend,
+    plans: RwLock<Arc<PlanSet>>,
+    /// Sinkhorn/Hungarian decode scratch for Soft-state checkpoints;
+    /// only rebuild touches it, serialized by the lock.
+    sinkhorn: Mutex<SinkhornScratch>,
+    /// Per-session metric registry: node-level frame metrics plus one
+    /// `serve.infer_ns.<site>` histogram per site.  Owned (not the
+    /// process-global registry) so concurrent sessions — and parallel
+    /// tests — never see each other's counters.  Get-or-create keyed by
+    /// metric name: every connection resolves the *same* handles, which
+    /// is what lets per-connection recording roll up into one `stats`
+    /// frame without double registration.
+    obs: MetricRegistry,
+}
+
+impl SharedState {
+    /// Recompile every site from `state` and swap the plan set under the
+    /// write lock: decode perms (Soft states go through the shared
+    /// Sinkhorn scratch), fold the index maps into fresh plans, bump the
+    /// generation.  Returns the new generation.  Old plans are dropped
+    /// when the last connection refreshes past them — this is also the
+    /// reload eviction path.
+    pub fn rebuild(&self, state: &TrainState) -> Result<u64> {
+        let mut widths = Vec::with_capacity(state.site_names.len());
+        for name in &state.site_names {
+            let mask = state
+                .vals
+                .get(&format!("mask.{name}"))
+                .ok_or_else(|| anyhow!("state has no mask for site {name:?}"))?;
+            if mask.shape.len() != 2 {
+                bail!("mask.{name} is not 2-D (shape {:?})", mask.shape);
+            }
+            widths.push(mask.shape[1]);
+        }
+        let perm_sites =
+            sites_from_vals(self.perm.as_ref(), &state.site_names, &widths, &state.vals)?;
+
+        let mut sites = Vec::with_capacity(perm_sites.len());
+        for site in &perm_sites {
+            let name = &site.name;
+            let mask_t = &state.vals[&format!("mask.{name}")];
+            let (rows, cols) = (mask_t.shape[0], mask_t.shape[1]);
+            let w = state
+                .vals
+                .get(&format!("param.{name}.w"))
+                .ok_or_else(|| anyhow!("state has no weights for site {name:?}"))?;
+            if w.shape != mask_t.shape {
+                bail!("param.{name}.w shape {:?} != mask shape {:?}", w.shape, mask_t.shape);
+            }
+            let mask = Mask { rows, cols, bits: mask_t.f32s().to_vec() };
+            // Hard states carry their index map; Soft states decode
+            // through Sinkhorn + Hungarian right here, once, so requests
+            // never pay for projection.
+            let index_map: Option<Vec<usize>> = match &site.state {
+                PermState::Identity => None,
+                PermState::Hard { index_map } => Some(index_map.clone()),
+                PermState::Soft { logits, .. } => {
+                    let mut sink = self.sinkhorn.lock().unwrap_or_else(|p| p.into_inner());
+                    self.perm.decode_logits(logits.f32s(), cols, &mut sink)
+                }
+            };
+            let permuted = index_map
+                .as_ref()
+                .is_some_and(|m| m.iter().enumerate().any(|(i, &p)| i != p));
+            let perm_i32: Option<Vec<i32>> =
+                index_map.map(|m| m.into_iter().map(|p| p as i32).collect());
+            let plan = self.pattern.compress(w.f32s(), &mask, perm_i32.as_deref());
+            // One tuning-table consult per site per (re)build: the warm
+            // request path dispatches the cached choice and never probes
+            // the table again.
+            let (choice, tuned) = tune::tuner().choice_for(&plan, self.threads, self.backend);
+            sites.push(SiteRuntime {
+                name: name.clone(),
+                rows,
+                cols,
+                nnz: mask.nnz(),
+                permuted,
+                choice,
+                tuned,
+                plan,
+            });
+        }
+        // Pre-register the per-site infer histograms so a connection
+        // view's refresh resolves existing handles.  Get-or-create: a
+        // reload over the same site names re-uses them, so the
+        // registration count only moves when the site set changes.
+        for s in &sites {
+            let _ = self.obs.histogram(&format!("serve.infer_ns.{}", s.name));
+        }
+        let mut plans = self.plans.write().unwrap_or_else(|p| p.into_inner());
+        let generation = plans.generation + 1;
+        *plans = Arc::new(PlanSet { sites, generation });
+        Ok(generation)
+    }
+
+    /// The current plan set (cheap: read lock + `Arc` clone).
+    pub fn plans(&self) -> Arc<PlanSet> {
+        Arc::clone(&self.plans.read().unwrap_or_else(|p| p.into_inner()))
+    }
+
+    /// Current plan generation without cloning the set.
+    pub fn generation(&self) -> u64 {
+        self.plans.read().unwrap_or_else(|p| p.into_inner()).generation
+    }
+
+    /// The shared metric registry (see the field docs for why every
+    /// connection resolves the same handles).
+    pub fn obs(&self) -> &MetricRegistry {
+        &self.obs
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// The checkpoint path this session was loaded from (what
+    /// `--watch-checkpoint` polls); `None` for in-memory / synthetic
+    /// sessions.
+    pub fn checkpoint_path(&self) -> Option<PathBuf> {
+        self.checkpoint.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
+    fn hists_for(&self, plans: &PlanSet) -> Vec<Arc<Histogram>> {
+        plans
+            .sites
+            .iter()
+            .map(|s| self.obs.histogram(&format!("serve.infer_ns.{}", s.name)))
+            .collect()
+    }
+}
+
+/// One connection's serving view: private activation scratch plus a
+/// cached `Arc` of the shared plan set, refreshed at each burst.  See
+/// the module docs for the lifecycle; `rust/tests/serve_protocol.rs`
+/// pins the no-alloc warm path and the reload eviction semantics, and
+/// `rust/tests/serve_concurrent.rs` pins the cross-connection ones.
+pub struct SessionCtx {
+    shared: Arc<SharedState>,
+    /// Cached plan view; [`SessionCtx::refresh`] re-resolves it when the
+    /// shared generation moves.
+    plans: Arc<PlanSet>,
+    /// Per-site infer histograms, index-aligned with `plans.sites`;
+    /// looked up at refresh so the warm path never takes the registry
+    /// lock or allocates a metric name.
+    site_hists: Vec<Arc<Histogram>>,
     /// Request activations, grown once per high-water batch, never shrunk.
     scratch_x: Vec<f32>,
     /// Response activations, same policy.
     scratch_y: Vec<f32>,
-    /// Sinkhorn/Hungarian decode scratch for Soft-state checkpoints.
-    sinkhorn: SinkhornScratch,
+    /// Kernel threads this view dispatches with — the connection's slice
+    /// of the global budget (see `kernels::threads_per_conn`).
     threads: usize,
-    backend: Backend,
-    /// Bumped on every (re)build; responses carry it so clients can tell
-    /// which compiled plans answered them.
-    generation: u64,
-    /// Per-session metric registry: node-level frame metrics plus one
-    /// `serve.infer_ns.<site>` histogram per site.  Owned (not the
-    /// process-global registry) so concurrent sessions — and parallel
-    /// tests — never see each other's counters.
-    obs: MetricRegistry,
-    /// Pre-registered per-site infer histograms, index-aligned with
-    /// `sites`; looked up here so the warm path never takes the
-    /// registry lock or allocates a metric name.
-    site_hists: Vec<Arc<Histogram>>,
 }
 
 impl SessionCtx {
@@ -109,23 +282,22 @@ impl SessionCtx {
         threads: usize,
         backend: Backend,
     ) -> Result<SessionCtx> {
-        let mut ctx = SessionCtx {
+        let threads = resolve_threads(threads);
+        let shared = Arc::new(SharedState {
             label: label.to_string(),
-            checkpoint: None,
+            checkpoint: Mutex::new(None),
             pattern,
             perm,
-            sites: Vec::new(),
-            scratch_x: Vec::new(),
-            scratch_y: Vec::new(),
-            sinkhorn: SinkhornScratch::new(),
-            threads: resolve_threads(threads),
+            threads,
             backend,
-            generation: 0,
+            plans: RwLock::new(Arc::new(PlanSet { sites: Vec::new(), generation: 0 })),
+            sinkhorn: Mutex::new(SinkhornScratch::new()),
             obs: MetricRegistry::new(),
-            site_hists: Vec::new(),
-        };
-        ctx.rebuild(state)?;
-        Ok(ctx)
+        });
+        shared.rebuild(state)?;
+        let plans = shared.plans();
+        let site_hists = shared.hists_for(&plans);
+        Ok(SessionCtx { shared, plans, site_hists, scratch_x: Vec::new(), scratch_y: Vec::new(), threads })
     }
 
     /// Load a checkpoint from disk and compile every site once.  The
@@ -140,8 +312,9 @@ impl SessionCtx {
     ) -> Result<SessionCtx> {
         let state = checkpoint::load(path)?;
         let label = path.display().to_string();
-        let mut ctx = SessionCtx::from_state(&label, &state, pattern, perm, threads, backend)?;
-        ctx.checkpoint = Some(path.to_path_buf());
+        let ctx = SessionCtx::from_state(&label, &state, pattern, perm, threads, backend)?;
+        *ctx.shared.checkpoint.lock().unwrap_or_else(|p| p.into_inner()) =
+            Some(path.to_path_buf());
         Ok(ctx)
     }
 
@@ -179,80 +352,58 @@ impl SessionCtx {
         )
     }
 
-    /// Recompile every site from `state`: decode perms (Soft states go
-    /// through the owned Sinkhorn scratch), fold the index maps into
-    /// fresh plans, bump the generation.  Old plans are dropped here —
-    /// this is also the reload eviction path.
-    pub fn rebuild(&mut self, state: &TrainState) -> Result<()> {
-        let mut widths = Vec::with_capacity(state.site_names.len());
-        for name in &state.site_names {
-            let mask = state
-                .vals
-                .get(&format!("mask.{name}"))
-                .ok_or_else(|| anyhow!("state has no mask for site {name:?}"))?;
-            if mask.shape.len() != 2 {
-                bail!("mask.{name} is not 2-D (shape {:?})", mask.shape);
-            }
-            widths.push(mask.shape[1]);
+    /// A fresh view over the same shared state for another connection:
+    /// clones the plan `Arc`, resolves the *existing* metric handles
+    /// (get-or-create by name — zero new registrations on an unchanged
+    /// site set, the NodeObs dedup contract), and starts with empty
+    /// scratch so connections never contend on the warm path.
+    pub fn connection(&self) -> SessionCtx {
+        let plans = self.shared.plans();
+        let site_hists = self.shared.hists_for(&plans);
+        SessionCtx {
+            shared: Arc::clone(&self.shared),
+            plans,
+            site_hists,
+            scratch_x: Vec::new(),
+            scratch_y: Vec::new(),
+            threads: self.threads,
         }
-        let perm_sites =
-            sites_from_vals(self.perm.as_ref(), &state.site_names, &widths, &state.vals)?;
+    }
 
-        let mut sites = Vec::with_capacity(perm_sites.len());
-        for site in &perm_sites {
-            let name = &site.name;
-            let mask_t = &state.vals[&format!("mask.{name}")];
-            let (rows, cols) = (mask_t.shape[0], mask_t.shape[1]);
-            let w = state
-                .vals
-                .get(&format!("param.{name}.w"))
-                .ok_or_else(|| anyhow!("state has no weights for site {name:?}"))?;
-            if w.shape != mask_t.shape {
-                bail!("param.{name}.w shape {:?} != mask shape {:?}", w.shape, mask_t.shape);
-            }
-            let mask = Mask { rows, cols, bits: mask_t.f32s().to_vec() };
-            // Hard states carry their index map; Soft states decode
-            // through Sinkhorn + Hungarian right here, once, so requests
-            // never pay for projection.
-            let index_map: Option<Vec<usize>> = match &site.state {
-                PermState::Identity => None,
-                PermState::Hard { index_map } => Some(index_map.clone()),
-                PermState::Soft { logits, .. } => {
-                    self.perm.decode_logits(logits.f32s(), cols, &mut self.sinkhorn)
-                }
-            };
-            let permuted = index_map
-                .as_ref()
-                .is_some_and(|m| m.iter().enumerate().any(|(i, &p)| i != p));
-            let perm_i32: Option<Vec<i32>> =
-                index_map.map(|m| m.into_iter().map(|p| p as i32).collect());
-            let plan = self.pattern.compress(w.f32s(), &mask, perm_i32.as_deref());
-            // One tuning-table consult per site per (re)build: the warm
-            // request path dispatches the cached choice and never probes
-            // the table again.
-            let (choice, tuned) = tune::tuner().choice_for(&plan, self.threads, self.backend);
-            sites.push(SiteRuntime {
-                name: name.clone(),
-                rows,
-                cols,
-                nnz: mask.nnz(),
-                permuted,
-                choice,
-                tuned,
-                plan,
-            });
+    /// Cap this view's kernel-thread budget (a connection's slice of the
+    /// global `--threads`; bit-safe because `run_plan_mt` is
+    /// bit-identical at any thread count).
+    pub fn with_threads(mut self, threads: usize) -> SessionCtx {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The shared per-checkpoint state (what the `--watch-checkpoint`
+    /// poller holds on to).
+    pub fn shared(&self) -> &Arc<SharedState> {
+        &self.shared
+    }
+
+    /// Re-resolve the cached plan view if the shared generation moved
+    /// (another connection's reload, or the checkpoint watcher).  Warm
+    /// path cost when nothing moved: one read lock, one integer compare —
+    /// no allocation, so the fingerprint holds.  Returns whether the
+    /// view changed.
+    pub fn refresh(&mut self) -> bool {
+        if self.shared.generation() == self.plans.generation {
+            return false;
         }
-        self.sites = sites;
-        // Per-site infer histograms, registered once per (re)build.
-        // Get-or-create: a reload over the same site names re-uses the
-        // existing handles, so the registration count only moves when
-        // the site set actually changes.
-        self.site_hists = self
-            .sites
-            .iter()
-            .map(|s| self.obs.histogram(&format!("serve.infer_ns.{}", s.name)))
-            .collect();
-        self.generation += 1;
+        self.plans = self.shared.plans();
+        self.site_hists = self.shared.hists_for(&self.plans);
+        true
+    }
+
+    /// Recompile every site from `state` (shared write-lock swap) and
+    /// refresh this view.  Other connections pick the swap up at their
+    /// next burst.
+    pub fn rebuild(&mut self, state: &TrainState) -> Result<()> {
+        self.shared.rebuild(state)?;
+        self.refresh();
         Ok(())
     }
 
@@ -265,31 +416,38 @@ impl SessionCtx {
     /// Reload from a checkpoint path (the session's own when `path` is
     /// `None`).  Returns the new generation.
     pub fn reload_from(&mut self, path: Option<&str>) -> Result<u64> {
-        let path: PathBuf = match (path, &self.checkpoint) {
-            (Some(p), _) => PathBuf::from(p),
-            (None, Some(p)) => p.clone(),
-            (None, None) => bail!(
-                "session {:?} was not loaded from a checkpoint; reload needs a \"checkpoint\" path",
-                self.label
-            ),
+        let path: PathBuf = {
+            let cp = self.shared.checkpoint.lock().unwrap_or_else(|p| p.into_inner());
+            match (path, cp.as_ref()) {
+                (Some(p), _) => PathBuf::from(p),
+                (None, Some(p)) => p.clone(),
+                (None, None) => bail!(
+                    "session {:?} was not loaded from a checkpoint; reload needs a \
+                     \"checkpoint\" path",
+                    self.shared.label
+                ),
+            }
         };
         let state = checkpoint::load(&path)?;
-        self.rebuild(&state)?;
-        self.checkpoint = Some(path);
-        Ok(self.generation)
+        self.shared.rebuild(&state)?;
+        *self.shared.checkpoint.lock().unwrap_or_else(|p| p.into_inner()) = Some(path);
+        self.refresh();
+        Ok(self.plans.generation)
     }
 
+    /// The sites of this view's plan generation (call
+    /// [`SessionCtx::refresh`] first when staleness matters).
     pub fn sites(&self) -> &[SiteRuntime] {
-        &self.sites
+        &self.plans.sites
     }
 
     pub fn site(&self, name: &str) -> Result<&SiteRuntime> {
-        self.site_index(name).map(|i| &self.sites[i])
+        self.site_index(name).map(|i| &self.plans.sites[i])
     }
 
     fn site_index(&self, name: &str) -> Result<usize> {
-        self.sites.iter().position(|s| s.name == name).ok_or_else(|| {
-            let known: Vec<&str> = self.sites.iter().map(|s| s.name.as_str()).collect();
+        self.plans.sites.iter().position(|s| s.name == name).ok_or_else(|| {
+            let known: Vec<&str> = self.plans.sites.iter().map(|s| s.name.as_str()).collect();
             anyhow!(
                 "unknown site {name:?} in this session (known: {}) — requests must target the \
                  loaded checkpoint's sites",
@@ -299,11 +457,11 @@ impl SessionCtx {
     }
 
     pub fn label(&self) -> &str {
-        &self.label
+        &self.shared.label
     }
 
     pub fn generation(&self) -> u64 {
-        self.generation
+        self.plans.generation
     }
 
     pub fn threads(&self) -> usize {
@@ -311,7 +469,7 @@ impl SessionCtx {
     }
 
     pub fn backend(&self) -> Backend {
-        self.backend
+        self.shared.backend
     }
 
     /// Validate one request's geometry against the compiled site — the
@@ -340,21 +498,24 @@ impl SessionCtx {
     /// row-major `(x, batch)` slice pair) are packed into the owned
     /// x-scratch and dispatched as ONE batched [`run_plan_mt`] call; the
     /// returned slice is the concatenated rows in part order, living in
-    /// the owned y-scratch until the next call.
+    /// the owned y-scratch until the next call.  The plan view is
+    /// refreshed first, so a hot reload reaches this connection here.
     ///
     /// Because every kernel row `y[b][i]` depends only on input row `b`,
     /// the coalesced result is bitwise the concatenation of the parts run
     /// singly — the identity `serve_protocol.rs` sweeps across backends.
     // lint: no-alloc (grow-only `resize` of the owned scratch is the one
-    // sanctioned exception; warm requests never reach it)
+    // sanctioned exception; warm requests never reach it, and refresh()
+    // only re-resolves the plan view on a generation change)
     pub fn run_coalesced(&mut self, site: &str, parts: &[(&[f32], usize)]) -> Result<&[f32]> {
+        self.refresh();
         let si = self.site_index(site)?;
         // Timed span over the whole coalesced dispatch (validation +
         // scratch pack + kernel); the Arc clone and the thread-local
         // label push are the only costs — no allocation, so the warm
         // fingerprint holds with metrics recording enabled.
         let _span = obs::span::timed("serve.infer", &self.site_hists[si]);
-        let (rows, cols) = (self.sites[si].rows, self.sites[si].cols);
+        let (rows, cols) = (self.plans.sites[si].rows, self.plans.sites[si].cols);
         let mut total = 0usize;
         for (x, batch) in parts {
             self.check_request(site, *batch, x.len())?;
@@ -380,10 +541,10 @@ impl SessionCtx {
         // table lookup; untuned sites keep the exact pre-tuner call.
         // Both are allocation-free — the fingerprint contract holds
         // either way.
-        let (tuned, choice) = (self.sites[si].tuned, self.sites[si].choice);
+        let (tuned, choice) = (self.plans.sites[si].tuned, self.plans.sites[si].choice);
         if tuned {
             run_plan_mt_tuned(
-                &self.sites[si].plan,
+                &self.plans.sites[si].plan,
                 &self.scratch_x[..total * cols],
                 total,
                 &mut self.scratch_y[..total * rows],
@@ -392,12 +553,12 @@ impl SessionCtx {
             );
         } else {
             run_plan_mt(
-                &self.sites[si].plan,
+                &self.plans.sites[si].plan,
                 &self.scratch_x[..total * cols],
                 total,
                 &mut self.scratch_y[..total * rows],
                 self.threads,
-                self.backend,
+                self.shared.backend,
             );
         }
         Ok(&self.scratch_y[..total * rows])
@@ -408,16 +569,18 @@ impl SessionCtx {
         self.run_coalesced(site, &[(x, batch)])
     }
 
-    /// This session's metric registry (frame/batch metrics recorded by
-    /// the serve loop, per-site infer histograms recorded here).
+    /// The shared metric registry (frame/batch metrics recorded by the
+    /// serve loop, per-site infer histograms recorded here).  Every
+    /// connection resolves the same handles, so per-connection recording
+    /// rolls up into one `stats` frame.
     pub fn obs(&self) -> &MetricRegistry {
-        &self.obs
+        &self.shared.obs
     }
 
     /// Session metrics merged with the process-global registry (kernel
     /// dispatch counters, harness metrics) — what `stats` frames carry.
     pub fn obs_snapshot(&self) -> ObsSnapshot {
-        let mut snap = self.obs.snapshot();
+        let mut snap = self.shared.obs.snapshot();
         snap.merge(&obs::global().snapshot());
         snap
     }
@@ -435,8 +598,47 @@ impl SessionCtx {
             self.scratch_x.capacity(),
             self.scratch_y.as_ptr() as usize,
             self.scratch_y.capacity(),
-            self.generation,
-            self.obs.registrations(),
+            self.plans.generation,
+            self.shared.obs.registrations(),
         )
+    }
+}
+
+/// Mtime poller behind `--watch-checkpoint`: when the checkpoint file's
+/// modification time moves, reload it into the shared state (write-lock
+/// swap), so every live connection picks the new plans up at its next
+/// burst.  A load error (e.g. the trainer mid-write) leaves the old
+/// plans serving and the watermark unchanged, so the next poll retries.
+pub struct CheckpointWatch {
+    path: PathBuf,
+    last: Option<SystemTime>,
+}
+
+impl CheckpointWatch {
+    /// Start watching `path`.  The current mtime (if the file exists) is
+    /// the baseline: only *subsequent* modifications trigger a reload.
+    pub fn new(path: &Path) -> CheckpointWatch {
+        let last = std::fs::metadata(path).and_then(|m| m.modified()).ok();
+        CheckpointWatch { path: path.to_path_buf(), last }
+    }
+
+    /// One poll: `Ok(Some(generation))` after a successful hot reload,
+    /// `Ok(None)` when the mtime has not moved, `Err` when the file is
+    /// unreadable or fails to compile (old plans keep serving).
+    pub fn poll(&mut self, shared: &SharedState) -> Result<Option<u64>> {
+        let mtime = std::fs::metadata(&self.path)
+            .and_then(|m| m.modified())
+            .map_err(|e| anyhow!("watch {}: {e}", self.path.display()))?;
+        if self.last == Some(mtime) {
+            return Ok(None);
+        }
+        let state = checkpoint::load(&self.path)?;
+        let generation = shared.rebuild(&state)?;
+        self.last = Some(mtime);
+        Ok(Some(generation))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
     }
 }

@@ -1,0 +1,311 @@
+//! ISSUE 10 cross-connection surface for `padst serve`: two connections
+//! over one shared plan cache answer bit-identically to the same
+//! requests served sequentially (per backend x threads, either wire
+//! format), `NodeObs` registration de-duplicates across connections
+//! (the satellite bugfix), the warm-path zero-alloc fingerprint holds
+//! per connection, hot reloads propagate to live connections, and
+//! `CheckpointWatch` turns an mtime change into a generation bump.
+//! Single-connection protocol behaviour lives in `serve_protocol.rs`.
+
+use std::collections::HashMap;
+use std::sync::Barrier;
+
+use padst::coordinator::{checkpoint, TrainState};
+use padst::kernels::micro::Backend;
+use padst::perm::model::resolve_perm;
+use padst::serve::{serve, CheckpointWatch, NodeOpts, Request, Response, SessionCtx};
+use padst::sparsity::pattern::resolve_pattern;
+use padst::tensor::Tensor;
+use padst::util::Rng;
+
+const ROWS: usize = 32;
+const COLS: usize = 64;
+
+fn state_for(spec: &str, seed: u64, with_perm: bool) -> TrainState {
+    let pattern = resolve_pattern(spec).unwrap();
+    let density = if spec == "dense" { 1.0 } else { 0.25 };
+    let mut rng = Rng::new(seed);
+    let mask = pattern.init_mask(ROWS, COLS, density, &mut rng).unwrap();
+    let w: Vec<f32> = (0..ROWS * COLS).map(|_| rng.normal()).collect();
+    let mut vals = HashMap::new();
+    vals.insert("mask.fc".to_string(), Tensor::from_f32(&[ROWS, COLS], mask.bits.clone()));
+    vals.insert("param.fc.w".to_string(), Tensor::from_f32(&[ROWS, COLS], w));
+    vals.insert("hard_flags".to_string(), Tensor::from_f32(&[1], vec![1.0]));
+    if with_perm {
+        let idx: Vec<i32> = rng.permutation(COLS).iter().map(|&p| p as i32).collect();
+        vals.insert("perm_idx.fc".to_string(), Tensor::from_i32(&[COLS], idx));
+    }
+    TrainState { vals, site_names: vec!["fc".to_string()], budgets: vec![mask.nnz()] }
+}
+
+fn session(spec: &str, threads: usize, backend: Backend, with_perm: bool) -> SessionCtx {
+    let state = state_for(spec, 5, with_perm);
+    let perm = resolve_perm(if with_perm { "random" } else { "none" }).unwrap();
+    SessionCtx::from_state("test", &state, resolve_pattern(spec).unwrap(), perm, threads, backend)
+        .unwrap()
+}
+
+fn infer_line(id: &str, site: &str, batch: usize, x: &[f32], more: bool) -> String {
+    Request::Infer { id: id.into(), site: site.into(), batch, x: x.to_vec(), more }.to_line()
+}
+
+fn parse_responses(out: &[u8]) -> Vec<Response> {
+    std::str::from_utf8(out)
+        .unwrap()
+        .trim_end()
+        .lines()
+        .map(|l| Response::parse_line(l).unwrap())
+        .collect()
+}
+
+/// A multi-burst script: `n_bursts` coalesced pairs, inputs seeded
+/// per-connection so the two connections ask different questions.
+fn script_for(seed: u64, n_bursts: usize) -> (String, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(seed);
+    let mut script = String::new();
+    let mut inputs = Vec::new();
+    for b in 0..n_bursts {
+        let x1: Vec<f32> = (0..COLS).map(|_| rng.normal()).collect();
+        let x2: Vec<f32> = (0..2 * COLS).map(|_| rng.normal()).collect();
+        script.push_str(&infer_line(&format!("s{seed}-b{b}-0"), "fc", 1, &x1, true));
+        script.push('\n');
+        script.push_str(&infer_line(&format!("s{seed}-b{b}-1"), "fc", 2, &x2, false));
+        script.push('\n');
+        inputs.push(x1);
+        inputs.push(x2);
+    }
+    (script, inputs)
+}
+
+fn infer_bits(resp: &[Response]) -> Vec<(String, Vec<u32>)> {
+    resp.iter()
+        .map(|r| match r {
+            Response::Infer { id, y, .. } => {
+                (id.clone(), y.iter().map(|v| v.to_bits()).collect())
+            }
+            other => panic!("unexpected response {other:?}"),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Tentpole acceptance: 2 concurrent connections == sequential, to_bits-exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn two_connections_interleaved_are_bit_identical_to_sequential() {
+    for &backend in Backend::all() {
+        for threads in [1usize, 4] {
+            let ctx = session("diag:4", threads, backend, true);
+            let (script_a, _) = script_for(100, 4);
+            let (script_b, _) = script_for(200, 4);
+            // Concurrent leg: two connection views over the SAME shared
+            // plans, started together so their bursts interleave on the
+            // kernel layer.
+            let barrier = Barrier::new(2);
+            let (out_a, out_b) = std::thread::scope(|s| {
+                let run = |script: &str| {
+                    let mut conn = ctx.connection();
+                    let mut out = Vec::new();
+                    barrier.wait();
+                    serve(&mut conn, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+                    out
+                };
+                let ha = s.spawn(|| run(&script_a));
+                let hb = s.spawn(|| run(&script_b));
+                (ha.join().unwrap(), hb.join().unwrap())
+            });
+            // Sequential leg: a fresh session serving the same scripts
+            // one after the other.
+            let mut seq = session("diag:4", threads, backend, true);
+            let mut seq_a = Vec::new();
+            serve(&mut seq, script_a.as_bytes(), &mut seq_a, &NodeOpts::default()).unwrap();
+            let mut seq_b = Vec::new();
+            serve(&mut seq, script_b.as_bytes(), &mut seq_b, &NodeOpts::default()).unwrap();
+            assert_eq!(
+                infer_bits(&parse_responses(&out_a)),
+                infer_bits(&parse_responses(&seq_a)),
+                "connection A diverged (backend={backend:?} threads={threads})"
+            );
+            assert_eq!(
+                infer_bits(&parse_responses(&out_b)),
+                infer_bits(&parse_responses(&seq_b)),
+                "connection B diverged (backend={backend:?} threads={threads})"
+            );
+        }
+    }
+}
+
+#[test]
+fn split_thread_budgets_stay_bit_identical() {
+    // The socket listener hands each connection threads_per_conn(total,
+    // conns) kernel threads; the split must never change results.
+    let x: Vec<f32> = (0..3 * COLS).map(|i| (i as f32).sin()).collect();
+    let ctx = session("block:8", 4, Backend::Tiled, false);
+    let full: Vec<u32> = {
+        let mut c = ctx.connection();
+        c.run("fc", &x, 3).unwrap().iter().map(|v| v.to_bits()).collect()
+    };
+    for conns in [1usize, 2, 4, 8] {
+        let t = padst::kernels::threads_per_conn(4, conns);
+        assert!(t >= 1);
+        let mut c = ctx.connection().with_threads(t);
+        let got: Vec<u32> = c.run("fc", &x, 3).unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, full, "threads_per_conn(4, {conns}) = {t} changed results");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Satellite bugfix: NodeObs registration de-duplicates across connections
+// ---------------------------------------------------------------------------
+
+#[test]
+fn node_obs_registration_dedups_across_connections() {
+    let ctx = session("diag:4", 1, Backend::Scalar, false);
+    let x: Vec<f32> = vec![0.5; COLS];
+    let script = format!("{}\n", infer_line("a", "fc", 1, &x, false));
+    // First connection registers the node metrics (cold).
+    let mut c1 = ctx.connection();
+    let mut out = Vec::new();
+    serve(&mut c1, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+    let regs_after_first = ctx.obs().registrations();
+    let frames_after_first = ctx.obs().histogram("serve.frame_ns").snapshot().count;
+    // Every later connection must resolve the SAME handles: zero new
+    // registrations (the pre-fix failure mode double-registered or
+    // clobbered the histograms) and aggregated recording.
+    for i in 0..3 {
+        let mut c = ctx.connection();
+        let mut out = Vec::new();
+        serve(&mut c, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+        assert_eq!(
+            ctx.obs().registrations(),
+            regs_after_first,
+            "connection {} re-registered node metrics",
+            i + 2
+        );
+    }
+    let frames = ctx.obs().histogram("serve.frame_ns").snapshot().count;
+    assert_eq!(
+        frames,
+        frames_after_first * 4,
+        "per-connection frame recordings must aggregate, not clobber"
+    );
+    let errors = ctx.obs().counter("serve.error_frames").get();
+    assert_eq!(errors, 0);
+}
+
+#[test]
+fn warm_fingerprint_holds_on_every_connection() {
+    let ctx = session("diag:4", 2, Backend::Scalar, true);
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..2 * COLS).map(|_| rng.normal()).collect();
+    // Prime the shared registry so connection 1's cold pass is the only
+    // registration event.
+    let mut warmup = ctx.connection();
+    warmup.run("fc", &x, 2).unwrap();
+    for conn_no in 0..3 {
+        let mut c = ctx.connection();
+        c.run("fc", &x, 2).unwrap(); // cold: sizes this view's scratch
+        let fp = c.fingerprint();
+        for round in 0..3 {
+            c.run("fc", &x, 2).unwrap();
+            assert_eq!(
+                c.fingerprint(),
+                fp,
+                "connection {conn_no} warm round {round} allocated"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hot reload: shared swap reaches live connections; CheckpointWatch polls
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reload_on_one_connection_reaches_the_other() {
+    let ctx = session("diag:4", 1, Backend::Scalar, true);
+    let mut rng = Rng::new(21);
+    let x: Vec<f32> = (0..COLS).map(|_| rng.normal()).collect();
+    let mut a = ctx.connection();
+    let mut b = ctx.connection();
+    let before: Vec<f32> = b.run("fc", &x, 1).unwrap().to_vec();
+    assert_eq!(b.generation(), 1);
+    // Connection A reloads different weights; B must see them at its
+    // next burst without any explicit action.
+    a.reload(&state_for("diag:4", 77, true)).unwrap();
+    assert_eq!(a.generation(), 2);
+    let after: Vec<f32> = b.run("fc", &x, 1).unwrap().to_vec();
+    assert_eq!(b.generation(), 2, "the reload must reach the live connection");
+    assert_ne!(before, after, "connection B kept serving the old plans");
+}
+
+#[test]
+fn checkpoint_watch_reloads_on_mtime_change_only() {
+    let dir = std::env::temp_dir().join(format!("padst_watch_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("state.tnz");
+    checkpoint::save(&ckpt, &state_for("diag:4", 5, true)).unwrap();
+    let mut ctx = SessionCtx::load_checkpoint(
+        &ckpt,
+        resolve_pattern("diag:4").unwrap(),
+        resolve_perm("random").unwrap(),
+        1,
+        Backend::Scalar,
+    )
+    .unwrap();
+    let mut rng = Rng::new(33);
+    let x: Vec<f32> = (0..COLS).map(|_| rng.normal()).collect();
+    let before: Vec<f32> = ctx.run("fc", &x, 1).unwrap().to_vec();
+
+    let mut watch = CheckpointWatch::new(&ckpt);
+    // Unchanged mtime: no reload, generation stays.
+    assert_eq!(watch.poll(ctx.shared()).unwrap(), None);
+    assert_eq!(ctx.generation(), 1);
+    // Rewrite the checkpoint with different weights; the short sleep
+    // guarantees a distinct mtime even on coarse-timestamp filesystems.
+    std::thread::sleep(std::time::Duration::from_millis(25));
+    checkpoint::save(&ckpt, &state_for("diag:4", 77, true)).unwrap();
+    let gen = watch.poll(ctx.shared()).unwrap();
+    assert_eq!(gen, Some(2), "an mtime change must hot-reload the shared plans");
+    // The live view picks the swap up at its next run.
+    let after: Vec<f32> = ctx.run("fc", &x, 1).unwrap().to_vec();
+    assert_eq!(ctx.generation(), 2);
+    assert_ne!(before, after, "the watcher reload did not reach the serving path");
+    // And the poll is edge-triggered: no further reload without a change.
+    assert_eq!(watch.poll(ctx.shared()).unwrap(), None);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_checkpoint_keeps_old_plans_serving() {
+    let dir = std::env::temp_dir().join(format!("padst_watch_bad_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("state.tnz");
+    checkpoint::save(&ckpt, &state_for("diag:4", 5, true)).unwrap();
+    let mut ctx = SessionCtx::load_checkpoint(
+        &ckpt,
+        resolve_pattern("diag:4").unwrap(),
+        resolve_perm("random").unwrap(),
+        1,
+        Backend::Scalar,
+    )
+    .unwrap();
+    let x: Vec<f32> = vec![0.5; COLS];
+    let before: Vec<f32> = ctx.run("fc", &x, 1).unwrap().to_vec();
+    let mut watch = CheckpointWatch::new(&ckpt);
+    // A half-written checkpoint (the trainer mid-save): the poll fails,
+    // the old plans keep serving, and the watermark is NOT advanced — a
+    // later good write still triggers the reload.
+    std::thread::sleep(std::time::Duration::from_millis(25));
+    std::fs::write(&ckpt, b"not a checkpoint").unwrap();
+    assert!(watch.poll(ctx.shared()).is_err());
+    assert_eq!(ctx.generation(), 1);
+    assert_eq!(ctx.run("fc", &x, 1).unwrap().to_vec(), before);
+    // The good write lands; the same watch recovers.
+    std::thread::sleep(std::time::Duration::from_millis(25));
+    checkpoint::save(&ckpt, &state_for("diag:4", 77, true)).unwrap();
+    assert_eq!(watch.poll(ctx.shared()).unwrap(), Some(2));
+    assert_ne!(ctx.run("fc", &x, 1).unwrap().to_vec(), before);
+    std::fs::remove_dir_all(&dir).ok();
+}

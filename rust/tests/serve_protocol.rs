@@ -1,16 +1,22 @@
-//! ISSUE 6 test surface for `padst serve`: the wire-format codec
-//! round-trip, the corrupt-frame containment table, the batching
+//! ISSUE 6 test surface for `padst serve` (extended for the protocol v2
+//! binary wire in ISSUE 10): the wire-format codec round-trips (NDJSON
+//! and length-prefixed binary, `to_bits`-exact incl. NaN/±inf), the
+//! corrupt-frame containment tables for both formats, the batching
 //! bit-identity contract (batch-of-N == N singles, `to_bits`-exact per
-//! backend x thread count x plan kind), the `SessionCtx` warm-path
-//! allocation guard with reload eviction, and the serving-path geometry
-//! errors — each mapped to a satellite of the issue.
+//! backend x thread count x plan kind, across wire formats), the
+//! `SessionCtx` warm-path allocation guard with reload eviction, the
+//! `hello` wire negotiation, and the serving-path geometry errors.
+//! Cross-connection behaviour lives in `serve_concurrent.rs`.
 
 use std::collections::HashMap;
 
 use padst::coordinator::{checkpoint, TrainState};
 use padst::kernels::micro::Backend;
 use padst::perm::model::resolve_perm;
-use padst::serve::{serve, NodeOpts, Request, Response, ServeWireStats, SessionCtx, SiteInfo};
+use padst::serve::{
+    decode_binary_body, encode_binary_infer, read_frame, serve, BinaryFrame, NodeOpts, Request,
+    Response, ServeWireStats, SessionCtx, SiteInfo, WireFrame, BINARY_MAGIC, PROTOCOL_VERSION,
+};
 use padst::sparsity::pattern::resolve_pattern;
 use padst::tensor::Tensor;
 use padst::util::json::Json;
@@ -79,6 +85,8 @@ fn codec_round_trips_every_variant() {
         Request::Reload { id: "r4".into(), checkpoint: Some("run.tnz".into()) },
         Request::Reload { id: "r5".into(), checkpoint: None },
         Request::Stats { id: "r6".into() },
+        Request::Hello { id: "r7".into(), wire: Some("binary".into()) },
+        Request::Hello { id: "r8".into(), wire: None },
     ];
     for r in requests {
         assert_eq!(Request::parse_line(&r.to_line()).unwrap(), r, "{r:?}");
@@ -107,6 +115,7 @@ fn codec_round_trips_every_variant() {
         },
         Response::Reloaded { id: "r4".into(), generation: 4 },
         Response::Stats { id: "r6".into(), stats: ServeWireStats::default(), obs: Json::Null },
+        Response::Hello { id: "r7".into(), proto: PROTOCOL_VERSION, wire: "binary".into() },
         Response::Error { id: Some("r9".into()), error: "unknown site \"zz\"".into() },
         Response::Error { id: None, error: "bad frame: unexpected end of JSON".into() },
     ];
@@ -432,6 +441,313 @@ fn eof_flushes_a_held_burst() {
     match &parse_responses(&out)[0] {
         Response::Infer { id, .. } => assert_eq!(id, "tail"),
         other => panic!("{other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Protocol v2: binary activation frames + hello negotiation (ISSUE 10)
+// ---------------------------------------------------------------------------
+
+/// Drain a mixed text/binary output stream into decoded frames.
+enum OutFrame {
+    Text(Response),
+    Binary(BinaryFrame),
+}
+
+fn parse_mixed(out: &[u8]) -> Vec<OutFrame> {
+    let mut cur = std::io::Cursor::new(out);
+    let mut frames = Vec::new();
+    loop {
+        match read_frame(&mut cur).unwrap() {
+            WireFrame::Eof => break,
+            WireFrame::Text(l) => frames.push(OutFrame::Text(Response::parse_line(&l).unwrap())),
+            WireFrame::Binary(b) => frames.push(OutFrame::Binary(decode_binary_body(&b).unwrap())),
+            WireFrame::Corrupt(msg) => panic!("corrupt frame in node output: {msg}"),
+        }
+    }
+    frames
+}
+
+#[test]
+fn binary_codec_round_trips_bitwise_including_nan_and_inf() {
+    // The payload is raw little-endian f32: NaN payload bits, signalling
+    // NaNs, ±inf, signed zero and denormals must all survive exactly —
+    // stronger than the text path (which flattens -0.0).
+    let weird: Vec<f32> = vec![
+        f32::NAN,
+        f32::from_bits(0x7fc0_0001), // quiet NaN with payload
+        f32::from_bits(0xffc0_dead), // negative NaN with payload
+        f32::from_bits(0x7f80_0001), // signalling NaN
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        0.0,
+        -0.0,
+        f32::MIN_POSITIVE,
+        f32::from_bits(1), // smallest denormal
+        1.5e-42,
+        123456.78,
+    ];
+    let frame = encode_binary_infer("req-1", "fc", 3, &weird, true).unwrap();
+    assert_eq!(&frame[..4], &BINARY_MAGIC);
+    let mut cur = std::io::Cursor::new(frame.as_slice());
+    let body = match read_frame(&mut cur).unwrap() {
+        WireFrame::Binary(b) => b,
+        other => panic!("{other:?}"),
+    };
+    match decode_binary_body(&body).unwrap() {
+        BinaryFrame::InferRequest { id, site, batch, x, more } => {
+            assert_eq!((id.as_str(), site.as_str(), batch, more), ("req-1", "fc", 3, true));
+            let a: Vec<u32> = weird.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "binary payload must be to_bits-exact");
+        }
+        other => panic!("{other:?}"),
+    }
+    // Response direction too.
+    let frame = padst::serve::encode_binary_infer_response("req-1", 3, &weird).unwrap();
+    let mut cur = std::io::Cursor::new(frame.as_slice());
+    let body = match read_frame(&mut cur).unwrap() {
+        WireFrame::Binary(b) => b,
+        other => panic!("{other:?}"),
+    };
+    match decode_binary_body(&body).unwrap() {
+        BinaryFrame::InferResponse { id, batch, y } => {
+            assert_eq!((id.as_str(), batch), ("req-1", 3));
+            let a: Vec<u32> = weird.iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn binary_wire_is_about_4_bytes_per_value() {
+    // The fig3 acceptance bound: payload <= 5 bytes/value on the wire
+    // (vs ~13 for NDJSON text numbers).
+    let x = vec![0.123456f32; 4096];
+    let frame = encode_binary_infer("r", "fc", 8, &x, false).unwrap();
+    let per_value = frame.len() as f64 / x.len() as f64;
+    assert!(per_value <= 5.0, "binary frame is {per_value:.3} bytes/value");
+    let line = infer_line("r", "fc", 8, &x, false);
+    assert!(
+        line.len() > 2 * frame.len(),
+        "text should be >2x the binary size (text {} vs binary {})",
+        line.len(),
+        frame.len()
+    );
+}
+
+#[test]
+fn binary_infer_serves_end_to_end_and_mirrors_the_format() {
+    let mut ctx = session("diag:4", 2, Backend::Tiled, true);
+    let mut rng = Rng::new(11);
+    let x1: Vec<f32> = (0..COLS).map(|_| rng.normal()).collect();
+    let x2: Vec<f32> = (0..2 * COLS).map(|_| rng.normal()).collect();
+    // A binary "more" frame and a text closer coalesce into ONE dispatch;
+    // each response mirrors its request's format.
+    let mut script = encode_binary_infer("b1", "fc", 1, &x1, true).unwrap();
+    script.extend_from_slice(format!("{}\n", infer_line("t1", "fc", 2, &x2, false)).as_bytes());
+    let mut out = Vec::new();
+    let stats = serve(&mut ctx, script.as_slice(), &mut out, &NodeOpts::default()).unwrap();
+    assert_eq!(stats.requests, 2);
+    assert_eq!(stats.batches, 1, "binary and text frames must coalesce together");
+    let frames = parse_mixed(&out);
+    assert_eq!(frames.len(), 2);
+    let bin_y = match &frames[0] {
+        OutFrame::Binary(BinaryFrame::InferResponse { id, batch, y }) => {
+            assert_eq!((id.as_str(), *batch), ("b1", 1));
+            y.clone()
+        }
+        _ => panic!("binary request must get a binary response"),
+    };
+    let text_y = match &frames[1] {
+        OutFrame::Text(Response::Infer { id, batch, y }) => {
+            assert_eq!((id.as_str(), *batch), ("t1", 2));
+            y.clone()
+        }
+        _ => panic!("text request must get a text response"),
+    };
+    // Same inputs through the all-text path must agree bitwise.
+    let mut ctx2 = session("diag:4", 2, Backend::Tiled, true);
+    let script = format!(
+        "{}\n{}\n",
+        infer_line("b1", "fc", 1, &x1, true),
+        infer_line("t1", "fc", 2, &x2, false)
+    );
+    let mut out2 = Vec::new();
+    serve(&mut ctx2, script.as_bytes(), &mut out2, &NodeOpts::default()).unwrap();
+    let resp = parse_responses(&out2);
+    let (ref_y1, ref_y2) = match (&resp[0], &resp[1]) {
+        (Response::Infer { y: a, .. }, Response::Infer { y: b, .. }) => (a.clone(), b.clone()),
+        other => panic!("{other:?}"),
+    };
+    let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&bin_y), bits(&ref_y1), "binary wire changed the kernel result");
+    assert_eq!(bits(&text_y), bits(&ref_y2));
+}
+
+#[test]
+fn hello_negotiation_switches_text_requests_to_binary_responses() {
+    let mut ctx = session("diag:4", 1, Backend::Scalar, false);
+    let x: Vec<f32> = vec![0.5; COLS];
+    let script = format!(
+        "{}\n{}\n{}\n",
+        Request::Hello { id: "h".into(), wire: Some("binary".into()) }.to_line(),
+        infer_line("a", "fc", 1, &x, false),
+        Request::Hello { id: "h2".into(), wire: Some("ndjson".into()) }.to_line(),
+    );
+    let mut out = Vec::new();
+    serve(&mut ctx, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+    let frames = parse_mixed(&out);
+    assert_eq!(frames.len(), 3);
+    match &frames[0] {
+        OutFrame::Text(Response::Hello { id, proto, wire }) => {
+            assert_eq!((id.as_str(), *proto, wire.as_str()), ("h", PROTOCOL_VERSION, "binary"));
+        }
+        _ => panic!("hello ack must be a text frame"),
+    }
+    match &frames[1] {
+        OutFrame::Binary(BinaryFrame::InferResponse { id, .. }) => assert_eq!(id, "a"),
+        _ => panic!("after hello wire=binary, text infers must get binary responses"),
+    }
+    match &frames[2] {
+        OutFrame::Text(Response::Hello { wire, .. }) => assert_eq!(wire, "ndjson"),
+        _ => panic!("{:?}", "hello ack must be text"),
+    }
+    // Unknown wire names are an error frame, not a dead connection.
+    let script = format!(
+        "{}\n{}\n",
+        Request::Hello { id: "h3".into(), wire: Some("carrier-pigeon".into()) }.to_line(),
+        infer_line("b", "fc", 1, &x, false),
+    );
+    let mut out = Vec::new();
+    let stats = serve(&mut ctx, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.responses, 2, "the connection must keep serving after a bad hello");
+}
+
+#[test]
+fn corrupt_binary_framing_answers_an_error_frame_and_never_exits() {
+    let x: Vec<f32> = vec![0.5; COLS];
+    // Stream-desynchronising corruption: one error frame, connection
+    // closes (frames after the corruption are NOT interpreted), process
+    // lives (serve returns Ok).
+    let bad_magic: Vec<u8> = {
+        let mut f = vec![BINARY_MAGIC[0], b'X', b'Y', b'Z'];
+        f.extend_from_slice(&8u32.to_le_bytes());
+        f.extend_from_slice(&[0u8; 8]);
+        f
+    };
+    let oversized: Vec<u8> = {
+        let mut f = BINARY_MAGIC.to_vec();
+        f.extend_from_slice(&u32::MAX.to_le_bytes());
+        f
+    };
+    for (label, corrupt, want) in
+        [("bad-magic", bad_magic, "bad binary frame magic"), ("oversized", oversized, "exceeds")]
+    {
+        let mut ctx = session("diag:4", 1, Backend::Scalar, false);
+        let mut script = corrupt.clone();
+        // A valid frame AFTER the corruption must not be served — the
+        // stream cannot be trusted past the desync point.
+        script.extend_from_slice(format!("{}\n", infer_line("late", "fc", 1, &x, false)).as_bytes());
+        let mut out = Vec::new();
+        let stats = serve(&mut ctx, script.as_slice(), &mut out, &NodeOpts::default()).unwrap();
+        assert_eq!(stats.errors, 1, "{label}");
+        assert_eq!(stats.responses, 1, "{label}: connection must close after the error frame");
+        let resp = parse_responses(&out);
+        match &resp[0] {
+            Response::Error { id: None, error } => {
+                assert!(error.contains(want), "{label}: {error}")
+            }
+            other => panic!("{label}: {other:?}"),
+        }
+    }
+    // A length prefix promising more body bytes than the stream holds:
+    // the truncation surfaces at EOF as one error frame, clean return.
+    let mut ctx = session("diag:4", 1, Backend::Scalar, false);
+    let truncated: Vec<u8> = {
+        let mut f = BINARY_MAGIC.to_vec();
+        f.extend_from_slice(&100u32.to_le_bytes());
+        f.extend_from_slice(&[1u8, 0]); // promises 100 body bytes, sends 2
+        f
+    };
+    let mut out = Vec::new();
+    let stats = serve(&mut ctx, truncated.as_slice(), &mut out, &NodeOpts::default()).unwrap();
+    assert_eq!((stats.errors, stats.responses), (1, 1));
+    match &parse_responses(&out)[0] {
+        Response::Error { id: None, error } => {
+            assert!(error.contains("truncated"), "{error}");
+            assert!(error.contains("100"), "the promised length should be named: {error}");
+        }
+        other => panic!("{other:?}"),
+    }
+    // In-sync body corruption (unknown kind): error frame, connection
+    // KEEPS serving — the length prefix already delimited the damage.
+    let mut ctx = session("diag:4", 1, Backend::Scalar, false);
+    let mut script = {
+        let mut f = BINARY_MAGIC.to_vec();
+        f.extend_from_slice(&2u32.to_le_bytes());
+        f.extend_from_slice(&[9u8, 0]); // kind 9 does not exist
+        f
+    };
+    script.extend_from_slice(format!("{}\n", infer_line("after", "fc", 1, &x, false)).as_bytes());
+    let mut out = Vec::new();
+    let stats = serve(&mut ctx, script.as_slice(), &mut out, &NodeOpts::default()).unwrap();
+    assert_eq!(stats.errors, 1);
+    assert_eq!(stats.responses, 2, "an in-sync bad body must not close the connection");
+    let frames = parse_mixed(&out);
+    match &frames[0] {
+        OutFrame::Text(Response::Error { error, .. }) => {
+            assert!(error.contains("unknown binary frame kind"), "{error}")
+        }
+        _ => panic!("expected an error frame first"),
+    }
+    match &frames[1] {
+        OutFrame::Text(Response::Infer { id, .. }) => assert_eq!(id, "after"),
+        _ => panic!("the frame after the bad body must be served"),
+    }
+    // A client sending a server->client response kind: same containment.
+    let mut ctx = session("diag:4", 1, Backend::Scalar, false);
+    let script = padst::serve::encode_binary_infer_response("oops", 1, &[1.0]).unwrap();
+    let mut out = Vec::new();
+    let stats = serve(&mut ctx, script.as_slice(), &mut out, &NodeOpts::default()).unwrap();
+    assert_eq!((stats.errors, stats.responses), (1, 1));
+    match &parse_responses(&out)[0] {
+        Response::Error { id, error } => {
+            assert_eq!(id.as_deref(), Some("oops"), "the binary id must be echoed");
+            assert!(error.contains("unexpected binary infer-response"), "{error}");
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+#[test]
+fn v1_text_frames_still_serve_unchanged() {
+    // Back-compat leg of the v2 bump: a pre-binary client stamping v:1
+    // gets served exactly as before (responses now stamped v:2).
+    let mut ctx = SessionCtx::synthetic("diag:4", 8, 8, 0.5, 1, Backend::Scalar).unwrap();
+    let script = concat!(
+        r#"{"v":1,"op":"infer","id":"a","site":"demo","batch":1,"x":[1,1,1,1,1,1,1,1]}"#,
+        "\n",
+        r#"{"v":1,"op":"info","id":"b"}"#,
+        "\n"
+    );
+    let mut out = Vec::new();
+    let stats = serve(&mut ctx, script.as_bytes(), &mut out, &NodeOpts::default()).unwrap();
+    assert_eq!((stats.requests, stats.responses, stats.errors), (2, 2, 0));
+    let resp = parse_responses(&out);
+    match &resp[0] {
+        Response::Infer { id, y, .. } => {
+            assert_eq!(id, "a");
+            assert_eq!(y, &vec![4.0; 8]);
+        }
+        other => panic!("{other:?}"),
+    }
+    for line in std::str::from_utf8(&out).unwrap().trim_end().lines() {
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.get("v").and_then(Json::as_f64), Some(2.0), "responses are stamped v2");
     }
 }
 
